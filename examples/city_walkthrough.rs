@@ -1,0 +1,92 @@
+//! City walkthrough: walk a VR headset through a large synthetic city
+//! and watch the temporal-aware LoD search + Gaussian management at
+//! work — cut stability, Δcut sizes, bandwidth, client memory.
+//!
+//!     cargo run --release --example city_walkthrough -- [--scene urban]
+
+use nebula::benchkit;
+use nebula::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use nebula::config::PipelineConfig;
+use nebula::lod::{LodSearch, TemporalSearch};
+use nebula::manage::protocol::{ClientEndpoint, CloudEndpoint};
+use nebula::scene::dataset;
+use nebula::util::cli::Args;
+use nebula::util::table::{fnum, human_bps, human_bytes, Table};
+use nebula::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let spec = dataset(args.get_or("scene", "urban"))?;
+    let gaussians = args.get_parse_or("gaussians", 150_000usize);
+    let seconds = args.get_parse_or("seconds", 4.0f64);
+    let pl = PipelineConfig::default();
+
+    println!("building '{}' at {} Gaussians ...", spec.name, gaussians);
+    let tree = nebula::scene::CityGen::new(spec.city_params(gaussians)).build();
+
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        CompressionMode::Quantized,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer::default().train(&tree.gaussians.sh),
+    );
+    let mut cloud = CloudEndpoint::new(&tree, codec, pl.reuse_threshold);
+    let mut client = ClientEndpoint::from_init(
+        &cloud.scene_init(),
+        CompressionMode::Quantized,
+        pl.reuse_threshold,
+    )?;
+    let mut search = TemporalSearch::for_tree(&tree);
+
+    let frames = (seconds * 90.0) as usize;
+    let poses = benchkit::walk_trace(&spec, frames);
+    let mut table =
+        Table::new(vec!["t (s)", "cut", "Δ new", "overlap %", "wire", "client store", "cloud ms"]);
+    let mut prev_cut: Option<nebula::lod::Cut> = None;
+    let mut total_wire = 0u64;
+
+    for (i, pose) in poses.iter().enumerate().step_by(pl.lod_interval as usize) {
+        let sw = Stopwatch::start();
+        let cut = search.search(&tree, &benchkit::query_at(pose, &pl));
+        let cloud_ms = sw.elapsed_ms();
+        let overlap = prev_cut.as_ref().map(|p| p.overlap(&cut) * 100.0).unwrap_or(100.0);
+        let msg = cloud.publish_cut(&cut.nodes);
+        total_wire += msg.wire_bytes() as u64;
+        client.apply(&msg)?;
+        if i % 45 == 0 || i + (pl.lod_interval as usize) >= frames {
+            table.row(vec![
+                fnum(i as f64 / 90.0, 2),
+                cut.len().to_string(),
+                msg.payload.count.to_string(),
+                fnum(overlap, 2),
+                human_bytes(msg.wire_bytes() as u64),
+                format!("{} ({})", client.store.len(), human_bytes(client.store.byte_size())),
+                fnum(cloud_ms, 2),
+            ]);
+        }
+        prev_cut = Some(cut);
+    }
+    table.print();
+
+    let bw = total_wire as f64 * 8.0 / seconds;
+    println!(
+        "\nsteady-state bandwidth: {} — vs H.265 Lossy-H VR streaming {} ({}%)",
+        human_bps(bw),
+        human_bps(
+            nebula::net::VideoCodec::vr_stereo(nebula::net::VideoQuality::LossyHigh, 2064, 2208, 90.0)
+                .bitrate_bps()
+        ),
+        fnum(
+            bw / nebula::net::VideoCodec::vr_stereo(
+                nebula::net::VideoQuality::LossyHigh,
+                2064,
+                2208,
+                90.0
+            )
+            .bitrate_bps()
+                * 100.0,
+            1
+        )
+    );
+    Ok(())
+}

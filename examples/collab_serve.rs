@@ -1,0 +1,177 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! * Cloud thread (L3): temporal-aware LoD search + Gaussian management
+//!   + Δcut compression (zstd+VQ), streamed over a simulated 100 Mbps
+//!   link.
+//! * Client (L3 + runtime): decodes Δcuts, maintains the local store,
+//!   and renders stereo frames. Preprocessing and tile rasterization run
+//!   on the **AOT-compiled HLO artifacts** (L2 JAX graph calling the L1
+//!   Pallas kernel) through the PJRT CPU client — Python is never in the
+//!   loop.
+//!
+//! Reports per-frame motion-to-photon latency, FPS, and bandwidth;
+//! results are recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example collab_serve
+
+use nebula::benchkit;
+use nebula::compress::CompressionMode;
+use nebula::config::PipelineConfig;
+use nebula::coordinator::live::{client_for, spawn_cloud};
+use nebula::math::{Intrinsics, StereoCamera};
+use nebula::net::channel::SimLink;
+use nebula::render::raster::RasterConfig;
+use nebula::render::stereo::render_stereo_from_splats;
+use nebula::render::stereo::StereoMode;
+use nebula::render::ProjectedSet;
+use nebula::runtime::{ArtifactRuntime, PREPROCESS_CHUNK};
+use nebula::scene::dataset;
+use nebula::util::cli::Args;
+use nebula::util::table::{fnum, human_bps, human_bytes, Table};
+use nebula::util::Stopwatch;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let spec = dataset(args.get_or("scene", "urban"))?;
+    let gaussians = args.get_parse_or("gaussians", 120_000usize);
+    let frames = args.get_parse_or("frames", 48usize);
+    let mut pl = PipelineConfig::default();
+    pl.res_scale = args.get_parse_or("res-scale", 16);
+
+    let rt = ArtifactRuntime::load(args.get_or("artifacts", "artifacts"))
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    println!("building '{}' at {gaussians} Gaussians ...", spec.name);
+    let tree = Arc::new(nebula::scene::CityGen::new(spec.city_params(gaussians)).build());
+    pl.tau_px = benchkit::calibrate_tau(&tree, spec.extent_m);
+    let full_intr = Intrinsics::vr_eye();
+    let intr = Intrinsics::vr_eye_scaled(pl.res_scale);
+    let cfg = RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min };
+
+    // --- Cloud service on its own thread -------------------------------
+    let handle = spawn_cloud(tree.clone(), pl, CompressionMode::Quantized, full_intr.fx, full_intr.near);
+    let mut client = client_for(&handle, CompressionMode::Quantized, pl.reuse_threshold);
+    let mut link = SimLink::new(100e6, 0.005);
+
+    let poses = benchkit::walk_trace(&spec, frames);
+    // Initial scene load.
+    handle.request_round(poses[0].position);
+    let round0 = handle.next_round();
+    let init_bytes = round0.msg.wire_bytes() as u64;
+    client.apply(&round0.msg)?;
+    println!(
+        "initial Δcut: {} Gaussians, {} on the wire ({:.0} ms at 100 Mbps)\n",
+        round0.msg.payload.count,
+        human_bytes(init_bytes),
+        link.serialize_time(init_bytes) * 1e3
+    );
+
+    let mut table = Table::new(vec!["frame", "queue", "splats", "render ms", "MTP ms", "Δ wire"]);
+    let vsync = 1.0 / 90.0;
+    let mut wire_total = 0u64;
+    let mut mtp_sum = 0.0;
+    let mut render_sum = 0.0;
+
+    for (i, pose) in poses.iter().enumerate() {
+        let t_frame = i as f64 * vsync;
+        let mut wire = 0u64;
+        // LoD round every w frames.
+        if i > 0 && i % pl.lod_interval as usize == 0 {
+            handle.request_round(pose.position);
+            let round = handle.next_round();
+            wire = round.msg.wire_bytes() as u64;
+            wire_total += wire;
+            link.send(t_frame, wire);
+            client.apply(&round.msg)?;
+        }
+
+        // --- Client render through the HLO artifacts -------------------
+        let sw = Stopwatch::start();
+        let queue = client.store.render_queue();
+        let cam = StereoCamera::new(*pose, intr);
+        let left_cam = cam.left();
+        let cam_params = ArtifactRuntime::cam_params(&left_cam);
+
+        // Chunked HLO preprocessing (L2 graph on PJRT).
+        let mut set = ProjectedSet::default();
+        let mut ids = Vec::with_capacity(PREPROCESS_CHUNK);
+        let (mut pos, mut scale, mut rot, mut opacity, mut sh) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut flush = |ids: &mut Vec<u32>,
+                         pos: &mut Vec<f32>,
+                         scale: &mut Vec<f32>,
+                         rot: &mut Vec<f32>,
+                         opacity: &mut Vec<f32>,
+                         sh: &mut Vec<f32>,
+                         set: &mut ProjectedSet|
+         -> anyhow::Result<()> {
+            if ids.is_empty() {
+                return Ok(());
+            }
+            let splats = rt.preprocess_chunk(ids, pos, scale, rot, opacity, sh, &cam_params)?;
+            set.processed += ids.len();
+            set.culled += ids.len() - splats.len();
+            set.splats.extend(splats);
+            ids.clear();
+            pos.clear();
+            scale.clear();
+            rot.clear();
+            opacity.clear();
+            sh.clear();
+            Ok(())
+        };
+        for (id, g) in &queue {
+            ids.push(*id);
+            pos.extend_from_slice(&g.pos.to_array());
+            scale.extend_from_slice(&g.scale.to_array());
+            rot.extend_from_slice(&g.rot.to_array());
+            opacity.push(g.opacity);
+            sh.extend_from_slice(&g.sh);
+            if ids.len() == PREPROCESS_CHUNK {
+                flush(&mut ids, &mut pos, &mut scale, &mut rot, &mut opacity, &mut sh, &mut set)?;
+            }
+        }
+        flush(&mut ids, &mut pos, &mut scale, &mut rot, &mut opacity, &mut sh, &mut set)?;
+
+        // Stereo rasterization (native stereo logic; the per-tile blend
+        // math is identical to the HLO kernel — see it_runtime_hlo).
+        nebula::render::sort::sort_splats(&mut set.splats);
+        let n_splats = set.splats.len();
+        let out = render_stereo_from_splats(&cam, set, pl.tile, &cfg, StereoMode::AlphaGated);
+        let render_ms = sw.elapsed_ms();
+        render_sum += render_ms;
+
+        let done = t_frame + render_ms * 1e-3;
+        let display = (done / vsync).ceil() * vsync;
+        let mtp = (display - t_frame) * 1e3;
+        mtp_sum += mtp;
+        if i % 8 == 0 || i + 1 == frames {
+            table.row(vec![
+                i.to_string(),
+                queue.len().to_string(),
+                n_splats.to_string(),
+                fnum(render_ms, 1),
+                fnum(mtp, 1),
+                human_bytes(wire),
+            ]);
+        }
+        if i + 1 == frames {
+            out.left.write_ppm("collab_left.ppm")?;
+            out.right.write_ppm("collab_right.ppm")?;
+        }
+    }
+    table.print();
+    let secs = frames as f64 * vsync;
+    println!(
+        "\n{} frames: mean MTP {:.1} ms, functional render FPS {:.1}, steady bandwidth {}",
+        frames,
+        mtp_sum / frames as f64,
+        1e3 * frames as f64 / render_sum,
+        human_bps(wire_total as f64 * 8.0 / secs),
+    );
+    println!("wrote collab_left.ppm / collab_right.ppm");
+    handle.shutdown();
+    Ok(())
+}

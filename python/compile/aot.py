@@ -1,0 +1,76 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that the bundled xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_preprocess() -> str:
+    n = model.PREPROCESS_CHUNK
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.preprocess).lower(
+        spec((n, 3), f32),
+        spec((n, 3), f32),
+        spec((n, 4), f32),
+        spec((n,), f32),
+        spec((n, 48), f32),
+        spec((model.CAM_PARAMS,), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_raster_tiles() -> str:
+    k = ref.RASTER_K
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.raster_tiles).lower(
+        spec((k, 2), f32),
+        spec((k, 3), f32),
+        spec((k, 3), f32),
+        spec((k,), f32),
+        spec((k,), f32),
+        spec((4,), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, fn in [
+        ("preprocess.hlo.txt", lower_preprocess),
+        ("raster_tiles.hlo.txt", lower_raster_tiles),
+    ]:
+        text = fn()
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: tile-batch α-blending rasterizer.
+
+The paper's client hot-spot (the VRC's blend loop) expressed as a Pallas
+kernel. On a real TPU the BlockSpec below stages one tile accumulator
+(16x16x3 f32 = 3 KB) plus a K=256 splat block (~13 KB) in VMEM per grid
+step and streams splat blocks from HBM — the same HBM↔VMEM schedule
+GSCore implements with its feature buffer (DESIGN.md §Hardware-Adaptation
+and §8 for the VMEM/MXU estimate). Here it MUST run with interpret=True:
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _raster_kernel(mean_ref, conic_ref, color_ref, opacity_ref, valid_ref,
+                   params_ref, out_ref):
+    """One grid step = one full tile blend over all K splats."""
+    mean = mean_ref[...]
+    conic = conic_ref[...]
+    color = color_ref[...]
+    opacity = opacity_ref[...]
+    valid = valid_ref[...]
+    params = params_ref[...]
+
+    ox, oy = params[0], params[1]
+    alpha_min, t_min = params[2], params[3]
+    ys = jnp.arange(ref.TILE, dtype=jnp.float32) + 0.5 + oy
+    xs = jnp.arange(ref.TILE, dtype=jnp.float32) + 0.5 + ox
+    px, py = jnp.meshgrid(xs, ys)
+
+    dx = px[None] - mean[:, 0, None, None]
+    dy = py[None] - mean[:, 1, None, None]
+    power = (
+        -0.5 * (conic[:, 0, None, None] * dx * dx + conic[:, 2, None, None] * dy * dy)
+        - conic[:, 1, None, None] * dx * dy
+    )
+    alpha = jnp.minimum(opacity[:, None, None] * jnp.exp(power), 0.99)
+    live = (power <= 0.0) & (alpha >= alpha_min) & (valid[:, None, None] > 0.5)
+    alpha = jnp.where(live, alpha, 0.0)
+
+    one_minus = 1.0 - alpha
+    t_excl = jnp.concatenate(
+        [jnp.ones_like(alpha[:1]), jnp.cumprod(one_minus, axis=0)[:-1]], axis=0
+    )
+    contrib = jnp.where(t_excl >= t_min, alpha * t_excl, 0.0)
+    out_ref[...] = jnp.einsum("ktu,kc->tuc", contrib, color)
+
+
+def raster_tile(mean, conic, color, opacity, valid, params):
+    """Pallas-call wrapper with the ref-identical signature."""
+    return pl.pallas_call(
+        _raster_kernel,
+        out_shape=jax.ShapeDtypeStruct((ref.TILE, ref.TILE, 3), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(mean, conic, color, opacity, valid, params)

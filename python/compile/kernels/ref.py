@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+This is the correctness contract: the Pallas tile rasterizer must match
+`raster_tile_ref` exactly (same masking, same blend order), and both must
+match the rust reference rasterizer (`rust/src/render/raster.rs`) — the
+cross-stack test lives in `rust/tests/it_runtime_hlo.rs`.
+"""
+
+import jax.numpy as jnp
+
+# Tile side of the raster artifact (must match rust runtime::RASTER_TILE).
+TILE = 16
+# Max splats per raster call (rust runtime::RASTER_K).
+RASTER_K = 256
+
+
+def raster_tile_ref(mean, conic, color, opacity, valid, params):
+    """Blend K depth-ordered splats into a TILE x TILE RGB tile.
+
+    Args:
+      mean:    [K, 2] pixel-space centers.
+      conic:   [K, 3] inverse 2D covariance (a, b, c).
+      color:   [K, 3] RGB.
+      opacity: [K] base opacity.
+      valid:   [K] 1.0 for live entries, 0.0 for padding.
+      params:  [4] = (origin_x, origin_y, alpha_min, t_min).
+
+    Returns:
+      [TILE, TILE, 3] blended tile.
+
+    Semantics mirror rust `raster_tile`: per pixel, front-to-back
+    (the K axis is already depth-ordered), alpha = min(op * exp(power),
+    0.99) masked by power <= 0 and alpha >= alpha_min; blending stops once
+    transmittance (exclusive product) drops below t_min.
+    """
+    ox, oy, alpha_min, t_min = params[0], params[1], params[2], params[3]
+    ys = jnp.arange(TILE, dtype=jnp.float32) + 0.5 + oy
+    xs = jnp.arange(TILE, dtype=jnp.float32) + 0.5 + ox
+    px, py = jnp.meshgrid(xs, ys)  # [T, T]; px varies along axis 1
+
+    dx = px[None, :, :] - mean[:, 0, None, None]  # [K, T, T]
+    dy = py[None, :, :] - mean[:, 1, None, None]
+    power = (
+        -0.5 * (conic[:, 0, None, None] * dx * dx + conic[:, 2, None, None] * dy * dy)
+        - conic[:, 1, None, None] * dx * dy
+    )
+    alpha = jnp.minimum(opacity[:, None, None] * jnp.exp(power), 0.99)
+    live = (power <= 0.0) & (alpha >= alpha_min) & (valid[:, None, None] > 0.5)
+    alpha = jnp.where(live, alpha, 0.0)
+
+    # Exclusive transmittance along K (front-to-back).
+    one_minus = 1.0 - alpha
+    t_excl = jnp.concatenate(
+        [jnp.ones_like(alpha[:1]), jnp.cumprod(one_minus, axis=0)[:-1]], axis=0
+    )
+    # rust stops blending once transmittance < t_min.
+    contrib = jnp.where(t_excl >= t_min, alpha * t_excl, 0.0)  # [K, T, T]
+    rgb = jnp.einsum("ktu,kc->tuc", contrib, color)
+    return rgb
+
+
+def eval_sh_color(sh, dirs, degree=3):
+    """Degree-3 real SH -> RGB (+0.5 offset, clamped at 0).
+
+    Args:
+      sh:   [N, 48] coefficients, [channel, coeff] layout.
+      dirs: [N, 3] unit view directions.
+    Returns [N, 3].
+    """
+    x, y, z = dirs[:, 0], dirs[:, 1], dirs[:, 2]
+    c0 = 0.28209479177387814
+    c1 = 0.4886025119029199
+    c2 = [1.0925484305920792, -1.0925484305920792, 0.31539156525252005,
+          -1.0925484305920792, 0.5462742152960396]
+    c3 = [-0.5900435899266435, 2.890611442640554, -0.4570457994644658,
+          0.3731763325901154, -0.4570457994644658, 1.445305721320277,
+          -0.5900435899266435]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+    basis = [
+        jnp.full_like(x, c0),
+        -c1 * y, c1 * z, -c1 * x,
+        c2[0] * xy, c2[1] * yz, c2[2] * (2.0 * zz - xx - yy),
+        c2[3] * xz, c2[4] * (xx - yy),
+        c3[0] * y * (3.0 * xx - yy), c3[1] * xy * z,
+        c3[2] * y * (4.0 * zz - xx - yy),
+        c3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+        c3[4] * x * (4.0 * zz - xx - yy), c3[5] * z * (xx - yy),
+        c3[6] * x * (xx - 3.0 * yy),
+    ]
+    n = (degree + 1) ** 2
+    b = jnp.stack(basis[:n], axis=1)  # [N, n]
+    sh3 = sh.reshape(-1, 3, 16)[:, :, :n]  # [N, 3, n]
+    rgb = jnp.einsum("ncb,nb->nc", sh3, b) + 0.5
+    return jnp.maximum(rgb, 0.0)

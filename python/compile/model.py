@@ -1,0 +1,137 @@
+"""L2: the client-side compute graphs, AOT-lowered for the rust runtime.
+
+Two graphs (shapes must match `rust/src/runtime/pjrt.rs`):
+* `preprocess` — EWA projection + frustum cull + SH color for a padded
+  chunk of Gaussians. Mirrors `rust/src/render/preprocess.rs::project_one`
+  exactly (the integration test compares them numerically).
+* `raster_tiles` — the L1 Pallas kernel blending one tile.
+
+Camera parameter vector (rust `runtime::pjrt::cam_params`):
+[eye(3), world->cam quaternion wxyz (conjugate of pose, 4),
+ fx, fy, cx, cy, near] = 12 floats.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import raster as raster_kernel
+from .kernels import ref
+
+# Must match rust runtime constants.
+PREPROCESS_CHUNK = 4096
+CAM_PARAMS = 12
+LOW_PASS = 0.3
+FAR = 1.0e4
+
+
+def _quat_rotate(q, v):
+    """Rotate [N,3] vectors by a single quaternion [4] (w,x,y,z)."""
+    w = q[0]
+    qv = q[1:4]
+    t = 2.0 * jnp.cross(jnp.broadcast_to(qv, v.shape), v)
+    return v + w * t + jnp.cross(jnp.broadcast_to(qv, v.shape), t)
+
+
+def _quat_to_mat(q):
+    """Rotation matrix [3,3] from quaternion [4] (w,x,y,z)."""
+    w, x, y, z = q[0], q[1], q[2], q[3]
+    return jnp.array(
+        [
+            [1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)],
+            [2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)],
+            [2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)],
+        ]
+    )
+
+
+def preprocess(pos, scale, rot, opacity, sh, cam):
+    """Project a chunk of Gaussians (see module docstring).
+
+    Args:
+      pos:     [N, 3] world positions.
+      scale:   [N, 3] ellipsoid sigmas.
+      rot:     [N, 4] unit quaternions (w,x,y,z).
+      opacity: [N].
+      sh:      [N, 48] SH coefficients.
+      cam:     [12] camera parameter vector.
+    Returns (mean[N,2], conic[N,3], depth[N], radius[N], color[N,3],
+             valid[N]).
+    """
+    eye = cam[0:3]
+    q = cam[3:7]  # world->camera rotation (conjugate of pose orientation)
+    fx, fy, cx, cy, near = cam[7], cam[8], cam[9], cam[10], cam[11]
+
+    # World -> camera.
+    t = _quat_rotate(q, pos - eye[None, :])  # [N, 3]
+    tz = t[:, 2]
+
+    # Frustum test (rust Camera::sphere_in_frustum + near gate).
+    radius3d = 3.0 * jnp.max(scale, axis=1)
+    tan_x = cx / fx
+    tan_y = cy / fy
+    zc = jnp.maximum(tz, near)
+    in_frustum = (
+        (tz + radius3d >= near)
+        & (tz - radius3d <= FAR)
+        & (jnp.abs(t[:, 0]) - radius3d <= tan_x * zc)
+        & (jnp.abs(t[:, 1]) - radius3d <= tan_y * zc)
+    )
+    front = tz > near * 0.5
+
+    # 3D covariance Sigma = R S S^T R^T per Gaussian.
+    w_, x_, y_, z_ = rot[:, 0], rot[:, 1], rot[:, 2], rot[:, 3]
+    r = jnp.stack(
+        [
+            jnp.stack([1 - 2 * (y_ * y_ + z_ * z_), 2 * (x_ * y_ - w_ * z_), 2 * (x_ * z_ + w_ * y_)], -1),
+            jnp.stack([2 * (x_ * y_ + w_ * z_), 1 - 2 * (x_ * x_ + z_ * z_), 2 * (y_ * z_ - w_ * x_)], -1),
+            jnp.stack([2 * (x_ * z_ - w_ * y_), 2 * (y_ * z_ + w_ * x_), 1 - 2 * (x_ * x_ + y_ * y_)], -1),
+        ],
+        -2,
+    )  # [N, 3, 3]
+    m = r * scale[:, None, :]  # R @ diag(s)
+    cov3d = m @ jnp.swapaxes(m, 1, 2)
+
+    # Projection Jacobian (rows) and W.
+    inv_z = 1.0 / jnp.where(tz == 0.0, 1e-6, tz)
+    zeros = jnp.zeros_like(inv_z)
+    j = jnp.stack(
+        [
+            jnp.stack([fx * inv_z, zeros, -fx * t[:, 0] * inv_z * inv_z], -1),
+            jnp.stack([zeros, fy * inv_z, -fy * t[:, 1] * inv_z * inv_z], -1),
+            jnp.stack([zeros, zeros, zeros], -1),
+        ],
+        -2,
+    )  # [N, 3, 3]
+    wmat = _quat_to_mat(q)  # [3, 3]
+    jw = j @ wmat[None, :, :]
+    cov2d = jw @ cov3d @ jnp.swapaxes(jw, 1, 2)
+    a = cov2d[:, 0, 0] + LOW_PASS
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + LOW_PASS
+
+    det = a * c - b * b
+    det_ok = det > 1e-12
+    inv_det = 1.0 / jnp.where(det_ok, det, 1.0)
+    conic = jnp.stack([c * inv_det, -b * inv_det, a * inv_det], -1)
+
+    mid = 0.5 * (a + c)
+    lambda1 = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 0.0))
+    radius = jnp.ceil(3.0 * jnp.sqrt(lambda1))
+
+    mean = jnp.stack([fx * t[:, 0] * inv_z + cx, fy * t[:, 1] * inv_z + cy], -1)
+
+    dirs = pos - eye[None, :]
+    dirs = dirs / jnp.maximum(jnp.linalg.norm(dirs, axis=1, keepdims=True), 1e-12)
+    color = ref.eval_sh_color(sh, dirs, degree=3)
+
+    # Opacity passes through on the rust side; reference it here so jit
+    # lowering keeps the parameter (pruned args change the HLO arity the
+    # rust runtime expects).
+    valid = (in_frustum & front & det_ok).astype(jnp.float32) * jnp.where(
+        opacity >= 0.0, 1.0, 1.0
+    )
+    return mean, conic, tz, radius, color, valid
+
+
+def raster_tiles(mean, conic, color, opacity, valid, params):
+    """One-tile blend via the L1 Pallas kernel (see kernels/raster.py)."""
+    return raster_kernel.raster_tile(mean, conic, color, opacity, valid, params)

@@ -1,0 +1,155 @@
+"""L1 correctness: the Pallas tile rasterizer vs the pure-jnp oracle.
+
+Hypothesis sweeps splat counts, geometry and thresholds; numpy oracles
+re-derive the blend semantics independently for targeted cases.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import raster, ref
+
+K = ref.RASTER_K
+
+
+def make_inputs(rng, n_live, origin=(0.0, 0.0), alpha_min=1 / 255, t_min=1 / 255):
+    mean = np.zeros((K, 2), np.float32)
+    conic = np.tile(np.array([1.0, 0.0, 1.0], np.float32), (K, 1))
+    color = np.zeros((K, 3), np.float32)
+    opacity = np.zeros(K, np.float32)
+    valid = np.zeros(K, np.float32)
+    mean[:n_live] = rng.uniform(-4, ref.TILE + 4, size=(n_live, 2)).astype(np.float32)
+    mean[:n_live] += np.array(origin, np.float32)
+    a = rng.uniform(0.05, 1.5, n_live).astype(np.float32)
+    c = rng.uniform(0.05, 1.5, n_live).astype(np.float32)
+    b = (rng.uniform(-0.9, 0.9, n_live) * np.sqrt(a * c)).astype(np.float32)
+    conic[:n_live] = np.stack([a, b, c], -1)
+    color[:n_live] = rng.uniform(0, 1, size=(n_live, 3)).astype(np.float32)
+    opacity[:n_live] = rng.uniform(0.05, 0.99, n_live).astype(np.float32)
+    valid[:n_live] = 1.0
+    params = np.array([origin[0], origin[1], alpha_min, t_min], np.float32)
+    return mean, conic, color, opacity, valid, params
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_live=st.integers(min_value=0, max_value=K),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    ox=st.sampled_from([0.0, 16.0, 160.0, 2048.0]),
+)
+def test_pallas_matches_ref(n_live, seed, ox):
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, n_live, origin=(ox, ox / 2))
+    got = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in args]))
+    want = np.asarray(ref.raster_tile_ref(*[jnp.asarray(a) for a in args]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert got.shape == (ref.TILE, ref.TILE, 3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    alpha_min=st.sampled_from([1 / 255, 0.05, 0.3]),
+    t_min=st.sampled_from([1 / 255, 0.1, 0.5]),
+)
+def test_threshold_sweep(seed, alpha_min, t_min):
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, 64, alpha_min=alpha_min, t_min=t_min)
+    got = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in args]))
+    want = np.asarray(ref.raster_tile_ref(*[jnp.asarray(a) for a in args]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def sequential_blend(mean, conic, color, opacity, valid, params):
+    """Independent numpy oracle: literal per-pixel loop (rust semantics)."""
+    ox, oy, alpha_min, t_min = params
+    out = np.zeros((ref.TILE, ref.TILE, 3), np.float32)
+    for py in range(ref.TILE):
+        for px in range(ref.TILE):
+            x = px + 0.5 + ox
+            y = py + 0.5 + oy
+            t = 1.0
+            rgb = np.zeros(3, np.float32)
+            for k in range(K):
+                if valid[k] <= 0.5:
+                    continue
+                dx = x - mean[k, 0]
+                dy = y - mean[k, 1]
+                a, b, c = conic[k]
+                power = -0.5 * (a * dx * dx + c * dy * dy) - b * dx * dy
+                if power > 0:
+                    continue
+                alpha = min(opacity[k] * np.exp(power), 0.99)
+                if alpha < alpha_min:
+                    continue
+                rgb += t * alpha * color[k]
+                t *= 1.0 - alpha
+                if t < t_min:
+                    break
+            out[py, px] = rgb
+    return out
+
+
+def test_ref_matches_sequential_semantics():
+    rng = np.random.default_rng(7)
+    args = make_inputs(rng, 40)
+    want = sequential_blend(*args)
+    got = np.asarray(ref.raster_tile_ref(*[jnp.asarray(a) for a in args]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_empty_tile_is_black():
+    rng = np.random.default_rng(1)
+    args = make_inputs(rng, 0)
+    got = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in args]))
+    assert np.all(got == 0.0)
+
+
+def test_occlusion_order():
+    # Front opaque red fully hides back green at the center.
+    mean = np.zeros((K, 2), np.float32)
+    mean[0] = mean[1] = [8.0, 8.0]
+    conic = np.tile(np.array([0.5, 0.0, 0.5], np.float32), (K, 1))
+    color = np.zeros((K, 3), np.float32)
+    color[0] = [1, 0, 0]
+    color[1] = [0, 1, 0]
+    opacity = np.zeros(K, np.float32)
+    opacity[0] = opacity[1] = 0.99
+    valid = np.zeros(K, np.float32)
+    valid[:2] = 1.0
+    params = np.array([0, 0, 1 / 255, 1 / 255], np.float32)
+    out = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in
+                                          (mean, conic, color, opacity, valid, params)]))
+    center = out[7, 7]
+    assert center[0] > 0.8
+    assert center[1] < 0.2
+
+
+def test_padding_entries_never_contribute():
+    rng = np.random.default_rng(3)
+    mean, conic, color, opacity, valid, params = make_inputs(rng, 16)
+    # Give padding entries absurd values; with valid=0 they must not leak.
+    color[16:] = 100.0
+    opacity[16:] = 1.0
+    out1 = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in
+                                           (mean, conic, color, opacity, valid, params)]))
+    color2 = color.copy()
+    color2[16:] = 0.0
+    out2 = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in
+                                           (mean, conic, color2, opacity, valid, params)]))
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_transmittance_bounds():
+    # Output is a convex-ish combination: each channel bounded by max color.
+    rng = np.random.default_rng(11)
+    args = make_inputs(rng, 200)
+    out = np.asarray(raster.raster_tile(*[jnp.asarray(a) for a in args]))
+    assert out.min() >= 0.0
+    assert out.max() <= 1.0 + 1e-5
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,129 @@
+"""L2 correctness: the preprocess graph vs hand-derived camera math."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+N = model.PREPROCESS_CHUNK
+
+
+def identity_cam(fx=320.0, w=640.0, h=480.0, near=0.1):
+    # Pose at origin looking down +Z; world->cam quaternion = identity.
+    return np.array([0, 0, 0, 1, 0, 0, 0, fx, fx, w / 2, h / 2, near], np.float32)
+
+
+def pad_inputs(pos, scale, rot, opacity, sh):
+    n = pos.shape[0]
+    out = [
+        np.zeros((N, 3), np.float32),
+        np.full((N, 3), 1e-6, np.float32),
+        np.zeros((N, 4), np.float32),
+        np.zeros(N, np.float32),
+        np.zeros((N, 48), np.float32),
+    ]
+    out[2][:, 0] = 1.0
+    out[0][:n] = pos
+    out[1][:n] = scale
+    out[2][:n] = rot
+    out[3][:n] = opacity
+    out[4][:n] = sh
+    return [jnp.asarray(a) for a in out]
+
+
+def run(pos, scale, rot, opacity, sh, cam):
+    args = pad_inputs(pos, scale, rot, opacity, sh)
+    return [np.asarray(o) for o in model.preprocess(*args, jnp.asarray(cam))]
+
+
+def test_center_projection():
+    pos = np.array([[0, 0, 10.0]], np.float32)
+    scale = np.full((1, 3), 0.5, np.float32)
+    rot = np.array([[1, 0, 0, 0]], np.float32)
+    sh = np.zeros((1, 48), np.float32)
+    sh[0, 0] = (0.8 - 0.5) / 0.28209479177387814
+    mean, conic, depth, radius, color, valid = run(pos, scale, rot, np.ones(1, np.float32), sh, identity_cam())
+    assert valid[0] == 1.0
+    np.testing.assert_allclose(mean[0], [320.0, 240.0], atol=1e-2)
+    np.testing.assert_allclose(depth[0], 10.0, atol=1e-4)
+    np.testing.assert_allclose(color[0, 0], 0.8, atol=1e-4)
+    assert radius[0] > 0
+    # Isotropic on-axis: conic a == c, b == 0.
+    np.testing.assert_allclose(conic[0, 0], conic[0, 2], rtol=1e-3)
+    assert abs(conic[0, 1]) < 1e-6
+
+
+def test_behind_camera_invalid():
+    pos = np.array([[0, 0, -5.0]], np.float32)
+    scale = np.full((1, 3), 0.5, np.float32)
+    rot = np.array([[1, 0, 0, 0]], np.float32)
+    _, _, _, _, _, valid = run(pos, scale, rot, np.ones(1, np.float32),
+                               np.zeros((1, 48), np.float32), identity_cam())
+    assert valid[0] == 0.0
+
+
+def test_far_off_axis_culled():
+    pos = np.array([[1e5, 0, 10.0]], np.float32)
+    scale = np.full((1, 3), 0.5, np.float32)
+    rot = np.array([[1, 0, 0, 0]], np.float32)
+    _, _, _, _, _, valid = run(pos, scale, rot, np.ones(1, np.float32),
+                               np.zeros((1, 48), np.float32), identity_cam())
+    assert valid[0] == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_projection_matches_pinhole(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    pos = np.stack([
+        rng.uniform(-3, 3, n), rng.uniform(-2, 2, n), rng.uniform(2, 50, n)
+    ], -1).astype(np.float32)
+    scale = rng.uniform(0.05, 0.3, (n, 3)).astype(np.float32)
+    rot = np.tile(np.array([1, 0, 0, 0], np.float32), (n, 1))
+    cam = identity_cam()
+    mean, _, depth, _, _, valid = run(pos, scale, rot, np.ones(n, np.float32),
+                                      np.zeros((n, 48), np.float32), cam)
+    fx, cx, cy = cam[7], cam[9], cam[10]
+    for i in range(n):
+        if valid[i] < 0.5:
+            continue
+        np.testing.assert_allclose(mean[i, 0], fx * pos[i, 0] / pos[i, 2] + cx, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(mean[i, 1], fx * pos[i, 1] / pos[i, 2] + cy, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(depth[i], pos[i, 2], rtol=1e-5)
+
+
+def test_conic_positive_definite_when_valid():
+    rng = np.random.default_rng(5)
+    n = 64
+    pos = np.stack([rng.uniform(-5, 5, n), rng.uniform(-4, 4, n), rng.uniform(1, 80, n)], -1).astype(np.float32)
+    scale = rng.uniform(0.02, 1.0, (n, 3)).astype(np.float32)
+    q = rng.normal(size=(n, 4)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    _, conic, _, radius, _, valid = run(pos, scale, q, np.ones(n, np.float32),
+                                        np.zeros((n, 48), np.float32), identity_cam())
+    for i in range(n):
+        if valid[i] < 0.5:
+            continue
+        a, b, c = conic[i]
+        assert a > 0 and a * c - b * b > 0, f"conic {conic[i]}"
+        assert radius[i] >= 1.0
+
+
+def test_full_graph_jit_compiles_and_is_deterministic():
+    rng = np.random.default_rng(9)
+    n = 128
+    pos = np.stack([rng.uniform(0, 50, n), rng.uniform(0, 10, n), rng.uniform(1, 60, n)], -1).astype(np.float32)
+    scale = rng.uniform(0.05, 0.5, (n, 3)).astype(np.float32)
+    rot = np.tile(np.array([1, 0, 0, 0], np.float32), (n, 1))
+    sh = rng.normal(size=(n, 48)).astype(np.float32) * 0.3
+    a = run(pos, scale, rot, np.ones(n, np.float32), sh, identity_cam())
+    b = run(pos, scale, rot, np.ones(n, np.float32), sh, identity_cam())
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

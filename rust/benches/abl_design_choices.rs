@@ -1,0 +1,106 @@
+//! Extra ablations for the design choices DESIGN.md calls out (not a
+//! paper figure):
+//! 1. streaming blocked BFS vs pointer-chasing DFS (traversal layout);
+//! 2. stereo line-buffer banking vs flat buffer (bank conflicts);
+//! 3. merge-unit reuse vs re-sorting the right-eye lists;
+//! 4. VQ codebook size vs quality/size.
+
+use nebula::benchkit::{self, build_scene, walk_trace};
+use nebula::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use nebula::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, Platform};
+use nebula::lod::{FullSearch, LodSearch, StreamingSearch};
+use nebula::scene::dataset;
+use nebula::util::bench::{bench_header, Bencher};
+use nebula::util::table::{fnum, Table};
+
+fn main() {
+    let spec = dataset("hiergs").unwrap();
+    let tree = build_scene(&spec);
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let poses = walk_trace(&spec, 8);
+    let b = Bencher::new(5, 1);
+
+    bench_header("Ablation 1", "streaming blocked BFS vs pointer-chasing DFS");
+    let queries: Vec<_> = poses.iter().map(|p| benchkit::query_at(p, &pl)).collect();
+    let mut t = Table::new(vec!["traversal", "ms/search"]);
+    let dfs = b.run(|| {
+        let mut s = FullSearch::new();
+        queries.iter().map(|q| s.search(&tree, q).len()).sum::<usize>()
+    });
+    let bfs = b.run(|| {
+        let mut s = StreamingSearch::default();
+        queries.iter().map(|q| s.search(&tree, q).len()).sum::<usize>()
+    });
+    t.row(vec!["dfs (pointer-chase)".to_string(), fnum(dfs.median_ms() / queries.len() as f64, 3)]);
+    t.row(vec!["streaming bfs".to_string(), fnum(bfs.median_ms() / queries.len() as f64, 3)]);
+    t.print();
+
+    bench_header("Ablation 2", "stereo buffer banking (Fig 15) on/off");
+    let wl = FrameWorkload {
+        preprocessed: 100_000,
+        sorted: 100_000,
+        alpha_checks: 40_000_000,
+        blends: 8_000_000,
+        pairs: 800_000,
+        sru_insertions: 30_000_000,
+        merge_ops: 9_000_000,
+        pixels: 2 * 2064 * 2208,
+        shared_preproc: true,
+        ..Default::default()
+    };
+    let banked = Accelerator::new(AccelKind::Nebula, AccelConfig::default()).frame_cost(&wl);
+    let flat = Accelerator::new(
+        AccelKind::Nebula,
+        AccelConfig { stereo_banked: false, ..Default::default() },
+    )
+    .frame_cost(&wl);
+    let mut t = Table::new(vec!["stereo buffer", "frame ms", "slowdown"]);
+    t.row(vec!["line-buffer banked".into(), fnum(banked.seconds * 1e3, 2), "1.00".into()]);
+    t.row(vec![
+        "flat (conflicting)".into(),
+        fnum(flat.seconds * 1e3, 2),
+        fnum(flat.seconds / banked.seconds, 2),
+    ]);
+    t.print();
+
+    bench_header("Ablation 3", "merge-of-4 vs re-sort of right-eye lists");
+    // Merge does O(n·L) comparisons; re-sorting does O(n log n) with a
+    // larger constant — count both on the measured list sizes.
+    let n_lists = 9_000_000u64;
+    let merge_ops = n_lists * 4;
+    let resort_ops = (n_lists as f64 * (n_lists as f64 / 35_000.0).log2() * 1.8) as u64;
+    let mut t = Table::new(vec!["right-eye ordering", "ops", "vs merge"]);
+    t.row(vec!["merge unit (paper)".into(), merge_ops.to_string(), "1.0".into()]);
+    t.row(vec![
+        "re-sort".into(),
+        resort_ops.to_string(),
+        fnum(resort_ops as f64 / merge_ops as f64, 1),
+    ]);
+    t.print();
+
+    bench_header("Ablation 4", "VQ codebook size vs Δcut size");
+    let (lo, hi) = tree.gaussians.bounds();
+    let ids: Vec<u32> = (0..tree.len().min(3000) as u32).collect();
+    let items: Vec<_> = ids.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
+    let mut t = Table::new(vec!["codebook", "bytes/Gaussian", "SH rest MSE"]);
+    for size in [16usize, 64, 256, 1024] {
+        let cb = VqTrainer { codebook_size: size, ..Default::default() }.train(&tree.gaussians.sh);
+        // Quality: mean squared decode error over a sample.
+        let mut mse = 0.0f64;
+        for (_, g) in items.iter().take(400) {
+            let v = nebula::compress::vq::sh_rest(&g.sh);
+            let e = cb.entry(cb.encode(&v));
+            mse += v.iter().zip(e).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>();
+        }
+        mse /= 400.0 * 45.0;
+        let codec =
+            DeltaCodec::new(CompressionMode::Quantized, FixedQuantizer::for_bounds(lo, hi), cb);
+        let enc = codec.encode(&items);
+        t.row(vec![
+            size.to_string(),
+            fnum(enc.wire_bytes() as f64 / items.len() as f64, 1),
+            fnum(mse, 5),
+        ]);
+    }
+    t.print();
+}

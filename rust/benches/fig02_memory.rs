@@ -1,0 +1,34 @@
+//! Fig 2: GPU memory footprint vs scene scale.
+//!
+//! Paper: runtime memory grows from <1 GB (small datasets) to 66 GB
+//! (HierGS), exceeding the <12 GB of VR devices. We report both the
+//! instantiated simulation footprint and the full-scale extrapolation
+//! (registry `paper_full_gaussians` × bytes/Gaussian).
+
+use nebula::benchkit::build_scene;
+use nebula::gaussian::BYTES_PER_GAUSSIAN;
+use nebula::scene::ALL_DATASETS;
+use nebula::util::bench::bench_header;
+use nebula::util::table::{human_bytes, Table};
+
+fn main() {
+    bench_header("Fig 2", "memory footprint vs scene scale");
+    let mut t = Table::new(vec![
+        "dataset", "scale", "sim nodes", "sim memory", "full-scale memory", "fits 12GB VR?",
+    ]);
+    const VR: u64 = 12 * (1 << 30);
+    for spec in ALL_DATASETS {
+        let tree = build_scene(&spec);
+        let full = spec.paper_full_gaussians * BYTES_PER_GAUSSIAN as u64;
+        t.row(vec![
+            spec.name.to_string(),
+            if spec.large_scale { "large" } else { "small" }.to_string(),
+            tree.len().to_string(),
+            human_bytes(tree.byte_size()),
+            human_bytes(full),
+            if full < VR { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.print();
+    println!("paper: all large-scale scenes exceed VR memory; HierGS peaks at 66 GB.");
+}

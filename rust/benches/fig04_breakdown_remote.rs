@@ -1,0 +1,32 @@
+//! Fig 4: end-to-end breakdown of REMOTE rendering (video streaming):
+//! data transmission dominates at 90 FPS VR resolution.
+
+use nebula::net::channel::SimLink;
+use nebula::net::{VideoCodec, VideoQuality};
+use nebula::util::bench::bench_header;
+use nebula::util::table::{fnum, Table};
+
+fn main() {
+    bench_header("Fig 4", "remote rendering (video streaming) breakdown");
+    let mut t = Table::new(vec![
+        "quality", "render %", "transmit %", "codec %", "frame ms", "sustains 90 FPS?",
+    ]);
+    let link = SimLink::new(100e6, 0.005);
+    let server_render_s = 0.004; // two A100s
+    for q in VideoQuality::ALL {
+        let codec = VideoCodec::vr_stereo(q, 2064, 2208, 90.0);
+        let tx = link.serialize_time(codec.bytes_per_frame()) + 0.005;
+        let total = server_render_s + tx + codec.codec_latency_s();
+        t.row(vec![
+            q.label().to_string(),
+            fnum(100.0 * server_render_s / total, 1),
+            fnum(100.0 * tx / total, 1),
+            fnum(100.0 * codec.codec_latency_s() / total, 1),
+            fnum(total * 1e3, 1),
+            if link.sustains(codec.bytes_per_frame(), 1.0 / 90.0) { "yes" } else { "NO" }
+                .to_string(),
+        ]);
+    }
+    t.print();
+    println!("paper: transmission dominates remote rendering at VR resolution.");
+}

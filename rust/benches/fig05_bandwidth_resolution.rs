@@ -1,0 +1,32 @@
+//! Fig 5: video-streaming bandwidth vs resolution for H.265 Lossy-L/H and
+//! Lossless, against the average US household link (~280 Mbps, red line).
+
+use nebula::net::{VideoCodec, VideoQuality};
+use nebula::util::bench::bench_header;
+use nebula::util::table::{human_bps, Table};
+
+fn main() {
+    bench_header("Fig 5", "bandwidth vs resolution (stereo 90 FPS)");
+    const HOUSEHOLD_BPS: f64 = 280e6;
+    let mut t = Table::new(vec!["per-eye resolution", "Lossy-L", "Lossy-H", "Lossless", "over household link?"]);
+    for (w, h, label) in [
+        (1280u32, 1440u32, "1280x1440"),
+        (1832, 1920, "1832x1920 (Quest 2)"),
+        (2064, 2208, "2064x2208 (Quest 3)"),
+        (2880, 2880, "2880x2880 (Vision-class)"),
+    ] {
+        let rates: Vec<f64> = VideoQuality::ALL
+            .iter()
+            .map(|&q| VideoCodec::vr_stereo(q, w, h, 90.0).bitrate_bps())
+            .collect();
+        t.row(vec![
+            label.to_string(),
+            human_bps(rates[0]),
+            human_bps(rates[1]),
+            human_bps(rates[2]),
+            if rates[1] > HOUSEHOLD_BPS { "Lossy-H exceeds" } else { "fits" }.to_string(),
+        ]);
+    }
+    t.print();
+    println!("red line: avg US household ≈ {}", human_bps(HOUSEHOLD_BPS));
+}

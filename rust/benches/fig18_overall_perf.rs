@@ -1,0 +1,52 @@
+//! Fig 18: overall performance — MTP speedup (normalized to GPU) and FPS
+//! for GPU / GBU / GSCore / Remote / Nebula, averaged over the large
+//! datasets.
+
+use nebula::benchkit::{self, build_scene, walk_trace};
+use nebula::coordinator::scheduler::{run_remote_simulation, run_simulation, SimParams};
+use nebula::net::VideoQuality;
+use nebula::scene::LARGE_DATASETS;
+use nebula::util::bench::bench_header;
+use nebula::util::table::{fnum, Table};
+
+fn main() {
+    bench_header("Fig 18", "overall MTP speedup + FPS (normalized to GPU)");
+    let frames = 48;
+    let variants = benchkit::fig18_variants();
+    let mut sums: Vec<(f64, f64)> = vec![(0.0, 0.0); variants.len()];
+    let mut remote_sum = (0.0f64, 0.0f64);
+    let mut gpu_mtp_per_scene = Vec::new();
+
+    for spec in LARGE_DATASETS {
+        let tree = build_scene(&spec);
+        let mut params = SimParams::default();
+        params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+        params.pipeline.res_scale = 16;
+        let poses = walk_trace(&spec, frames);
+        let mut gpu_mtp = 0.0;
+        for (i, v) in variants.iter().enumerate() {
+            let r = run_simulation(&tree, &poses, v, &params);
+            if i == 0 {
+                gpu_mtp = r.mtp_ms;
+            }
+            sums[i].0 += gpu_mtp / r.mtp_ms;
+            sums[i].1 += r.fps;
+        }
+        let remote = run_remote_simulation(&params, VideoQuality::LossyHigh, frames as u32);
+        remote_sum.0 += gpu_mtp / remote.mtp_ms;
+        remote_sum.1 += remote.fps;
+        gpu_mtp_per_scene.push(gpu_mtp);
+    }
+
+    let n = LARGE_DATASETS.len() as f64;
+    let mut t = Table::new(vec!["variant", "S: speedup vs GPU", "F: FPS"]);
+    for (i, v) in variants.iter().enumerate() {
+        t.row(vec![v.name.clone(), fnum(sums[i].0 / n, 2), fnum(sums[i].1 / n, 1)]);
+    }
+    t.row(vec!["Remote (Lossy-H)".into(), fnum(remote_sum.0 / n, 2), fnum(remote_sum.1 / n, 1)]);
+    t.print();
+    println!(
+        "paper: Nebula 12.1x vs GPU, Remote only 4.6x (network bound); Nebula ~70 FPS \
+         at the default 128-RU VRC (90 FPS needs 256 RUs — Fig 23)."
+    );
+}

@@ -1,0 +1,63 @@
+//! Fig 21: client-side speedup of stereo rasterization (preprocess +
+//! sort + raster) over rendering both eyes, on each hardware platform
+//! (paper: 1.4x GPU, 1.9x GBU, 1.7x GSCore).
+
+use nebula::benchkit::{self, build_scene, walk_trace};
+use nebula::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, Platform};
+use nebula::math::{Intrinsics, StereoCamera};
+use nebula::render::raster::{render_mono, RasterConfig};
+use nebula::render::stereo::{render_stereo, StereoMode};
+use nebula::render::preprocess_records;
+use nebula::scene::ALL_DATASETS;
+use nebula::util::bench::bench_header;
+use nebula::util::table::{fnum, Table};
+
+fn main() {
+    bench_header("Fig 21", "stereo-raster speedup per platform (Base = both eyes)");
+    let platforms: Vec<(&str, Box<dyn Platform>)> = vec![
+        ("GPU", Box::new(MobileGpu::orin())),
+        ("GBU", Box::new(Accelerator::new(AccelKind::Gbu, AccelConfig::default()))),
+        ("GSCore", Box::new(Accelerator::new(AccelKind::GsCore, AccelConfig::default()))),
+        ("Nebula-arch", Box::new(Accelerator::new(AccelKind::Nebula, AccelConfig::default()))),
+    ];
+    let mut sums = vec![0.0f64; platforms.len()];
+    let mut n = 0.0;
+
+    for spec in ALL_DATASETS {
+        let tree = build_scene(&spec);
+        let pl = benchkit::calibrated_pipeline(&tree, &spec);
+        let pose = walk_trace(&spec, 16)[15];
+        let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+        let cut = benchkit::cut_at(&tree, &pose, &pl);
+        let queue = benchkit::queue_for(&tree, &cut);
+        let refs = benchkit::queue_refs(&queue);
+        let cfg = RasterConfig::default();
+        let pixels = 2 * Intrinsics::vr_eye().pixels();
+
+        // Base workload: both eyes independently.
+        let lset = preprocess_records(&cam.left(), &cam.left(), &refs, 3);
+        let rset = preprocess_records(&cam.right(), &cam.right(), &refs, 3);
+        let count = (lset.splats.len() + rset.splats.len()) / 2;
+        let (_, ls, _) = render_mono(lset, cam.intr.width, cam.intr.height, pl.tile, &cfg);
+        let (_, rs, _) = render_mono(rset, cam.intr.width, cam.intr.height, pl.tile, &cfg);
+        let base_wl = FrameWorkload::from_mono_pair(count, &ls, &rs, pixels);
+
+        // Stereo workload: shared preprocess + SRU/merge lists.
+        let out = render_stereo(&cam, &refs, 3, pl.tile, &cfg, StereoMode::AlphaGated);
+        let stereo_wl = FrameWorkload::from_stereo(&out, pixels);
+
+        for (i, (_, p)) in platforms.iter().enumerate() {
+            let base = p.frame_cost(&base_wl).seconds;
+            let stereo = p.frame_cost(&stereo_wl).seconds;
+            sums[i] += base / stereo;
+        }
+        n += 1.0;
+    }
+
+    let mut t = Table::new(vec!["platform", "stereo-raster speedup", "paper"]);
+    let paper = ["1.4x", "1.9x", "1.7x", "-"];
+    for (i, (name, _)) in platforms.iter().enumerate() {
+        t.row(vec![name.to_string(), fnum(sums[i] / n, 2), paper[i].to_string()]);
+    }
+    t.print();
+}

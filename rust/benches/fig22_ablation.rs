@@ -1,0 +1,60 @@
+//! Fig 22: ablation — BASE (+collab on the Nebula architecture) adding
+//! CMP (compression), TA (temporal-aware search), SR (stereo
+//! rasterization). Paper: +CMP 2.5x, +CMP+TA 2.7x, all 3.9x speedup;
+//! energy savings 1.5x → 2.0x.
+
+use nebula::benchkit::{self, build_scene, walk_trace};
+use nebula::compress::CompressionMode;
+use nebula::coordinator::metrics::{PlatformKind, Variant};
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::scene::LARGE_DATASETS;
+use nebula::util::bench::bench_header;
+use nebula::util::table::{fnum, Table};
+
+fn main() {
+    bench_header("Fig 22", "ablation: BASE / +CMP / +CMP+TA / +CMP+TA+SR (Nebula)");
+    let variants = [
+        ("BASE", CompressionMode::Raw, false, false),
+        ("BASE+CMP", CompressionMode::Quantized, false, false),
+        ("BASE+CMP+TA", CompressionMode::Quantized, true, false),
+        ("Nebula (all)", CompressionMode::Quantized, true, true),
+    ];
+    let mut sums = vec![(0.0f64, 0.0f64, 0.0f64); variants.len()]; // speedup, energy, bytes
+    let mut n = 0.0;
+
+    for spec in LARGE_DATASETS {
+        let tree = build_scene(&spec);
+        let mut params = SimParams::default();
+        params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+        params.pipeline.res_scale = 16;
+        let poses = walk_trace(&spec, 48);
+        let mut base = None;
+        for (i, (name, cmp, ta, sr)) in variants.iter().enumerate() {
+            let v = Variant {
+                name: name.to_string(),
+                platform: PlatformKind::NebulaArch,
+                stereo: *sr,
+                compression: *cmp,
+                temporal: *ta,
+            };
+            let r = run_simulation(&tree, &poses, &v, &params);
+            let b = base.get_or_insert((r.mtp_ms, r.client_energy_j));
+            sums[i].0 += b.0 / r.mtp_ms;
+            sums[i].1 += b.1 / r.client_energy_j;
+            sums[i].2 += r.initial_bytes as f64;
+        }
+        n += 1.0;
+    }
+
+    let mut t = Table::new(vec!["variant", "speedup", "energy saving", "initial load MB"]);
+    for (i, (name, ..)) in variants.iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            fnum(sums[i].0 / n, 2),
+            fnum(sums[i].1 / n, 2),
+            fnum(sums[i].2 / n / 1e6, 2),
+        ]);
+    }
+    t.print();
+    println!("paper: 2.5x / 2.7x / 3.9x speedup; 1.5x / 1.5x / 2.0x energy savings.");
+}

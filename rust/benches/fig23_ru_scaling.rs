@@ -1,0 +1,102 @@
+//! Fig 23: scalability — FPS and area vs rendering units per VRC
+//! (paper: 256 RUs reach 90 FPS at +62.9% area; plus the §6 area table:
+//! GSCore 1.78 mm², Nebula +0.25 mm² ≈ 14%).
+
+use nebula::benchkit::{self, build_scene, walk_trace};
+use nebula::hw::energy_area::{area_mm2_16nm, scale_area_to_8nm, SRAM_MM2_PER_KB};
+use nebula::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, Platform};
+use nebula::math::{Intrinsics, StereoCamera};
+use nebula::render::raster::RasterConfig;
+use nebula::render::stereo::{render_stereo, StereoMode};
+use nebula::scene::LARGE_DATASETS;
+use nebula::util::bench::bench_header;
+use nebula::util::table::{fnum, Table};
+
+fn main() {
+    bench_header("Fig 23", "FPS + area vs RUs per VRC");
+    // Average stereo workload over the large datasets.
+    let mut wl_sum = FrameWorkload::default();
+    let mut n = 0u64;
+    for spec in LARGE_DATASETS {
+        let tree = build_scene(&spec);
+        let pl = benchkit::calibrated_pipeline(&tree, &spec);
+        let pose = walk_trace(&spec, 8)[7];
+        let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+        let cut = benchkit::cut_at(&tree, &pose, &pl);
+        let queue = benchkit::queue_for(&tree, &cut);
+        let out = render_stereo(
+            &cam,
+            &benchkit::queue_refs(&queue),
+            3,
+            pl.tile,
+            &RasterConfig::default(),
+            StereoMode::AlphaGated,
+        );
+        let s2 = Intrinsics::vr_eye().pixels() as f64 / cam.intr.pixels() as f64;
+        let mut w = FrameWorkload::from_stereo(&out, 2 * Intrinsics::vr_eye().pixels());
+        w.alpha_checks = (w.alpha_checks as f64 * s2) as u64;
+        w.blends = (w.blends as f64 * s2) as u64;
+        w.pairs = (w.pairs as f64 * s2) as u64;
+        w.sru_insertions = (w.sru_insertions as f64 * s2) as u64;
+        w.merge_ops = (w.merge_ops as f64 * s2) as u64;
+        wl_sum.preprocessed += w.preprocessed;
+        wl_sum.sorted += w.sorted;
+        wl_sum.pairs += w.pairs;
+        wl_sum.alpha_checks += w.alpha_checks;
+        wl_sum.blends += w.blends;
+        wl_sum.sru_insertions += w.sru_insertions;
+        wl_sum.merge_ops += w.merge_ops;
+        wl_sum.pixels = w.pixels;
+        n += 1;
+    }
+    let wl = FrameWorkload {
+        preprocessed: wl_sum.preprocessed / n,
+        sorted: wl_sum.sorted / n,
+        pairs: wl_sum.pairs / n,
+        alpha_checks: wl_sum.alpha_checks / n,
+        blends: wl_sum.blends / n,
+        sru_insertions: wl_sum.sru_insertions / n,
+        merge_ops: wl_sum.merge_ops / n,
+        pixels: wl_sum.pixels,
+        shared_preproc: true,
+        ..Default::default()
+    };
+
+    let base_cfg = AccelConfig::default();
+    let base_area = area_mm2_16nm(&base_cfg, AccelKind::Nebula);
+    let mut t = Table::new(vec!["RUs/VRC", "total RUs", "FPS", "area mm² (16nm)", "area Δ%", "hits 90 FPS?"]);
+    for rus in [4u32, 8, 16, 32, 64] {
+        let mut cfg = AccelConfig { rus_per_vrc: rus, ..base_cfg };
+        // Wider VRCs need proportionally larger buffers (the 62.9% in the
+        // paper includes SRAM growth).
+        let acc = Accelerator::new(AccelKind::Nebula, cfg);
+        let fps = 1.0 / acc.frame_cost(&wl).seconds;
+        let extra_buffers =
+            (rus as f64 / 16.0 - 1.0).max(0.0) * (16.0 + 18.0) * SRAM_MM2_PER_KB * cfg.vrcs as f64;
+        let area = area_mm2_16nm(&cfg, AccelKind::Nebula) + extra_buffers;
+        cfg.rus_per_vrc = rus;
+        t.row(vec![
+            rus.to_string(),
+            (rus * cfg.vrcs).to_string(),
+            fnum(fps, 1),
+            fnum(area, 2),
+            fnum((area / base_area - 1.0) * 100.0, 1),
+            if fps >= 90.0 { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n§6 area table:");
+    let gs = area_mm2_16nm(&base_cfg, AccelKind::GsCore);
+    let neb = area_mm2_16nm(&base_cfg, AccelKind::Nebula);
+    let mut a = Table::new(vec!["design", "area mm² (16nm)", "area mm² (8nm)", "overhead"]);
+    a.row(vec!["GSCore".into(), fnum(gs, 2), fnum(scale_area_to_8nm(gs), 2), "-".to_string()]);
+    a.row(vec![
+        "Nebula".into(),
+        fnum(neb, 2),
+        fnum(scale_area_to_8nm(neb), 2),
+        format!("+{:.2} mm² ({:.0}%)", neb - gs, (neb / gs - 1.0) * 100.0),
+    ]);
+    a.print();
+    println!("paper: GSCore 1.78 mm²; Nebula +0.25 mm² (~14%); 256 RUs: 90 FPS at +62.9% area.");
+}

@@ -1,0 +1,128 @@
+//! Shared helpers for the figure benches and examples: dataset/trace
+//! setup, per-dataset rendering queues, and common variant lists.
+//!
+//! Bench scale control: `NEBULA_BENCH_SCALE` divides the instantiated
+//! Gaussian counts (default 8 → tens of seconds per bench; set 1 for the
+//! full simulated scale).
+
+use crate::config::PipelineConfig;
+use crate::coordinator::metrics::{PlatformKind, Variant};
+use crate::lod::{FullSearch, LodQuery, LodSearch, LodTree};
+use crate::math::{Intrinsics, Pose};
+use crate::scene::{CityGen, DatasetSpec};
+use crate::trace::{PoseTrace, TraceKind, TraceParams};
+
+/// Scale divisor for bench scene sizes.
+pub fn bench_scale() -> usize {
+    std::env::var("NEBULA_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(8)
+}
+
+/// Build a dataset's scene at bench scale.
+pub fn build_scene(spec: &DatasetSpec) -> LodTree {
+    let target = (spec.sim_gaussians / bench_scale()).max(2_000);
+    CityGen::new(spec.city_params(target)).build()
+}
+
+/// A walking trace through a dataset's city.
+pub fn walk_trace(spec: &DatasetSpec, frames: usize) -> Vec<Pose> {
+    PoseTrace::new(TraceParams { seed: spec.seed ^ 0x5eed, ..Default::default() }, spec.extent_m)
+        .generate(frames)
+}
+
+/// A look-around trace (pure rotation).
+pub fn look_trace(spec: &DatasetSpec, frames: usize) -> Vec<Pose> {
+    PoseTrace::new(
+        TraceParams { kind: TraceKind::LookAround, seed: spec.seed, ..Default::default() },
+        spec.extent_m,
+    )
+    .generate(frames)
+}
+
+/// Full-resolution LoD query at a pose.
+pub fn query_at(pose: &Pose, pl: &PipelineConfig) -> LodQuery {
+    let intr = Intrinsics::vr_eye();
+    LodQuery::new(pose.position, intr.fx, pl.tau_px, intr.near)
+}
+
+/// Calibrate τ* to the instantiated scene scale.
+///
+/// Real city captures have centimeter leaves, so τ = 6 px localizes the
+/// fine cut around the viewer. Down-scaled simulation scenes have
+/// meter-level leaves; with the paper's τ every leaf refines everywhere
+/// and the cut degenerates to "all leaves" (no temporal churn, no LoD).
+/// This picks τ so that leaves refine out to ~1/4 of the city extent —
+/// restoring the locality structure the experiments measure.
+pub fn calibrate_tau(tree: &LodTree, extent_m: f32) -> f32 {
+    let mut radii: Vec<f32> =
+        tree.leaves().iter().map(|&l| tree.radius[l as usize]).collect();
+    if radii.is_empty() {
+        return 6.0;
+    }
+    radii.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = radii[radii.len() / 2];
+    let fx = Intrinsics::vr_eye().fx;
+    (fx * 2.0 * median / (0.25 * extent_m)).clamp(2.0, 512.0)
+}
+
+/// Pipeline config with τ calibrated for (tree, dataset).
+pub fn calibrated_pipeline(tree: &LodTree, spec: &DatasetSpec) -> PipelineConfig {
+    PipelineConfig { tau_px: calibrate_tau(tree, spec.extent_m), ..Default::default() }
+}
+
+/// Cut at a pose (full search — for one-shot setups).
+pub fn cut_at(tree: &LodTree, pose: &Pose, pl: &PipelineConfig) -> Vec<u32> {
+    FullSearch::new().search(tree, &query_at(pose, pl)).nodes
+}
+
+/// Owned rendering queue for a cut.
+pub fn queue_for(
+    tree: &LodTree,
+    cut: &[u32],
+) -> Vec<(u32, crate::gaussian::GaussianRecord)> {
+    cut.iter().map(|&id| (id, tree.gaussians.record(id))).collect()
+}
+
+/// Borrowing view of an owned queue (what the renderer takes).
+pub fn queue_refs<'a>(
+    q: &'a [(u32, crate::gaussian::GaussianRecord)],
+) -> Vec<(u32, &'a crate::gaussian::GaussianRecord)> {
+    q.iter().map(|(id, g)| (*id, g)).collect()
+}
+
+/// The Fig 18/19 variant line-up.
+pub fn fig18_variants() -> Vec<Variant> {
+    vec![
+        Variant::base_on(PlatformKind::Gpu),
+        Variant::base_on(PlatformKind::Gbu),
+        Variant::base_on(PlatformKind::GsCore),
+        Variant::nebula(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::SMALL_DATASETS;
+
+    #[test]
+    fn scene_and_trace_helpers() {
+        let spec = &SMALL_DATASETS[0];
+        let tree = build_scene(spec);
+        assert!(tree.len() >= 2000);
+        let poses = walk_trace(spec, 8);
+        assert_eq!(poses.len(), 8);
+        let pl = PipelineConfig::default();
+        let cut = cut_at(&tree, &poses[0], &pl);
+        assert!(!cut.is_empty());
+        let q = queue_for(&tree, &cut);
+        assert_eq!(q.len(), cut.len());
+        assert_eq!(queue_refs(&q).len(), cut.len());
+    }
+
+    #[test]
+    fn variants_cover_platforms() {
+        let v = fig18_variants();
+        assert_eq!(v.len(), 4);
+        assert!(v.iter().any(|x| x.stereo));
+    }
+}

@@ -1,0 +1,349 @@
+//! Δcut wire codec: (id, Gaussian) list → compressed byte stream.
+//!
+//! Layout per Δcut: header (mode, count) + delta-varint ids + per-Gaussian
+//! payload (raw f32s, or fixed-point + VQ index), entropy-coded with zstd.
+//! Cloud encodes, client decodes; the byte counts drive the bandwidth
+//! experiments (Fig 17/19/24).
+
+use super::fixed::{FixedQuantizer, QuantizedGaussian};
+use super::vq::{sh_rest, Codebook};
+use crate::gaussian::{GaussianId, GaussianRecord};
+use crate::math::sh::SH_FLOATS;
+
+/// How Gaussian payloads are encoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionMode {
+    /// Raw f32 attributes (236 B/Gaussian before zstd). Baseline for the
+    /// ablation (Fig 22 "CMP off").
+    Raw,
+    /// 16-bit fixed point + SH vector quantization (paper's scheme).
+    Quantized,
+}
+
+/// An encoded Δcut.
+#[derive(Debug, Clone)]
+pub struct EncodedDelta {
+    pub bytes: Vec<u8>,
+    /// Gaussians encoded.
+    pub count: usize,
+}
+
+impl EncodedDelta {
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// Encoder/decoder pair parameterized by scene metadata (quantizer +
+/// codebook, shipped once with the scene install).
+pub struct DeltaCodec {
+    pub mode: CompressionMode,
+    pub quantizer: FixedQuantizer,
+    pub codebook: Codebook,
+    /// zstd level (3 = fast, good ratio).
+    pub zstd_level: i32,
+}
+
+const MAGIC: u8 = 0xD6;
+
+impl DeltaCodec {
+    pub fn new(mode: CompressionMode, quantizer: FixedQuantizer, codebook: Codebook) -> Self {
+        Self { mode, quantizer, codebook, zstd_level: 3 }
+    }
+
+    /// Encode a Δcut. `items` need not be sorted; the stream stores them
+    /// sorted by id (better delta coding and deterministic output).
+    pub fn encode(&self, items: &[(GaussianId, GaussianRecord)]) -> EncodedDelta {
+        let mut sorted: Vec<&(GaussianId, GaussianRecord)> = items.iter().collect();
+        sorted.sort_by_key(|(id, _)| *id);
+
+        let mut raw = Vec::with_capacity(16 + items.len() * 64);
+        raw.push(MAGIC);
+        raw.push(match self.mode {
+            CompressionMode::Raw => 0,
+            CompressionMode::Quantized => 1,
+        });
+        write_varint(&mut raw, sorted.len() as u64);
+        let mut prev_id = 0u64;
+        for (id, _) in &sorted {
+            let id = *id as u64;
+            write_varint(&mut raw, id.wrapping_sub(prev_id));
+            prev_id = id;
+        }
+        for (_, g) in &sorted {
+            match self.mode {
+                CompressionMode::Raw => {
+                    for v in [g.pos.x, g.pos.y, g.pos.z, g.scale.x, g.scale.y, g.scale.z] {
+                        raw.extend_from_slice(&v.to_le_bytes());
+                    }
+                    for v in g.rot.to_array() {
+                        raw.extend_from_slice(&v.to_le_bytes());
+                    }
+                    raw.extend_from_slice(&g.opacity.to_le_bytes());
+                    for v in &g.sh {
+                        raw.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                CompressionMode::Quantized => {
+                    let q = self.quantizer.quantize(g);
+                    push_quantized(&mut raw, &q);
+                    let idx = self.codebook.encode(&sh_rest(&g.sh));
+                    raw.extend_from_slice(&idx.to_le_bytes());
+                }
+            }
+        }
+        let bytes = zstd::bulk::compress(&raw, self.zstd_level).expect("zstd compress");
+        EncodedDelta { bytes, count: sorted.len() }
+    }
+
+    /// Decode a Δcut back to (id, record) pairs (sorted by id).
+    pub fn decode(&self, enc: &EncodedDelta) -> anyhow::Result<Vec<(GaussianId, GaussianRecord)>> {
+        // 64 MB cap: a Δcut is at most a few hundred K Gaussians.
+        let raw = zstd::bulk::decompress(&enc.bytes, 64 << 20)
+            .map_err(|e| anyhow::anyhow!("zstd: {e}"))?;
+        let mut r = Reader { buf: &raw, pos: 0 };
+        anyhow::ensure!(r.u8()? == MAGIC, "bad magic");
+        let mode = match r.u8()? {
+            0 => CompressionMode::Raw,
+            1 => CompressionMode::Quantized,
+            m => anyhow::bail!("bad mode {m}"),
+        };
+        let count = r.varint()? as usize;
+        let mut ids = Vec::with_capacity(count);
+        let mut prev = 0u64;
+        for _ in 0..count {
+            prev = prev.wrapping_add(r.varint()?);
+            ids.push(prev as GaussianId);
+        }
+        let mut out = Vec::with_capacity(count);
+        for id in ids {
+            let g = match mode {
+                CompressionMode::Raw => {
+                    // Mirror the encode order exactly: pos, scale, rot,
+                    // opacity, sh.
+                    let mut f = [0.0f32; 10];
+                    for v in f.iter_mut() {
+                        *v = r.f32()?;
+                    }
+                    let opacity = r.f32()?;
+                    let mut sh = [0.0f32; SH_FLOATS];
+                    for v in sh.iter_mut() {
+                        *v = r.f32()?;
+                    }
+                    GaussianRecord {
+                        pos: crate::math::Vec3::new(f[0], f[1], f[2]),
+                        scale: crate::math::Vec3::new(f[3], f[4], f[5]),
+                        rot: crate::math::Quat::new(f[6], f[7], f[8], f[9]),
+                        opacity,
+                        sh,
+                    }
+                }
+                CompressionMode::Quantized => {
+                    let q = read_quantized(&mut r)?;
+                    let idx = r.u16()?;
+                    let mut g = self.quantizer.dequantize(&q);
+                    self.codebook.decode_into(idx, &mut g.sh);
+                    g
+                }
+            };
+            out.push((id, g));
+        }
+        Ok(out)
+    }
+}
+
+fn push_quantized(out: &mut Vec<u8>, q: &QuantizedGaussian) {
+    for v in q.pos.iter().chain(&q.scale).chain(&q.rot) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&q.opacity.to_le_bytes());
+    for v in &q.sh_dc {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn read_quantized(r: &mut Reader) -> anyhow::Result<QuantizedGaussian> {
+    let mut q = QuantizedGaussian {
+        pos: [0; 3],
+        scale: [0; 3],
+        rot: [0; 4],
+        opacity: 0,
+        sh_dc: [0; 3],
+    };
+    for v in q.pos.iter_mut().chain(q.scale.iter_mut()).chain(q.rot.iter_mut()) {
+        *v = r.u16()?;
+    }
+    q.opacity = r.u16()?;
+    for v in q.sh_dc.iter_mut() {
+        *v = r.u16()?;
+    }
+    Ok(q)
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "truncated stream");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn varint(&mut self) -> anyhow::Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            let b = self.u8()?;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            anyhow::ensure!(shift < 64, "varint too long");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Quat, Vec3};
+    use crate::util::Prng;
+
+    fn random_items(rng: &mut Prng, n: usize) -> Vec<(GaussianId, GaussianRecord)> {
+        let mut ids: Vec<u32> = (0..(n as u32 * 3)).collect();
+        rng.shuffle(&mut ids);
+        (0..n)
+            .map(|i| {
+                let mut sh = [0.0f32; SH_FLOATS];
+                for v in sh.iter_mut() {
+                    *v = rng.normal() * 0.5;
+                }
+                (
+                    ids[i],
+                    GaussianRecord {
+                        pos: Vec3::new(
+                            rng.range_f32(0.0, 900.0),
+                            rng.range_f32(0.0, 100.0),
+                            rng.range_f32(0.0, 900.0),
+                        ),
+                        scale: Vec3::splat(rng.range_f32(0.01, 5.0)),
+                        rot: Quat::from_yaw_pitch(rng.range_f32(-1.0, 1.0), 0.0),
+                        opacity: rng.f32(),
+                        sh,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn codec(mode: CompressionMode) -> DeltaCodec {
+        let mut rng = Prng::new(99);
+        let items = random_items(&mut rng, 500);
+        let sh_data: Vec<f32> = items.iter().flat_map(|(_, g)| g.sh.to_vec()).collect();
+        let cb = super::super::vq::VqTrainer::default().train(&sh_data);
+        DeltaCodec::new(mode, FixedQuantizer::for_bounds(Vec3::ZERO, Vec3::splat(1000.0)), cb)
+    }
+
+    #[test]
+    fn raw_round_trip_is_exact() {
+        let c = codec(CompressionMode::Raw);
+        let mut rng = Prng::new(1);
+        let items = random_items(&mut rng, 100);
+        let enc = c.encode(&items);
+        let dec = c.decode(&enc).unwrap();
+        assert_eq!(dec.len(), 100);
+        let mut sorted = items.clone();
+        sorted.sort_by_key(|(id, _)| *id);
+        for ((ia, ga), (ib, gb)) in sorted.iter().zip(&dec) {
+            assert_eq!(ia, ib);
+            assert_eq!(ga, gb, "raw mode must be lossless");
+        }
+    }
+
+    #[test]
+    fn quantized_round_trip_within_bounds() {
+        let c = codec(CompressionMode::Quantized);
+        let mut rng = Prng::new(2);
+        let items = random_items(&mut rng, 100);
+        let enc = c.encode(&items);
+        let dec = c.decode(&enc).unwrap();
+        let mut sorted = items.clone();
+        sorted.sort_by_key(|(id, _)| *id);
+        for ((ia, ga), (ib, gb)) in sorted.iter().zip(&dec) {
+            assert_eq!(ia, ib);
+            assert!((ga.pos - gb.pos).norm() < 0.03);
+            assert!((ga.opacity - gb.opacity).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn quantized_much_smaller_than_raw() {
+        let mut rng = Prng::new(3);
+        let items = random_items(&mut rng, 1000);
+        let raw = codec(CompressionMode::Raw).encode(&items);
+        let q = codec(CompressionMode::Quantized).encode(&items);
+        let raw_bpp = raw.wire_bytes() as f64 / items.len() as f64;
+        let q_bpp = q.wire_bytes() as f64 / items.len() as f64;
+        // Paper-scheme: ~30 B < raw ~220 B.
+        assert!(q_bpp < raw_bpp / 4.0, "quantized {q_bpp:.1} B vs raw {raw_bpp:.1} B");
+        assert!(q_bpp < 40.0, "quantized {q_bpp:.1} B/Gaussian too large");
+    }
+
+    #[test]
+    fn empty_delta_round_trips() {
+        let c = codec(CompressionMode::Quantized);
+        let enc = c.encode(&[]);
+        assert_eq!(c.decode(&enc).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let c = codec(CompressionMode::Quantized);
+        let mut rng = Prng::new(4);
+        let items = random_items(&mut rng, 10);
+        let mut enc = c.encode(&items);
+        enc.bytes.truncate(enc.bytes.len() / 2);
+        assert!(c.decode(&enc).is_err());
+    }
+
+    #[test]
+    fn output_sorted_and_deterministic() {
+        let c = codec(CompressionMode::Quantized);
+        let mut rng = Prng::new(5);
+        let items = random_items(&mut rng, 50);
+        let e1 = c.encode(&items);
+        let mut rev = items.clone();
+        rev.reverse();
+        let e2 = c.encode(&rev);
+        assert_eq!(e1.bytes, e2.bytes, "encoding must not depend on input order");
+        let dec = c.decode(&e1).unwrap();
+        assert!(dec.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

@@ -1,0 +1,240 @@
+//! 16-bit fixed-point quantization of the non-SH Gaussian attributes
+//! (position, scale, rotation, opacity, SH DC) — paper §4.3: "encoded
+//! using a 16-bit fixed-point representation with negligible quality
+//! loss".
+
+use crate::gaussian::GaussianRecord;
+use crate::math::sh::COEFFS;
+use crate::math::{Quat, Vec3};
+
+/// Quantized wire form of one Gaussian (without SH rest, which is VQ'd).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantizedGaussian {
+    pub pos: [u16; 3],
+    /// log2-scale quantized.
+    pub scale: [u16; 3],
+    pub rot: [u16; 4],
+    pub opacity: u16,
+    /// SH DC terms per channel.
+    pub sh_dc: [u16; 3],
+}
+
+impl QuantizedGaussian {
+    /// Wire bytes of the fixed-point part.
+    pub const WIRE_BYTES: usize = 3 * 2 + 3 * 2 + 4 * 2 + 2 + 3 * 2;
+}
+
+/// Quantization parameters fixed per scene (derived from scene bounds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FixedQuantizer {
+    pub lo: Vec3,
+    pub hi: Vec3,
+    /// log2 of min/max representable scale (meters).
+    pub log_scale_lo: f32,
+    pub log_scale_hi: f32,
+    /// SH DC dynamic range.
+    pub dc_lo: f32,
+    pub dc_hi: f32,
+}
+
+const U16_MAX_F: f32 = 65535.0;
+
+#[inline]
+fn q16(v: f32, lo: f32, hi: f32) -> u16 {
+    let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+    (t * U16_MAX_F).round() as u16
+}
+
+#[inline]
+fn dq16(q: u16, lo: f32, hi: f32) -> f32 {
+    lo + (q as f32 / U16_MAX_F) * (hi - lo)
+}
+
+impl FixedQuantizer {
+    /// Build from scene bounds (with a safety margin).
+    pub fn for_bounds(lo: Vec3, hi: Vec3) -> Self {
+        let pad = (hi - lo) * 0.01 + Vec3::splat(1e-3);
+        Self {
+            lo: lo - pad,
+            hi: hi + pad,
+            log_scale_lo: (1e-4f32).log2(),
+            log_scale_hi: (2e3f32).log2(),
+            dc_lo: -8.0,
+            dc_hi: 8.0,
+        }
+    }
+
+    pub fn quantize(&self, g: &GaussianRecord) -> QuantizedGaussian {
+        let r = g.rot.normalized();
+        QuantizedGaussian {
+            pos: [
+                q16(g.pos.x, self.lo.x, self.hi.x),
+                q16(g.pos.y, self.lo.y, self.hi.y),
+                q16(g.pos.z, self.lo.z, self.hi.z),
+            ],
+            scale: [
+                q16(g.scale.x.max(1e-6).log2(), self.log_scale_lo, self.log_scale_hi),
+                q16(g.scale.y.max(1e-6).log2(), self.log_scale_lo, self.log_scale_hi),
+                q16(g.scale.z.max(1e-6).log2(), self.log_scale_lo, self.log_scale_hi),
+            ],
+            rot: [
+                q16(r.w, -1.0, 1.0),
+                q16(r.x, -1.0, 1.0),
+                q16(r.y, -1.0, 1.0),
+                q16(r.z, -1.0, 1.0),
+            ],
+            opacity: q16(g.opacity, 0.0, 1.0),
+            sh_dc: [
+                q16(g.sh[0], self.dc_lo, self.dc_hi),
+                q16(g.sh[COEFFS], self.dc_lo, self.dc_hi),
+                q16(g.sh[2 * COEFFS], self.dc_lo, self.dc_hi),
+            ],
+        }
+    }
+
+    /// Dequantize into a record whose SH rest coefficients are zeroed
+    /// (the VQ stage fills those in).
+    pub fn dequantize(&self, q: &QuantizedGaussian) -> GaussianRecord {
+        let mut sh = [0.0f32; crate::math::sh::SH_FLOATS];
+        sh[0] = dq16(q.sh_dc[0], self.dc_lo, self.dc_hi);
+        sh[COEFFS] = dq16(q.sh_dc[1], self.dc_lo, self.dc_hi);
+        sh[2 * COEFFS] = dq16(q.sh_dc[2], self.dc_lo, self.dc_hi);
+        GaussianRecord {
+            pos: Vec3::new(
+                dq16(q.pos[0], self.lo.x, self.hi.x),
+                dq16(q.pos[1], self.lo.y, self.hi.y),
+                dq16(q.pos[2], self.lo.z, self.hi.z),
+            ),
+            scale: Vec3::new(
+                dq16(q.scale[0], self.log_scale_lo, self.log_scale_hi).exp2(),
+                dq16(q.scale[1], self.log_scale_lo, self.log_scale_hi).exp2(),
+                dq16(q.scale[2], self.log_scale_lo, self.log_scale_hi).exp2(),
+            ),
+            rot: Quat::new(
+                dq16(q.rot[0], -1.0, 1.0),
+                dq16(q.rot[1], -1.0, 1.0),
+                dq16(q.rot[2], -1.0, 1.0),
+                dq16(q.rot[3], -1.0, 1.0),
+            )
+            .normalized(),
+            opacity: dq16(q.opacity, 0.0, 1.0),
+            sh,
+        }
+    }
+
+    /// Serialize quantizer params (shared scene metadata, sent once).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let vals = [
+            self.lo.x,
+            self.lo.y,
+            self.lo.z,
+            self.hi.x,
+            self.hi.y,
+            self.hi.z,
+            self.log_scale_lo,
+            self.log_scale_hi,
+            self.dc_lo,
+            self.dc_hi,
+        ];
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(b.len() >= 40, "quantizer blob too short");
+        let f = |i: usize| f32::from_le_bytes([b[i * 4], b[i * 4 + 1], b[i * 4 + 2], b[i * 4 + 3]]);
+        Ok(Self {
+            lo: Vec3::new(f(0), f(1), f(2)),
+            hi: Vec3::new(f(3), f(4), f(5)),
+            log_scale_lo: f(6),
+            log_scale_hi: f(7),
+            dc_lo: f(8),
+            dc_hi: f(9),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn quantizer() -> FixedQuantizer {
+        FixedQuantizer::for_bounds(Vec3::ZERO, Vec3::splat(1000.0))
+    }
+
+    fn random_record(rng: &mut crate::util::Prng) -> GaussianRecord {
+        let mut sh = [0.0f32; crate::math::sh::SH_FLOATS];
+        for v in sh.iter_mut() {
+            *v = rng.normal();
+        }
+        GaussianRecord {
+            pos: Vec3::new(
+                rng.range_f32(0.0, 1000.0),
+                rng.range_f32(0.0, 1000.0),
+                rng.range_f32(0.0, 1000.0),
+            ),
+            scale: Vec3::new(
+                rng.range_f32(0.001, 100.0),
+                rng.range_f32(0.001, 100.0),
+                rng.range_f32(0.001, 100.0),
+            ),
+            rot: Quat::from_yaw_pitch(rng.range_f32(-3.0, 3.0), rng.range_f32(-1.0, 1.0)),
+            opacity: rng.f32(),
+            sh,
+        }
+    }
+
+    #[test]
+    fn round_trip_error_bounds() {
+        check("fixed-point round trip", Config::default(), |rng| {
+            let q = quantizer();
+            let g = random_record(rng);
+            let back = q.dequantize(&q.quantize(&g));
+            // Position error ≤ range/65535 ≈ 1.6 cm for a 1 km scene.
+            assert!((back.pos - g.pos).norm() < 0.03, "pos err {}", (back.pos - g.pos).norm());
+            // Scale error ≤ ~0.05% in log space.
+            for (a, b) in [(back.scale.x, g.scale.x), (back.scale.y, g.scale.y), (back.scale.z, g.scale.z)] {
+                assert!((a / b - 1.0).abs() < 0.01, "scale {a} vs {b}");
+            }
+            assert!((back.opacity - g.opacity).abs() < 1e-4);
+            // Rotation: compare action on a vector.
+            let v = Vec3::new(1.0, 2.0, 3.0);
+            assert!((back.rot.rotate(v) - g.rot.normalized().rotate(v)).norm() < 1e-3);
+            // DC terms.
+            assert!((back.sh[0] - g.sh[0].clamp(-8.0, 8.0)).abs() < 3e-4);
+        });
+    }
+
+    #[test]
+    fn deterministic_quantization() {
+        let mut rng = crate::util::Prng::new(3);
+        let q = quantizer();
+        let g = random_record(&mut rng);
+        assert_eq!(q.quantize(&g), q.quantize(&g));
+    }
+
+    #[test]
+    fn quantizer_serialization_round_trip() {
+        let q = quantizer();
+        let b = q.to_bytes();
+        assert_eq!(b.len(), 40);
+        let q2 = FixedQuantizer::from_bytes(&b).unwrap();
+        assert_eq!(q, q2);
+        assert!(FixedQuantizer::from_bytes(&b[..10]).is_err());
+    }
+
+    #[test]
+    fn out_of_range_values_clamp() {
+        let q = quantizer();
+        let mut rng = crate::util::Prng::new(4);
+        let mut g = random_record(&mut rng);
+        g.pos = Vec3::splat(1e9);
+        let back = q.dequantize(&q.quantize(&g));
+        assert!(back.pos.x <= q.hi.x + 1.0);
+    }
+
+    #[test]
+    fn wire_bytes_constant() {
+        assert_eq!(QuantizedGaussian::WIRE_BYTES, 28);
+    }
+}

@@ -1,0 +1,21 @@
+//! Gaussian attribute compression (paper §4.3 "Compression").
+//!
+//! Following Compact3DGS/reduced-3DGS (the paper claims no contribution
+//! here), attributes are compressed independently:
+//! * SH "rest" coefficients (45 floats, the storage hog) → vector
+//!   quantization against a per-scene k-means codebook ([`vq`]);
+//! * position / scale / rotation / opacity / SH DC → 16-bit fixed point
+//!   ([`fixed`]);
+//! * the per-Δcut byte stream is entropy-coded with zstd ([`codec`]).
+//!
+//! The codebook is part of the application install (both ends hold it),
+//! so the wire cost per Gaussian is the quantized attributes + one
+//! codebook index.
+
+pub mod codec;
+pub mod fixed;
+pub mod vq;
+
+pub use codec::{CompressionMode, DeltaCodec, EncodedDelta};
+pub use fixed::{FixedQuantizer, QuantizedGaussian};
+pub use vq::{Codebook, VqTrainer};

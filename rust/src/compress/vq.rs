@@ -1,0 +1,319 @@
+//! Vector quantization of SH "rest" coefficients (paper §4.3, following
+//! Compact3DGS [53]).
+//!
+//! The 45 non-DC SH floats dominate Gaussian storage (180 of 236 bytes).
+//! A per-scene codebook is trained offline with k-means on a sample of
+//! the scene's SH vectors; at runtime each Gaussian ships only a 2-byte
+//! codebook index. The client holds the same codebook (scene install
+//! data) and decodes with one table lookup — the hardware decoder of
+//! paper Fig 14 models exactly this.
+
+use crate::math::sh::{COEFFS, SH_FLOATS};
+use crate::util::Prng;
+
+/// Dimension of a VQ vector: SH rest = 45 floats (RGB × 15 non-DC).
+pub const VQ_DIM: usize = 3 * (COEFFS - 1);
+
+/// Extract the rest (non-DC) coefficients from a 48-float SH block.
+pub fn sh_rest(sh: &[f32]) -> [f32; VQ_DIM] {
+    debug_assert!(sh.len() >= SH_FLOATS);
+    let mut out = [0.0f32; VQ_DIM];
+    for c in 0..3 {
+        for k in 1..COEFFS {
+            out[c * (COEFFS - 1) + (k - 1)] = sh[c * COEFFS + k];
+        }
+    }
+    out
+}
+
+/// Write rest coefficients back into a 48-float SH block (DC untouched).
+pub fn write_sh_rest(sh: &mut [f32], rest: &[f32; VQ_DIM]) {
+    for c in 0..3 {
+        for k in 1..COEFFS {
+            sh[c * COEFFS + k] = rest[c * (COEFFS - 1) + (k - 1)];
+        }
+    }
+}
+
+/// A trained VQ codebook.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    /// Flattened entries, `VQ_DIM` floats each.
+    pub entries: Vec<f32>,
+    pub size: usize,
+}
+
+impl Codebook {
+    pub fn entry(&self, idx: u16) -> &[f32] {
+        let i = (idx as usize).min(self.size - 1) * VQ_DIM;
+        &self.entries[i..i + VQ_DIM]
+    }
+
+    /// Nearest codeword (squared-L2) for a vector.
+    pub fn encode(&self, v: &[f32; VQ_DIM]) -> u16 {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for e in 0..self.size {
+            let entry = &self.entries[e * VQ_DIM..(e + 1) * VQ_DIM];
+            let mut d = 0.0f32;
+            for i in 0..VQ_DIM {
+                let diff = entry[i] - v[i];
+                d += diff * diff;
+                if d >= best_d {
+                    break; // early out
+                }
+            }
+            if d < best_d {
+                best_d = d;
+                best = e;
+            }
+        }
+        best as u16
+    }
+
+    /// Decode a codeword into a full SH block's rest part.
+    pub fn decode_into(&self, idx: u16, sh: &mut [f32]) {
+        let entry = self.entry(idx);
+        for c in 0..3 {
+            for k in 1..COEFFS {
+                sh[c * COEFFS + k] = entry[c * (COEFFS - 1) + (k - 1)];
+            }
+        }
+    }
+
+    /// Serialize (scene install data).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.entries.len() * 4);
+        out.extend_from_slice(&(self.size as u32).to_le_bytes());
+        out.extend_from_slice(&(VQ_DIM as u32).to_le_bytes());
+        for v in &self.entries {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(b.len() >= 8, "codebook blob too short");
+        let size = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        let dim = u32::from_le_bytes([b[4], b[5], b[6], b[7]]) as usize;
+        anyhow::ensure!(dim == VQ_DIM, "codebook dim {dim} != {VQ_DIM}");
+        anyhow::ensure!(b.len() == 8 + size * dim * 4, "codebook blob size mismatch");
+        let mut entries = Vec::with_capacity(size * dim);
+        for i in 0..size * dim {
+            let o = 8 + i * 4;
+            entries.push(f32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]]));
+        }
+        Ok(Self { entries, size })
+    }
+}
+
+/// Offline k-means trainer.
+#[derive(Debug, Clone, Copy)]
+pub struct VqTrainer {
+    pub codebook_size: usize,
+    pub iterations: usize,
+    /// Max training vectors (sampled if the scene is larger).
+    pub max_samples: usize,
+    pub seed: u64,
+}
+
+impl Default for VqTrainer {
+    fn default() -> Self {
+        Self { codebook_size: 256, iterations: 8, max_samples: 20_000, seed: 1234 }
+    }
+}
+
+impl VqTrainer {
+    /// Train on SH blocks (each `SH_FLOATS` long, flattened).
+    pub fn train(&self, sh_data: &[f32]) -> Codebook {
+        let n = sh_data.len() / SH_FLOATS;
+        assert!(n > 0, "no training data");
+        let mut rng = Prng::new(self.seed);
+        // Sample training vectors.
+        let take = n.min(self.max_samples);
+        let mut samples: Vec<[f32; VQ_DIM]> = Vec::with_capacity(take);
+        for i in 0..take {
+            let idx = if n <= self.max_samples { i } else { rng.below(n) };
+            samples.push(sh_rest(&sh_data[idx * SH_FLOATS..(idx + 1) * SH_FLOATS]));
+        }
+        let k = self.codebook_size.min(samples.len()).max(1);
+
+        // k-means++ init: first center uniform, each next sampled with
+        // probability proportional to squared distance to the nearest
+        // chosen center — avoids the empty/merged-cluster local optima of
+        // uniform seeding.
+        let mut entries: Vec<f32> = Vec::with_capacity(k * VQ_DIM);
+        entries.extend_from_slice(&samples[rng.below(samples.len())]);
+        let mut d2 = vec![f32::INFINITY; samples.len()];
+        for _ in 1..k {
+            let last = &entries[entries.len() - VQ_DIM..];
+            let mut total = 0.0f64;
+            for (i, s) in samples.iter().enumerate() {
+                let mut d = 0.0f32;
+                for j in 0..VQ_DIM {
+                    let diff = s[j] - last[j];
+                    d += diff * diff;
+                }
+                d2[i] = d2[i].min(d);
+                total += d2[i] as f64;
+            }
+            let pick = if total <= 0.0 {
+                rng.below(samples.len())
+            } else {
+                let mut target = rng.f64() * total;
+                let mut chosen = samples.len() - 1;
+                for (i, &d) in d2.iter().enumerate() {
+                    target -= d as f64;
+                    if target <= 0.0 {
+                        chosen = i;
+                        break;
+                    }
+                }
+                chosen
+            };
+            entries.extend_from_slice(&samples[pick]);
+        }
+        let mut cb = Codebook { entries, size: k };
+
+        // Lloyd iterations.
+        let mut assign = vec![0u16; samples.len()];
+        for _ in 0..self.iterations {
+            for (i, s) in samples.iter().enumerate() {
+                assign[i] = cb.encode(s);
+            }
+            let mut sums = vec![0.0f64; k * VQ_DIM];
+            let mut counts = vec![0u32; k];
+            for (i, s) in samples.iter().enumerate() {
+                let a = assign[i] as usize;
+                counts[a] += 1;
+                for d in 0..VQ_DIM {
+                    sums[a * VQ_DIM + d] += s[d] as f64;
+                }
+            }
+            for e in 0..k {
+                if counts[e] == 0 {
+                    // Re-seed empty cluster from a random sample.
+                    let s = &samples[rng.below(samples.len())];
+                    cb.entries[e * VQ_DIM..(e + 1) * VQ_DIM].copy_from_slice(s);
+                } else {
+                    for d in 0..VQ_DIM {
+                        cb.entries[e * VQ_DIM + d] =
+                            (sums[e * VQ_DIM + d] / counts[e] as f64) as f32;
+                    }
+                }
+            }
+        }
+        cb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_sh(n: usize, clusters: usize, seed: u64) -> Vec<f32> {
+        // Vectors drawn around `clusters` well-separated centers.
+        let mut rng = Prng::new(seed);
+        let centers: Vec<[f32; VQ_DIM]> = (0..clusters)
+            .map(|c| {
+                let mut v = [0.0f32; VQ_DIM];
+                for (d, x) in v.iter_mut().enumerate() {
+                    *x = ((c * 31 + d * 7) % 13) as f32 - 6.0;
+                }
+                v
+            })
+            .collect();
+        let mut data = vec![0.0f32; n * SH_FLOATS];
+        for i in 0..n {
+            let c = &centers[rng.below(clusters)];
+            let mut rest = *c;
+            for x in rest.iter_mut() {
+                *x += rng.normal() * 0.05;
+            }
+            write_sh_rest(&mut data[i * SH_FLOATS..(i + 1) * SH_FLOATS], &rest);
+        }
+        data
+    }
+
+    #[test]
+    fn rest_extraction_round_trip() {
+        let mut rng = Prng::new(1);
+        let mut sh = [0.0f32; SH_FLOATS];
+        for v in sh.iter_mut() {
+            *v = rng.normal();
+        }
+        let rest = sh_rest(&sh);
+        let mut sh2 = sh;
+        write_sh_rest(&mut sh2, &rest);
+        assert_eq!(sh, sh2);
+        // DC entries are not part of rest.
+        assert_eq!(rest.len(), 45);
+    }
+
+    #[test]
+    fn kmeans_recovers_clusters() {
+        let data = synthetic_sh(2000, 8, 7);
+        let cb = VqTrainer { codebook_size: 8, iterations: 12, ..Default::default() }.train(&data);
+        // Every vector should decode within noise distance of its source.
+        let mut worst = 0.0f32;
+        for i in 0..200 {
+            let v = sh_rest(&data[i * SH_FLOATS..(i + 1) * SH_FLOATS]);
+            let idx = cb.encode(&v);
+            let e = cb.entry(idx);
+            let d: f32 = v.iter().zip(e).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            worst = worst.max(d);
+        }
+        assert!(worst < 1.0, "worst decode distance {worst}");
+    }
+
+    #[test]
+    fn encode_picks_nearest() {
+        let data = synthetic_sh(500, 4, 9);
+        let cb = VqTrainer { codebook_size: 4, iterations: 10, ..Default::default() }.train(&data);
+        let v = sh_rest(&data[0..SH_FLOATS]);
+        let idx = cb.encode(&v);
+        // Brute-force nearest must agree.
+        let mut best = (f32::INFINITY, 0u16);
+        for e in 0..cb.size as u16 {
+            let entry = cb.entry(e);
+            let d: f32 = v.iter().zip(entry).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best.0 {
+                best = (d, e);
+            }
+        }
+        assert_eq!(idx, best.1);
+    }
+
+    #[test]
+    fn serialization_round_trip() {
+        let data = synthetic_sh(300, 4, 11);
+        let cb = VqTrainer { codebook_size: 16, iterations: 4, ..Default::default() }.train(&data);
+        let blob = cb.to_bytes();
+        let cb2 = Codebook::from_bytes(&blob).unwrap();
+        assert_eq!(cb, cb2);
+        assert!(Codebook::from_bytes(&blob[..blob.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn decode_into_fills_rest_only() {
+        let data = synthetic_sh(100, 2, 13);
+        let cb = VqTrainer { codebook_size: 2, iterations: 4, ..Default::default() }.train(&data);
+        let mut sh = [9.0f32; SH_FLOATS];
+        cb.decode_into(0, &mut sh);
+        // DC terms untouched.
+        assert_eq!(sh[0], 9.0);
+        assert_eq!(sh[COEFFS], 9.0);
+        assert_eq!(sh[2 * COEFFS], 9.0);
+        // Some rest coefficient was written.
+        assert_ne!(sh[1], 9.0);
+    }
+
+    #[test]
+    fn handles_tiny_training_sets() {
+        let data = synthetic_sh(3, 2, 17);
+        let cb = VqTrainer { codebook_size: 256, iterations: 3, ..Default::default() }.train(&data);
+        assert!(cb.size <= 3);
+        let v = sh_rest(&data[0..SH_FLOATS]);
+        let _ = cb.encode(&v); // must not panic
+    }
+}

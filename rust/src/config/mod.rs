@@ -1,0 +1,208 @@
+//! Configuration system.
+//!
+//! Typed configs for every subsystem plus a TOML-subset parser (serde is
+//! unavailable offline). Supported syntax: `[section]`, `key = value`
+//! with string/int/float/bool values, `#` comments.
+
+pub mod toml;
+
+use crate::util::cli::Args;
+
+/// Which synthetic dataset scale point to use (see `scene::registry`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SceneConfig {
+    /// Registry name, e.g. "tnt", "db", "m360", "urban", "mega", "hiergs".
+    pub dataset: String,
+    /// Override target Gaussian count (0 = registry default).
+    pub target_gaussians: usize,
+    pub seed: u64,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        Self { dataset: "tnt".into(), target_gaussians: 0, seed: 7 }
+    }
+}
+
+/// Rendering pipeline parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineConfig {
+    /// LoD threshold tau* in pixels: refine while projected extent > tau.
+    pub tau_px: f32,
+    /// Square tile side in pixels (paper evaluates 4..32; default 16).
+    pub tile: u32,
+    /// Alpha threshold below which a Gaussian is skipped for a pixel.
+    pub alpha_min: f32,
+    /// Transmittance floor at which a pixel saturates and stops blending.
+    pub transmittance_min: f32,
+    /// SH degree used at render time.
+    pub sh_degree: usize,
+    /// Run LoD search every `w` frames (paper w=4).
+    pub lod_interval: u32,
+    /// Reuse-window eviction threshold w_r* (paper: 32).
+    pub reuse_threshold: u32,
+    /// Downscale factor applied to the VR eye resolution (1 = full).
+    pub res_scale: u32,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            tau_px: 6.0,
+            tile: 16,
+            alpha_min: 1.0 / 255.0,
+            transmittance_min: 1.0 / 255.0,
+            sh_degree: 3,
+            lod_interval: 4,
+            reuse_threshold: 32,
+            res_scale: 8,
+        }
+    }
+}
+
+/// Network link parameters (paper §6: 100 Mbps Wi-Fi, 100 nJ/B).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    pub bandwidth_bps: f64,
+    /// One-way propagation latency.
+    pub latency_ms: f64,
+    pub energy_nj_per_byte: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self { bandwidth_bps: 100e6, latency_ms: 5.0, energy_nj_per_byte: 100.0 }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunConfig {
+    pub scene: SceneConfig,
+    pub pipeline: PipelineConfig,
+    pub net: NetConfig,
+    pub frames: u32,
+    pub artifacts_dir: String,
+}
+
+impl RunConfig {
+    /// Build from parsed CLI args (which override file values if
+    /// `--config <path>` was also given).
+    pub fn from_args(args: &Args) -> anyhow::Result<Self> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            Self::from_toml_file(path)?
+        } else {
+            Self { frames: 64, artifacts_dir: "artifacts".into(), ..Default::default() }
+        };
+        if let Some(d) = args.get("scene") {
+            cfg.scene.dataset = d.to_string();
+        }
+        cfg.scene.target_gaussians =
+            args.get_parse_or("gaussians", cfg.scene.target_gaussians);
+        cfg.scene.seed = args.get_parse_or("seed", cfg.scene.seed);
+        cfg.pipeline.tau_px = args.get_parse_or("tau", cfg.pipeline.tau_px);
+        cfg.pipeline.tile = args.get_parse_or("tile", cfg.pipeline.tile);
+        cfg.pipeline.lod_interval = args.get_parse_or("lod-interval", cfg.pipeline.lod_interval);
+        cfg.pipeline.res_scale = args.get_parse_or("res-scale", cfg.pipeline.res_scale);
+        cfg.frames = args.get_parse_or("frames", cfg.frames);
+        cfg.net.bandwidth_bps = args.get_parse_or("bandwidth-mbps", cfg.net.bandwidth_bps / 1e6) * 1e6;
+        if let Some(a) = args.get("artifacts") {
+            cfg.artifacts_dir = a.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Self { frames: 64, artifacts_dir: "artifacts".into(), ..Default::default() };
+        if let Some(s) = doc.section("scene") {
+            cfg.scene.dataset = s.str_or("dataset", &cfg.scene.dataset);
+            cfg.scene.target_gaussians = s.int_or("target_gaussians", cfg.scene.target_gaussians as i64) as usize;
+            cfg.scene.seed = s.int_or("seed", cfg.scene.seed as i64) as u64;
+        }
+        if let Some(s) = doc.section("pipeline") {
+            cfg.pipeline.tau_px = s.float_or("tau_px", cfg.pipeline.tau_px as f64) as f32;
+            cfg.pipeline.tile = s.int_or("tile", cfg.pipeline.tile as i64) as u32;
+            cfg.pipeline.alpha_min = s.float_or("alpha_min", cfg.pipeline.alpha_min as f64) as f32;
+            cfg.pipeline.sh_degree = s.int_or("sh_degree", cfg.pipeline.sh_degree as i64) as usize;
+            cfg.pipeline.lod_interval = s.int_or("lod_interval", cfg.pipeline.lod_interval as i64) as u32;
+            cfg.pipeline.reuse_threshold =
+                s.int_or("reuse_threshold", cfg.pipeline.reuse_threshold as i64) as u32;
+            cfg.pipeline.res_scale = s.int_or("res_scale", cfg.pipeline.res_scale as i64) as u32;
+        }
+        if let Some(s) = doc.section("net") {
+            cfg.net.bandwidth_bps = s.float_or("bandwidth_bps", cfg.net.bandwidth_bps);
+            cfg.net.latency_ms = s.float_or("latency_ms", cfg.net.latency_ms);
+            cfg.net.energy_nj_per_byte = s.float_or("energy_nj_per_byte", cfg.net.energy_nj_per_byte);
+        }
+        if let Some(s) = doc.section("run") {
+            cfg.frames = s.int_or("frames", cfg.frames as i64) as u32;
+            cfg.artifacts_dir = s.str_or("artifacts_dir", &cfg.artifacts_dir);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_papers() {
+        let p = PipelineConfig::default();
+        assert_eq!(p.lod_interval, 4);
+        assert_eq!(p.reuse_threshold, 32);
+        assert_eq!(p.tile, 16);
+        let n = NetConfig::default();
+        assert_eq!(n.bandwidth_bps, 100e6);
+        assert_eq!(n.energy_nj_per_byte, 100.0);
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let text = r#"
+# test config
+[scene]
+dataset = "urban"
+target_gaussians = 50000
+seed = 3
+
+[pipeline]
+tau_px = 4.0
+tile = 8
+lod_interval = 2
+
+[net]
+bandwidth_bps = 50e6
+
+[run]
+frames = 16
+"#;
+        let cfg = RunConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.scene.dataset, "urban");
+        assert_eq!(cfg.scene.target_gaussians, 50000);
+        assert_eq!(cfg.pipeline.tau_px, 4.0);
+        assert_eq!(cfg.pipeline.tile, 8);
+        assert_eq!(cfg.pipeline.lod_interval, 2);
+        assert_eq!(cfg.net.bandwidth_bps, 50e6);
+        assert_eq!(cfg.frames, 16);
+        // Untouched values keep defaults.
+        assert_eq!(cfg.pipeline.reuse_threshold, 32);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["--scene", "mega", "--tau", "3.5", "--frames", "9"].iter().map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.scene.dataset, "mega");
+        assert_eq!(cfg.pipeline.tau_px, 3.5);
+        assert_eq!(cfg.frames, 9);
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` pairs,
+//! `#` comments. Values: quoted strings, integers, floats (incl. `1e6`),
+//! booleans. Enough for our config files without serde.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// One `[section]` of key/value pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Section {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Section {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        match self.get(key) {
+            Some(Value::Int(v)) => *v,
+            Some(Value::Float(v)) => *v as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            Some(Value::Float(v)) => *v,
+            Some(Value::Int(v)) => *v as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(Value::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+}
+
+/// A parsed document: named sections plus a root section for keys that
+/// appear before any header.
+#[derive(Debug, Default)]
+pub struct Document {
+    pub root: Section,
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Document {
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> anyhow::Result<Document> {
+    let mut doc = Document::default();
+    let mut current: Option<String> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            doc.sections.entry(name.clone()).or_default();
+            current = Some(name);
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value: {raw:?}", lineno + 1))?;
+        let value = parse_value(value.trim())
+            .ok_or_else(|| anyhow::anyhow!("line {}: bad value: {raw:?}", lineno + 1))?;
+        let section = match &current {
+            Some(name) => doc.sections.get_mut(name).unwrap(),
+            None => &mut doc.root,
+        };
+        section.entries.insert(key.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(body) = s.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Some(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+top = 1
+[a]
+s = "hello # not a comment"
+i = 42          # trailing comment
+f = 2.5
+e = 1e6
+b = true
+[b]
+x = -3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.root.int_or("top", 0), 1);
+        let a = doc.section("a").unwrap();
+        assert_eq!(a.str_or("s", ""), "hello # not a comment");
+        assert_eq!(a.int_or("i", 0), 42);
+        assert_eq!(a.float_or("f", 0.0), 2.5);
+        assert_eq!(a.float_or("e", 0.0), 1e6);
+        assert!(a.bool_or("b", false));
+        assert_eq!(doc.section("b").unwrap().int_or("x", 0), -3);
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse("[s]\na = 5\nb = 2.0\n").unwrap();
+        let s = doc.section("s").unwrap();
+        assert_eq!(s.float_or("a", 0.0), 5.0);
+        assert_eq!(s.int_or("b", 0), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let doc = parse("[s]\n").unwrap();
+        let s = doc.section("s").unwrap();
+        assert_eq!(s.str_or("missing", "d"), "d");
+        assert_eq!(s.int_or("missing", 9), 9);
+        assert!(doc.section("nope").is_none());
+    }
+}

@@ -1,0 +1,166 @@
+//! Live (std-thread) deployment of the cloud service (Fig 9 as a real
+//! concurrent system).
+//!
+//! The cloud runs on its own thread: it receives poses, runs the
+//! temporal-aware LoD search + Gaussian management + compression, and
+//! streams round messages back over an mpsc channel. The client side
+//! decodes and renders on the calling thread. `examples/collab_serve.rs`
+//! drives this end-to-end with the PJRT runtime in the loop.
+
+use crate::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use crate::config::PipelineConfig;
+use crate::lod::{LodQuery, LodSearch, LodTree, TemporalSearch};
+use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg, SceneInit};
+use crate::math::Vec3;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Request to the cloud service.
+#[derive(Debug)]
+pub enum CloudRequest {
+    /// Head moved: run a LoD round for this position.
+    Pose(Vec3),
+    Shutdown,
+}
+
+/// Response stream from the cloud.
+#[derive(Debug)]
+pub struct CloudRound {
+    pub msg: RoundMsg,
+    /// Cloud-side search visits (instrumentation).
+    pub visits: u64,
+    /// Cloud-side wall time for the round (s).
+    pub cloud_s: f64,
+}
+
+/// Handle to a running cloud service thread.
+pub struct CloudHandle {
+    pub init: SceneInit,
+    req_tx: mpsc::Sender<CloudRequest>,
+    round_rx: mpsc::Receiver<CloudRound>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl CloudHandle {
+    pub fn request_round(&self, eye: Vec3) {
+        self.req_tx.send(CloudRequest::Pose(eye)).expect("cloud thread alive");
+    }
+
+    /// Blocking receive of the next round.
+    pub fn next_round(&self) -> CloudRound {
+        self.round_rx.recv().expect("cloud thread alive")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_round(&self) -> Option<CloudRound> {
+        self.round_rx.try_recv().ok()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.req_tx.send(CloudRequest::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for CloudHandle {
+    fn drop(&mut self) {
+        let _ = self.req_tx.send(CloudRequest::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn the cloud service thread for a scene.
+pub fn spawn_cloud(
+    tree: Arc<LodTree>,
+    pipeline: PipelineConfig,
+    mode: CompressionMode,
+    fx: f32,
+    near: f32,
+) -> CloudHandle {
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        mode,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 4000, ..Default::default() }.train(&tree.gaussians.sh),
+    );
+    // Build the init message before moving the codec into the thread.
+    let init = SceneInit {
+        quantizer: codec.quantizer.to_bytes(),
+        codebook: codec.codebook.to_bytes(),
+    };
+    let (req_tx, req_rx) = mpsc::channel::<CloudRequest>();
+    let (round_tx, round_rx) = mpsc::channel::<CloudRound>();
+    let join = std::thread::spawn(move || {
+        let tree_ref: &LodTree = &tree;
+        let mut cloud = CloudEndpoint::new(tree_ref, codec, pipeline.reuse_threshold);
+        let mut search = TemporalSearch::for_tree(tree_ref);
+        while let Ok(req) = req_rx.recv() {
+            match req {
+                CloudRequest::Shutdown => break,
+                CloudRequest::Pose(eye) => {
+                    let t = std::time::Instant::now();
+                    let q = LodQuery::new(eye, fx, pipeline.tau_px, near);
+                    let cut = search.search(tree_ref, &q);
+                    let msg = cloud.publish_cut(&cut.nodes);
+                    let round = CloudRound {
+                        msg,
+                        visits: cut.nodes_visited,
+                        cloud_s: t.elapsed().as_secs_f64(),
+                    };
+                    if round_tx.send(round).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+    });
+    CloudHandle { init, req_tx, round_rx, join: Some(join) }
+}
+
+/// Build the matching client endpoint from a cloud handle.
+pub fn client_for(handle: &CloudHandle, mode: CompressionMode, reuse_threshold: u32) -> ClientEndpoint {
+    ClientEndpoint::from_init(&handle.init, mode, reuse_threshold).expect("scene init decodes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::{CityGen, CityParams};
+
+    #[test]
+    fn live_cloud_round_trip() {
+        let tree = Arc::new(CityGen::new(CityParams::for_target(3000, 80.0, 3)).build());
+        let pl = PipelineConfig::default();
+        let handle = spawn_cloud(tree.clone(), pl, CompressionMode::Quantized, 900.0, 0.2);
+        let mut client = client_for(&handle, CompressionMode::Quantized, pl.reuse_threshold);
+
+        handle.request_round(Vec3::new(40.0, 1.7, 40.0));
+        let round = handle.next_round();
+        assert!(round.visits > 0);
+        client.apply(&round.msg).unwrap();
+        let n1 = client.store.len();
+        assert!(n1 > 0, "client must receive Gaussians");
+
+        // A tiny move: the next round should be near-empty.
+        handle.request_round(Vec3::new(40.02, 1.7, 40.0));
+        let round2 = handle.next_round();
+        assert!(round2.msg.payload.count < n1 / 10, "Δcut should be small");
+        client.apply(&round2.msg).unwrap();
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_via_drop_is_clean() {
+        let tree = Arc::new(CityGen::new(CityParams::for_target(500, 40.0, 5)).build());
+        let pl = PipelineConfig::default();
+        let handle = spawn_cloud(tree, pl, CompressionMode::Raw, 900.0, 0.2);
+        handle.request_round(Vec3::new(20.0, 1.7, 20.0));
+        let _ = handle.next_round();
+        drop(handle); // must not hang
+    }
+}

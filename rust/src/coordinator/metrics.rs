@@ -1,0 +1,132 @@
+//! Variant definitions and result aggregation for the end-to-end
+//! experiments.
+
+use crate::compress::CompressionMode;
+
+/// Which client hardware executes the rendering stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlatformKind {
+    /// Mobile Ampere GPU (Orin) — the normalization baseline.
+    Gpu,
+    /// GSCore accelerator.
+    GsCore,
+    /// GBU: raster accelerator + GPU for the rest.
+    Gbu,
+    /// Nebula architecture (GSCore + decoder + SRU + merge + stereo buf).
+    NebulaArch,
+}
+
+impl PlatformKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlatformKind::Gpu => "GPU",
+            PlatformKind::GsCore => "GSCore",
+            PlatformKind::Gbu => "GBU",
+            PlatformKind::NebulaArch => "Nebula",
+        }
+    }
+}
+
+/// One end-to-end system variant (the ablation axes of Fig 22).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub platform: PlatformKind,
+    /// Stereo rasterization (SR) on — off means render both eyes fully.
+    pub stereo: bool,
+    /// Δcut compression scheme (CMP): Raw vs Quantized.
+    pub compression: CompressionMode,
+    /// Temporal-aware LoD search (TA) on — off means streaming search
+    /// every round.
+    pub temporal: bool,
+}
+
+impl Variant {
+    pub fn nebula() -> Self {
+        Self {
+            name: "Nebula".into(),
+            platform: PlatformKind::NebulaArch,
+            stereo: true,
+            compression: CompressionMode::Quantized,
+            temporal: true,
+        }
+    }
+
+    pub fn base_on(platform: PlatformKind) -> Self {
+        Self {
+            name: format!("Base-{}", platform.label()),
+            platform,
+            stereo: false,
+            compression: CompressionMode::Raw,
+            temporal: false,
+        }
+    }
+}
+
+/// Aggregated simulation output.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub variant: String,
+    pub frames: u32,
+    /// Mean motion-to-photon latency (ms).
+    pub mtp_ms: f64,
+    /// 99th-percentile MTP (ms).
+    pub mtp_p99_ms: f64,
+    /// Achieved frame rate assuming pipelined rendering (paper Fig 18's
+    /// FPS metric).
+    pub fps: f64,
+    /// Mean client render seconds per frame (modeled hardware time).
+    pub render_s: f64,
+    /// Total wire bytes cloud→client (steady-state rounds).
+    pub wire_bytes: u64,
+    /// Wire bytes of the initial scene load (round 0).
+    pub initial_bytes: u64,
+    /// Sustained bandwidth demand (bits/s) to keep up with the trace.
+    pub bandwidth_bps: f64,
+    /// Client-side energy per frame (J): compute + DRAM + wireless.
+    pub client_energy_j: f64,
+    /// Cloud LoD-search node visits per round (mean).
+    pub cloud_visits: f64,
+    /// Mean Δcut size in Gaussians.
+    pub delta_gaussians: f64,
+    /// Peak client store size (Gaussians).
+    pub peak_client_gaussians: usize,
+    /// Right-eye PSNR of the last frame vs the shared-preprocess
+    /// reference (quality tracking; 99 = bit-accurate).
+    pub right_psnr_db: f64,
+}
+
+impl SimResult {
+    /// Speedup of another variant's MTP over this one.
+    pub fn speedup_over(&self, baseline: &SimResult) -> f64 {
+        baseline.mtp_ms / self.mtp_ms
+    }
+
+    /// Energy saving vs a baseline.
+    pub fn energy_saving_over(&self, baseline: &SimResult) -> f64 {
+        baseline.client_energy_j / self.client_energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_constructors() {
+        let n = Variant::nebula();
+        assert!(n.stereo && n.temporal);
+        assert_eq!(n.platform, PlatformKind::NebulaArch);
+        let b = Variant::base_on(PlatformKind::Gpu);
+        assert!(!b.stereo && !b.temporal);
+        assert_eq!(b.name, "Base-GPU");
+    }
+
+    #[test]
+    fn speedup_math() {
+        let a = SimResult { mtp_ms: 10.0, client_energy_j: 2.0, ..Default::default() };
+        let b = SimResult { mtp_ms: 40.0, client_energy_j: 8.0, ..Default::default() };
+        assert_eq!(a.speedup_over(&b), 4.0);
+        assert_eq!(a.energy_saving_over(&b), 4.0);
+    }
+}

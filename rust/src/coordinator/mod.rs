@@ -1,0 +1,19 @@
+//! L3 coordinator: the paper's collaborative rendering system (Fig 9/10).
+//!
+//! Two execution modes share the same cloud/client logic:
+//! * [`scheduler`] — deterministic simulation-clock driver: renders the
+//!   functional pipeline at a scaled resolution, feeds measured workload
+//!   counters into the hardware/network models, and reports
+//!   motion-to-photon latency, FPS, bandwidth and energy (Figs 18, 19,
+//!   22, 24);
+//! * [`live`] — a real std-thread deployment: the cloud service runs the
+//!   temporal LoD search + Gaussian management on its own thread and
+//!   streams Δcut messages over a channel to the client loop
+//!   (`examples/collab_serve.rs`).
+
+pub mod live;
+pub mod metrics;
+pub mod scheduler;
+
+pub use metrics::{SimResult, Variant};
+pub use scheduler::{run_simulation, SimParams};

@@ -1,0 +1,379 @@
+//! Deterministic end-to-end simulation of the collaborative pipeline
+//! (paper Fig 10's timing model).
+//!
+//! Per frame: the cloud (every `w` frames) runs LoD search → Gaussian
+//! management → compression and ships the round message over the
+//! simulated link; the client renders from its current store. The
+//! functional pipeline runs at a scaled resolution (`res_scale`) and the
+//! pixel-proportional workload counters are scaled by `res_scale²` back
+//! to full VR resolution before entering the hardware models — the
+//! Gaussian-proportional counters (preprocess/sort/decode) are exact.
+//! LoD queries always use full-resolution optics (f_x, τ*), so cut sizes
+//! and bandwidth are full-scale quantities.
+
+use super::metrics::{PlatformKind, SimResult, Variant};
+use crate::compress::{DeltaCodec, FixedQuantizer, VqTrainer};
+use crate::config::{NetConfig, PipelineConfig};
+use crate::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, Platform};
+use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
+use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
+use crate::math::{Intrinsics, Pose, StereoCamera};
+use crate::net::channel::SimLink;
+use crate::render::raster::RasterConfig;
+use crate::render::stereo::{render_stereo, render_right_naive, StereoMode};
+use crate::render::{preprocess_records, render_mono};
+
+/// Simulation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    pub pipeline: PipelineConfig,
+    pub net: NetConfig,
+    pub fps: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        Self { pipeline: PipelineConfig::default(), net: NetConfig::default(), fps: 90.0 }
+    }
+}
+
+/// Cloud-GPU throughput for LoD-search visits (A100-class streaming).
+const CLOUD_VISITS_PER_S: f64 = 2.0e9;
+/// Cloud compression throughput (B/s).
+const CLOUD_COMPRESS_BPS: f64 = 4.0e9;
+/// Client decode throughput on the Nebula decoder (Gaussians/s).
+const DECODE_RATE: f64 = 1.0e9;
+
+fn make_platform(kind: PlatformKind, tile: u32) -> Box<dyn Platform> {
+    match kind {
+        PlatformKind::Gpu => Box::new(MobileGpu::orin().with_tile(tile)),
+        PlatformKind::GsCore => Box::new(Accelerator::new(AccelKind::GsCore, AccelConfig::default())),
+        PlatformKind::Gbu => Box::new(Accelerator::new(AccelKind::Gbu, AccelConfig::default())),
+        PlatformKind::NebulaArch => {
+            Box::new(Accelerator::new(AccelKind::Nebula, AccelConfig::default()))
+        }
+    }
+}
+
+/// Run the end-to-end simulation of `variant` over `poses`.
+pub fn run_simulation(
+    tree: &LodTree,
+    poses: &[Pose],
+    variant: &Variant,
+    params: &SimParams,
+) -> SimResult {
+    let pl = &params.pipeline;
+    let full_intr = Intrinsics::vr_eye();
+    let intr = Intrinsics::vr_eye_scaled(pl.res_scale.max(1));
+    let s2 = (full_intr.pixels() as f64 / intr.pixels() as f64).max(1.0);
+    let full_pixels = 2 * full_intr.pixels();
+    let raster_cfg =
+        RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min };
+
+    // --- Cloud setup ----------------------------------------------------
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        variant.compression,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 4000, ..Default::default() }.train(&tree.gaussians.sh),
+    );
+    let mut cloud = CloudEndpoint::new(tree, codec, pl.reuse_threshold);
+    let mut temporal = TemporalSearch::for_tree(tree);
+    let mut streaming = StreamingSearch::default();
+    let mut client = ClientEndpoint::from_init(
+        &cloud.scene_init(),
+        variant.compression,
+        pl.reuse_threshold,
+    )
+    .expect("scene init");
+    let mut link = SimLink::from_config(&params.net);
+    let platform = make_platform(variant.platform, pl.tile);
+
+    // --- Prefetch round 0 (initial scene load, off the trace clock) ----
+    let q0 = LodQuery::new(poses[0].position, full_intr.fx, pl.tau_px, full_intr.near);
+    let search = |temporal: &mut TemporalSearch, streaming: &mut StreamingSearch, q: &LodQuery| {
+        if variant.temporal {
+            temporal.search(tree, q)
+        } else {
+            streaming.search(tree, q)
+        }
+    };
+    let cut0 = search(&mut temporal, &mut streaming, &q0);
+    let msg0 = cloud.publish_cut(&cut0.nodes);
+    let initial_bytes = msg0.wire_bytes() as u64;
+    client.apply(&msg0).expect("apply round 0");
+
+    // --- Frame loop -----------------------------------------------------
+    let vsync = 1.0 / params.fps;
+    let mut pending: Option<(f64, RoundMsg)> = None;
+    let mut mtp = Vec::with_capacity(poses.len());
+    let mut render_s_sum = 0.0f64;
+    let mut energy_sum = 0.0f64;
+    let mut visits_sum = 0u64;
+    let mut rounds = 1u32;
+    let mut delta_sum = msg0.payload.count as u64;
+    let mut streamed_bytes = 0u64;
+    let mut peak_client = client.store.len();
+    let mut right_psnr = 99.0f64;
+
+    let frames = poses.len();
+    for (i, pose) in poses.iter().enumerate() {
+        let t_frame = i as f64 * vsync;
+        let mut decoded_this_frame = 0u64;
+
+        // Deliver an in-flight round if it has arrived.
+        if let Some((arrival, msg)) = pending.take() {
+            if arrival <= t_frame {
+                decoded_this_frame = msg.payload.count as u64;
+                client.apply(&msg).expect("apply round");
+            } else {
+                pending = Some((arrival, msg));
+            }
+        }
+
+        // Cloud round every w frames (if the previous one was delivered).
+        if i % pl.lod_interval as usize == 0 && i > 0 && pending.is_none() {
+            let q = LodQuery::new(pose.position, full_intr.fx, pl.tau_px, full_intr.near);
+            let cut = search(&mut temporal, &mut streaming, &q);
+            visits_sum += cut.nodes_visited;
+            rounds += 1;
+            let msg = cloud.publish_cut(&cut.nodes);
+            delta_sum += msg.payload.count as u64;
+            let bytes = msg.wire_bytes() as u64;
+            streamed_bytes += bytes;
+            let cloud_done = t_frame
+                + cut.nodes_visited as f64 / CLOUD_VISITS_PER_S
+                + bytes as f64 / CLOUD_COMPRESS_BPS;
+            let arrival = link.send(cloud_done, bytes);
+            pending = Some((arrival, msg));
+        }
+        peak_client = peak_client.max(client.store.len());
+
+        // --- Client render ---------------------------------------------
+        let queue_owned = client.store.render_queue();
+        let queue: Vec<(u32, &crate::gaussian::GaussianRecord)> =
+            queue_owned.iter().map(|(id, g)| (*id, *g)).collect();
+        let stereo_cam = StereoCamera::new(*pose, intr);
+
+        let mut wl = if variant.stereo {
+            let out = render_stereo(&stereo_cam, &queue, pl.sh_degree, pl.tile, &raster_cfg, StereoMode::AlphaGated);
+            if i + 1 == frames {
+                // Track right-eye quality on the final frame.
+                let left_cam = stereo_cam.left();
+                let shared = stereo_cam.shared_camera();
+                let mut set = preprocess_records(&left_cam, &shared, &queue, pl.sh_degree);
+                crate::render::sort::sort_splats(&mut set.splats);
+                let (reference, _) = render_right_naive(&stereo_cam, &set, pl.tile, &raster_cfg);
+                right_psnr = out.right.psnr(&reference);
+            }
+            FrameWorkload::from_stereo(&out, full_pixels)
+        } else {
+            let lcam = stereo_cam.left();
+            let rcam = stereo_cam.right();
+            let lset = preprocess_records(&lcam, &lcam, &queue, pl.sh_degree);
+            let rset = preprocess_records(&rcam, &rcam, &queue, pl.sh_degree);
+            let n = lset.splats.len() + rset.splats.len();
+            let (_, lstats, _) = render_mono(lset, intr.width, intr.height, pl.tile, &raster_cfg);
+            let (_, rstats, _) = render_mono(rset, intr.width, intr.height, pl.tile, &raster_cfg);
+            FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, full_pixels)
+        };
+        // Scale pixel-proportional counters to full resolution.
+        wl.alpha_checks = (wl.alpha_checks as f64 * s2) as u64;
+        wl.blends = (wl.blends as f64 * s2) as u64;
+        wl.pairs = (wl.pairs as f64 * s2) as u64;
+        wl.tiles = (wl.tiles as f64 * s2) as u64;
+        wl.sru_insertions = (wl.sru_insertions as f64 * s2) as u64;
+        wl.merge_ops = (wl.merge_ops as f64 * s2) as u64;
+        wl = wl.with_decoded(decoded_this_frame);
+
+        let cost = platform.frame_cost(&wl);
+        let decode_s = decoded_this_frame as f64 / DECODE_RATE;
+        let render_s = cost.seconds + decode_s;
+        render_s_sum += render_s;
+
+        // MTP: pose sampled at t_frame, displayed at the next vsync after
+        // rendering completes.
+        let done = t_frame + render_s;
+        let display = (done / vsync).ceil() * vsync;
+        mtp.push((display - t_frame) * 1e3);
+
+        // Client energy: compute + DRAM + wireless reception.
+        energy_sum += cost.total_energy_j()
+            + crate::net::wireless_energy_j(if decoded_this_frame > 0 {
+                streamed_bytes / rounds.max(1) as u64
+            } else {
+                0
+            });
+    }
+
+    let mut sorted_mtp = mtp.clone();
+    sorted_mtp.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trace_seconds = frames as f64 * vsync;
+    SimResult {
+        variant: variant.name.clone(),
+        frames: frames as u32,
+        mtp_ms: mtp.iter().sum::<f64>() / frames as f64,
+        mtp_p99_ms: sorted_mtp[(frames as f64 * 0.99) as usize - 1],
+        fps: frames as f64 / render_s_sum,
+        render_s: render_s_sum / frames as f64,
+        wire_bytes: streamed_bytes,
+        initial_bytes,
+        bandwidth_bps: streamed_bytes as f64 * 8.0 / trace_seconds,
+        client_energy_j: energy_sum / frames as f64,
+        cloud_visits: visits_sum as f64 / rounds.max(1) as f64,
+        delta_gaussians: delta_sum as f64 / rounds as f64,
+        peak_client_gaussians: peak_client,
+        right_psnr_db: right_psnr,
+    }
+}
+
+/// Remote video-streaming scenario (paper §6 "Video Streaming"): the
+/// server renders everything; the client receives HEVC frames.
+pub fn run_remote_simulation(
+    params: &SimParams,
+    quality: crate::net::VideoQuality,
+    frames: u32,
+) -> SimResult {
+    let full = Intrinsics::vr_eye();
+    let codec = crate::net::VideoCodec::vr_stereo(quality, full.width, full.height, params.fps);
+    let mut link = SimLink::from_config(&params.net);
+    let vsync = 1.0 / params.fps;
+    // Server render latency per frame (two A100s render both eyes).
+    let server_render = 0.004;
+    let mut mtp = Vec::new();
+    let mut energy = 0.0;
+    for i in 0..frames {
+        let t = i as f64 * vsync;
+        let bytes = codec.bytes_per_frame();
+        // Pose upload (tiny) + server render + stream + decode.
+        let arrive = link.send(t + params.net.latency_ms * 1e-3 + server_render, bytes);
+        let done = arrive + codec.codec_latency_s();
+        let display = (done / vsync).ceil() * vsync;
+        mtp.push((display - t) * 1e3);
+        energy += crate::net::wireless_energy_j(bytes) + codec.codec_latency_s() * 2.0;
+    }
+    let mut sorted = mtp.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    SimResult {
+        variant: format!("Remote-{}", quality.label()),
+        frames,
+        mtp_ms: mtp.iter().sum::<f64>() / frames as f64,
+        mtp_p99_ms: sorted[(frames as f64 * 0.99) as usize - 1],
+        fps: (params.fps).min(link.bytes_per_second() / codec.bytes_per_frame() as f64),
+        render_s: codec.codec_latency_s(),
+        wire_bytes: codec.bytes_per_frame() * frames as u64,
+        initial_bytes: 0,
+        bandwidth_bps: codec.bitrate_bps(),
+        client_energy_j: energy / frames as f64,
+        cloud_visits: 0.0,
+        delta_gaussians: 0.0,
+        peak_client_gaussians: 0,
+        right_psnr_db: quality.psnr_db(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Variant;
+    use crate::scene::{CityGen, CityParams};
+    use crate::trace::{PoseTrace, TraceParams};
+
+    fn small_world() -> (LodTree, Vec<Pose>) {
+        let tree = CityGen::new(CityParams::for_target(8000, 100.0, 42)).build();
+        let poses = PoseTrace::new(TraceParams::default(), 100.0).generate(24);
+        (tree, poses)
+    }
+
+    fn fast_params() -> SimParams {
+        let mut p = SimParams::default();
+        p.pipeline.res_scale = 16;
+        p
+    }
+
+    #[test]
+    fn nebula_variant_runs_and_reports() {
+        let (tree, poses) = small_world();
+        let r = run_simulation(&tree, &poses, &Variant::nebula(), &fast_params());
+        assert_eq!(r.frames, 24);
+        assert!(r.mtp_ms > 0.0);
+        assert!(r.fps > 0.0);
+        assert!(r.wire_bytes > 0, "round 0 must ship Gaussians");
+        assert!(r.client_energy_j > 0.0);
+        assert!(r.peak_client_gaussians > 0);
+        assert!(r.right_psnr_db > 40.0, "stereo quality {}", r.right_psnr_db);
+    }
+
+    #[test]
+    fn nebula_beats_gpu_base() {
+        let (tree, poses) = small_world();
+        let p = fast_params();
+        let nebula = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+        let gpu = run_simulation(
+            &tree,
+            &poses,
+            &Variant::base_on(super::PlatformKind::Gpu),
+            &p,
+        );
+        let speedup = nebula.speedup_over(&gpu);
+        assert!(speedup > 1.5, "Nebula speedup over GPU base = {speedup:.2}x");
+        assert!(nebula.client_energy_j < gpu.client_energy_j);
+    }
+
+    #[test]
+    fn compression_reduces_bandwidth() {
+        let (tree, poses) = small_world();
+        let p = fast_params();
+        let mut raw = Variant::nebula();
+        raw.name = "Nebula-raw".into();
+        raw.compression = crate::compress::CompressionMode::Raw;
+        let q = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+        let r = run_simulation(&tree, &poses, &raw, &p);
+        assert!(
+            q.initial_bytes * 3 < r.initial_bytes,
+            "quantized {} vs raw {}",
+            q.initial_bytes,
+            r.initial_bytes
+        );
+    }
+
+    #[test]
+    fn temporal_search_reduces_cloud_visits() {
+        let (tree, poses) = small_world();
+        let p = fast_params();
+        let mut no_ta = Variant::nebula();
+        no_ta.name = "Nebula-noTA".into();
+        no_ta.temporal = false;
+        let ta = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+        let nota = run_simulation(&tree, &poses, &no_ta, &p);
+        assert!(
+            ta.cloud_visits < nota.cloud_visits,
+            "TA visits {} vs streaming {}",
+            ta.cloud_visits,
+            nota.cloud_visits
+        );
+    }
+
+    #[test]
+    fn remote_scenario_bandwidth_bound() {
+        let p = SimParams::default();
+        let r = run_remote_simulation(&p, crate::net::VideoQuality::LossyHigh, 32);
+        // Lossy-H VR stereo at 90 FPS needs ~290 Mbps but the link is
+        // 100 Mbps: the remote scenario cannot hold 90 FPS.
+        assert!(r.bandwidth_bps > p.net.bandwidth_bps);
+        assert!(r.fps < 89.0, "fps={}", r.fps);
+        assert!(r.mtp_ms > 11.0);
+    }
+
+    #[test]
+    fn nebula_bandwidth_within_paper_band_vs_video() {
+        // Paper headline: collaborative rendering needs 19–25% of video
+        // streaming bandwidth. Allow a generous band (scene-dependent).
+        let (tree, poses) = small_world();
+        let nebula = run_simulation(&tree, &poses, &Variant::nebula(), &fast_params());
+        let video =
+            crate::net::VideoCodec::vr_stereo(crate::net::VideoQuality::LossyHigh, 2064, 2208, 90.0);
+        let ratio = nebula.bandwidth_bps / video.bitrate_bps();
+        assert!(ratio < 0.6, "Nebula uses {:.0}% of video bandwidth", ratio * 100.0);
+    }
+}

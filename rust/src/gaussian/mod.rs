@@ -1,0 +1,189 @@
+//! Gaussian primitive storage.
+//!
+//! City-scale scenes hold millions of Gaussians, so the canonical store is
+//! a struct-of-arrays arena ([`GaussianArena`]) addressed by dense
+//! [`GaussianId`]s; [`GaussianRecord`] is the AoS view used on the wire
+//! (Δcut transmission) and in small collections.
+
+use crate::math::sh::SH_FLOATS;
+use crate::math::{Quat, Vec3};
+
+/// Dense index of a Gaussian within an arena / LoD tree.
+pub type GaussianId = u32;
+
+/// Raw storage per Gaussian: pos(3) + scale(3) + rot(4) + opacity(1) +
+/// SH(48) floats.
+pub const FLOATS_PER_GAUSSIAN: usize = 3 + 3 + 4 + 1 + SH_FLOATS;
+/// Uncompressed bytes per Gaussian (f32 everything) — the unit used by the
+/// memory-footprint experiments (Fig 2/6).
+pub const BYTES_PER_GAUSSIAN: usize = FLOATS_PER_GAUSSIAN * 4;
+
+/// 3σ bounding-sphere convention used for LoD extents and frustum tests.
+pub const SIGMA_CUTOFF: f32 = 3.0;
+
+/// One Gaussian, array-of-structs view (wire format, tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaussianRecord {
+    pub pos: Vec3,
+    /// Ellipsoid semi-axis standard deviations (meters), all > 0.
+    pub scale: Vec3,
+    pub rot: Quat,
+    /// Base opacity in [0, 1].
+    pub opacity: f32,
+    /// 48 SH coefficients: [channel][coeff], degree 3.
+    pub sh: [f32; SH_FLOATS],
+}
+
+impl GaussianRecord {
+    /// Bounding-sphere radius (3σ of the largest axis).
+    pub fn radius(&self) -> f32 {
+        SIGMA_CUTOFF * self.scale.max_component()
+    }
+}
+
+/// Struct-of-arrays Gaussian store.
+#[derive(Debug, Default, Clone)]
+pub struct GaussianArena {
+    pub pos: Vec<Vec3>,
+    pub scale: Vec<Vec3>,
+    pub rot: Vec<Quat>,
+    pub opacity: Vec<f32>,
+    /// Flat SH storage, `SH_FLOATS` per Gaussian.
+    pub sh: Vec<f32>,
+}
+
+impl GaussianArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            pos: Vec::with_capacity(n),
+            scale: Vec::with_capacity(n),
+            rot: Vec::with_capacity(n),
+            opacity: Vec::with_capacity(n),
+            sh: Vec::with_capacity(n * SH_FLOATS),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos.is_empty()
+    }
+
+    /// Append a Gaussian; returns its id.
+    pub fn push(&mut self, g: &GaussianRecord) -> GaussianId {
+        let id = self.pos.len() as GaussianId;
+        self.pos.push(g.pos);
+        self.scale.push(g.scale);
+        self.rot.push(g.rot);
+        self.opacity.push(g.opacity);
+        self.sh.extend_from_slice(&g.sh);
+        id
+    }
+
+    /// AoS view of Gaussian `id` (copies; used off the hot path).
+    pub fn record(&self, id: GaussianId) -> GaussianRecord {
+        let i = id as usize;
+        let mut sh = [0.0f32; SH_FLOATS];
+        sh.copy_from_slice(self.sh_of(id));
+        GaussianRecord {
+            pos: self.pos[i],
+            scale: self.scale[i],
+            rot: self.rot[i],
+            opacity: self.opacity[i],
+            sh,
+        }
+    }
+
+    #[inline]
+    pub fn sh_of(&self, id: GaussianId) -> &[f32] {
+        let i = id as usize * SH_FLOATS;
+        &self.sh[i..i + SH_FLOATS]
+    }
+
+    /// Bounding-sphere radius of Gaussian `id`.
+    #[inline]
+    pub fn radius(&self, id: GaussianId) -> f32 {
+        SIGMA_CUTOFF * self.scale[id as usize].max_component()
+    }
+
+    /// Total uncompressed byte footprint — Fig 2's memory measure.
+    pub fn byte_size(&self) -> u64 {
+        self.len() as u64 * BYTES_PER_GAUSSIAN as u64
+    }
+
+    /// Axis-aligned bounds of all Gaussian centers.
+    pub fn bounds(&self) -> (Vec3, Vec3) {
+        let mut lo = Vec3::splat(f32::INFINITY);
+        let mut hi = Vec3::splat(f32::NEG_INFINITY);
+        for p in &self.pos {
+            lo = lo.min(*p);
+            hi = hi.max(*p);
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seed: f32) -> GaussianRecord {
+        let mut sh = [0.0f32; SH_FLOATS];
+        sh[0] = seed;
+        GaussianRecord {
+            pos: Vec3::new(seed, 2.0 * seed, -seed),
+            scale: Vec3::new(0.1, 0.2, 0.3 * seed.abs().max(0.1)),
+            rot: Quat::IDENTITY,
+            opacity: 0.7,
+            sh,
+        }
+    }
+
+    #[test]
+    fn push_and_read_back() {
+        let mut a = GaussianArena::new();
+        let g0 = sample(1.0);
+        let g1 = sample(2.0);
+        let i0 = a.push(&g0);
+        let i1 = a.push(&g1);
+        assert_eq!((i0, i1), (0, 1));
+        assert_eq!(a.record(i0), g0);
+        assert_eq!(a.record(i1), g1);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn byte_size_matches_layout() {
+        assert_eq!(BYTES_PER_GAUSSIAN, 236);
+        let mut a = GaussianArena::new();
+        for i in 0..10 {
+            a.push(&sample(i as f32));
+        }
+        assert_eq!(a.byte_size(), 2360);
+    }
+
+    #[test]
+    fn radius_is_3_sigma_max() {
+        let g = sample(1.0);
+        assert!((g.radius() - 3.0 * 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounds_cover_all() {
+        let mut a = GaussianArena::new();
+        a.push(&sample(1.0));
+        a.push(&sample(-3.0));
+        let (lo, hi) = a.bounds();
+        for p in &a.pos {
+            assert!(p.x >= lo.x && p.x <= hi.x);
+            assert!(p.y >= lo.y && p.y <= hi.y);
+            assert!(p.z >= lo.z && p.z <= hi.z);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Energy, area and technology-scaling constants (paper §6).
+//!
+//! Area constants are fit so the GSCore configuration totals the paper's
+//! 1.78 mm² (16nm) and Nebula's augmentation ≈ 0.25 mm² (+14%); energy
+//! uses per-op/pJ-per-byte constants of 16nm-class accelerators. The
+//! 16nm → 8nm scaling factors follow DeepScaleTool [80, 83].
+
+/// DeepScaleTool-style scaling 16nm → 8nm.
+pub const AREA_SCALE_16_TO_8: f64 = 0.39;
+pub const ENERGY_SCALE_16_TO_8: f64 = 0.45;
+
+pub fn scale_area_to_8nm(mm2_16nm: f64) -> f64 {
+    mm2_16nm * AREA_SCALE_16_TO_8
+}
+
+pub fn scale_energy_to_8nm(j_16nm: f64) -> f64 {
+    j_16nm * ENERGY_SCALE_16_TO_8
+}
+
+// --- Area model (mm², 16nm) -----------------------------------------
+
+/// SRAM macro density (mm² per KB), Arm memory compiler class.
+pub const SRAM_MM2_PER_KB: f64 = 0.0024;
+/// One projection unit.
+pub const PROJ_UNIT_MM2: f64 = 0.0875;
+/// One hierarchical sorting unit.
+pub const SORT_UNIT_MM2: f64 = 0.075;
+/// One rendering unit (RU) datapath.
+pub const RU_MM2: f64 = 0.0036;
+/// VRC control + feature buffer excluded (buffer added via SRAM size).
+pub const VRC_CTRL_MM2: f64 = 0.0035;
+/// Stereo re-projection unit (per VRC).
+pub const SRU_MM2: f64 = 0.0045;
+/// Merge unit (per VRC).
+pub const MERGE_MM2: f64 = 0.0035;
+/// Δcut decoder (codebook datapath; buffer via SRAM).
+pub const DECODER_MM2: f64 = 0.012;
+
+/// Area of an accelerator configuration at 16nm (see `accel::AccelConfig`).
+pub fn area_mm2_16nm(cfg: &super::accel::AccelConfig, kind: super::accel::AccelKind) -> f64 {
+    use super::accel::AccelKind;
+    let vrc_sram_kb = 16.0; // feature buffer per VRC
+    let global_buffer_kb = 144.0;
+    let base = cfg.proj_units as f64 * PROJ_UNIT_MM2
+        + cfg.sort_units as f64 * SORT_UNIT_MM2
+        + cfg.vrcs as f64
+            * (cfg.rus_per_vrc as f64 * RU_MM2 + VRC_CTRL_MM2 + vrc_sram_kb * SRAM_MM2_PER_KB)
+        + global_buffer_kb * SRAM_MM2_PER_KB;
+    match kind {
+        AccelKind::GsCore | AccelKind::Gbu => base,
+        AccelKind::Nebula => {
+            let stereo_buffer_kb = 16.0; // per VRC, banked at 4 KB
+            base + cfg.vrcs as f64
+                * (SRU_MM2 + MERGE_MM2 + stereo_buffer_kb * SRAM_MM2_PER_KB * 0.45)
+                + DECODER_MM2
+                + 4.0 * SRAM_MM2_PER_KB // codebook buffer
+        }
+    }
+}
+
+// --- Energy model (pJ, 16nm) -----------------------------------------
+
+/// Generic 32-bit ALU op.
+pub const ALU_PJ: f64 = 0.8;
+/// SRAM access per byte.
+pub const SRAM_PJ_PER_B: f64 = 0.18;
+/// Ops per pipeline event (datapath widths).
+pub const OPS_PREPROCESS: f64 = 85.0; // projection + conic + SH partial
+pub const OPS_SORT: f64 = 6.0;
+pub const OPS_ALPHA_CHECK: f64 = 7.0;
+pub const OPS_BLEND: f64 = 9.0;
+pub const OPS_SRU: f64 = 10.0; // disparity + list routing
+pub const OPS_MERGE: f64 = 3.0;
+pub const OPS_DECODE: f64 = 40.0; // dequant + codebook fetch
+
+// --- DRAM model --------------------------------------------------------
+
+/// 4-channel Micron LPDDR3-1600 (paper §6).
+#[derive(Debug, Clone, Copy)]
+pub struct DramModel {
+    pub channels: u32,
+    /// Peak bandwidth per channel (B/s).
+    pub channel_bw: f64,
+    /// Access energy (pJ/B), Micron power-calculator class.
+    pub pj_per_byte: f64,
+    /// Achievable fraction of peak (row misses, refresh).
+    pub efficiency: f64,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        Self { channels: 4, channel_bw: 6.4e9, pj_per_byte: 42.0, efficiency: 0.7 }
+    }
+}
+
+impl DramModel {
+    pub fn bandwidth(&self) -> f64 {
+        self.channels as f64 * self.channel_bw * self.efficiency
+    }
+
+    /// Seconds to move `bytes`.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth()
+    }
+
+    /// Joules to move `bytes`.
+    pub fn energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.pj_per_byte * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::accel::{AccelConfig, AccelKind};
+
+    #[test]
+    fn gscore_area_matches_paper() {
+        let a = area_mm2_16nm(&AccelConfig::default(), AccelKind::GsCore);
+        assert!((a - 1.78).abs() < 0.15, "GSCore area {a:.2} mm² (paper: 1.78)");
+    }
+
+    #[test]
+    fn nebula_overhead_about_14_percent() {
+        let base = area_mm2_16nm(&AccelConfig::default(), AccelKind::GsCore);
+        let neb = area_mm2_16nm(&AccelConfig::default(), AccelKind::Nebula);
+        let overhead = (neb - base) / base;
+        assert!(
+            (0.10..0.18).contains(&overhead),
+            "Nebula area overhead {:.1}% (paper: ~14%)",
+            overhead * 100.0
+        );
+        assert!((neb - base) < 0.35, "absolute overhead {:.2} mm² (paper: 0.25)", neb - base);
+    }
+
+    #[test]
+    fn doubling_rus_costs_around_62_percent() {
+        // Fig 23: 128 → 256 RUs increases area by 62.9%.
+        let mut big = AccelConfig::default();
+        big.rus_per_vrc *= 2;
+        // Doubling RUs also doubles the per-VRC buffers (wider tiles in
+        // flight) — modeled by the bench via `with_scaled_buffers`; here
+        // the datapath-only growth is a sanity lower bound.
+        let a0 = area_mm2_16nm(&AccelConfig::default(), AccelKind::Nebula);
+        let a1 = area_mm2_16nm(&big, AccelKind::Nebula);
+        let growth = (a1 - a0) / a0;
+        assert!(growth > 0.1 && growth < 0.7, "growth {:.1}%", growth * 100.0);
+    }
+
+    #[test]
+    fn tech_scaling_shrinks() {
+        assert!(scale_area_to_8nm(1.78) < 1.0);
+        assert!(scale_energy_to_8nm(1.0) < 0.5);
+    }
+
+    #[test]
+    fn dram_model_bounds() {
+        let d = DramModel::default();
+        assert!(d.bandwidth() > 10e9 && d.bandwidth() < 30e9);
+        let sec = d.transfer_seconds(1 << 30);
+        assert!(sec > 0.03 && sec < 0.1, "1 GB in {sec} s");
+        assert!(d.energy_j(1_000_000) > 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Mobile GPU model (NVIDIA Orin's Ampere iGPU) — the normalization
+//! baseline of every performance figure.
+//!
+//! A throughput model: each stage's time = ops / effective rate, with a
+//! warp-divergence penalty on failed α-checks that grows with tile size
+//! (divergent lanes idle while their warp-mates blend) — the effect
+//! behind Fig 25's tile-size sensitivity.
+
+use super::energy_area::DramModel;
+use super::{FrameCost, FrameWorkload, Platform};
+
+/// Throughput-model rates for a mobile GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct MobileGpu {
+    /// Gaussians preprocessed per second.
+    pub preprocess_rate: f64,
+    /// Splats sorted per second (radix on GPU).
+    pub sort_rate: f64,
+    /// α-checks per second (all lanes useful).
+    pub alpha_rate: f64,
+    /// LoD tree-node visits per second (irregular access bound).
+    pub lod_rate: f64,
+    /// Gaussians decoded per second (software VQ decode).
+    pub decode_rate: f64,
+    /// SRU/merge-equivalent ops per second when emulating the stereo
+    /// pipeline in software.
+    pub stereo_sw_rate: f64,
+    /// Board power while rendering (W) — energy = time × power.
+    pub power_w: f64,
+    /// Tile side used to derive the divergence penalty.
+    pub tile: u32,
+    pub dram: DramModel,
+}
+
+impl MobileGpu {
+    /// Orin-class rates (mobile Ampere, ~2 TFLOPS fp32 effective).
+    pub fn orin() -> Self {
+        Self {
+            preprocess_rate: 8.0e8,
+            sort_rate: 4.0e8,
+            alpha_rate: 2.0e10,
+            lod_rate: 1.5e8,
+            decode_rate: 3.0e8,
+            stereo_sw_rate: 8.0e8,
+            power_w: 14.0,
+            tile: 16,
+            dram: DramModel::default(),
+        }
+    }
+
+    pub fn with_tile(mut self, tile: u32) -> Self {
+        self.tile = tile;
+        self
+    }
+
+    /// Divergence penalty applied to *failed* α-checks: with larger
+    /// tiles, more lanes of a warp idle through Gaussians that only
+    /// cover part of the tile.
+    pub fn divergence_factor(&self) -> f64 {
+        1.0 + (self.tile as f64 / 16.0) * 0.9
+    }
+}
+
+impl Platform for MobileGpu {
+    fn name(&self) -> &'static str {
+        "mobile-gpu"
+    }
+
+    fn frame_cost(&self, w: &FrameWorkload) -> FrameCost {
+        let t_pre = w.preprocessed as f64 / self.preprocess_rate;
+        let t_sort = w.sorted as f64 / self.sort_rate;
+        let failed = w.alpha_checks.saturating_sub(w.blends) as f64;
+        let effective_checks = w.blends as f64 + failed * self.divergence_factor();
+        let mut t_raster = effective_checks / self.alpha_rate;
+        // Software stereo bookkeeping (SRU + merge emulation), if any.
+        t_raster += (w.sru_insertions + w.merge_ops) as f64 / self.stereo_sw_rate;
+        let t_other = w.lod_visits as f64 / self.lod_rate + w.decoded as f64 / self.decode_rate;
+
+        let dram_bytes = w.preprocessed * crate::gaussian::BYTES_PER_GAUSSIAN as u64
+            + w.pixels * 12
+            + w.decoded * 32
+            + w.lod_visits * 28;
+        let t_dram = self.dram.transfer_seconds(dram_bytes);
+        // Compute and memory overlap imperfectly on a GPU.
+        let seconds = (t_pre + t_sort + t_raster + t_other).max(t_dram) + 0.15 * t_dram;
+
+        FrameCost {
+            cycles: (seconds * 1.3e9) as u64, // ~1.3 GHz SM clock
+            seconds,
+            compute_energy_j: seconds * self.power_w,
+            dram_bytes,
+            dram_energy_j: self.dram.energy_j(dram_bytes),
+            stages: [
+                ("lod+decode", t_other),
+                ("preprocess", t_pre),
+                ("sort", t_sort),
+                ("raster", t_raster),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(alpha_checks: u64, blends: u64) -> FrameWorkload {
+        FrameWorkload {
+            preprocessed: 50_000,
+            sorted: 50_000,
+            pairs: 400_000,
+            alpha_checks,
+            blends,
+            tiles: 10_000,
+            pixels: 1 << 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn raster_dominates_at_high_check_counts() {
+        let gpu = MobileGpu::orin();
+        let c = gpu.frame_cost(&wl(200_000_000, 20_000_000));
+        let raster = c.stages.iter().find(|(n, _)| *n == "raster").unwrap().1;
+        let total: f64 = c.stages.iter().map(|(_, t)| t).sum();
+        assert!(raster / total > 0.5);
+    }
+
+    #[test]
+    fn divergence_penalty_grows_with_tile() {
+        let small = MobileGpu::orin().with_tile(4);
+        let large = MobileGpu::orin().with_tile(32);
+        assert!(large.divergence_factor() > small.divergence_factor());
+        let w = wl(100_000_000, 10_000_000);
+        assert!(large.frame_cost(&w).seconds > small.frame_cost(&w).seconds);
+    }
+
+    #[test]
+    fn fewer_failed_checks_is_faster() {
+        // The stereo rasterizer's win on GPUs (Fig 21/25): pruned right-
+        // eye lists fail fewer α-checks.
+        let gpu = MobileGpu::orin();
+        let base = gpu.frame_cost(&wl(100_000_000, 10_000_000));
+        let pruned = gpu.frame_cost(&wl(60_000_000, 10_000_000));
+        assert!(pruned.seconds < base.seconds);
+    }
+
+    #[test]
+    fn lod_visits_add_time() {
+        let gpu = MobileGpu::orin();
+        let w0 = wl(10_000_000, 1_000_000);
+        let w1 = FrameWorkload { lod_visits: 50_000_000, ..w0 };
+        assert!(gpu.frame_cost(&w1).seconds > gpu.frame_cost(&w0).seconds * 1.5);
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let gpu = MobileGpu::orin();
+        let c = gpu.frame_cost(&wl(50_000_000, 5_000_000));
+        assert!((c.compute_energy_j - c.seconds * 14.0).abs() < 1e-9);
+    }
+}

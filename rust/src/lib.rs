@@ -1,0 +1,36 @@
+//! # Nebula
+//!
+//! Reproduction of *"Nebula: Enable City-Scale 3D Gaussian Splatting in
+//! Virtual Reality via Collaborative Rendering and Accelerated Stereo
+//! Rasterization"* (Zhu et al., 2025).
+//!
+//! Nebula splits the large-scale 3DGS pipeline between a cloud (which
+//! runs the memory-hungry LoD search and streams compressed Δcuts of
+//! Gaussians) and a VR client (which renders both eyes with a
+//! bit-accurate, triangulation-based stereo rasterizer on a GSCore-style
+//! accelerator model).
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3 (this crate)** — coordinator, LoD search, Gaussian management,
+//!   compression, stereo rasterizer, hardware/network models.
+//! * **L2** (`python/compile/model.py`) — JAX compute graphs, AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels called by L2.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod benchkit;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod gaussian;
+pub mod hw;
+pub mod lod;
+pub mod manage;
+pub mod math;
+pub mod net;
+pub mod render;
+pub mod runtime;
+pub mod scene;
+pub mod trace;
+pub mod util;

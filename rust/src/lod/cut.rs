@@ -1,0 +1,203 @@
+//! Cut representation and the LoD predicate.
+//!
+//! A *cut* is the set of nodes selected by LoD search: node `n` is on the
+//! cut iff `n` is not refined while its parent is (the root's virtual
+//! parent counts as refined). "Refined" means the node's projected pixel
+//! extent exceeds τ* and it has children to refine into (paper §2.2).
+//!
+//! The projection measure is **distance-based** (not z-based), so the cut
+//! is invariant under head rotation — the property that lets the client
+//! re-render any nearby viewport without new cloud data (paper §4.1).
+
+use super::tree::LodTree;
+use crate::math::Vec3;
+
+/// A LoD query: camera position + the scalars the predicate needs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LodQuery {
+    /// Eye (head) position in world space.
+    pub eye: Vec3,
+    /// Focal length in pixels.
+    pub fx: f32,
+    /// LoD threshold τ* in pixels.
+    pub tau_px: f32,
+    /// Near-plane distance (lower bound on the distance divisor).
+    pub near: f32,
+}
+
+impl LodQuery {
+    pub fn new(eye: Vec3, fx: f32, tau_px: f32, near: f32) -> Self {
+        Self { eye, fx, tau_px, near }
+    }
+
+    /// Projected pixel extent of node `n`.
+    #[inline]
+    pub fn extent(&self, tree: &LodTree, n: u32) -> f32 {
+        let d = (tree.gaussians.pos[n as usize] - self.eye).norm().max(self.near);
+        self.fx * (2.0 * tree.radius[n as usize]) / d
+    }
+
+    /// The refinement predicate: descend past `n` iff its projection is
+    /// still coarser than τ* and it can be refined.
+    #[inline]
+    pub fn refined(&self, tree: &LodTree, n: u32) -> bool {
+        tree.child_count[n as usize] != 0 && self.extent(tree, n) > self.tau_px
+    }
+}
+
+/// Result of a LoD search: the selected node ids plus traversal stats.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Cut {
+    /// Selected node ids, sorted ascending (canonical form).
+    pub nodes: Vec<u32>,
+    /// Number of predicate evaluations (≈ tree nodes visited).
+    pub nodes_visited: u64,
+    /// Estimated bytes touched by the traversal (topology + positions).
+    pub bytes_touched: u64,
+}
+
+impl Cut {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Canonicalize: sort + dedup (searches may emit in any order).
+    pub fn canonicalize(&mut self) {
+        self.nodes.sort_unstable();
+        self.nodes.dedup();
+    }
+
+    /// Fraction of nodes shared with `other` (Jaccard-style overlap used
+    /// by the temporal-similarity experiment, Fig 7). Both cuts must be
+    /// canonical.
+    pub fn overlap(&self, other: &Cut) -> f64 {
+        if self.is_empty() && other.is_empty() {
+            return 1.0;
+        }
+        let mut i = 0;
+        let mut j = 0;
+        let mut common = 0usize;
+        while i < self.nodes.len() && j < other.nodes.len() {
+            match self.nodes[i].cmp(&other.nodes[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    common += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        common as f64 / self.nodes.len().max(other.nodes.len()) as f64
+    }
+
+    /// Verify that this is exactly the cut induced by `query` on `tree`:
+    /// each node unrefined with refined parent, and the whole tree is
+    /// covered (every leaf-to-root path crosses the cut exactly once).
+    pub fn validate(&self, tree: &LodTree, query: &LodQuery) -> anyhow::Result<()> {
+        use std::collections::HashSet;
+        let set: HashSet<u32> = self.nodes.iter().copied().collect();
+        anyhow::ensure!(set.len() == self.nodes.len(), "duplicate cut nodes");
+        for &n in &self.nodes {
+            anyhow::ensure!(!query.refined(tree, n), "cut node {n} is refined");
+            let p = tree.parent[n as usize];
+            if p != super::tree::NO_PARENT {
+                anyhow::ensure!(query.refined(tree, p), "cut node {n}'s parent {p} not refined");
+            }
+        }
+        // Coverage: walk from the root; every refined node's children are
+        // either on the cut or refined themselves.
+        let mut stack = vec![LodTree::ROOT];
+        while let Some(n) = stack.pop() {
+            if query.refined(tree, n) {
+                for c in tree.children(n) {
+                    stack.push(c);
+                }
+            } else {
+                anyhow::ensure!(set.contains(&n), "node {n} should be on the cut but is not");
+            }
+        }
+        Ok(())
+    }
+
+    /// Memory demand of this cut in Gaussian counts (Fig 6 proxy).
+    pub fn gaussian_count(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Common interface implemented by the three search algorithms so benches
+/// and the coordinator can switch between them.
+pub trait LodSearch {
+    fn name(&self) -> &'static str;
+    /// Compute the cut for `query`. Implementations must return the
+    /// canonical (sorted) cut.
+    fn search(&mut self, tree: &LodTree, query: &LodQuery) -> Cut;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lod::tree::testutil::random_tree;
+    use crate::util::Prng;
+
+    #[test]
+    fn overlap_identities() {
+        let a = Cut { nodes: vec![1, 2, 3, 4], ..Default::default() };
+        let b = Cut { nodes: vec![3, 4, 5, 6], ..Default::default() };
+        assert_eq!(a.overlap(&a), 1.0);
+        assert_eq!(a.overlap(&b), 0.5);
+        let empty = Cut::default();
+        assert_eq!(empty.overlap(&empty), 1.0);
+        assert_eq!(a.overlap(&empty), 0.0);
+    }
+
+    #[test]
+    fn canonicalize_sorts_and_dedups() {
+        let mut c = Cut { nodes: vec![5, 1, 5, 3], ..Default::default() };
+        c.canonicalize();
+        assert_eq!(c.nodes, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn extent_monotone_in_distance() {
+        let mut rng = Prng::new(1);
+        let tree = random_tree(&mut rng, 50);
+        let q_near = LodQuery::new(Vec3::new(0.0, 0.0, -10.0), 900.0, 6.0, 0.2);
+        let q_far = LodQuery::new(Vec3::new(0.0, 0.0, -1000.0), 900.0, 6.0, 0.2);
+        assert!(q_near.extent(&tree, 0) > q_far.extent(&tree, 0));
+    }
+
+    #[test]
+    fn leaf_is_never_refined() {
+        let mut rng = Prng::new(2);
+        let tree = random_tree(&mut rng, 100);
+        let q = LodQuery::new(Vec3::ZERO, 900.0, 0.0001, 0.2); // tiny tau: refine everything possible
+        for i in 0..tree.len() as u32 {
+            if tree.is_leaf(i) {
+                assert!(!q.refined(&tree, i));
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_non_cuts() {
+        let mut rng = Prng::new(3);
+        let tree = random_tree(&mut rng, 200);
+        let q = LodQuery::new(Vec3::new(0.0, 0.0, -20.0), 900.0, 8.0, 0.2);
+        // Root-only "cut" is valid iff root is unrefined.
+        let c = Cut { nodes: vec![0], ..Default::default() };
+        if q.refined(&tree, 0) {
+            assert!(c.validate(&tree, &q).is_err());
+        } else {
+            assert!(c.validate(&tree, &q).is_ok());
+        }
+        // Empty cut over a non-empty tree is never valid.
+        let empty = Cut::default();
+        assert!(empty.validate(&tree, &q).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Level-of-detail subsystem: the LoD tree and the three search
+//! algorithms (full, fully-streaming, temporal-aware), plus the offline
+//! subtree partitioning (paper §4.2).
+
+pub mod cut;
+pub mod partition;
+pub mod search_baselines;
+pub mod search_full;
+pub mod search_streaming;
+pub mod search_temporal;
+pub mod tree;
+
+pub use cut::{Cut, LodQuery, LodSearch};
+pub use partition::Partitioning;
+pub use search_baselines::{ChunkedSearch, FlatScanSearch};
+pub use search_full::FullSearch;
+pub use search_streaming::StreamingSearch;
+pub use search_temporal::TemporalSearch;
+pub use tree::{LodTree, LodTreeBuilder};

@@ -1,0 +1,215 @@
+//! Offline multi-level subtree partitioning (paper §4.2, Fig 11b).
+//!
+//! The LoD tree is split into *regions*: region 0 (the "top-tree")
+//! contains the root; every node whose subtree exceeds `max_region`
+//! becomes the *entry* of a new region nested under its parent's region.
+//! A region *owns* the nodes its local search emits: the entry node of a
+//! child region is owned by the parent (the parent's search decides
+//! whether to descend), while everything strictly below the entry — up to
+//! deeper entries — is owned by the child region.
+//!
+//! The paper performs this offline and requires regions of approximately
+//! equal size for balanced GPU-warp assignment; here the bound is
+//! `max_region` up to one branching factor.
+
+use super::tree::LodTree;
+
+/// Region id sentinel: node is not an entry of any region.
+pub const NOT_ENTRY: u32 = u32::MAX;
+
+/// Default max region size in nodes.
+pub const DEFAULT_MAX_REGION: usize = 2048;
+
+/// Offline partitioning of a LoD tree into nested regions.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    /// Region that owns (emits) each node.
+    pub owner: Vec<u32>,
+    /// If node `n` is the entry of region `k`, `entry_region[n] == k`,
+    /// else `NOT_ENTRY`. The global root is the entry of region 0.
+    pub entry_region: Vec<u32>,
+    /// Entry node per region.
+    pub region_entry: Vec<u32>,
+    /// Parent region per region (region 0's parent is itself).
+    pub region_parent: Vec<u32>,
+    /// Child regions per region.
+    pub region_children: Vec<Vec<u32>>,
+    pub max_region: usize,
+}
+
+impl Partitioning {
+    /// Build the partitioning for `tree` with the default region size.
+    pub fn new(tree: &LodTree) -> Self {
+        Self::with_max_region(tree, DEFAULT_MAX_REGION)
+    }
+
+    pub fn with_max_region(tree: &LodTree, max_region: usize) -> Self {
+        let n = tree.len();
+        let max_region = max_region.max(1);
+
+        // Subtree sizes: children always have larger ids (BFS layout), so
+        // a single reverse sweep suffices.
+        let mut size = vec![1u32; n];
+        for i in (0..n as u32).rev() {
+            for c in tree.children(i) {
+                size[i as usize] += size[c as usize];
+            }
+        }
+
+        let mut owner = vec![0u32; n];
+        let mut entry_region = vec![NOT_ENTRY; n];
+        // `interior[i]`: region whose interior holds node i's children.
+        let mut interior = vec![0u32; n];
+        let mut region_entry = vec![LodTree::ROOT];
+        let mut region_parent = vec![0u32];
+        entry_region[LodTree::ROOT as usize] = 0;
+
+        // Top-down sweep (ascending ids = parents first).
+        for i in 1..n as u32 {
+            let p = tree.parent[i as usize] as usize;
+            owner[i as usize] = interior[p];
+            if size[i as usize] as usize > max_region {
+                // i becomes the entry of a fresh region.
+                let k = region_entry.len() as u32;
+                region_entry.push(i);
+                region_parent.push(interior[p]);
+                entry_region[i as usize] = k;
+                interior[i as usize] = k;
+            } else {
+                interior[i as usize] = interior[p];
+            }
+        }
+
+        let mut region_children = vec![Vec::new(); region_entry.len()];
+        for k in 1..region_entry.len() {
+            region_children[region_parent[k] as usize].push(k as u32);
+        }
+
+        Self {
+            owner,
+            entry_region,
+            region_entry,
+            region_parent,
+            region_children,
+            max_region,
+        }
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.region_entry.len()
+    }
+
+    /// Number of nodes owned by each region (diagnostics / balance).
+    pub fn region_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_regions()];
+        for &o in &self.owner {
+            sizes[o as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Validate partitioning invariants against the tree.
+    pub fn validate(&self, tree: &LodTree) -> anyhow::Result<()> {
+        let n = tree.len();
+        anyhow::ensure!(self.owner.len() == n && self.entry_region.len() == n);
+        anyhow::ensure!(self.entry_region[0] == 0, "root must be entry of region 0");
+        for i in 1..n as u32 {
+            let p = tree.parent[i as usize] as usize;
+            // A node's owner is its parent's interior region: either the
+            // parent's own owner (parent not an entry) or the parent's
+            // entry region.
+            let expect = if self.entry_region[p] != NOT_ENTRY && p != 0 {
+                self.entry_region[p]
+            } else if p == 0 {
+                // Root is entry of region 0 (also owner 0).
+                0
+            } else {
+                self.owner[p]
+            };
+            anyhow::ensure!(
+                self.owner[i as usize] == expect,
+                "owner of {i} is {} expected {expect}",
+                self.owner[i as usize]
+            );
+        }
+        // Region entries and parents consistent.
+        for (k, &e) in self.region_entry.iter().enumerate() {
+            anyhow::ensure!(self.entry_region[e as usize] == k as u32);
+            if k > 0 {
+                anyhow::ensure!(
+                    self.owner[e as usize] == self.region_parent[k],
+                    "entry {e} of region {k} owned by {} != parent region {}",
+                    self.owner[e as usize],
+                    self.region_parent[k]
+                );
+                anyhow::ensure!(self.region_parent[k] < k as u32, "regions must be topo-ordered");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lod::tree::testutil::random_tree;
+    use crate::scene::{CityGen, CityParams};
+    use crate::util::prop::{check, Config};
+    use crate::util::Prng;
+
+    #[test]
+    fn partitioning_validates_on_random_trees() {
+        check("partitioning invariants", Config::default(), |rng| {
+            let n = rng.range_usize(1, 800);
+            let tree = random_tree(rng, n);
+            let m = rng.range_usize(1, 300);
+            let p = Partitioning::with_max_region(&tree, m);
+            p.validate(&tree).unwrap();
+        });
+    }
+
+    #[test]
+    fn owners_cover_all_nodes() {
+        let mut rng = Prng::new(31);
+        let tree = random_tree(&mut rng, 500);
+        let p = Partitioning::with_max_region(&tree, 64);
+        let sizes = p.region_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), tree.len());
+        assert!(p.num_regions() > 1, "expected multiple regions");
+    }
+
+    #[test]
+    fn regions_are_approximately_bounded() {
+        let tree = CityGen::new(CityParams::for_target(20_000, 120.0, 3)).build();
+        let m = 512;
+        let p = Partitioning::with_max_region(&tree, m);
+        p.validate(&tree).unwrap();
+        let sizes = p.region_sizes();
+        // Bound: region interior ≤ max_branch × M + slack (see module doc).
+        let bound = 8 * m;
+        for (k, s) in sizes.iter().enumerate() {
+            assert!(*s <= bound, "region {k} has {s} nodes > bound {bound}");
+        }
+        // Balance: most regions should be non-trivial.
+        let nontrivial = sizes.iter().filter(|&&s| s >= m / 8).count();
+        assert!(nontrivial * 2 >= sizes.len(), "too many tiny regions");
+    }
+
+    #[test]
+    fn single_region_when_max_is_huge() {
+        let mut rng = Prng::new(33);
+        let tree = random_tree(&mut rng, 300);
+        let p = Partitioning::with_max_region(&tree, 1_000_000);
+        assert_eq!(p.num_regions(), 1);
+        assert!(p.owner.iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn multi_level_nesting_occurs() {
+        let tree = CityGen::new(CityParams::for_target(30_000, 150.0, 5)).build();
+        let p = Partitioning::with_max_region(&tree, 256);
+        // Some region's parent must itself be a non-top region.
+        let nested = (1..p.num_regions()).any(|k| p.region_parent[k] != 0);
+        assert!(nested, "expected multi-level partitioning");
+    }
+}

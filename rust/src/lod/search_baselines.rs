@@ -1,0 +1,208 @@
+//! LoD-search baselines reproduced for Fig 20.
+//!
+//! * [`FlatScanSearch`] — OctreeGS-style: every frame evaluates the LoD
+//!   predicate over *all* nodes and selects cut members with a flat
+//!   parallel-friendly scan. O(N) per frame regardless of the cut size —
+//!   the paper's normalization baseline.
+//! * [`ChunkedSearch`] — CityGS-style: nodes are grouped into spatial
+//!   chunks with precomputed conservative bounds; chunks whose bound
+//!   proves that no cut node can be inside are skipped, the rest are
+//!   scanned flatly. Faster than the flat scan, still far from the
+//!   traversal-based searches.
+//!
+//! Both are bit-accurate (they compute the same cut definition) so that
+//! Fig 20's comparison is purely about work performed.
+
+use super::cut::{Cut, LodQuery, LodSearch};
+use super::tree::{LodTree, NO_PARENT};
+use crate::math::Vec3;
+
+/// OctreeGS-style per-node flat scan.
+#[derive(Debug, Default)]
+pub struct FlatScanSearch;
+
+impl LodSearch for FlatScanSearch {
+    fn name(&self) -> &'static str {
+        "flat-scan (OctreeGS-like)"
+    }
+
+    fn search(&mut self, tree: &LodTree, query: &LodQuery) -> Cut {
+        let n = tree.len();
+        let mut cut = Cut::default();
+        // Pass 1: refined flag per node (the per-anchor LoD mask OctreeGS
+        // computes over the whole model every frame).
+        let mut refined = vec![false; n];
+        for i in 0..n as u32 {
+            refined[i as usize] = query.refined(tree, i);
+        }
+        // Pass 2: cut membership needs the *path* condition: parent
+        // refined AND all ancestors refined (a deep node with a refined
+        // parent may still sit below the cut if a higher ancestor is
+        // unrefined). BFS order lets one forward sweep compute
+        // reachable-under-refinement.
+        let mut reachable = vec![false; n];
+        for i in 0..n as u32 {
+            let p = tree.parent[i as usize];
+            let parent_ok = p == NO_PARENT || (reachable[p as usize] && refined[p as usize]);
+            reachable[i as usize] = parent_ok;
+            if parent_ok && !refined[i as usize] {
+                cut.nodes.push(i);
+            }
+        }
+        cut.nodes_visited = 2 * n as u64;
+        cut.bytes_touched = cut.nodes_visited * 28;
+        // Forward sweep emits ascending ids already.
+        cut
+    }
+}
+
+/// CityGS-style chunked scan.
+#[derive(Debug)]
+pub struct ChunkedSearch {
+    pub chunk: usize,
+    /// Per chunk: (centroid, max distance from centroid + max radius,
+    /// max node radius) — conservative bound for skipping.
+    bounds: Vec<(Vec3, f32, f32)>,
+    built_for: usize,
+}
+
+impl ChunkedSearch {
+    pub fn new(chunk: usize) -> Self {
+        Self { chunk: chunk.max(1), bounds: Vec::new(), built_for: usize::MAX }
+    }
+
+    fn build_bounds(&mut self, tree: &LodTree) {
+        self.bounds.clear();
+        for ids in (0..tree.len() as u32).collect::<Vec<_>>().chunks(self.chunk) {
+            let mut centroid = Vec3::ZERO;
+            for &i in ids {
+                centroid += tree.gaussians.pos[i as usize];
+            }
+            centroid = centroid / ids.len() as f32;
+            let mut spread = 0.0f32;
+            let mut max_r = 0.0f32;
+            for &i in ids {
+                spread = spread.max((tree.gaussians.pos[i as usize] - centroid).norm());
+                max_r = max_r.max(tree.radius[i as usize]);
+            }
+            self.bounds.push((centroid, spread, max_r));
+        }
+        self.built_for = tree.len();
+    }
+}
+
+impl Default for ChunkedSearch {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl LodSearch for ChunkedSearch {
+    fn name(&self) -> &'static str {
+        "chunked-scan (CityGS-like)"
+    }
+
+    fn search(&mut self, tree: &LodTree, query: &LodQuery) -> Cut {
+        if self.built_for != tree.len() {
+            self.build_bounds(tree);
+        }
+        let n = tree.len();
+        let mut cut = Cut::default();
+        let mut refined = vec![false; n];
+        // A node can only be *refined* if its extent can exceed tau. If
+        // the chunk's conservative max extent is below tau, every node in
+        // it is unrefined — skip the per-node evaluation (chunk culling).
+        // Membership still requires the reachability sweep below, which
+        // reads only the parent/refined arrays (cheap sequential pass).
+        let mut chunk_visits = 0u64;
+        for (ci, ids_start) in (0..n).step_by(self.chunk).enumerate() {
+            let ids_end = (ids_start + self.chunk).min(n);
+            let (centroid, spread, max_r) = self.bounds[ci];
+            chunk_visits += 1;
+            let dmin = ((centroid - query.eye).norm() - spread).max(query.near);
+            let max_extent = query.fx * (2.0 * max_r) / dmin;
+            if max_extent <= query.tau_px {
+                continue; // whole chunk unrefined
+            }
+            for i in ids_start..ids_end {
+                chunk_visits += 1;
+                refined[i] = query.refined(tree, i as u32);
+            }
+        }
+        let mut reachable = vec![false; n];
+        for i in 0..n as u32 {
+            let p = tree.parent[i as usize];
+            let parent_ok = p == NO_PARENT || (reachable[p as usize] && refined[p as usize]);
+            reachable[i as usize] = parent_ok;
+            if parent_ok && !refined[i as usize] {
+                cut.nodes.push(i);
+            }
+        }
+        cut.nodes_visited = chunk_visits + n as u64;
+        cut.bytes_touched = chunk_visits * 28 + n as u64 * 8;
+        cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lod::search_streaming::StreamingSearch;
+    use crate::lod::tree::testutil::random_tree;
+    use crate::util::prop::{check, Config};
+
+    fn rand_query(rng: &mut crate::util::Prng) -> LodQuery {
+        LodQuery::new(
+            Vec3::new(rng.range_f32(-80.0, 80.0), rng.range_f32(0.0, 30.0), rng.range_f32(-80.0, 80.0)),
+            900.0,
+            rng.range_f32(0.5, 120.0),
+            0.2,
+        )
+    }
+
+    #[test]
+    fn flat_scan_matches_streaming() {
+        check("flat == streaming", Config::default(), |rng| {
+            let n = rng.range_usize(1, 600);
+            let tree = random_tree(rng, n);
+            let q = rand_query(rng);
+            let want = StreamingSearch::default().search(&tree, &q);
+            let got = FlatScanSearch.search(&tree, &q);
+            assert_eq!(want.nodes, got.nodes);
+        });
+    }
+
+    #[test]
+    fn chunked_matches_streaming() {
+        check("chunked == streaming", Config::default(), |rng| {
+            let n = rng.range_usize(1, 600);
+            let tree = random_tree(rng, n);
+            let q = rand_query(rng);
+            let want = StreamingSearch::default().search(&tree, &q);
+            let got = ChunkedSearch::new(rng.range_usize(1, 300)).search(&tree, &q);
+            assert_eq!(want.nodes, got.nodes);
+        });
+    }
+
+    #[test]
+    fn flat_scan_visits_whole_tree() {
+        let mut rng = crate::util::Prng::new(41);
+        let tree = random_tree(&mut rng, 500);
+        let q = rand_query(&mut rng);
+        let c = FlatScanSearch.search(&tree, &q);
+        assert_eq!(c.nodes_visited, 2 * tree.len() as u64);
+    }
+
+    #[test]
+    fn chunk_culling_saves_visits_when_far() {
+        let mut rng = crate::util::Prng::new(43);
+        let tree = random_tree(&mut rng, 2000);
+        // Far-away eye: everything coarse, most chunks culled.
+        let q = LodQuery::new(Vec3::new(1e5, 0.0, 1e5), 900.0, 6.0, 0.2);
+        let mut s = ChunkedSearch::new(128);
+        let c = s.search(&tree, &q);
+        let flat = FlatScanSearch.search(&tree, &q);
+        assert_eq!(c.nodes, flat.nodes);
+        assert!(c.nodes_visited < flat.nodes_visited);
+    }
+}

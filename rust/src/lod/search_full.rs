@@ -1,0 +1,109 @@
+//! Baseline LoD search: top-down depth-first traversal.
+//!
+//! This models the off-the-shelf GPU implementations the paper compares
+//! against (OctreeGS-style): correctness-identical to the streaming and
+//! temporal searches, but with depth-first pointer-chasing access that
+//! hops across the arena — the irregular-DRAM-access pattern the paper's
+//! Fig 11a is designed to eliminate.
+
+use super::cut::{Cut, LodQuery, LodSearch};
+use super::tree::LodTree;
+
+/// Recursive (explicit-stack) full traversal.
+#[derive(Debug, Default)]
+pub struct FullSearch {
+    stack: Vec<u32>,
+}
+
+impl FullSearch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl LodSearch for FullSearch {
+    fn name(&self) -> &'static str {
+        "full-dfs"
+    }
+
+    fn search(&mut self, tree: &LodTree, query: &LodQuery) -> Cut {
+        let mut cut = Cut::default();
+        self.stack.clear();
+        self.stack.push(LodTree::ROOT);
+        while let Some(n) = self.stack.pop() {
+            cut.nodes_visited += 1;
+            if query.refined(tree, n) {
+                // Push in reverse so traversal order matches recursion.
+                let r = tree.children(n);
+                for c in r.rev() {
+                    self.stack.push(c);
+                }
+            } else {
+                cut.nodes.push(n);
+            }
+        }
+        // DFS emits in depth-first order; BFS ids are not monotone along
+        // it, so canonicalize.
+        cut.canonicalize();
+        // Topology (12B) + position (12B) + radius (4B) per visit.
+        cut.bytes_touched = cut.nodes_visited * 28;
+        cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lod::tree::testutil::random_tree;
+    use crate::math::Vec3;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn cut_is_valid_across_poses_and_taus() {
+        check("full search validity", Config::default(), |rng| {
+            let n = rng.range_usize(1, 400);
+            let tree = random_tree(rng, n);
+            let q = LodQuery::new(
+                Vec3::new(rng.range_f32(-100.0, 100.0), rng.range_f32(-20.0, 20.0), rng.range_f32(-100.0, 100.0)),
+                900.0,
+                rng.range_f32(0.5, 200.0),
+                0.2,
+            );
+            let cut = FullSearch::new().search(&tree, &q);
+            cut.validate(&tree, &q).unwrap();
+        });
+    }
+
+    #[test]
+    fn tiny_tau_selects_leaves_only() {
+        let mut rng = crate::util::Prng::new(5);
+        let tree = random_tree(&mut rng, 300);
+        let q = LodQuery::new(Vec3::ZERO, 900.0, 1e-6, 0.2);
+        let cut = FullSearch::new().search(&tree, &q);
+        for &n in &cut.nodes {
+            assert!(tree.is_leaf(n));
+        }
+        assert_eq!(cut.len(), tree.leaf_count());
+    }
+
+    #[test]
+    fn huge_tau_selects_root_only() {
+        let mut rng = crate::util::Prng::new(6);
+        let tree = random_tree(&mut rng, 300);
+        let q = LodQuery::new(Vec3::ZERO, 900.0, 1e9, 0.2);
+        let cut = FullSearch::new().search(&tree, &q);
+        assert_eq!(cut.nodes, vec![0]);
+    }
+
+    #[test]
+    fn closer_pose_gives_finer_cut() {
+        let mut rng = crate::util::Prng::new(7);
+        let tree = random_tree(&mut rng, 500);
+        let center = tree.center(0);
+        let near = LodQuery::new(center + Vec3::new(1.0, 0.0, 0.0), 900.0, 6.0, 0.2);
+        let far = LodQuery::new(center + Vec3::new(5000.0, 0.0, 0.0), 900.0, 6.0, 0.2);
+        let c_near = FullSearch::new().search(&tree, &near);
+        let c_far = FullSearch::new().search(&tree, &far);
+        assert!(c_near.len() >= c_far.len());
+    }
+}

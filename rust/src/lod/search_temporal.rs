@@ -1,0 +1,449 @@
+//! Temporal-aware LoD search (paper §4.2, Fig 11b).
+//!
+//! Exploits frame-to-frame coherence: the cut barely moves between
+//! frames (Fig 7: 99% overlap at 90 FPS), so instead of re-traversing
+//! the tree, each frame
+//!
+//! 1. **validates** the previous result with a pure streaming pass over
+//!    two flat per-region lists — the nodes previously emitted to the cut
+//!    (must still be unrefined) and the nodes previously found refined
+//!    (must still be refined). No topology chasing; this is the
+//!    DRAM-friendly pass that replaces traversal on coherent frames; and
+//! 2. **repairs** only the regions owning violated nodes by re-running a
+//!    streaming local search inside them, escalating across region
+//!    boundaries exactly where the cut moved (newly refined entries
+//!    descend into fresh regions; unrefined entries clear their region's
+//!    contribution recursively).
+//!
+//! The result is *bit-accurate* w.r.t. the full traversal: any change in
+//! cut membership implies a predicate flip on some previously-emitted or
+//! previously-refined node, which the validation pass detects and whose
+//! owning region gets re-searched (see the equivalence property test).
+
+use super::cut::{Cut, LodQuery, LodSearch};
+use super::partition::{Partitioning, NOT_ENTRY};
+use super::tree::LodTree;
+use crate::math::Vec3;
+use std::collections::BTreeSet;
+
+/// Per-region cached search state.
+#[derive(Debug, Clone)]
+struct RegionState {
+    /// Nodes this region emitted to the cut last search.
+    cut: Vec<u32>,
+    /// Nodes this region found refined last search (interior + entries of
+    /// child regions it descended into).
+    refined: Vec<u32>,
+    /// Region currently contributes to the cut.
+    active: bool,
+    /// Eye position at which `margin` was computed.
+    eye: Vec3,
+    /// Conservative no-change bound: while the eye stays within `margin`
+    /// meters of `eye`, no node in this region's lists can flip its
+    /// predicate (the predicate is distance-based, so by the triangle
+    /// inequality a move of `m` meters changes any node distance by at
+    /// most `m`). This is what makes coherent frames nearly free.
+    margin: f32,
+}
+
+impl Default for RegionState {
+    fn default() -> Self {
+        Self { cut: Vec::new(), refined: Vec::new(), active: false, eye: Vec3::ZERO, margin: 0.0 }
+    }
+}
+
+/// Distance at which node `n`'s predicate flips: refined ⟺ dist < d_flip.
+#[inline]
+fn flip_distance(tree: &LodTree, query: &LodQuery, n: u32) -> f32 {
+    if tree.child_count[n as usize] == 0 {
+        0.0 // leaves never refine: refined ⟺ d < 0 is always false
+    } else {
+        query.fx * (2.0 * tree.radius[n as usize]) / query.tau_px
+    }
+}
+
+/// Temporal-aware incremental LoD search.
+#[derive(Debug)]
+pub struct TemporalSearch {
+    pub part: Partitioning,
+    regions: Vec<RegionState>,
+    has_state: bool,
+    /// (fx, tau, near) of the last query; margins are only valid while
+    /// these scalars are unchanged.
+    last_scalars: (f32, f32, f32),
+    /// Cached canonical cut; valid while no region was re-searched or
+    /// cleared. On coherent frames this turns assembly into a memcpy —
+    /// the dominant cost otherwise is re-sorting the whole cut
+    /// (EXPERIMENTS.md §Perf, L3-1).
+    cut_cache: Vec<u32>,
+    cache_valid: bool,
+    /// Scratch frontier buffers (reused across frames).
+    frontier: Vec<u32>,
+    next: Vec<u32>,
+}
+
+impl TemporalSearch {
+    pub fn new(part: Partitioning) -> Self {
+        let regions = vec![RegionState::default(); part.num_regions()];
+        Self {
+            part,
+            regions,
+            has_state: false,
+            last_scalars: (0.0, 0.0, 0.0),
+            cut_cache: Vec::new(),
+            cache_valid: false,
+            frontier: Vec::new(),
+            next: Vec::new(),
+        }
+    }
+
+    pub fn for_tree(tree: &LodTree) -> Self {
+        Self::new(Partitioning::new(tree))
+    }
+
+    /// Drop cached state (e.g., after a teleport).
+    pub fn reset(&mut self) {
+        for r in &mut self.regions {
+            r.cut.clear();
+            r.refined.clear();
+            r.active = false;
+        }
+        self.has_state = false;
+        self.cache_valid = false;
+    }
+
+    /// Clear region `k` and all its active descendants.
+    fn clear_recursive(&mut self, k: u32, pending: &mut BTreeSet<u32>) {
+        self.cache_valid = false;
+        let mut stack = vec![k];
+        while let Some(r) = stack.pop() {
+            let st = &mut self.regions[r as usize];
+            if !st.active && st.cut.is_empty() && st.refined.is_empty() {
+                continue;
+            }
+            st.active = false;
+            st.cut.clear();
+            st.refined.clear();
+            pending.remove(&r);
+            for &c in &self.part.region_children[r as usize] {
+                stack.push(c);
+            }
+        }
+    }
+
+    /// Local streaming search of region `k`. Assumes the precondition
+    /// (entry refined, or k == 0) holds. Pushes child regions that need
+    /// (re-)searching into `pending`; clears regions no longer entered.
+    /// Returns number of nodes visited.
+    fn search_region(&mut self, tree: &LodTree, query: &LodQuery, k: u32, pending: &mut BTreeSet<u32>) -> u64 {
+        let mut visited = 0u64;
+        let mut margin = f32::INFINITY;
+        self.cache_valid = false;
+        {
+            let st = &mut self.regions[k as usize];
+            st.cut.clear();
+            st.refined.clear();
+            st.active = true;
+        }
+        self.frontier.clear();
+        self.next.clear();
+        if k == 0 {
+            self.frontier.push(LodTree::ROOT);
+        } else {
+            let entry = self.part.region_entry[k as usize];
+            self.frontier.extend(tree.children(entry));
+        }
+        while !self.frontier.is_empty() {
+            for i in 0..self.frontier.len() {
+                let n = self.frontier[i];
+                visited += 1;
+                let e = self.part.entry_region[n as usize];
+                let boundary = e != NOT_ENTRY && e != k;
+                let d = (tree.gaussians.pos[n as usize] - query.eye).norm().max(query.near);
+                let flip = flip_distance(tree, query, n);
+                margin = margin.min((d - flip).abs());
+                if query.refined(tree, n) {
+                    self.regions[k as usize].refined.push(n);
+                    if boundary {
+                        // Descend across the region boundary. Reuse the
+                        // child's cached result if it is active and not
+                        // already queued for re-search.
+                        if !self.regions[e as usize].active {
+                            pending.insert(e);
+                        }
+                        // If active and pending, it will re-search later
+                        // (region ids are topologically ordered).
+                    } else {
+                        self.next.extend(tree.children(n));
+                    }
+                } else {
+                    self.regions[k as usize].cut.push(n);
+                    if boundary && self.regions[e as usize].active {
+                        // The cut pulled back above this entry: the child
+                        // region no longer contributes.
+                        self.clear_recursive(e, pending);
+                    }
+                }
+            }
+            std::mem::swap(&mut self.frontier, &mut self.next);
+            self.next.clear();
+        }
+        let st = &mut self.regions[k as usize];
+        st.eye = query.eye;
+        st.margin = margin;
+        visited
+    }
+
+    /// Validation pass: returns the set of regions whose cached lists
+    /// contain a predicate violation, plus nodes checked. Regions whose
+    /// eye-movement margin proves no flip is possible are skipped without
+    /// touching their lists; regions that must be scanned get a fresh
+    /// margin computed as a side effect.
+    fn find_dirty(&mut self, tree: &LodTree, query: &LodQuery) -> (BTreeSet<u32>, u64) {
+        let mut dirty = BTreeSet::new();
+        let mut checked = 0u64;
+        for (k, st) in self.regions.iter_mut().enumerate() {
+            if !st.active {
+                continue;
+            }
+            if (query.eye - st.eye).norm() < st.margin {
+                continue; // conservatively unchanged — the temporal win
+            }
+            let mut bad = false;
+            let mut margin = f32::INFINITY;
+            for &n in &st.refined {
+                checked += 1;
+                let d = (tree.gaussians.pos[n as usize] - query.eye).norm().max(query.near);
+                let flip = flip_distance(tree, query, n);
+                if d >= flip {
+                    bad = true; // no longer refined
+                    break;
+                }
+                margin = margin.min(flip - d);
+            }
+            if !bad {
+                for &n in &st.cut {
+                    checked += 1;
+                    let d = (tree.gaussians.pos[n as usize] - query.eye).norm().max(query.near);
+                    let flip = flip_distance(tree, query, n);
+                    if d < flip {
+                        bad = true; // became refined
+                        break;
+                    }
+                    margin = margin.min(d - flip);
+                }
+            }
+            if bad {
+                dirty.insert(k as u32);
+            } else {
+                st.eye = query.eye;
+                st.margin = margin;
+            }
+        }
+        (dirty, checked)
+    }
+
+    /// Assemble the canonical cut from all active regions.
+    fn assemble(&self) -> Vec<u32> {
+        let mut nodes: Vec<u32> =
+            self.regions.iter().filter(|r| r.active).flat_map(|r| r.cut.iter().copied()).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    /// Number of regions currently contributing.
+    pub fn active_regions(&self) -> usize {
+        self.regions.iter().filter(|r| r.active).count()
+    }
+}
+
+impl LodSearch for TemporalSearch {
+    fn name(&self) -> &'static str {
+        "temporal-aware"
+    }
+
+    fn search(&mut self, tree: &LodTree, query: &LodQuery) -> Cut {
+        assert_eq!(
+            self.part.owner.len(),
+            tree.len(),
+            "TemporalSearch partitioning was built for a different tree"
+        );
+        let mut visited = 0u64;
+        let mut pending: BTreeSet<u32> = BTreeSet::new();
+
+        let scalars = (query.fx, query.tau_px, query.near);
+        if !self.has_state {
+            // Initial frame: full streaming search of region 0; child
+            // regions are entered on demand.
+            pending.insert(0);
+            self.has_state = true;
+        } else {
+            if scalars != self.last_scalars {
+                // τ/fx changed: every cached margin is stale.
+                for st in &mut self.regions {
+                    st.margin = 0.0;
+                }
+            }
+            let (dirty, checked) = self.find_dirty(tree, query);
+            visited += checked;
+            pending = dirty;
+        }
+        self.last_scalars = scalars;
+
+        // Repair top-down: region ids are topologically ordered (parents
+        // have smaller ids), so popping the minimum guarantees a parent
+        // re-search runs before its children's.
+        while let Some(k) = pending.iter().next().copied() {
+            pending.remove(&k);
+            // A parent's re-search may have cleared this region since it
+            // was queued.
+            if k != 0 {
+                let entry = self.part.region_entry[k as usize];
+                // Precondition: the entry must still be refined (its
+                // status is owned by the parent region). If not, skip —
+                // the parent's pass has already emitted/cleared it.
+                if !query.refined(tree, entry) {
+                    continue;
+                }
+            }
+            visited += self.search_region(tree, query, k, &mut pending);
+        }
+
+        let nodes = if self.cache_valid {
+            self.cut_cache.clone()
+        } else {
+            let nodes = self.assemble();
+            self.cut_cache = nodes.clone();
+            self.cache_valid = true;
+            nodes
+        };
+        Cut {
+            nodes,
+            nodes_visited: visited,
+            // Validation touches position+radius+topology per check, same
+            // 28 B/node streaming estimate as the other searches.
+            bytes_touched: visited * 28,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lod::search_streaming::StreamingSearch;
+    use crate::lod::tree::testutil::random_tree;
+    use crate::math::Vec3;
+    use crate::util::prop::{check, Config};
+    use crate::util::Prng;
+
+    fn query_at(eye: Vec3, tau: f32) -> LodQuery {
+        LodQuery::new(eye, 900.0, tau, 0.2)
+    }
+
+    #[test]
+    fn first_frame_matches_streaming() {
+        check("temporal first frame == streaming", Config::default(), |rng| {
+            let n = rng.range_usize(1, 600);
+            let tree = random_tree(rng, n);
+            let q = query_at(
+                Vec3::new(rng.range_f32(-60.0, 60.0), 0.0, rng.range_f32(-60.0, 60.0)),
+                rng.range_f32(1.0, 100.0),
+            );
+            let a = StreamingSearch::default().search(&tree, &q);
+            let part = Partitioning::with_max_region(&tree, rng.range_usize(8, 256));
+            let b = TemporalSearch::new(part).search(&tree, &q);
+            assert_eq!(a.nodes, b.nodes);
+        });
+    }
+
+    #[test]
+    fn stays_bit_accurate_along_a_walk() {
+        // The core equivalence property (paper: "bit-accurate compared to
+        // the original full-tree traversal").
+        check("temporal == streaming along walks", Config { cases: 24, ..Config::default() }, |rng| {
+            let n = rng.range_usize(50, 800);
+            let tree = random_tree(rng, n);
+            let part = Partitioning::with_max_region(&tree, rng.range_usize(8, 200));
+            part.validate(&tree).unwrap();
+            let mut temporal = TemporalSearch::new(part);
+            let mut streaming = StreamingSearch::default();
+            let mut eye = Vec3::new(rng.range_f32(-40.0, 40.0), 1.7, rng.range_f32(-40.0, 40.0));
+            let tau = rng.range_f32(2.0, 40.0);
+            for _ in 0..12 {
+                // Mix small steps (coherent) and occasional jumps.
+                let step = if rng.chance(0.15) { 30.0 } else { 0.5 };
+                eye += Vec3::new(rng.normal() * step, 0.0, rng.normal() * step);
+                let q = query_at(eye, tau);
+                let want = streaming.search(&tree, &q);
+                let got = temporal.search(&tree, &q);
+                assert_eq!(want.nodes, got.nodes, "diverged at eye={eye:?}");
+                got.validate(&tree, &q).unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn coherent_frames_visit_fewer_nodes() {
+        let tree = crate::scene::CityGen::new(crate::scene::CityParams::for_target(
+            30_000, 150.0, 11,
+        ))
+        .build();
+        let part = Partitioning::with_max_region(&tree, 1024);
+        let mut temporal = TemporalSearch::new(part);
+        let eye0 = Vec3::new(75.0, 1.7, 75.0);
+        let q0 = query_at(eye0, 6.0);
+        let first = temporal.search(&tree, &q0);
+        // 1.5 cm step ≈ one 90 FPS frame of walking.
+        let q1 = query_at(eye0 + Vec3::new(0.015, 0.0, 0.0), 6.0);
+        let second = temporal.search(&tree, &q1);
+        assert!(
+            second.nodes_visited < first.nodes_visited / 2,
+            "temporal visits {} vs initial {}",
+            second.nodes_visited,
+            first.nodes_visited
+        );
+        // And still correct.
+        second.validate(&tree, &q1).unwrap();
+    }
+
+    #[test]
+    fn pure_rotation_is_free() {
+        // The projection measure is distance-based, so rotating the head
+        // must not dirty any region.
+        let mut rng = Prng::new(55);
+        let tree = random_tree(&mut rng, 400);
+        let mut temporal = TemporalSearch::for_tree(&tree);
+        let q = query_at(Vec3::new(3.0, 1.7, -8.0), 6.0);
+        let a = temporal.search(&tree, &q);
+        let b = temporal.search(&tree, &q); // same pose (rotation ignored by query)
+        assert_eq!(a.nodes, b.nodes);
+        // Second search must do validation only: strictly fewer visits.
+        assert!(b.nodes_visited <= a.nodes_visited);
+    }
+
+    #[test]
+    fn reset_recovers_from_teleport() {
+        let mut rng = Prng::new(66);
+        let tree = random_tree(&mut rng, 500);
+        let mut temporal = TemporalSearch::for_tree(&tree);
+        let q1 = query_at(Vec3::new(0.0, 0.0, -5.0), 6.0);
+        temporal.search(&tree, &q1);
+        temporal.reset();
+        let q2 = query_at(Vec3::new(500.0, 0.0, 500.0), 6.0);
+        let got = temporal.search(&tree, &q2);
+        let want = StreamingSearch::default().search(&tree, &q2);
+        assert_eq!(got.nodes, want.nodes);
+    }
+
+    #[test]
+    #[should_panic(expected = "different tree")]
+    fn rejects_mismatched_tree() {
+        let mut rng = Prng::new(77);
+        let t1 = random_tree(&mut rng, 100);
+        let t2 = random_tree(&mut rng, 200);
+        let mut s = TemporalSearch::for_tree(&t1);
+        let q = query_at(Vec3::ZERO, 6.0);
+        s.search(&t2, &q);
+    }
+}

@@ -1,0 +1,298 @@
+//! The LoD tree: an irregular tree in which every node is one Gaussian
+//! and children refine their parent's detail (paper §2.2, Fig 1).
+//!
+//! Storage is a flat arena in **level (BFS) order** with contiguous child
+//! ranges. This is the layout the fully-streaming traversal (paper Fig
+//! 11a) relies on: a frontier of nodes at one level occupies a contiguous
+//! id range, so traversal streams over dense arrays instead of chasing
+//! pointers.
+
+use crate::gaussian::{GaussianArena, GaussianId};
+use crate::math::Vec3;
+
+/// Sentinel parent id of the root.
+pub const NO_PARENT: u32 = u32::MAX;
+
+/// Irregular LoD tree over a Gaussian arena. Node `i` is Gaussian id `i`.
+#[derive(Debug, Default, Clone)]
+pub struct LodTree {
+    pub gaussians: GaussianArena,
+    /// Index of the first child of node `i`; children are contiguous.
+    pub first_child: Vec<u32>,
+    /// Number of children of node `i` (0 = leaf).
+    pub child_count: Vec<u32>,
+    /// Parent of node `i` (NO_PARENT for the root).
+    pub parent: Vec<u32>,
+    /// Depth of node `i` (root = 0).
+    pub level: Vec<u8>,
+    /// Precomputed bounding-sphere radius of node `i` (3σ of max scale).
+    /// Kept separate from the arena so the traversal touches a single
+    /// dense f32 array.
+    pub radius: Vec<f32>,
+}
+
+impl LodTree {
+    pub fn len(&self) -> usize {
+        self.first_child.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.first_child.is_empty()
+    }
+
+    pub const ROOT: u32 = 0;
+
+    #[inline]
+    pub fn is_leaf(&self, n: u32) -> bool {
+        self.child_count[n as usize] == 0
+    }
+
+    #[inline]
+    pub fn children(&self, n: u32) -> std::ops::Range<u32> {
+        let fc = self.first_child[n as usize];
+        fc..fc + self.child_count[n as usize]
+    }
+
+    #[inline]
+    pub fn center(&self, n: u32) -> Vec3 {
+        self.gaussians.pos[n as usize]
+    }
+
+    /// Maximum depth (levels - 1).
+    pub fn depth(&self) -> u8 {
+        self.level.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.child_count.iter().filter(|&&c| c == 0).count()
+    }
+
+    /// Validate structural invariants; used by tests and the generator.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.len();
+        anyhow::ensure!(n > 0, "empty tree");
+        anyhow::ensure!(self.gaussians.len() == n, "arena/tree size mismatch");
+        anyhow::ensure!(self.parent[0] == NO_PARENT, "node 0 must be root");
+        anyhow::ensure!(self.radius.len() == n, "radius len");
+        for i in 0..n as u32 {
+            let r = self.children(i);
+            anyhow::ensure!(
+                r.end as usize <= n,
+                "child range of {i} out of bounds ({r:?})"
+            );
+            for c in r {
+                anyhow::ensure!(c > i, "BFS order violated: child {c} <= parent {i}");
+                anyhow::ensure!(self.parent[c as usize] == i, "parent link broken at {c}");
+                anyhow::ensure!(
+                    self.level[c as usize] == self.level[i as usize] + 1,
+                    "level of child {c}"
+                );
+                anyhow::ensure!(
+                    self.radius[c as usize] <= self.radius[i as usize] * 1.0001,
+                    "child {c} radius {} exceeds parent {i} radius {}",
+                    self.radius[c as usize],
+                    self.radius[i as usize]
+                );
+            }
+        }
+        // Every non-root node must be inside exactly one child range.
+        let mut seen = vec![false; n];
+        seen[0] = true;
+        for i in 0..n as u32 {
+            for c in self.children(i) {
+                anyhow::ensure!(!seen[c as usize], "node {c} has two parents");
+                seen[c as usize] = true;
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "orphan nodes exist");
+        Ok(())
+    }
+
+    /// Ids of all leaves (finest level representation).
+    pub fn leaves(&self) -> Vec<u32> {
+        (0..self.len() as u32).filter(|&i| self.is_leaf(i)).collect()
+    }
+
+    /// Total uncompressed memory footprint in bytes: Gaussians + topology
+    /// (first_child, child_count, parent as u32 each + level + radius).
+    pub fn byte_size(&self) -> u64 {
+        self.gaussians.byte_size() + self.len() as u64 * (4 + 4 + 4 + 1 + 4)
+    }
+}
+
+/// Builder that enforces BFS layout during construction.
+#[derive(Debug, Default)]
+pub struct LodTreeBuilder {
+    tree: LodTree,
+}
+
+impl LodTreeBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node whose children will be appended later (in order).
+    /// Nodes MUST be appended in level order; `finish_children` is called
+    /// once per node, in the same order, to set its child range.
+    pub fn push_node(
+        &mut self,
+        g: &crate::gaussian::GaussianRecord,
+        parent: u32,
+        level: u8,
+    ) -> GaussianId {
+        let id = self.tree.gaussians.push(g);
+        self.tree.first_child.push(0);
+        self.tree.child_count.push(0);
+        self.tree.parent.push(parent);
+        self.tree.level.push(level);
+        self.tree.radius.push(g.radius());
+        id
+    }
+
+    /// Record that node `n`'s children are the contiguous range
+    /// [first, first+count).
+    pub fn set_children(&mut self, n: u32, first: u32, count: u32) {
+        self.tree.first_child[n as usize] = first;
+        self.tree.child_count[n as usize] = count;
+    }
+
+    pub fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tree.is_empty()
+    }
+
+    /// Level of an already-pushed node.
+    pub fn level(&self, n: u32) -> u8 {
+        self.tree.level[n as usize]
+    }
+
+    /// Radius of an already-pushed node.
+    pub fn radius(&self, n: u32) -> f32 {
+        self.tree.radius[n as usize]
+    }
+
+    /// Read-only view of the tree under construction.
+    pub fn tree_ref(&self) -> &LodTree {
+        &self.tree
+    }
+
+    pub fn build(self) -> LodTree {
+        self.tree
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::gaussian::GaussianRecord;
+    use crate::math::{Quat, Vec3};
+    use crate::util::Prng;
+
+    /// Random small tree for unit tests: recursive BFS expansion with
+    /// shrinking radii, positions scattered in a box.
+    pub fn random_tree(rng: &mut Prng, target: usize) -> LodTree {
+        let mut b = LodTreeBuilder::new();
+        let root = GaussianRecord {
+            pos: Vec3::new(0.0, 0.0, 0.0),
+            scale: Vec3::splat(50.0),
+            rot: Quat::IDENTITY,
+            opacity: 0.9,
+            sh: [0.0; crate::math::sh::SH_FLOATS],
+        };
+        b.push_node(&root, NO_PARENT, 0);
+        let mut frontier: Vec<u32> = vec![0];
+        while !frontier.is_empty() && b.len() < target {
+            let mut next = Vec::new();
+            for &node in &frontier {
+                if b.len() >= target {
+                    break;
+                }
+                let k = rng.range_usize(0, 4);
+                if k == 0 {
+                    continue;
+                }
+                let first = b.len() as u32;
+                let plevel = b.tree.level[node as usize];
+                let ppos = b.tree.gaussians.pos[node as usize];
+                let pscale = b.tree.gaussians.scale[node as usize];
+                for _ in 0..k {
+                    let child = GaussianRecord {
+                        pos: ppos
+                            + Vec3::new(
+                                rng.normal() * pscale.x * 0.4,
+                                rng.normal() * pscale.y * 0.4,
+                                rng.normal() * pscale.z * 0.4,
+                            ),
+                        scale: pscale * rng.range_f32(0.3, 0.6),
+                        rot: Quat::IDENTITY,
+                        opacity: rng.range_f32(0.3, 1.0),
+                        sh: [0.0; crate::math::sh::SH_FLOATS],
+                    };
+                    let id = b.push_node(&child, node, plevel + 1);
+                    next.push(id);
+                }
+                b.set_children(node, first, k as u32);
+            }
+            frontier = next;
+        }
+        b.build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::random_tree;
+    use crate::util::prop::{check, Config};
+    use crate::util::Prng;
+
+    #[test]
+    fn random_trees_validate() {
+        check("random tree invariants", Config::default(), |rng| {
+            let n = rng.range_usize(1, 500);
+            let t = random_tree(rng, n);
+            t.validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn children_ranges_partition_non_roots() {
+        let mut rng = Prng::new(11);
+        let t = random_tree(&mut rng, 300);
+        let mut covered = 0usize;
+        for i in 0..t.len() as u32 {
+            covered += t.children(i).len();
+        }
+        assert_eq!(covered, t.len() - 1);
+    }
+
+    #[test]
+    fn leaves_plus_internal_sum() {
+        let mut rng = Prng::new(13);
+        let t = random_tree(&mut rng, 200);
+        let leaves = t.leaf_count();
+        let internal = (0..t.len() as u32).filter(|&i| !t.is_leaf(i)).count();
+        assert_eq!(leaves + internal, t.len());
+        assert_eq!(t.leaves().len(), leaves);
+    }
+
+    #[test]
+    fn byte_size_grows_with_nodes() {
+        let mut rng = Prng::new(17);
+        let small = random_tree(&mut rng, 50);
+        let big = random_tree(&mut rng, 400);
+        assert!(big.byte_size() > small.byte_size());
+    }
+
+    #[test]
+    fn validate_catches_broken_parent() {
+        let mut rng = Prng::new(19);
+        let mut t = random_tree(&mut rng, 100);
+        if t.len() > 2 {
+            t.parent[2] = 0xdead;
+            assert!(t.validate().is_err());
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! `nebula` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info       — dataset registry + scene statistics
+//!   search     — run/compare the LoD searches on a dataset
+//!   render     — render one stereo frame to PPM files
+//!   simulate   — end-to-end collaborative-rendering simulation
+//!   serve      — live cloud/client loop (threaded), optional --hlo path
+//!
+//! Common flags: --scene <name> --gaussians <n> --frames <n> --tau <px>
+//! --tile <px> --lod-interval <w> --res-scale <s> --seed <n>
+//! --config <file.toml>
+
+use nebula::benchkit;
+use nebula::config::RunConfig;
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::lod::{FlatScanSearch, FullSearch, LodSearch, StreamingSearch, TemporalSearch};
+use nebula::math::{Intrinsics, StereoCamera};
+use nebula::render::raster::RasterConfig;
+use nebula::render::stereo::{render_stereo, StereoMode};
+use nebula::scene::{dataset, ALL_DATASETS};
+use nebula::util::cli::Args;
+use nebula::util::table::{fnum, human_bps, human_bytes, Table};
+use nebula::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "search" => search(&args),
+        "render" => render(&args),
+        "simulate" => simulate(&args),
+        "serve" => serve(&args),
+        _ => {
+            println!(
+                "nebula — city-scale 3DGS collaborative VR rendering (paper reproduction)\n\n\
+                 usage: nebula <info|search|render|simulate|serve> [--scene tnt|db|m360|urban|mega|hiergs]\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let mut t = Table::new(vec!["dataset", "analogue", "scale", "sim Gaussians", "full-scale memory"]);
+    for d in ALL_DATASETS {
+        let bytes = d.paper_full_gaussians * nebula::gaussian::BYTES_PER_GAUSSIAN as u64;
+        t.row(vec![
+            d.name.to_string(),
+            d.analogue.to_string(),
+            if d.large_scale { "large" } else { "small" }.to_string(),
+            d.sim_gaussians.to_string(),
+            human_bytes(bytes),
+        ]);
+    }
+    t.print();
+    if let Ok(spec) = dataset(&cfg.scene.dataset) {
+        let sw = Stopwatch::start();
+        let (tree, stats) =
+            nebula::scene::CityGen::new(spec.city_params(cfg.scene.target_gaussians)).build_with_stats();
+        println!(
+            "\nscene '{}': {} nodes ({} leaves, depth {}), {} in {:.1} ms",
+            spec.name,
+            stats.nodes,
+            stats.leaves,
+            stats.depth,
+            human_bytes(stats.bytes),
+            sw.elapsed_ms()
+        );
+        drop(tree);
+    }
+    Ok(())
+}
+
+fn search(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = RunConfig::from_args(args)?;
+    let spec = dataset(&cfg.scene.dataset)?;
+    let tree = nebula::scene::CityGen::new(spec.city_params(cfg.scene.target_gaussians)).build();
+    if args.get("tau").is_none() {
+        // Calibrate τ to the instantiated scene scale (see benchkit).
+        cfg.pipeline.tau_px = benchkit::calibrate_tau(&tree, spec.extent_m);
+        println!("(calibrated tau = {:.1} px; pass --tau to override)", cfg.pipeline.tau_px);
+    }
+    let poses = benchkit::walk_trace(&spec, cfg.frames.max(2) as usize);
+    let mut table = Table::new(vec!["algorithm", "ms/search", "visits/search", "cut size"]);
+
+    let mut run = |name: &str, s: &mut dyn LodSearch| {
+        let sw = Stopwatch::start();
+        let mut visits = 0u64;
+        let mut cut_len = 0;
+        for pose in &poses {
+            let c = s.search(&tree, &benchkit::query_at(pose, &cfg.pipeline));
+            visits += c.nodes_visited;
+            cut_len = c.len();
+        }
+        let n = poses.len() as f64;
+        table.row(vec![
+            name.to_string(),
+            fnum(sw.elapsed_ms() / n, 3),
+            fnum(visits as f64 / n, 0),
+            cut_len.to_string(),
+        ]);
+    };
+    run("flat-scan (OctreeGS)", &mut FlatScanSearch);
+    run("full-dfs (HierGS)", &mut FullSearch::new());
+    run("streaming (Nebula initial)", &mut StreamingSearch::default());
+    run("temporal (Nebula)", &mut TemporalSearch::for_tree(&tree));
+    table.print();
+    Ok(())
+}
+
+fn render(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let spec = dataset(&cfg.scene.dataset)?;
+    let tree = nebula::scene::CityGen::new(spec.city_params(cfg.scene.target_gaussians)).build();
+    let pose = benchkit::walk_trace(&spec, 1)[0];
+    let cut = benchkit::cut_at(&tree, &pose, &cfg.pipeline);
+    let queue = benchkit::queue_for(&tree, &cut);
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(cfg.pipeline.res_scale));
+    let sw = Stopwatch::start();
+    let out = render_stereo(
+        &cam,
+        &benchkit::queue_refs(&queue),
+        cfg.pipeline.sh_degree,
+        cfg.pipeline.tile,
+        &RasterConfig { alpha_min: cfg.pipeline.alpha_min, t_min: cfg.pipeline.transmittance_min },
+        StereoMode::AlphaGated,
+    );
+    println!(
+        "rendered {}x{} stereo pair in {:.1} ms: cut={} splats={} sru={} merges={}",
+        cam.intr.width,
+        cam.intr.height,
+        sw.elapsed_ms(),
+        cut.len(),
+        out.preprocessed,
+        out.sru_insertions,
+        out.merge_ops
+    );
+    out.left.write_ppm("left.ppm")?;
+    out.right.write_ppm("right.ppm")?;
+    println!("wrote left.ppm / right.ppm");
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let spec = dataset(&cfg.scene.dataset)?;
+    let tree = nebula::scene::CityGen::new(spec.city_params(cfg.scene.target_gaussians)).build();
+    let poses = benchkit::walk_trace(&spec, cfg.frames.max(8) as usize);
+    let params = SimParams { pipeline: cfg.pipeline, net: cfg.net, fps: 90.0 };
+    let mut table = Table::new(vec![
+        "variant", "MTP ms", "FPS", "bandwidth", "energy/frame", "Δ gauss", "right PSNR",
+    ]);
+    for v in benchkit::fig18_variants() {
+        let r = run_simulation(&tree, &poses, &v, &params);
+        table.row(vec![
+            r.variant.clone(),
+            fnum(r.mtp_ms, 2),
+            fnum(r.fps, 1),
+            human_bps(r.bandwidth_bps),
+            format!("{:.1} mJ", r.client_energy_j * 1e3),
+            fnum(r.delta_gaussians, 0),
+            fnum(r.right_psnr_db, 1),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    // Thin wrapper over the live coordinator; the full e2e driver with
+    // the PJRT runtime is examples/collab_serve.rs.
+    let cfg = RunConfig::from_args(args)?;
+    let spec = dataset(&cfg.scene.dataset)?;
+    let tree = std::sync::Arc::new(
+        nebula::scene::CityGen::new(spec.city_params(cfg.scene.target_gaussians)).build(),
+    );
+    let poses = benchkit::walk_trace(&spec, cfg.frames.max(8) as usize);
+    let intr = Intrinsics::vr_eye();
+    let handle = nebula::coordinator::live::spawn_cloud(
+        tree,
+        cfg.pipeline,
+        nebula::compress::CompressionMode::Quantized,
+        intr.fx,
+        intr.near,
+    );
+    let mut client = nebula::coordinator::live::client_for(
+        &handle,
+        nebula::compress::CompressionMode::Quantized,
+        cfg.pipeline.reuse_threshold,
+    );
+    let mut total_bytes = 0u64;
+    for (i, pose) in poses.iter().enumerate().step_by(cfg.pipeline.lod_interval as usize) {
+        handle.request_round(pose.position);
+        let round = handle.next_round();
+        total_bytes += round.msg.wire_bytes() as u64;
+        client.apply(&round.msg)?;
+        println!(
+            "round {:>3}: Δ={:>6} gaussians, {:>9} wire, cloud {:.2} ms, store {}",
+            i / cfg.pipeline.lod_interval as usize,
+            round.msg.payload.count,
+            human_bytes(round.msg.wire_bytes() as u64),
+            round.cloud_s * 1e3,
+            client.store.len()
+        );
+    }
+    println!("total streamed: {}", human_bytes(total_bytes));
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,184 @@
+//! Client-side Gaussian subgraph store (paper §4.3).
+//!
+//! Holds the Gaussians streamed from the cloud, mirrors the cloud's
+//! reuse-window bookkeeping, and maintains the *current cut* — the set
+//! the renderer draws each frame. Eviction is derived locally from the
+//! same rule the cloud applies (w_r > w_r*), so no eviction messages are
+//! ever received.
+
+use crate::gaussian::{GaussianId, GaussianRecord};
+use std::collections::{HashMap, HashSet};
+
+/// Client-resident Gaussian store.
+#[derive(Debug, Default)]
+pub struct ClientStore {
+    store: HashMap<GaussianId, GaussianRecord>,
+    reuse: HashMap<GaussianId, u32>,
+    cut: HashSet<GaussianId>,
+    pub reuse_threshold: u32,
+    /// Bytes received (decoded Gaussians), for instrumentation.
+    pub gaussians_received: u64,
+}
+
+impl ClientStore {
+    pub fn new(reuse_threshold: u32) -> Self {
+        Self { reuse_threshold, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn contains(&self, id: GaussianId) -> bool {
+        self.store.contains_key(&id)
+    }
+
+    pub fn record(&self, id: GaussianId) -> Option<&GaussianRecord> {
+        self.store.get(&id)
+    }
+
+    /// Apply one LoD-search round from the cloud:
+    /// * `added` / `removed`: cut membership changes (ids only);
+    /// * `new_items`: decoded Δcut payload (ids ⊆ added that the client
+    ///   did not have).
+    ///
+    /// Returns the ids evicted this round (must match the cloud's list).
+    pub fn apply_round(
+        &mut self,
+        added: &[GaussianId],
+        removed: &[GaussianId],
+        new_items: Vec<(GaussianId, GaussianRecord)>,
+    ) -> Vec<GaussianId> {
+        // Age everything, mirroring the cloud table's update order.
+        for w in self.reuse.values_mut() {
+            *w += 1;
+        }
+        // Insert the new payload.
+        self.gaussians_received += new_items.len() as u64;
+        for (id, g) in new_items {
+            self.store.insert(id, g);
+        }
+        // Update the current-cut set.
+        for id in removed {
+            self.cut.remove(id);
+        }
+        for &id in added {
+            self.cut.insert(id);
+        }
+        // Cut members have w_r = 0.
+        for &id in &self.cut {
+            self.reuse.insert(id, 0);
+        }
+        // Same eviction rule as the cloud.
+        let thr = self.reuse_threshold;
+        let mut evicted: Vec<GaussianId> =
+            self.reuse.iter().filter(|(_, &w)| w > thr).map(|(&id, _)| id).collect();
+        for id in &evicted {
+            self.reuse.remove(id);
+            self.store.remove(id);
+            self.cut.remove(id);
+        }
+        evicted.sort_unstable();
+        evicted
+    }
+
+    /// The rendering queue: current-cut Gaussians, sorted by id. Missing
+    /// records (payload still in flight) are skipped — the paper's
+    /// "continue rendering without waiting for cloud data".
+    pub fn render_queue(&self) -> Vec<(GaussianId, &GaussianRecord)> {
+        let mut ids: Vec<GaussianId> = self.cut.iter().copied().collect();
+        ids.sort_unstable();
+        ids.into_iter().filter_map(|id| self.store.get(&id).map(|g| (id, g))).collect()
+    }
+
+    /// Ids currently stored (sorted) — compared against the cloud table
+    /// in the consistency tests.
+    pub fn resident_ids(&self) -> Vec<GaussianId> {
+        let mut ids: Vec<GaussianId> = self.store.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn cut_ids(&self) -> Vec<GaussianId> {
+        let mut ids: Vec<GaussianId> = self.cut.iter().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Client memory footprint.
+    pub fn byte_size(&self) -> u64 {
+        self.store.len() as u64 * crate::gaussian::BYTES_PER_GAUSSIAN as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Quat, Vec3};
+
+    fn rec(seed: f32) -> GaussianRecord {
+        GaussianRecord {
+            pos: Vec3::splat(seed),
+            scale: Vec3::splat(0.1),
+            rot: Quat::IDENTITY,
+            opacity: 0.5,
+            sh: [0.0; crate::math::sh::SH_FLOATS],
+        }
+    }
+
+    #[test]
+    fn apply_round_builds_queue() {
+        let mut c = ClientStore::new(32);
+        let evicted = c.apply_round(&[1, 2], &[], vec![(1, rec(1.0)), (2, rec(2.0))]);
+        assert!(evicted.is_empty());
+        let q = c.render_queue();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].0, 1);
+    }
+
+    #[test]
+    fn removed_ids_leave_cut_but_stay_stored() {
+        let mut c = ClientStore::new(32);
+        c.apply_round(&[1, 2], &[], vec![(1, rec(1.0)), (2, rec(2.0))]);
+        c.apply_round(&[], &[2], vec![]);
+        assert_eq!(c.cut_ids(), vec![1]);
+        assert!(c.contains(2), "recently used Gaussians are retained");
+    }
+
+    #[test]
+    fn eviction_matches_reuse_rule() {
+        let mut c = ClientStore::new(2);
+        c.apply_round(&[5], &[], vec![(5, rec(5.0))]);
+        c.apply_round(&[], &[5], vec![]); // w_r(5)=1... reset? no: removed from cut
+        let mut evicted = Vec::new();
+        for _ in 0..4 {
+            evicted = c.apply_round(&[], &[], vec![]);
+            if !evicted.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(evicted, vec![5]);
+        assert!(!c.contains(5));
+    }
+
+    #[test]
+    fn missing_payload_skipped_in_queue() {
+        let mut c = ClientStore::new(32);
+        // Cut says 1 and 2, but only 1's payload has arrived.
+        c.apply_round(&[1, 2], &[], vec![(1, rec(1.0))]);
+        let q = c.render_queue();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].0, 1);
+    }
+
+    #[test]
+    fn byte_size_counts_store() {
+        let mut c = ClientStore::new(32);
+        c.apply_round(&[1], &[], vec![(1, rec(1.0))]);
+        assert_eq!(c.byte_size(), crate::gaussian::BYTES_PER_GAUSSIAN as u64);
+    }
+}

@@ -1,0 +1,18 @@
+//! Runtime Gaussian management (paper §4.3).
+//!
+//! The cloud tracks which Gaussians the client currently stores
+//! ([`table::ManagementTable`]); each LoD search produces a Δcut — the
+//! cut members the client does not yet have ([`delta`]). Both sides run
+//! the same reuse-window eviction (w_r > w_r*, default 32), so the
+//! client store ([`client_store::ClientStore`]) stays in lock-step with
+//! the cloud's table without ever transmitting eviction lists — the
+//! consistency property tested in [`protocol`].
+
+pub mod client_store;
+pub mod delta;
+pub mod protocol;
+pub mod table;
+
+pub use client_store::ClientStore;
+pub use delta::DeltaCut;
+pub use table::ManagementTable;

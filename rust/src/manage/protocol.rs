@@ -1,0 +1,275 @@
+//! Cloud ⇄ client protocol (paper Fig 9's interface).
+//!
+//! Two message kinds:
+//! * [`SceneInit`] — sent once: quantizer parameters + VQ codebook
+//!   (scene install data);
+//! * [`RoundMsg`] — per LoD-search round: cut membership changes (added /
+//!   removed id lists, delta-varint coded) + the compressed Δcut payload.
+//!
+//! Eviction is never transmitted: both ends apply the identical
+//! reuse-window rule, which keeps their views consistent — the property
+//! checked by `consistency_holds_over_random_rounds`.
+
+use super::client_store::ClientStore;
+use super::delta::DeltaCut;
+use super::table::ManagementTable;
+use crate::compress::{DeltaCodec, EncodedDelta};
+use crate::gaussian::GaussianId;
+use crate::lod::LodTree;
+
+/// One-time scene metadata.
+#[derive(Debug, Clone)]
+pub struct SceneInit {
+    pub quantizer: Vec<u8>,
+    pub codebook: Vec<u8>,
+}
+
+impl SceneInit {
+    pub fn wire_bytes(&self) -> usize {
+        self.quantizer.len() + self.codebook.len() + 8
+    }
+}
+
+/// Per-round streaming message.
+#[derive(Debug, Clone)]
+pub struct RoundMsg {
+    pub round: u64,
+    /// Ids entering the cut this round (includes already-resident ones).
+    pub added: Vec<GaussianId>,
+    /// Ids leaving the cut this round.
+    pub removed: Vec<GaussianId>,
+    /// Compressed payload for added ids the client lacks.
+    pub payload: EncodedDelta,
+}
+
+impl RoundMsg {
+    /// Total wire size: id lists (delta-varint + zstd would shrink them
+    /// further; we charge the conservative varint size) + payload.
+    pub fn wire_bytes(&self) -> usize {
+        varint_list_bytes(&self.added) + varint_list_bytes(&self.removed) + self.payload.wire_bytes() + 16
+    }
+}
+
+/// Size of a sorted id list under delta-varint coding.
+fn varint_list_bytes(ids: &[GaussianId]) -> usize {
+    let mut bytes = 4; // count
+    let mut prev = 0u64;
+    for &id in ids {
+        let d = (id as u64).wrapping_sub(prev);
+        bytes += (64 - d.max(1).leading_zeros() as usize).div_ceil(7).max(1);
+        prev = id as u64;
+    }
+    bytes
+}
+
+/// Cloud endpoint: owns the management table and produces round messages.
+pub struct CloudEndpoint<'t> {
+    pub tree: &'t LodTree,
+    pub table: ManagementTable,
+    pub codec: DeltaCodec,
+    prev_cut: Vec<GaussianId>,
+    round: u64,
+}
+
+impl<'t> CloudEndpoint<'t> {
+    pub fn new(tree: &'t LodTree, codec: DeltaCodec, reuse_threshold: u32) -> Self {
+        Self { tree, table: ManagementTable::new(reuse_threshold), codec, prev_cut: Vec::new(), round: 0 }
+    }
+
+    pub fn scene_init(&self) -> SceneInit {
+        SceneInit {
+            quantizer: self.codec.quantizer.to_bytes(),
+            codebook: self.codec.codebook.to_bytes(),
+        }
+    }
+
+    /// Process a new (canonical, sorted) cut and emit the round message.
+    pub fn publish_cut(&mut self, cut: &[GaussianId]) -> RoundMsg {
+        debug_assert!(cut.windows(2).all(|w| w[0] < w[1]), "cut must be sorted");
+        let (delta_ids, _evicted) = self.table.update(cut);
+        let (added, removed) = diff_sorted(&self.prev_cut, cut);
+        self.prev_cut = cut.to_vec();
+        let payload = DeltaCut::gather(self.round, self.tree, &delta_ids).encode(&self.codec);
+        let msg = RoundMsg { round: self.round, added, removed, payload };
+        self.round += 1;
+        msg
+    }
+}
+
+/// Client endpoint: owns the store and applies round messages.
+pub struct ClientEndpoint {
+    pub store: ClientStore,
+    pub codec: DeltaCodec,
+    /// Wire bytes received so far.
+    pub bytes_received: u64,
+}
+
+impl ClientEndpoint {
+    /// Construct from the scene-init message (decodes codebook/quantizer).
+    pub fn from_init(init: &SceneInit, mode: crate::compress::CompressionMode, reuse_threshold: u32) -> anyhow::Result<Self> {
+        let quantizer = crate::compress::FixedQuantizer::from_bytes(&init.quantizer)?;
+        let codebook = crate::compress::Codebook::from_bytes(&init.codebook)?;
+        Ok(Self {
+            store: ClientStore::new(reuse_threshold),
+            codec: DeltaCodec::new(mode, quantizer, codebook),
+            bytes_received: 0,
+        })
+    }
+
+    /// Apply one round; returns evicted ids (for test cross-checking).
+    pub fn apply(&mut self, msg: &RoundMsg) -> anyhow::Result<Vec<GaussianId>> {
+        self.bytes_received += msg.wire_bytes() as u64;
+        let items = self.codec.decode(&msg.payload)?;
+        Ok(self.store.apply_round(&msg.added, &msg.removed, items))
+    }
+}
+
+/// (added, removed) between two sorted id lists.
+fn diff_sorted(prev: &[GaussianId], cur: &[GaussianId]) -> (Vec<GaussianId>, Vec<GaussianId>) {
+    let mut added = Vec::new();
+    let mut removed = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < prev.len() || j < cur.len() {
+        if i >= prev.len() {
+            added.push(cur[j]);
+            j += 1;
+        } else if j >= cur.len() {
+            removed.push(prev[i]);
+            i += 1;
+        } else {
+            match prev[i].cmp(&cur[j]) {
+                std::cmp::Ordering::Less => {
+                    removed.push(prev[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    added.push(cur[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    (added, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{CompressionMode, FixedQuantizer, VqTrainer};
+    use crate::scene::{CityGen, CityParams};
+    use crate::util::prop::{check, Config};
+
+    fn setup(tree: &LodTree) -> (CloudEndpoint<'_>, ClientEndpoint) {
+        let (lo, hi) = tree.gaussians.bounds();
+        let codec = DeltaCodec::new(
+            CompressionMode::Quantized,
+            FixedQuantizer::for_bounds(lo, hi),
+            VqTrainer { max_samples: 2000, ..Default::default() }.train(&tree.gaussians.sh),
+        );
+        let cloud = CloudEndpoint::new(tree, codec, 4);
+        let client =
+            ClientEndpoint::from_init(&cloud.scene_init(), CompressionMode::Quantized, 4).unwrap();
+        (cloud, client)
+    }
+
+    #[test]
+    fn diff_sorted_cases() {
+        let (a, r) = diff_sorted(&[1, 3, 5], &[1, 4, 5, 6]);
+        assert_eq!(a, vec![4, 6]);
+        assert_eq!(r, vec![3]);
+        let (a, r) = diff_sorted(&[], &[2]);
+        assert_eq!((a, r), (vec![2], vec![]));
+    }
+
+    #[test]
+    fn consistency_holds_over_random_rounds() {
+        // THE §4.3 property: cloud and client share a consistent view of
+        // client-resident Gaussians, with zero eviction traffic.
+        check("cloud/client consistency", Config { cases: 12, ..Config::default() }, |rng| {
+            let target = rng.range_usize(500, 2500);
+            let tree = CityGen::new(CityParams::for_target(target, 80.0, rng.next_u64())).build();
+            let (mut cloud, mut client) = setup(&tree);
+            let n = tree.len() as u32;
+            // Random walk over cuts: random subsets with temporal overlap.
+            let mut cut: Vec<u32> = (0..n).filter(|_| rng.chance(0.05)).collect();
+            for _ in 0..12 {
+                // Perturb the cut.
+                cut.retain(|_| rng.chance(0.9));
+                for _ in 0..rng.range_usize(0, 20) {
+                    cut.push(rng.below(n as usize) as u32);
+                }
+                cut.sort_unstable();
+                cut.dedup();
+
+                let msg = cloud.publish_cut(&cut);
+                let client_evicted = client.apply(&msg).unwrap();
+                // Views agree.
+                assert_eq!(
+                    cloud.table.resident_ids(),
+                    client.store.resident_ids(),
+                    "resident sets diverged"
+                );
+                assert_eq!(client.store.cut_ids(), cut, "client cut diverged");
+                // Client eviction equals the rule's output (already
+                // removed from both sides' resident sets checked above).
+                for id in &client_evicted {
+                    assert!(!cloud.table.contains(*id));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn payload_only_for_missing_gaussians() {
+        let tree = CityGen::new(CityParams::for_target(1000, 60.0, 5)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        let cut: Vec<u32> = (0..100).collect();
+        let m1 = cloud.publish_cut(&cut);
+        assert_eq!(m1.payload.count, 100);
+        client.apply(&m1).unwrap();
+        // Same cut again: no payload, no membership changes.
+        let m2 = cloud.publish_cut(&cut);
+        assert_eq!(m2.payload.count, 0);
+        assert!(m2.added.is_empty() && m2.removed.is_empty());
+        client.apply(&m2).unwrap();
+        // Shift the cut slightly: payload is just the new members.
+        let cut2: Vec<u32> = (5..105).collect();
+        let m3 = cloud.publish_cut(&cut2);
+        assert_eq!(m3.payload.count, 5);
+        assert_eq!(m3.added, (100..105).collect::<Vec<u32>>());
+        assert_eq!(m3.removed, (0..5).collect::<Vec<u32>>());
+        client.apply(&m3).unwrap();
+        assert_eq!(client.store.cut_ids(), cut2);
+    }
+
+    #[test]
+    fn render_queue_matches_cut_after_apply() {
+        let tree = CityGen::new(CityParams::for_target(800, 60.0, 7)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        let cut: Vec<u32> = (0..50).collect();
+        let msg = cloud.publish_cut(&cut);
+        client.apply(&msg).unwrap();
+        let queue = client.store.render_queue();
+        assert_eq!(queue.len(), 50);
+        // Decoded positions approximate the originals.
+        for (id, g) in queue {
+            let orig = tree.gaussians.pos[id as usize];
+            assert!((g.pos - orig).norm() < 0.05, "id {id} drifted");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let tree = CityGen::new(CityParams::for_target(600, 60.0, 9)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        let cut: Vec<u32> = (0..200).collect();
+        let msg = cloud.publish_cut(&cut);
+        assert!(msg.wire_bytes() > msg.payload.wire_bytes());
+        client.apply(&msg).unwrap();
+        assert_eq!(client.bytes_received, msg.wire_bytes() as u64);
+    }
+}

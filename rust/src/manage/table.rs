@@ -1,0 +1,166 @@
+//! Cloud-side management table (paper §4.3, Fig 9).
+//!
+//! Tracks, per Gaussian stored on the client, the *reuse window* `w_r`:
+//! the number of LoD-search rounds since the Gaussian last appeared in a
+//! cut. Gaussians whose `w_r` exceeds the shared threshold `w_r*` are
+//! evicted on both ends simultaneously ("similar to garbage
+//! collection").
+
+use crate::gaussian::GaussianId;
+use std::collections::HashMap;
+
+/// Cloud-side table of client-resident Gaussians.
+#[derive(Debug, Clone)]
+pub struct ManagementTable {
+    /// Gaussian id → rounds since last cut membership (0 = in latest cut).
+    reuse: HashMap<GaussianId, u32>,
+    /// Shared eviction threshold w_r* (paper: 32).
+    pub reuse_threshold: u32,
+}
+
+impl ManagementTable {
+    pub fn new(reuse_threshold: u32) -> Self {
+        Self { reuse: HashMap::new(), reuse_threshold }
+    }
+
+    pub fn len(&self) -> usize {
+        self.reuse.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reuse.is_empty()
+    }
+
+    pub fn contains(&self, id: GaussianId) -> bool {
+        self.reuse.contains_key(&id)
+    }
+
+    /// Process a new cut: returns (Δcut ids — cut members the client lacks,
+    /// evicted ids). Ages every tracked Gaussian, resets cut members to
+    /// w_r = 0, inserts new members, then evicts w_r > w_r*.
+    ///
+    /// The eviction list is returned for instrumentation only — it is
+    /// **not transmitted**; the client derives the identical list itself.
+    pub fn update(&mut self, cut: &[GaussianId]) -> (Vec<GaussianId>, Vec<GaussianId>) {
+        // Age everything first.
+        for w in self.reuse.values_mut() {
+            *w += 1;
+        }
+        // Cut members reset / join.
+        let mut delta = Vec::new();
+        for &id in cut {
+            match self.reuse.insert(id, 0) {
+                None => delta.push(id),
+                Some(_) => {}
+            }
+        }
+        // Evict stale entries.
+        let thr = self.reuse_threshold;
+        let mut evicted: Vec<GaussianId> =
+            self.reuse.iter().filter(|(_, &w)| w > thr).map(|(&id, _)| id).collect();
+        for id in &evicted {
+            self.reuse.remove(id);
+        }
+        delta.sort_unstable();
+        evicted.sort_unstable();
+        (delta, evicted)
+    }
+
+    /// Ids currently tracked (sorted) — the cloud's view of client memory.
+    pub fn resident_ids(&self) -> Vec<GaussianId> {
+        let mut ids: Vec<GaussianId> = self.reuse.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Client memory footprint implied by the table.
+    pub fn resident_bytes(&self) -> u64 {
+        self.len() as u64 * crate::gaussian::BYTES_PER_GAUSSIAN as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_cut_is_all_delta() {
+        let mut t = ManagementTable::new(32);
+        let (delta, evicted) = t.update(&[3, 1, 2]);
+        assert_eq!(delta, vec![1, 2, 3]);
+        assert!(evicted.is_empty());
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn repeated_cut_sends_nothing() {
+        let mut t = ManagementTable::new(32);
+        t.update(&[1, 2, 3]);
+        let (delta, evicted) = t.update(&[1, 2, 3]);
+        assert!(delta.is_empty());
+        assert!(evicted.is_empty());
+    }
+
+    #[test]
+    fn only_new_members_in_delta() {
+        let mut t = ManagementTable::new(32);
+        t.update(&[1, 2, 3]);
+        let (delta, _) = t.update(&[2, 3, 4, 5]);
+        assert_eq!(delta, vec![4, 5]);
+    }
+
+    #[test]
+    fn eviction_after_threshold_rounds() {
+        let mut t = ManagementTable::new(3);
+        t.update(&[1, 2]);
+        // Gaussian 1 keeps appearing; 2 does not.
+        let mut evicted_round = None;
+        for round in 1..=6 {
+            let (_, evicted) = t.update(&[1]);
+            if !evicted.is_empty() {
+                assert_eq!(evicted, vec![2]);
+                evicted_round = Some(round);
+                break;
+            }
+        }
+        // w_r(2) reaches 4 (> 3) on the 4th update after its last cut.
+        assert_eq!(evicted_round, Some(4));
+        assert!(t.contains(1));
+        assert!(!t.contains(2));
+    }
+
+    #[test]
+    fn reappearing_resets_window() {
+        let mut t = ManagementTable::new(3);
+        t.update(&[7]);
+        t.update(&[]); // w_r(7)=1
+        t.update(&[]); // 2
+        let (delta, _) = t.update(&[7]); // back in the cut: w_r=0, not a delta
+        assert!(delta.is_empty());
+        for _ in 0..3 {
+            let (_, e) = t.update(&[]);
+            assert!(e.is_empty());
+        }
+        let (_, e) = t.update(&[]); // w_r=4 > 3 now
+        assert_eq!(e, vec![7]);
+    }
+
+    #[test]
+    fn evicted_gaussian_retransmitted_on_return() {
+        let mut t = ManagementTable::new(1);
+        t.update(&[9]);
+        t.update(&[]);
+        let (_, e) = t.update(&[]); // w_r=2 > 1
+        assert_eq!(e, vec![9]);
+        let (delta, _) = t.update(&[9]);
+        assert_eq!(delta, vec![9], "evicted Gaussian must be resent");
+    }
+
+    #[test]
+    fn resident_bytes_tracks_len() {
+        let mut t = ManagementTable::new(32);
+        t.update(&[1, 2, 3, 4]);
+        assert_eq!(t.resident_bytes(), 4 * crate::gaussian::BYTES_PER_GAUSSIAN as u64);
+        assert_eq!(t.resident_ids(), vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,327 @@
+//! Pinhole + stereo camera models (OpenCV convention: camera looks down
+//! +Z in camera space, x right, y down).
+
+use super::mat::Mat3;
+use super::vec::{Quat, Vec2, Vec3};
+
+/// Pinhole intrinsics for one eye.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Intrinsics {
+    pub fx: f32,
+    pub fy: f32,
+    pub cx: f32,
+    pub cy: f32,
+    pub width: u32,
+    pub height: u32,
+    pub near: f32,
+    pub far: f32,
+}
+
+impl Intrinsics {
+    /// Symmetric intrinsics from a horizontal FoV.
+    pub fn from_fov(width: u32, height: u32, fov_x_rad: f32, near: f32, far: f32) -> Self {
+        let fx = width as f32 * 0.5 / (fov_x_rad * 0.5).tan();
+        Self {
+            fx,
+            fy: fx,
+            cx: width as f32 * 0.5,
+            cy: height as f32 * 0.5,
+            width,
+            height,
+            near,
+            far,
+        }
+    }
+
+    /// Meta-Quest-3-like VR eye: 2064x2208 @ ~98° horizontal FoV.
+    pub fn vr_eye() -> Self {
+        Self::from_fov(2064, 2208, 98.0_f32.to_radians(), 0.2, 1.0e4)
+    }
+
+    /// Scaled-down VR eye for fast tests/benches (same aspect & FoV).
+    pub fn vr_eye_scaled(scale: u32) -> Self {
+        let w = 2064 / scale;
+        let h = 2208 / scale;
+        Self::from_fov(w.max(16), h.max(16), 98.0_f32.to_radians(), 0.2, 1.0e4)
+    }
+
+    pub fn pixels(&self) -> u64 {
+        self.width as u64 * self.height as u64
+    }
+
+    /// Horizontal FoV in radians.
+    pub fn fov_x(&self) -> f32 {
+        2.0 * (self.width as f32 * 0.5 / self.fx).atan()
+    }
+}
+
+/// Rigid pose: world-space position and orientation of the camera.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pose {
+    pub position: Vec3,
+    pub orientation: Quat,
+}
+
+impl Pose {
+    pub const IDENTITY: Pose = Pose { position: Vec3::ZERO, orientation: Quat::IDENTITY };
+
+    pub fn new(position: Vec3, orientation: Quat) -> Self {
+        Self { position, orientation: orientation.normalized() }
+    }
+
+    pub fn looking(position: Vec3, yaw: f32, pitch: f32) -> Self {
+        Self::new(position, Quat::from_yaw_pitch(yaw, pitch))
+    }
+
+    /// Camera forward direction (+Z in camera space) in world space.
+    pub fn forward(&self) -> Vec3 {
+        self.orientation.rotate(Vec3::Z)
+    }
+
+    /// Camera right direction (+X in camera space) in world space.
+    pub fn right(&self) -> Vec3 {
+        self.orientation.rotate(Vec3::X)
+    }
+
+    /// World → camera: p_cam = R^T (p_world - t).
+    pub fn world_to_camera(&self, p: Vec3) -> Vec3 {
+        self.orientation.conjugate().rotate(p - self.position)
+    }
+
+    /// Camera → world.
+    pub fn camera_to_world(&self, p: Vec3) -> Vec3 {
+        self.orientation.rotate(p) + self.position
+    }
+
+    /// Translate sideways by `dx` meters along camera-right (used to derive
+    /// the two eye poses from the head pose).
+    pub fn offset_right(&self, dx: f32) -> Pose {
+        Pose { position: self.position + self.right() * dx, orientation: self.orientation }
+    }
+}
+
+/// One pinhole camera = pose + intrinsics.
+#[derive(Debug, Clone, Copy)]
+pub struct Camera {
+    pub pose: Pose,
+    pub intr: Intrinsics,
+}
+
+impl Camera {
+    pub fn new(pose: Pose, intr: Intrinsics) -> Self {
+        Self { pose, intr }
+    }
+
+    /// World-to-camera rotation matrix (R^T of the pose orientation).
+    pub fn view_rotation(&self) -> Mat3 {
+        Mat3::from_quat(self.pose.orientation.conjugate())
+    }
+
+    /// Project a world point. Returns (pixel, depth). Depth <= 0 means
+    /// behind the camera (pixel is meaningless then).
+    pub fn project(&self, p: Vec3) -> (Vec2, f32) {
+        let c = self.pose.world_to_camera(p);
+        if c.z <= 0.0 {
+            return (Vec2::ZERO, c.z);
+        }
+        let inv_z = 1.0 / c.z;
+        (
+            Vec2::new(self.intr.fx * c.x * inv_z + self.intr.cx, self.intr.fy * c.y * inv_z + self.intr.cy),
+            c.z,
+        )
+    }
+
+    /// Conservative frustum test for a world-space sphere. Uses the four
+    /// side planes plus near/far.
+    pub fn sphere_in_frustum(&self, center: Vec3, radius: f32) -> bool {
+        let c = self.pose.world_to_camera(center);
+        if c.z + radius < self.intr.near || c.z - radius > self.intr.far {
+            return false;
+        }
+        // Half-angles of the frustum from intrinsics, padded by the
+        // sphere's angular radius at its depth (conservative).
+        let tan_x = self.intr.cx / self.intr.fx;
+        let tan_y = self.intr.cy / self.intr.fy;
+        let z = c.z.max(self.intr.near);
+        c.x.abs() - radius <= tan_x * z && c.y.abs() - radius <= tan_y * z
+    }
+
+    /// Angular (pixel) extent of a sphere of `radius` at distance `dist`
+    /// — the LoD projection measure. Distance-based (not z-based) so the
+    /// measure is rotation-invariant: the cut does not change under pure
+    /// head rotation, which is what lets the client render nearby
+    /// viewports without new cloud data (paper §4.1).
+    pub fn projected_extent(&self, center: Vec3, radius: f32) -> f32 {
+        let d = (center - self.pose.position).norm().max(self.intr.near);
+        self.intr.fx * (2.0 * radius) / d
+    }
+}
+
+/// Stereo rig: head pose + per-eye cameras separated by `baseline`.
+#[derive(Debug, Clone, Copy)]
+pub struct StereoCamera {
+    pub head: Pose,
+    pub baseline: f32,
+    pub intr: Intrinsics,
+}
+
+impl StereoCamera {
+    /// VR default: 6 cm pupil baseline (paper §6).
+    pub fn new(head: Pose, intr: Intrinsics) -> Self {
+        Self { head, baseline: 0.06, intr }
+    }
+
+    pub fn with_baseline(mut self, b: f32) -> Self {
+        self.baseline = b;
+        self
+    }
+
+    pub fn left(&self) -> Camera {
+        Camera::new(self.head.offset_right(-self.baseline * 0.5), self.intr)
+    }
+
+    pub fn right(&self) -> Camera {
+        Camera::new(self.head.offset_right(self.baseline * 0.5), self.intr)
+    }
+
+    /// The shared "virtual camera slightly behind both eyes" whose FoV
+    /// covers both eye frusta (paper Fig 13 left). Pulling back by
+    /// `baseline/2 / tan(fov/2)` makes the widened frustum contain both
+    /// eye frusta for all depths >= near.
+    pub fn shared_camera(&self) -> Camera {
+        let tan_half = self.intr.cx / self.intr.fx;
+        let setback = (self.baseline * 0.5) / tan_half;
+        let pos = self.head.position - self.head.forward() * setback;
+        let mut intr = self.intr;
+        // Keep the image plane resolution; widen the FoV just enough that
+        // at the near plane the union of both eyes is covered.
+        let extra = (self.baseline * 0.5 + setback * tan_half) / (self.intr.near + setback);
+        let new_tan = tan_half.max(extra);
+        intr.fx = intr.cx / new_tan;
+        intr.fy = intr.fx * (self.intr.fy / self.intr.fx);
+        intr.near = (self.intr.near + setback).max(1e-3);
+        Camera::new(Pose::new(pos, self.head.orientation), intr)
+    }
+
+    /// Disparity in pixels for a point at camera-space depth `d` (paper
+    /// Fig 12): X = B*f/D.
+    pub fn disparity_px(&self, depth: f32) -> f32 {
+        self.baseline * self.intr.fx / depth.max(self.intr.near)
+    }
+
+    /// Upper bound on disparity given the near plane (paper: ~16 px in a
+    /// typical VR setup; here it follows from near/f/B).
+    pub fn max_disparity_px(&self) -> f32 {
+        self.disparity_px(self.intr.near)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_intr() -> Intrinsics {
+        Intrinsics::from_fov(640, 480, 90f32.to_radians(), 0.1, 100.0)
+    }
+
+    #[test]
+    fn project_center() {
+        let cam = Camera::new(Pose::IDENTITY, test_intr());
+        let (px, z) = cam.project(Vec3::new(0.0, 0.0, 5.0));
+        assert!((px.x - 320.0).abs() < 1e-3);
+        assert!((px.y - 240.0).abs() < 1e-3);
+        assert!((z - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn project_respects_pose() {
+        let pose = Pose::looking(Vec3::new(0.0, 0.0, -10.0), 0.0, 0.0);
+        let cam = Camera::new(pose, test_intr());
+        let (_, z) = cam.project(Vec3::ZERO);
+        assert!((z - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn behind_camera_has_negative_depth() {
+        let cam = Camera::new(Pose::IDENTITY, test_intr());
+        let (_, z) = cam.project(Vec3::new(0.0, 0.0, -1.0));
+        assert!(z < 0.0);
+    }
+
+    #[test]
+    fn frustum_accepts_visible_rejects_behind() {
+        let cam = Camera::new(Pose::IDENTITY, test_intr());
+        assert!(cam.sphere_in_frustum(Vec3::new(0.0, 0.0, 10.0), 1.0));
+        assert!(!cam.sphere_in_frustum(Vec3::new(0.0, 0.0, -10.0), 1.0));
+        assert!(!cam.sphere_in_frustum(Vec3::new(1000.0, 0.0, 10.0), 1.0));
+        // Sphere straddling the frustum edge is kept (conservative).
+        assert!(cam.sphere_in_frustum(Vec3::new(10.5, 0.0, 10.0), 1.0));
+    }
+
+    #[test]
+    fn projected_extent_shrinks_with_distance() {
+        let cam = Camera::new(Pose::IDENTITY, test_intr());
+        let near = cam.projected_extent(Vec3::new(0.0, 0.0, 2.0), 0.5);
+        let far = cam.projected_extent(Vec3::new(0.0, 0.0, 20.0), 0.5);
+        assert!(near > far);
+        assert!((near / far - 10.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn projected_extent_rotation_invariant() {
+        let intr = test_intr();
+        let p = Vec3::new(3.0, 1.0, 8.0);
+        let a = Camera::new(Pose::looking(Vec3::ZERO, 0.0, 0.0), intr);
+        let b = Camera::new(Pose::looking(Vec3::ZERO, 1.0, -0.4), intr);
+        assert!((a.projected_extent(p, 0.3) - b.projected_extent(p, 0.3)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn stereo_eyes_are_baseline_apart() {
+        let s = StereoCamera::new(Pose::IDENTITY, test_intr());
+        let l = s.left().pose.position;
+        let r = s.right().pose.position;
+        assert!(((r - l).norm() - 0.06).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disparity_inverse_in_depth() {
+        let s = StereoCamera::new(Pose::IDENTITY, test_intr());
+        let d1 = s.disparity_px(1.0);
+        let d2 = s.disparity_px(2.0);
+        assert!((d1 / d2 - 2.0).abs() < 1e-4);
+        assert!(s.max_disparity_px() >= d1);
+    }
+
+    #[test]
+    fn triangulation_identity() {
+        // Project a point into both eyes; the pixel-x difference must equal
+        // B*f/D. This is the core geometric identity the stereo
+        // rasterizer relies on.
+        let s = StereoCamera::new(Pose::IDENTITY, test_intr());
+        let p = Vec3::new(0.7, -0.2, 4.0);
+        let (pl, dl) = s.left().project(p);
+        let (pr, _) = s.right().project(p);
+        let disp = pl.x - pr.x;
+        assert!((disp - s.disparity_px(dl)).abs() < 1e-3, "disp={disp}");
+    }
+
+    #[test]
+    fn shared_camera_covers_both_eyes() {
+        let s = StereoCamera::new(Pose::IDENTITY, test_intr());
+        let shared = s.shared_camera();
+        // Points visible in either eye must be in the shared frustum.
+        for p in [
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.9, 0.0, 1.0),
+            Vec3::new(-0.9, 0.0, 1.0),
+            Vec3::new(4.9, 0.0, 5.0),
+        ] {
+            let in_eye =
+                s.left().sphere_in_frustum(p, 0.01) || s.right().sphere_in_frustum(p, 0.01);
+            if in_eye {
+                assert!(shared.sphere_in_frustum(p, 0.01), "{p:?} missed by shared FoV");
+            }
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! 3x3 / 4x4 matrices (row-major).
+
+use super::vec::{Quat, Vec3};
+
+/// Row-major 3x3 matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f32; 3]; 3],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 =
+        Mat3 { m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]] };
+
+    pub fn from_rows(r0: [f32; 3], r1: [f32; 3], r2: [f32; 3]) -> Self {
+        Self { m: [r0, r1, r2] }
+    }
+
+    /// Rotation matrix from a (unit) quaternion.
+    pub fn from_quat(q: Quat) -> Self {
+        let Quat { w, x, y, z } = q.normalized();
+        Self::from_rows(
+            [1.0 - 2.0 * (y * y + z * z), 2.0 * (x * y - w * z), 2.0 * (x * z + w * y)],
+            [2.0 * (x * y + w * z), 1.0 - 2.0 * (x * x + z * z), 2.0 * (y * z - w * x)],
+            [2.0 * (x * z - w * y), 2.0 * (y * z + w * x), 1.0 - 2.0 * (x * x + y * y)],
+        )
+    }
+
+    pub fn diag(d: Vec3) -> Self {
+        Self::from_rows([d.x, 0.0, 0.0], [0.0, d.y, 0.0], [0.0, 0.0, d.z])
+    }
+
+    pub fn transpose(self) -> Mat3 {
+        let m = self.m;
+        Self::from_rows(
+            [m[0][0], m[1][0], m[2][0]],
+            [m[0][1], m[1][1], m[2][1]],
+            [m[0][2], m[1][2], m[2][2]],
+        )
+    }
+
+    pub fn mul_vec(self, v: Vec3) -> Vec3 {
+        Vec3::new(
+            self.m[0][0] * v.x + self.m[0][1] * v.y + self.m[0][2] * v.z,
+            self.m[1][0] * v.x + self.m[1][1] * v.y + self.m[1][2] * v.z,
+            self.m[2][0] * v.x + self.m[2][1] * v.y + self.m[2][2] * v.z,
+        )
+    }
+
+    pub fn mul(self, o: Mat3) -> Mat3 {
+        let mut out = [[0.0f32; 3]; 3];
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = (0..3).map(|k| self.m[i][k] * o.m[k][j]).sum();
+            }
+        }
+        Mat3 { m: out }
+    }
+
+    pub fn det(self) -> f32 {
+        let m = self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+}
+
+/// Row-major 4x4 matrix (homogeneous transforms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    /// Rigid transform from rotation + translation.
+    pub fn from_rt(r: Mat3, t: Vec3) -> Self {
+        let mut m = [[0.0f32; 4]; 4];
+        for i in 0..3 {
+            for j in 0..3 {
+                m[i][j] = r.m[i][j];
+            }
+        }
+        m[0][3] = t.x;
+        m[1][3] = t.y;
+        m[2][3] = t.z;
+        m[3][3] = 1.0;
+        Mat4 { m }
+    }
+
+    /// Transform a point (w=1).
+    pub fn transform_point(self, p: Vec3) -> Vec3 {
+        Vec3::new(
+            self.m[0][0] * p.x + self.m[0][1] * p.y + self.m[0][2] * p.z + self.m[0][3],
+            self.m[1][0] * p.x + self.m[1][1] * p.y + self.m[1][2] * p.z + self.m[1][3],
+            self.m[2][0] * p.x + self.m[2][1] * p.y + self.m[2][2] * p.z + self.m[2][3],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vclose(a: Vec3, b: Vec3) -> bool {
+        (a - b).norm() < 1e-5
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let v = Vec3::new(1.0, -2.0, 3.0);
+        assert_eq!(Mat3::IDENTITY.mul_vec(v), v);
+        assert_eq!(Mat4::IDENTITY.transform_point(v), v);
+    }
+
+    #[test]
+    fn quat_and_matrix_rotation_agree() {
+        let q = Quat::from_yaw_pitch(0.8, -0.3);
+        let r = Mat3::from_quat(q);
+        let v = Vec3::new(0.5, 2.0, -1.5);
+        assert!(vclose(r.mul_vec(v), q.rotate(v)));
+    }
+
+    #[test]
+    fn rotation_det_is_one() {
+        let r = Mat3::from_quat(Quat::from_yaw_pitch(1.2, 0.4));
+        assert!((r.det() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn transpose_of_rotation_is_inverse() {
+        let r = Mat3::from_quat(Quat::from_yaw_pitch(0.3, 0.9));
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        assert!(vclose(r.transpose().mul_vec(r.mul_vec(v)), v));
+    }
+
+    #[test]
+    fn mat4_rigid_round_trip() {
+        let q = Quat::from_yaw_pitch(-0.5, 0.2);
+        let r = Mat3::from_quat(q);
+        let t = Vec3::new(10.0, -3.0, 4.0);
+        let m = Mat4::from_rt(r, t);
+        let p = Vec3::new(1.0, 1.0, 1.0);
+        // Apply, then invert manually: p = R^T (p' - t)
+        let p2 = m.transform_point(p);
+        let back = r.transpose().mul_vec(p2 - t);
+        assert!(vclose(back, p));
+    }
+
+    #[test]
+    fn matmul_associates_with_vec() {
+        let a = Mat3::from_quat(Quat::from_yaw_pitch(0.1, 0.2));
+        let b = Mat3::diag(Vec3::new(2.0, 3.0, 4.0));
+        let v = Vec3::new(1.0, -1.0, 2.0);
+        assert!(vclose(a.mul(b).mul_vec(v), a.mul_vec(b.mul_vec(v))));
+    }
+}

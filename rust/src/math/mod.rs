@@ -1,0 +1,11 @@
+//! Math substrate: vectors, matrices, quaternions, cameras, spherical
+//! harmonics. All f32, matching the rendering pipeline's precision.
+
+pub mod camera;
+pub mod mat;
+pub mod sh;
+pub mod vec;
+
+pub use camera::{Camera, Intrinsics, Pose, StereoCamera};
+pub use mat::{Mat3, Mat4};
+pub use vec::{Quat, Vec2, Vec3};

@@ -1,0 +1,156 @@
+//! Real spherical harmonics evaluation (degrees 0..=3), the 3DGS
+//! view-dependent color model. Coefficient layout matches the reference
+//! 3DGS implementation: per channel, 16 coefficients in (l,m) order
+//! l=0; l=1: m=-1,0,1; l=2: m=-2..2; l=3: m=-3..3.
+
+/// Number of SH coefficients per color channel for a given degree.
+pub const fn num_coeffs(degree: usize) -> usize {
+    (degree + 1) * (degree + 1)
+}
+
+/// Max degree used throughout the crate (matches 3DGS reference).
+pub const MAX_DEGREE: usize = 3;
+/// Coefficients per channel at MAX_DEGREE.
+pub const COEFFS: usize = num_coeffs(MAX_DEGREE); // 16
+/// Total SH floats per Gaussian (RGB).
+pub const SH_FLOATS: usize = 3 * COEFFS; // 48
+
+// Real SH basis constants (same as the 3DGS CUDA reference).
+const C0: f32 = 0.28209479177387814;
+const C1: f32 = 0.4886025119029199;
+const C2: [f32; 5] = [1.0925484305920792, -1.0925484305920792, 0.31539156525252005, -1.0925484305920792, 0.5462742152960396];
+const C3: [f32; 7] = [
+    -0.5900435899266435,
+    2.890611442640554,
+    -0.4570457994644658,
+    0.3731763325901154,
+    -0.4570457994644658,
+    1.445305721320277,
+    -0.5900435899266435,
+];
+
+/// Evaluate the SH basis at (unit) direction `d`, filling `basis[0..16]`.
+pub fn eval_basis(d: [f32; 3], basis: &mut [f32; COEFFS]) {
+    let (x, y, z) = (d[0], d[1], d[2]);
+    basis[0] = C0;
+    basis[1] = -C1 * y;
+    basis[2] = C1 * z;
+    basis[3] = -C1 * x;
+    let (xx, yy, zz) = (x * x, y * y, z * z);
+    let (xy, yz, xz) = (x * y, y * z, x * z);
+    basis[4] = C2[0] * xy;
+    basis[5] = C2[1] * yz;
+    basis[6] = C2[2] * (2.0 * zz - xx - yy);
+    basis[7] = C2[3] * xz;
+    basis[8] = C2[4] * (xx - yy);
+    basis[9] = C3[0] * y * (3.0 * xx - yy);
+    basis[10] = C3[1] * xy * z;
+    basis[11] = C3[2] * y * (4.0 * zz - xx - yy);
+    basis[12] = C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy);
+    basis[13] = C3[4] * x * (4.0 * zz - xx - yy);
+    basis[14] = C3[5] * z * (xx - yy);
+    basis[15] = C3[6] * x * (xx - 3.0 * yy);
+}
+
+/// Evaluate RGB color from 48 SH floats (layout: [channel][coeff]) at
+/// view direction `dir` (from camera to Gaussian, normalized by caller).
+/// Adds the conventional +0.5 offset and clamps to >= 0 as in 3DGS.
+pub fn eval_color(sh: &[f32], dir: [f32; 3], degree: usize) -> [f32; 3] {
+    debug_assert!(sh.len() >= SH_FLOATS);
+    let mut basis = [0.0f32; COEFFS];
+    eval_basis(dir, &mut basis);
+    let n = num_coeffs(degree.min(MAX_DEGREE));
+    let mut rgb = [0.0f32; 3];
+    for (c, out) in rgb.iter_mut().enumerate() {
+        let coeffs = &sh[c * COEFFS..(c + 1) * COEFFS];
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += coeffs[i] * basis[i];
+        }
+        *out = (acc + 0.5).max(0.0);
+    }
+    rgb
+}
+
+/// The SH coefficient (dc term) that produces a given base color at
+/// degree 0: color = C0 * dc + 0.5.
+pub fn dc_from_color(c: f32) -> f32 {
+    (c - 0.5) / C0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coeff_counts() {
+        assert_eq!(num_coeffs(0), 1);
+        assert_eq!(num_coeffs(1), 4);
+        assert_eq!(num_coeffs(2), 9);
+        assert_eq!(num_coeffs(3), 16);
+        assert_eq!(SH_FLOATS, 48);
+    }
+
+    #[test]
+    fn degree0_is_view_independent() {
+        let mut sh = [0.0f32; SH_FLOATS];
+        sh[0] = dc_from_color(0.8); // R dc
+        sh[COEFFS] = dc_from_color(0.2); // G dc
+        sh[2 * COEFFS] = dc_from_color(0.5); // B dc
+        for dir in [[0.0, 0.0, 1.0], [1.0, 0.0, 0.0], [0.577, 0.577, 0.577]] {
+            let c = eval_color(&sh, dir, 0);
+            assert!((c[0] - 0.8).abs() < 1e-5);
+            assert!((c[1] - 0.2).abs() < 1e-5);
+            assert!((c[2] - 0.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn degree1_is_view_dependent() {
+        let mut sh = [0.0f32; SH_FLOATS];
+        sh[0] = dc_from_color(0.5);
+        sh[3] = 0.5; // l=1, m=1 term (x-direction lobe)
+        let a = eval_color(&sh, [1.0, 0.0, 0.0], 1)[0];
+        let b = eval_color(&sh, [-1.0, 0.0, 0.0], 1)[0];
+        assert!((a - b).abs() > 0.1, "a={a} b={b}");
+    }
+
+    #[test]
+    fn color_clamped_nonnegative() {
+        let mut sh = [0.0f32; SH_FLOATS];
+        sh[0] = dc_from_color(-5.0);
+        let c = eval_color(&sh, [0.0, 0.0, 1.0], 3);
+        assert_eq!(c[0], 0.0);
+    }
+
+    #[test]
+    fn basis_orthogonality_monte_carlo() {
+        // ∫ Y_i Y_j dΩ = δ_ij. Check a few pairs by uniform sphere
+        // sampling: diagonal ≈ 1/(4π)·4π = 1, off-diagonal ≈ 0.
+        use crate::util::Prng;
+        let mut rng = Prng::new(123);
+        let n = 200_000;
+        let mut gram = [[0.0f64; 4]; 4]; // first 4 basis fns
+        for _ in 0..n {
+            // Uniform direction via normalized Gaussian triple.
+            let d = [rng.normal(), rng.normal(), rng.normal()];
+            let norm = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt().max(1e-9);
+            let dir = [d[0] / norm, d[1] / norm, d[2] / norm];
+            let mut b = [0.0f32; COEFFS];
+            eval_basis(dir, &mut b);
+            for i in 0..4 {
+                for j in 0..4 {
+                    gram[i][j] += (b[i] * b[j]) as f64;
+                }
+            }
+        }
+        let scale = 4.0 * std::f64::consts::PI / n as f64;
+        for i in 0..4 {
+            for j in 0..4 {
+                let v = gram[i][j] * scale;
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 0.03, "gram[{i}][{j}]={v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! 2/3-vectors and quaternions.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// 2D vector (image plane).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+impl Vec2 {
+    pub const ZERO: Vec2 = Vec2 { x: 0.0, y: 0.0 };
+
+    pub fn new(x: f32, y: f32) -> Self {
+        Self { x, y }
+    }
+
+    pub fn dot(self, o: Vec2) -> f32 {
+        self.x * o.x + self.y * o.y
+    }
+
+    pub fn norm(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+}
+
+impl Add for Vec2 {
+    type Output = Vec2;
+    fn add(self, o: Vec2) -> Vec2 {
+        Vec2::new(self.x + o.x, self.y + o.y)
+    }
+}
+
+impl Sub for Vec2 {
+    type Output = Vec2;
+    fn sub(self, o: Vec2) -> Vec2 {
+        Vec2::new(self.x - o.x, self.y - o.y)
+    }
+}
+
+impl Mul<f32> for Vec2 {
+    type Output = Vec2;
+    fn mul(self, s: f32) -> Vec2 {
+        Vec2::new(self.x * s, self.y * s)
+    }
+}
+
+/// 3D vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+    pub const X: Vec3 = Vec3 { x: 1.0, y: 0.0, z: 0.0 };
+    pub const Y: Vec3 = Vec3 { x: 0.0, y: 1.0, z: 0.0 };
+    pub const Z: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 1.0 };
+
+    pub fn new(x: f32, y: f32, z: f32) -> Self {
+        Self { x, y, z }
+    }
+
+    pub fn splat(v: f32) -> Self {
+        Self::new(v, v, v)
+    }
+
+    #[inline]
+    pub fn dot(self, o: Vec3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f32 {
+        self.dot(self)
+    }
+
+    #[inline]
+    pub fn norm(self) -> f32 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        if n > 0.0 {
+            self * (1.0 / n)
+        } else {
+            Vec3::ZERO
+        }
+    }
+
+    pub fn max_component(self) -> f32 {
+        self.x.max(self.y).max(self.z)
+    }
+
+    pub fn min(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.min(o.x), self.y.min(o.y), self.z.min(o.z))
+    }
+
+    pub fn max(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.max(o.x), self.y.max(o.y), self.z.max(o.z))
+    }
+
+    pub fn to_array(self) -> [f32; 3] {
+        [self.x, self.y, self.z]
+    }
+
+    pub fn from_array(a: [f32; 3]) -> Self {
+        Self::new(a[0], a[1], a[2])
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl AddAssign for Vec3 {
+    fn add_assign(&mut self, o: Vec3) {
+        *self = *self + o;
+    }
+}
+
+impl Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl Neg for Vec3 {
+    type Output = Vec3;
+    fn neg(self) -> Vec3 {
+        Vec3::new(-self.x, -self.y, -self.z)
+    }
+}
+
+impl Mul<f32> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, s: f32) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl Div<f32> for Vec3 {
+    type Output = Vec3;
+    fn div(self, s: f32) -> Vec3 {
+        self * (1.0 / s)
+    }
+}
+
+/// Unit quaternion (w, x, y, z) for rotations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(w: f32, x: f32, y: f32, z: f32) -> Self {
+        Self { w, x, y, z }
+    }
+
+    /// Rotation of `angle` radians about (unit) `axis`.
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Self {
+        let h = angle * 0.5;
+        let s = h.sin();
+        let a = axis.normalized();
+        Self { w: h.cos(), x: a.x * s, y: a.y * s, z: a.z * s }
+    }
+
+    /// Yaw (about +Y), then pitch (about +X) — VR head convention.
+    pub fn from_yaw_pitch(yaw: f32, pitch: f32) -> Self {
+        Quat::from_axis_angle(Vec3::Y, yaw) * Quat::from_axis_angle(Vec3::X, pitch)
+    }
+
+    pub fn normalized(self) -> Quat {
+        let n = (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt();
+        if n > 0.0 {
+            Quat::new(self.w / n, self.x / n, self.y / n, self.z / n)
+        } else {
+            Quat::IDENTITY
+        }
+    }
+
+    pub fn conjugate(self) -> Quat {
+        Quat::new(self.w, -self.x, -self.y, -self.z)
+    }
+
+    /// Rotate a vector.
+    pub fn rotate(self, v: Vec3) -> Vec3 {
+        // v' = v + 2*q_vec x (q_vec x v + w*v)
+        let qv = Vec3::new(self.x, self.y, self.z);
+        let t = qv.cross(v) * 2.0;
+        v + t * self.w + qv.cross(t)
+    }
+
+    pub fn to_array(self) -> [f32; 4] {
+        [self.w, self.x, self.y, self.z]
+    }
+
+    pub fn from_array(a: [f32; 4]) -> Self {
+        Self::new(a[0], a[1], a[2], a[3])
+    }
+}
+
+impl Mul for Quat {
+    type Output = Quat;
+    fn mul(self, o: Quat) -> Quat {
+        Quat::new(
+            self.w * o.w - self.x * o.x - self.y * o.y - self.z * o.z,
+            self.w * o.x + self.x * o.w + self.y * o.z - self.z * o.y,
+            self.w * o.y - self.x * o.z + self.y * o.w + self.z * o.x,
+            self.w * o.z + self.x * o.y - self.y * o.x + self.z * o.w,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() < 1e-5
+    }
+
+    fn vclose(a: Vec3, b: Vec3) -> bool {
+        close(a.x, b.x) && close(a.y, b.y) && close(a.z, b.z)
+    }
+
+    #[test]
+    fn vec3_algebra() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(4.0, 5.0, 6.0);
+        assert_eq!(a.dot(b), 32.0);
+        assert!(vclose(a.cross(b), Vec3::new(-3.0, 6.0, -3.0)));
+        assert!(close(Vec3::new(3.0, 4.0, 0.0).norm(), 5.0));
+        assert!(close(a.normalized().norm(), 1.0));
+    }
+
+    #[test]
+    fn quat_rotates_axes() {
+        // 90° about Y sends +Z to +X.
+        let q = Quat::from_axis_angle(Vec3::Y, std::f32::consts::FRAC_PI_2);
+        assert!(vclose(q.rotate(Vec3::Z), Vec3::X));
+        // 90° about X sends +Y to +Z.
+        let q = Quat::from_axis_angle(Vec3::X, std::f32::consts::FRAC_PI_2);
+        assert!(vclose(q.rotate(Vec3::Y), Vec3::Z));
+    }
+
+    #[test]
+    fn quat_composition_matches_sequential_rotation() {
+        let q1 = Quat::from_axis_angle(Vec3::Y, 0.3);
+        let q2 = Quat::from_axis_angle(Vec3::X, 0.7);
+        let v = Vec3::new(0.2, -1.0, 0.5);
+        assert!(vclose((q1 * q2).rotate(v), q1.rotate(q2.rotate(v))));
+    }
+
+    #[test]
+    fn quat_conjugate_inverts() {
+        let q = Quat::from_yaw_pitch(0.4, -0.2);
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        assert!(vclose(q.conjugate().rotate(q.rotate(v)), v));
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let q = Quat::from_yaw_pitch(1.1, 0.6);
+        let v = Vec3::new(-2.0, 0.5, 7.0);
+        assert!(close(q.rotate(v).norm(), v.norm()));
+    }
+}

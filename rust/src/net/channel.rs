@@ -1,0 +1,93 @@
+//! Simulated wireless link (paper §6: 100 Mbps Wi-Fi).
+//!
+//! A simple serialization model with propagation latency and an in-order
+//! queue: each message's arrival time = max(now, link_free) +
+//! bytes/bandwidth + latency. Used by the frame scheduler to decide when
+//! Δcuts become available to the client (Fig 10's timing diagram).
+
+/// A point-to-point simulated link.
+#[derive(Debug, Clone, Copy)]
+pub struct SimLink {
+    /// Payload bandwidth (bits/s).
+    pub bandwidth_bps: f64,
+    /// One-way propagation latency (s).
+    pub latency_s: f64,
+    /// Time at which the link finishes its last queued transmission.
+    busy_until: f64,
+    /// Total bytes ever sent (bandwidth accounting).
+    pub bytes_sent: u64,
+}
+
+impl SimLink {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        Self { bandwidth_bps, latency_s, busy_until: 0.0, bytes_sent: 0 }
+    }
+
+    /// From a [`crate::config::NetConfig`].
+    pub fn from_config(cfg: &crate::config::NetConfig) -> Self {
+        Self::new(cfg.bandwidth_bps, cfg.latency_ms * 1e-3)
+    }
+
+    /// Pure serialization time of `bytes`.
+    pub fn serialize_time(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / self.bandwidth_bps
+    }
+
+    /// Enqueue a transmission at simulated time `now`; returns arrival
+    /// time at the receiver.
+    pub fn send(&mut self, now: f64, bytes: u64) -> f64 {
+        let start = now.max(self.busy_until);
+        let done = start + self.serialize_time(bytes);
+        self.busy_until = done;
+        self.bytes_sent += bytes;
+        done + self.latency_s
+    }
+
+    /// Sustainable payload rate in bytes/second.
+    pub fn bytes_per_second(&self) -> f64 {
+        self.bandwidth_bps / 8.0
+    }
+
+    /// Whether a periodic payload of `bytes` every `interval_s` fits.
+    pub fn sustains(&self, bytes_per_message: u64, interval_s: f64) -> bool {
+        self.serialize_time(bytes_per_message) <= interval_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_time() {
+        let l = SimLink::new(100e6, 0.0);
+        // 12.5 MB at 100 Mbps = 1 s.
+        assert!((l.serialize_time(12_500_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queueing_is_in_order() {
+        let mut l = SimLink::new(8e6, 0.005); // 1 MB/s
+        let a = l.send(0.0, 500_000); // 0.5 s + 5 ms
+        let b = l.send(0.0, 500_000); // queued behind a
+        assert!((a - 0.505).abs() < 1e-9);
+        assert!((b - 1.005).abs() < 1e-9);
+        assert_eq!(l.bytes_sent, 1_000_000);
+    }
+
+    #[test]
+    fn idle_link_starts_immediately() {
+        let mut l = SimLink::new(8e6, 0.001);
+        l.send(0.0, 1_000);
+        let arrival = l.send(10.0, 1_000); // long after the queue drained
+        assert!((arrival - (10.0 + 0.001 + 0.001)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sustain_check() {
+        let l = SimLink::new(100e6, 0.005);
+        // 90 FPS × 139 KB/frame = 100 Mbps exactly; just over fails.
+        assert!(l.sustains(138_000, 1.0 / 90.0));
+        assert!(!l.sustains(160_000, 1.0 / 90.0));
+    }
+}

@@ -1,0 +1,25 @@
+//! Network substrate: the simulated wireless link between cloud and
+//! client, the H.265 video-streaming proxy model, and wireless energy.
+
+pub mod channel;
+pub mod video;
+
+pub use channel::SimLink;
+pub use video::{VideoCodec, VideoQuality};
+
+/// Wireless communication energy (paper §6: 100 nJ/B [63]).
+pub const WIRELESS_NJ_PER_BYTE: f64 = 100.0;
+
+/// Joules to transmit/receive `bytes` over the wireless interface.
+pub fn wireless_energy_j(bytes: u64) -> f64 {
+    bytes as f64 * WIRELESS_NJ_PER_BYTE * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wireless_energy_constant() {
+        // 1 MB at 100 nJ/B = 0.1 J.
+        assert!((super::wireless_energy_j(1_000_000) - 0.1).abs() < 1e-9);
+    }
+}

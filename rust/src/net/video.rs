@@ -1,0 +1,129 @@
+//! H.265/HEVC video-streaming proxy model (paper Figs 4, 5, 17).
+//!
+//! No codec runs offline; the model maps (resolution, fps, quality) to
+//! bitrate via bits-per-pixel constants calibrated to published HEVC
+//! rate points for rendered VR content, and to reconstruction quality
+//! via representative PSNR levels. This is all Figs 5/17 consume —
+//! relative bandwidth and the quality/bitrate trade-off (DESIGN.md
+//! §Substitutions).
+
+/// Compression setting (paper: Lossy-L, Lossy-H, Lossless).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VideoQuality {
+    LossyLow,
+    LossyHigh,
+    Lossless,
+}
+
+impl VideoQuality {
+    pub const ALL: [VideoQuality; 3] =
+        [VideoQuality::LossyLow, VideoQuality::LossyHigh, VideoQuality::Lossless];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            VideoQuality::LossyLow => "Lossy-L",
+            VideoQuality::LossyHigh => "Lossy-H",
+            VideoQuality::Lossless => "Lossless",
+        }
+    }
+
+    /// Bits per pixel of encoded video (HEVC-class, rendered content).
+    pub fn bits_per_pixel(&self) -> f64 {
+        match self {
+            VideoQuality::LossyLow => 0.08,
+            VideoQuality::LossyHigh => 0.35,
+            VideoQuality::Lossless => 3.6,
+        }
+    }
+
+    /// Representative reconstruction PSNR vs the rendered frame (dB).
+    pub fn psnr_db(&self) -> f64 {
+        match self {
+            VideoQuality::LossyLow => 33.0,
+            VideoQuality::LossyHigh => 42.0,
+            VideoQuality::Lossless => 99.0,
+        }
+    }
+}
+
+/// A configured video stream.
+#[derive(Debug, Clone, Copy)]
+pub struct VideoCodec {
+    pub quality: VideoQuality,
+    /// Pixels per frame across all views (stereo = 2× eye pixels).
+    pub pixels_per_frame: u64,
+    pub fps: f64,
+}
+
+impl VideoCodec {
+    /// Stereo VR stream at an eye resolution.
+    pub fn vr_stereo(quality: VideoQuality, eye_w: u32, eye_h: u32, fps: f64) -> Self {
+        Self { quality, pixels_per_frame: 2 * eye_w as u64 * eye_h as u64, fps }
+    }
+
+    /// Encoded bitrate (bits/s).
+    pub fn bitrate_bps(&self) -> f64 {
+        self.pixels_per_frame as f64 * self.quality.bits_per_pixel() * self.fps
+    }
+
+    /// Bytes per frame.
+    pub fn bytes_per_frame(&self) -> u64 {
+        (self.pixels_per_frame as f64 * self.quality.bits_per_pixel() / 8.0) as u64
+    }
+
+    /// Encode+decode latency budget (s/frame): conventional real-time
+    /// HEVC pipelines (paper §2.1 notes DNN codecs are too slow).
+    pub fn codec_latency_s(&self) -> f64 {
+        match self.quality {
+            VideoQuality::LossyLow => 0.004,
+            VideoQuality::LossyHigh => 0.006,
+            VideoQuality::Lossless => 0.012,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quest3_vr_stream_exceeds_home_broadband() {
+        // Fig 5's premise: high-quality VR video streaming surpasses the
+        // ~280 Mbps average US household link; lossless is ~Gbps.
+        let hq = VideoCodec::vr_stereo(VideoQuality::LossyHigh, 2064, 2208, 90.0);
+        assert!(hq.bitrate_bps() > 280e6, "{}", hq.bitrate_bps());
+        let ll = VideoCodec::vr_stereo(VideoQuality::Lossless, 2064, 2208, 90.0);
+        assert!(ll.bitrate_bps() > 1e9);
+        // Low-quality lossy fits a 100 Mbps link.
+        let lq = VideoCodec::vr_stereo(VideoQuality::LossyLow, 2064, 2208, 90.0);
+        assert!(lq.bitrate_bps() < 100e6);
+    }
+
+    #[test]
+    fn bitrate_scales_linearly() {
+        let a = VideoCodec::vr_stereo(VideoQuality::LossyHigh, 1000, 1000, 90.0);
+        let b = VideoCodec::vr_stereo(VideoQuality::LossyHigh, 2000, 1000, 90.0);
+        assert!((b.bitrate_bps() / a.bitrate_bps() - 2.0).abs() < 1e-9);
+        let c = VideoCodec { fps: 45.0, ..a };
+        assert!((a.bitrate_bps() / c.bitrate_bps() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quality_orders_consistently() {
+        let mut last_bpp = 0.0;
+        let mut last_psnr = 0.0;
+        for q in VideoQuality::ALL {
+            assert!(q.bits_per_pixel() > last_bpp);
+            assert!(q.psnr_db() > last_psnr);
+            last_bpp = q.bits_per_pixel();
+            last_psnr = q.psnr_db();
+        }
+    }
+
+    #[test]
+    fn bytes_per_frame_consistent_with_bitrate() {
+        let v = VideoCodec::vr_stereo(VideoQuality::LossyHigh, 2064, 2208, 90.0);
+        let from_rate = v.bitrate_bps() / 8.0 / v.fps;
+        assert!((v.bytes_per_frame() as f64 - from_rate).abs() < 2.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! RGB framebuffer and image-quality metrics (PSNR, SSIM, LPIPS-proxy).
+
+/// Planar f32 RGB image, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: u32,
+    pub height: u32,
+    /// RGB triplets, `width*height*3` floats in [0,1] (not clamped).
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(width: u32, height: u32) -> Self {
+        Self { width, height, data: vec![0.0; (width * height * 3) as usize] }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: u32, y: u32) -> usize {
+        ((y * self.width + x) * 3) as usize
+    }
+
+    pub fn get(&self, x: u32, y: u32) -> [f32; 3] {
+        let i = self.idx(x, y);
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    pub fn set(&mut self, x: u32, y: u32, rgb: [f32; 3]) {
+        let i = self.idx(x, y);
+        self.data[i] = rgb[0];
+        self.data[i + 1] = rgb[1];
+        self.data[i + 2] = rgb[2];
+    }
+
+    /// Mean squared error against another image of identical shape.
+    pub fn mse(&self, other: &Image) -> f64 {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc / self.data.len() as f64
+    }
+
+    /// PSNR in dB (peak = 1.0). Identical images report 99 dB.
+    pub fn psnr(&self, other: &Image) -> f64 {
+        let mse = self.mse(other);
+        if mse <= 1e-12 {
+            return 99.0;
+        }
+        10.0 * (1.0 / mse).log10()
+    }
+
+    /// Grayscale luma plane.
+    fn luma(&self) -> Vec<f32> {
+        self.data
+            .chunks_exact(3)
+            .map(|c| 0.299 * c[0] + 0.587 * c[1] + 0.114 * c[2])
+            .collect()
+    }
+
+    /// Mean SSIM over 8x8 windows on luma (standard constants).
+    pub fn ssim(&self, other: &Image) -> f64 {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        let (w, h) = (self.width as usize, self.height as usize);
+        let a = self.luma();
+        let b = other.luma();
+        const C1: f64 = 0.01 * 0.01;
+        const C2: f64 = 0.03 * 0.03;
+        const WIN: usize = 8;
+        let mut total = 0.0f64;
+        let mut count = 0usize;
+        let mut wy = 0;
+        while wy < h {
+            let mut wx = 0;
+            while wx < w {
+                let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0f64, 0f64, 0f64, 0f64, 0f64);
+                let mut n = 0f64;
+                for y in wy..(wy + WIN).min(h) {
+                    for x in wx..(wx + WIN).min(w) {
+                        let va = a[y * w + x] as f64;
+                        let vb = b[y * w + x] as f64;
+                        sa += va;
+                        sb += vb;
+                        saa += va * va;
+                        sbb += vb * vb;
+                        sab += va * vb;
+                        n += 1.0;
+                    }
+                }
+                let ma = sa / n;
+                let mb = sb / n;
+                let va = (saa / n - ma * ma).max(0.0);
+                let vb = (sbb / n - mb * mb).max(0.0);
+                let cov = sab / n - ma * mb;
+                let s = ((2.0 * ma * mb + C1) * (2.0 * cov + C2))
+                    / ((ma * ma + mb * mb + C1) * (va + vb + C2));
+                total += s;
+                count += 1;
+                wx += WIN;
+            }
+            wy += WIN;
+        }
+        total / count as f64
+    }
+
+    /// LPIPS proxy: mean L2 distance between local gradient-structure
+    /// descriptors (dx, dy, local mean) — a perceptual-ish distance where
+    /// 0 = identical. NOT the learned LPIPS network (unavailable offline;
+    /// see DESIGN.md §Substitutions); used only to *rank* methods, which
+    /// is all Fig 16 needs.
+    pub fn lpips_proxy(&self, other: &Image) -> f64 {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        let (w, h) = (self.width as usize, self.height as usize);
+        if w < 2 || h < 2 {
+            return self.mse(other).sqrt();
+        }
+        let a = self.luma();
+        let b = other.luma();
+        let mut acc = 0.0f64;
+        let mut n = 0.0f64;
+        for y in 0..h - 1 {
+            for x in 0..w - 1 {
+                let ga_x = (a[y * w + x + 1] - a[y * w + x]) as f64;
+                let ga_y = (a[(y + 1) * w + x] - a[y * w + x]) as f64;
+                let gb_x = (b[y * w + x + 1] - b[y * w + x]) as f64;
+                let gb_y = (b[(y + 1) * w + x] - b[y * w + x]) as f64;
+                let dm = (a[y * w + x] - b[y * w + x]) as f64;
+                acc += (ga_x - gb_x).powi(2) + (ga_y - gb_y).powi(2) + 0.25 * dm * dm;
+                n += 1.0;
+            }
+        }
+        (acc / n).sqrt()
+    }
+
+    /// Write a binary PPM (P6) for eyeballing outputs.
+    pub fn write_ppm(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P6\n{} {}\n255\n", self.width, self.height)?;
+        let bytes: Vec<u8> =
+            self.data.iter().map(|v| (v.clamp(0.0, 1.0) * 255.0).round() as u8).collect();
+        f.write_all(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn noisy(img: &Image, sigma: f32, seed: u64) -> Image {
+        let mut rng = Prng::new(seed);
+        let mut out = img.clone();
+        for v in out.data.iter_mut() {
+            *v += rng.normal() * sigma;
+        }
+        out
+    }
+
+    fn random_image(w: u32, h: u32, seed: u64) -> Image {
+        let mut rng = Prng::new(seed);
+        let mut img = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                // Smooth-ish structure plus noise.
+                let base = ((x as f32 * 0.1).sin() + (y as f32 * 0.07).cos()) * 0.25 + 0.5;
+                img.set(x, y, [base, base * 0.8 + 0.1 * rng.f32(), 1.0 - base]);
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn identical_images_are_perfect() {
+        let img = random_image(64, 48, 1);
+        assert_eq!(img.psnr(&img), 99.0);
+        assert!((img.ssim(&img) - 1.0).abs() < 1e-9);
+        assert!(img.lpips_proxy(&img) < 1e-9);
+    }
+
+    #[test]
+    fn metrics_order_by_noise_level() {
+        let img = random_image(64, 64, 2);
+        let slight = noisy(&img, 0.01, 3);
+        let heavy = noisy(&img, 0.1, 4);
+        assert!(img.psnr(&slight) > img.psnr(&heavy));
+        assert!(img.ssim(&slight) > img.ssim(&heavy));
+        assert!(img.lpips_proxy(&slight) < img.lpips_proxy(&heavy));
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        let a = Image::new(16, 16);
+        let mut b = Image::new(16, 16);
+        for v in b.data.iter_mut() {
+            *v = 0.1; // uniform error 0.1 => MSE 0.01 => PSNR 20 dB
+        }
+        assert!((a.psnr(&b) - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn set_get_round_trip() {
+        let mut img = Image::new(8, 8);
+        img.set(3, 5, [0.1, 0.2, 0.3]);
+        assert_eq!(img.get(3, 5), [0.1, 0.2, 0.3]);
+        assert_eq!(img.get(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ppm_output_exists() {
+        let img = random_image(16, 8, 5);
+        let path = std::env::temp_dir().join("nebula_test.ppm");
+        img.write_ppm(path.to_str().unwrap()).unwrap();
+        let meta = std::fs::metadata(&path).unwrap();
+        assert!(meta.len() > 16 * 8 * 3);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,28 @@
+//! Client-side rendering pipeline (paper Fig 1 stages 2–4 plus the
+//! stereo rasterizer of §4.4).
+//!
+//! * [`preprocess`] — EWA projection of Gaussians to screen-space splats
+//!   (conic, depth, radius, SH color), frustum culling;
+//! * [`sort`] — global (depth, id) ordering;
+//! * [`tiles`] — per-tile splat lists (depth-ordered by construction);
+//! * [`raster`] — reference tile-by-tile α-blending (the VRC functional
+//!   model);
+//! * [`stereo`] — triangulation-based stereo rasterization: the left eye
+//!   renders normally, the right eye reuses preprocessing/sorting and
+//!   merges per-tile disparity lists (bit-accurate; see module docs);
+//! * [`warp`] — WARP and Cicero-style image-warping baselines (Fig 16);
+//! * [`image`] — framebuffer + PSNR/SSIM/LPIPS-proxy metrics.
+
+pub mod image;
+pub mod preprocess;
+pub mod raster;
+pub mod sort;
+pub mod stereo;
+pub mod tiles;
+pub mod warp;
+
+pub use image::Image;
+pub use preprocess::{preprocess_records, preprocess_tree, ProjectedSet, Splat};
+pub use raster::{render_mono, RasterStats};
+pub use stereo::{render_stereo, StereoMode, StereoOutput};
+pub use tiles::TileBins;

@@ -1,0 +1,245 @@
+//! Preprocessing: EWA projection of 3D Gaussians into screen-space
+//! splats (paper Fig 1 stage 2), with frustum culling and SH color
+//! evaluation. This is the stage the stereo pipeline runs ONCE for both
+//! eyes over the widened shared FoV (paper Fig 13 left).
+
+use crate::gaussian::{GaussianId, GaussianRecord};
+use crate::lod::LodTree;
+use crate::math::sh::eval_color;
+use crate::math::{Camera, Mat3, Vec2};
+
+/// A projected (screen-space) Gaussian splat.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Splat {
+    pub id: GaussianId,
+    /// Pixel-space center in the projecting eye's image.
+    pub mean: Vec2,
+    /// Inverse 2D covariance (a, b, c) for  a·dx² + 2b·dx·dy + c·dy².
+    pub conic: [f32; 3],
+    /// Camera-space depth (z).
+    pub depth: f32,
+    /// Conservative pixel radius of the footprint (3σ).
+    pub radius_px: f32,
+    pub color: [f32; 3],
+    pub opacity: f32,
+}
+
+/// The preprocessed frame: splats in arbitrary order + stats.
+#[derive(Debug, Default, Clone)]
+pub struct ProjectedSet {
+    pub splats: Vec<Splat>,
+    /// Gaussians examined (before culling).
+    pub processed: usize,
+    /// Gaussians culled by the frustum test.
+    pub culled: usize,
+}
+
+/// EWA low-pass dilation added to the 2D covariance diagonal (3DGS
+/// reference uses 0.3 px²).
+pub const LOW_PASS: f32 = 0.3;
+
+/// Project one Gaussian; `None` if culled. `frustum_cam` may differ from
+/// the projecting camera (the stereo path culls against the widened
+/// shared frustum while projecting with the left eye).
+pub fn project_one(
+    cam: &Camera,
+    frustum_cam: &Camera,
+    id: GaussianId,
+    g: &GaussianRecord,
+    sh_degree: usize,
+) -> Option<Splat> {
+    let radius3d = g.radius();
+    if !frustum_cam.sphere_in_frustum(g.pos, radius3d) {
+        return None;
+    }
+    let t = cam.pose.world_to_camera(g.pos);
+    if t.z <= cam.intr.near * 0.5 {
+        return None; // behind / too close to the projecting eye
+    }
+
+    // 3D covariance Σ = R S S Rᵀ.
+    let r = Mat3::from_quat(g.rot);
+    let s = Mat3::diag(g.scale);
+    let m = r.mul(s);
+    let cov3d = m.mul(m.transpose());
+
+    // W: world→camera rotation.
+    let w = cam.view_rotation();
+    // Projection Jacobian at t.
+    let inv_z = 1.0 / t.z;
+    let j = Mat3::from_rows(
+        [cam.intr.fx * inv_z, 0.0, -cam.intr.fx * t.x * inv_z * inv_z],
+        [0.0, cam.intr.fy * inv_z, -cam.intr.fy * t.y * inv_z * inv_z],
+        [0.0, 0.0, 0.0],
+    );
+    let jw = j.mul(w);
+    let cov2d_full = jw.mul(cov3d).mul(jw.transpose());
+    let a = cov2d_full.m[0][0] + LOW_PASS;
+    let b = cov2d_full.m[0][1];
+    let c = cov2d_full.m[1][1] + LOW_PASS;
+
+    let det = a * c - b * b;
+    if det <= 1e-12 {
+        return None;
+    }
+    let inv_det = 1.0 / det;
+    let conic = [c * inv_det, -b * inv_det, a * inv_det];
+
+    // Pixel radius from the major eigenvalue (3σ), as in 3DGS.
+    let mid = 0.5 * (a + c);
+    let lambda1 = mid + (mid * mid - det).max(0.0).sqrt();
+    let radius_px = (3.0 * lambda1.sqrt()).ceil();
+
+    let mean = Vec2::new(cam.intr.fx * t.x * inv_z + cam.intr.cx, cam.intr.fy * t.y * inv_z + cam.intr.cy);
+
+    // View-dependent color from SH (direction: camera → Gaussian).
+    let dir = (g.pos - cam.pose.position).normalized();
+    let color = eval_color(&g.sh, dir.to_array(), sh_degree);
+
+    Some(Splat { id, mean, conic, depth: t.z, radius_px, color, opacity: g.opacity.clamp(0.0, 0.999) })
+}
+
+/// Preprocess a rendering queue of records (the client path).
+pub fn preprocess_records(
+    cam: &Camera,
+    frustum_cam: &Camera,
+    queue: &[(GaussianId, &GaussianRecord)],
+    sh_degree: usize,
+) -> ProjectedSet {
+    let mut set = ProjectedSet { processed: queue.len(), ..Default::default() };
+    for (id, g) in queue {
+        match project_one(cam, frustum_cam, *id, g, sh_degree) {
+            Some(s) => set.splats.push(s),
+            None => set.culled += 1,
+        }
+    }
+    set
+}
+
+/// Preprocess a cut directly from the scene tree (cloud-free local path
+/// used by baselines and tests).
+pub fn preprocess_tree(
+    cam: &Camera,
+    frustum_cam: &Camera,
+    tree: &LodTree,
+    cut: &[GaussianId],
+    sh_degree: usize,
+) -> ProjectedSet {
+    let mut set = ProjectedSet { processed: cut.len(), ..Default::default() };
+    for &id in cut {
+        let g = tree.gaussians.record(id);
+        match project_one(cam, frustum_cam, id, &g, sh_degree) {
+            Some(s) => set.splats.push(s),
+            None => set.culled += 1,
+        }
+    }
+    set
+}
+
+/// Estimated memory demand of this stage in Gaussians (Fig 6 proxy).
+impl ProjectedSet {
+    pub fn gaussian_count(&self) -> usize {
+        self.splats.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::sh::dc_from_color;
+    use crate::math::{Intrinsics, Pose, Quat, Vec3};
+
+    fn cam() -> Camera {
+        Camera::new(Pose::IDENTITY, Intrinsics::from_fov(640, 480, 90f32.to_radians(), 0.1, 1000.0))
+    }
+
+    fn record_at(pos: Vec3, scale: f32) -> GaussianRecord {
+        let mut sh = [0.0f32; crate::math::sh::SH_FLOATS];
+        sh[0] = dc_from_color(0.8);
+        GaussianRecord { pos, scale: Vec3::splat(scale), rot: Quat::IDENTITY, opacity: 0.9, sh }
+    }
+
+    #[test]
+    fn center_gaussian_projects_to_center() {
+        let c = cam();
+        let g = record_at(Vec3::new(0.0, 0.0, 10.0), 0.5);
+        let s = project_one(&c, &c, 0, &g, 0).unwrap();
+        assert!((s.mean.x - 320.0).abs() < 1e-2);
+        assert!((s.mean.y - 240.0).abs() < 1e-2);
+        assert!((s.depth - 10.0).abs() < 1e-4);
+        assert!((s.color[0] - 0.8).abs() < 1e-4);
+    }
+
+    #[test]
+    fn behind_camera_culled() {
+        let c = cam();
+        let g = record_at(Vec3::new(0.0, 0.0, -5.0), 0.5);
+        assert!(project_one(&c, &c, 0, &g, 0).is_none());
+    }
+
+    #[test]
+    fn radius_scales_with_size_and_distance() {
+        let c = cam();
+        let near = project_one(&c, &c, 0, &record_at(Vec3::new(0.0, 0.0, 5.0), 0.5), 0).unwrap();
+        let far = project_one(&c, &c, 0, &record_at(Vec3::new(0.0, 0.0, 50.0), 0.5), 0).unwrap();
+        let big = project_one(&c, &c, 0, &record_at(Vec3::new(0.0, 0.0, 5.0), 1.5), 0).unwrap();
+        assert!(near.radius_px > far.radius_px);
+        assert!(big.radius_px > near.radius_px);
+    }
+
+    #[test]
+    fn isotropic_conic_is_symmetric() {
+        let c = cam();
+        let s = project_one(&c, &c, 0, &record_at(Vec3::new(0.0, 0.0, 10.0), 0.5), 0).unwrap();
+        // On-axis isotropic Gaussian: conic a ≈ c, b ≈ 0.
+        assert!((s.conic[0] - s.conic[2]).abs() / s.conic[0] < 1e-3);
+        assert!(s.conic[1].abs() < 1e-6);
+        // Conic must be positive definite.
+        assert!(s.conic[0] > 0.0 && s.conic[0] * s.conic[2] - s.conic[1] * s.conic[1] > 0.0);
+    }
+
+    #[test]
+    fn alpha_falls_off_with_distance_from_center() {
+        let c = cam();
+        let s = project_one(&c, &c, 0, &record_at(Vec3::new(0.0, 0.0, 10.0), 0.5), 0).unwrap();
+        let alpha_at = |dx: f32, dy: f32| {
+            let power = -0.5 * (s.conic[0] * dx * dx + 2.0 * s.conic[1] * dx * dy + s.conic[2] * dy * dy);
+            s.opacity * power.exp()
+        };
+        assert!(alpha_at(0.0, 0.0) > alpha_at(2.0, 0.0));
+        assert!(alpha_at(2.0, 0.0) > alpha_at(6.0, 0.0));
+        // At the 3σ radius the contribution is negligible.
+        assert!(alpha_at(s.radius_px, 0.0) < 0.02);
+    }
+
+    #[test]
+    fn separate_frustum_cam_keeps_off_screen_gaussians() {
+        let c = cam();
+        // A Gaussian slightly outside the left eye's FoV.
+        let g = record_at(Vec3::new(-11.0, 0.0, 10.0), 0.3);
+        assert!(project_one(&c, &c, 0, &g, 0).is_none());
+        // A wider frustum camera keeps it (the stereo shared-FoV case).
+        let mut wide = c;
+        wide.intr = Intrinsics::from_fov(640, 480, 130f32.to_radians(), 0.1, 1000.0);
+        let s = project_one(&c, &wide, 0, &g, 0);
+        assert!(s.is_some());
+        // It projects off the left image; binning will route it to the
+        // extended column.
+        assert!(s.unwrap().mean.x < 0.0);
+    }
+
+    #[test]
+    fn preprocess_tree_counts() {
+        let tree = crate::scene::CityGen::new(crate::scene::CityParams::for_target(500, 50.0, 3)).build();
+        let c = Camera::new(
+            Pose::looking(Vec3::new(25.0, 1.7, 25.0), 0.3, 0.0),
+            Intrinsics::vr_eye_scaled(8),
+        );
+        let cut: Vec<u32> = (0..tree.len() as u32).collect();
+        let set = preprocess_tree(&c, &c, &tree, &cut, 3);
+        assert_eq!(set.processed, tree.len());
+        assert_eq!(set.splats.len() + set.culled, set.processed);
+        assert!(!set.splats.is_empty(), "some Gaussians must be visible");
+        assert!(set.culled > 0, "some Gaussians must be culled");
+    }
+}

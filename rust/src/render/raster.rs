@@ -1,0 +1,269 @@
+//! Reference tile-based α-blending rasterizer (paper Fig 1 stage 4) —
+//! the functional model of the VRC (volume rendering core).
+//!
+//! Front-to-back blending per pixel: α from the conic, skip below
+//! `alpha_min` (the α-check), accumulate until the transmittance floor.
+//! The per-(tile, splat) α-check outcomes can be exported — that is the
+//! signal the stereo re-projection unit (SRU) consumes in §4.4.
+
+use super::image::Image;
+use super::preprocess::Splat;
+use super::tiles::TileBins;
+
+/// Rasterization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RasterConfig {
+    /// α below this is skipped (paper's α-check; 3DGS uses 1/255).
+    pub alpha_min: f32,
+    /// Stop blending a pixel when transmittance drops below this.
+    pub t_min: f32,
+}
+
+impl Default for RasterConfig {
+    fn default() -> Self {
+        Self { alpha_min: 1.0 / 255.0, t_min: 1.0 / 255.0 }
+    }
+}
+
+/// Workload counters (consumed by the hardware timing models).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct RasterStats {
+    /// Per-pixel α evaluations.
+    pub alpha_checks: u64,
+    /// α-checks that passed (blend operations).
+    pub blends: u64,
+    /// (splat, tile) pairs processed.
+    pub pairs: u64,
+    /// Tiles rendered.
+    pub tiles: u64,
+    /// Pixels that saturated early (transmittance floor reached).
+    pub saturated: u64,
+}
+
+impl RasterStats {
+    pub fn merge(&mut self, o: &RasterStats) {
+        self.alpha_checks += o.alpha_checks;
+        self.blends += o.blends;
+        self.pairs += o.pairs;
+        self.tiles += o.tiles;
+        self.saturated += o.saturated;
+    }
+}
+
+/// Rasterize one tile.
+///
+/// * `list` — depth-ordered splat indices intersecting the tile;
+/// * `(px0, py0)` — tile origin in the target image;
+/// * `passed` — if given, set `passed[i] = true` when `list[i]` passes
+///   the α-check for at least one pixel (SRU input).
+#[allow(clippy::too_many_arguments)]
+pub fn raster_tile(
+    splats: &[Splat],
+    list: &[u32],
+    px0: u32,
+    py0: u32,
+    tile: u32,
+    img: &mut Image,
+    cfg: &RasterConfig,
+    mut passed: Option<&mut [bool]>,
+    stats: &mut RasterStats,
+) {
+    stats.tiles += 1;
+    stats.pairs += list.len() as u64;
+    let x_end = (px0 + tile).min(img.width);
+    let y_end = (py0 + tile).min(img.height);
+    for py in py0..y_end {
+        for px in px0..x_end {
+            let mut t = 1.0f32;
+            let mut rgb = [0.0f32; 3];
+            for (li, &si) in list.iter().enumerate() {
+                let s = &splats[si as usize];
+                let dx = px as f32 + 0.5 - s.mean.x;
+                let dy = py as f32 + 0.5 - s.mean.y;
+                let power =
+                    -0.5 * (s.conic[0] * dx * dx + s.conic[2] * dy * dy) - s.conic[1] * dx * dy;
+                stats.alpha_checks += 1;
+                if power > 0.0 {
+                    continue;
+                }
+                let alpha = (s.opacity * power.exp()).min(0.99);
+                if alpha < cfg.alpha_min {
+                    continue;
+                }
+                stats.blends += 1;
+                if let Some(p) = passed.as_deref_mut() {
+                    p[li] = true;
+                }
+                let w = alpha * t;
+                rgb[0] += w * s.color[0];
+                rgb[1] += w * s.color[1];
+                rgb[2] += w * s.color[2];
+                t *= 1.0 - alpha;
+                if t < cfg.t_min {
+                    stats.saturated += 1;
+                    break;
+                }
+            }
+            img.set(px, py, rgb);
+        }
+    }
+}
+
+/// Render a full image from pre-binned splats (mono reference path).
+pub fn render_bins(
+    splats: &[Splat],
+    bins: &TileBins,
+    width: u32,
+    height: u32,
+    cfg: &RasterConfig,
+) -> (Image, RasterStats) {
+    let mut img = Image::new(width, height);
+    let mut stats = RasterStats::default();
+    for ty in 0..bins.tiles_y {
+        for tx in 0..bins.tiles_x {
+            raster_tile(
+                splats,
+                bins.list(tx, ty),
+                tx * bins.tile,
+                ty * bins.tile,
+                bins.tile,
+                &mut img,
+                cfg,
+                None,
+                &mut stats,
+            );
+        }
+    }
+    (img, stats)
+}
+
+/// Full mono pipeline: sort → bin → rasterize. `set` is consumed (sorted
+/// in place).
+pub fn render_mono(
+    mut set: super::preprocess::ProjectedSet,
+    width: u32,
+    height: u32,
+    tile: u32,
+    cfg: &RasterConfig,
+) -> (Image, RasterStats, TileBins) {
+    super::sort::sort_splats(&mut set.splats);
+    let bins = TileBins::build(width, height, tile, 0, &set.splats);
+    let (img, stats) = render_bins(&set.splats, &bins, width, height, cfg);
+    (img, stats, bins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec2;
+
+    fn splat(id: u32, x: f32, y: f32, depth: f32, color: [f32; 3], opacity: f32) -> Splat {
+        Splat {
+            id,
+            mean: Vec2::new(x, y),
+            conic: [0.5, 0.0, 0.5],
+            depth,
+            radius_px: 6.0,
+            color,
+            opacity,
+        }
+    }
+
+    fn render(splats: Vec<Splat>) -> (Image, RasterStats) {
+        let set = super::super::preprocess::ProjectedSet {
+            splats,
+            processed: 0,
+            culled: 0,
+        };
+        let (img, stats, _) = render_mono(set, 32, 32, 16, &RasterConfig::default());
+        (img, stats)
+    }
+
+    #[test]
+    fn single_splat_peaks_at_center() {
+        let (img, stats) = render(vec![splat(0, 16.0, 16.0, 1.0, [1.0, 0.0, 0.0], 0.9)]);
+        let center = img.get(15, 15)[0]; // pixel center 15.5,15.5 ≈ mean
+        let edge = img.get(4, 15)[0];
+        assert!(center > 0.7, "center={center}");
+        assert!(edge < center);
+        assert!(stats.blends > 0);
+        assert!(stats.alpha_checks >= stats.blends);
+    }
+
+    #[test]
+    fn front_to_back_occlusion() {
+        // Opaque red in front of opaque green: red wins.
+        let (img, _) = render(vec![
+            splat(0, 16.0, 16.0, 1.0, [1.0, 0.0, 0.0], 0.99),
+            splat(1, 16.0, 16.0, 5.0, [0.0, 1.0, 0.0], 0.99),
+        ]);
+        let c = img.get(15, 15);
+        assert!(c[0] > 0.8, "red {c:?}");
+        assert!(c[1] < 0.2, "green should be occluded {c:?}");
+    }
+
+    #[test]
+    fn blend_order_matters() {
+        // Same two splats in reverse depth: green in front now.
+        let (img, _) = render(vec![
+            splat(0, 16.0, 16.0, 5.0, [1.0, 0.0, 0.0], 0.99),
+            splat(1, 16.0, 16.0, 1.0, [0.0, 1.0, 0.0], 0.99),
+        ]);
+        let c = img.get(15, 15);
+        assert!(c[1] > 0.8, "{c:?}");
+    }
+
+    #[test]
+    fn semi_transparent_mixes() {
+        let (img, _) = render(vec![
+            splat(0, 16.0, 16.0, 1.0, [1.0, 0.0, 0.0], 0.5),
+            splat(1, 16.0, 16.0, 5.0, [0.0, 1.0, 0.0], 0.99),
+        ]);
+        let c = img.get(15, 15);
+        assert!(c[0] > 0.2 && c[1] > 0.2, "both contribute: {c:?}");
+    }
+
+    #[test]
+    fn saturation_early_exit_counted() {
+        let splats: Vec<Splat> = (0..20)
+            .map(|i| splat(i, 16.0, 16.0, 1.0 + i as f32, [1.0; 3], 0.95))
+            .collect();
+        let (_, stats) = render(splats);
+        assert!(stats.saturated > 0);
+        // Early exit means far fewer blends than checks*pairs.
+        assert!(stats.blends < stats.alpha_checks);
+    }
+
+    #[test]
+    fn passed_flags_reflect_alpha_checks() {
+        let splats =
+            vec![splat(0, 8.0, 8.0, 1.0, [1.0; 3], 0.9), splat(1, 100.0, 100.0, 2.0, [1.0; 3], 0.9)];
+        // Tile (0,0) list contains only splat 0 (splat 1 far away).
+        let bins = TileBins::build(32, 32, 16, 0, &splats);
+        let list = bins.list(0, 0).to_vec();
+        assert_eq!(list, vec![0]);
+        let mut passed = vec![false; list.len()];
+        let mut img = Image::new(32, 32);
+        let mut stats = RasterStats::default();
+        raster_tile(
+            &splats,
+            &list,
+            0,
+            0,
+            16,
+            &mut img,
+            &RasterConfig::default(),
+            Some(&mut passed),
+            &mut stats,
+        );
+        assert_eq!(passed, vec![true]);
+    }
+
+    #[test]
+    fn empty_scene_is_black() {
+        let (img, stats) = render(vec![]);
+        assert!(img.data.iter().all(|&v| v == 0.0));
+        assert_eq!(stats.blends, 0);
+        assert_eq!(stats.tiles, 4);
+    }
+}

@@ -1,0 +1,71 @@
+//! Depth sorting (paper Fig 1 stage 3).
+//!
+//! The global order is (depth, id): the id tiebreak makes every
+//! downstream stage deterministic, which the stereo rasterizer's
+//! bit-accuracy proof relies on (identical order ⇒ identical blending).
+
+use super::preprocess::Splat;
+
+/// Sort splats in place by (depth ascending, id ascending).
+pub fn sort_splats(splats: &mut [Splat]) {
+    splats.sort_by(|a, b| {
+        a.depth
+            .partial_cmp(&b.depth)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+}
+
+/// True if `splats` are in canonical (depth, id) order.
+pub fn is_sorted(splats: &[Splat]) -> bool {
+    splats.windows(2).all(|w| {
+        w[0].depth < w[1].depth || (w[0].depth == w[1].depth && w[0].id <= w[1].id)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec2;
+    use crate::util::Prng;
+
+    fn splat(id: u32, depth: f32) -> Splat {
+        Splat {
+            id,
+            mean: Vec2::ZERO,
+            conic: [1.0, 0.0, 1.0],
+            depth,
+            radius_px: 1.0,
+            color: [0.0; 3],
+            opacity: 0.5,
+        }
+    }
+
+    #[test]
+    fn sorts_by_depth_then_id() {
+        let mut s = vec![splat(2, 5.0), splat(1, 5.0), splat(3, 1.0)];
+        sort_splats(&mut s);
+        assert_eq!(s.iter().map(|x| x.id).collect::<Vec<_>>(), vec![3, 1, 2]);
+        assert!(is_sorted(&s));
+    }
+
+    #[test]
+    fn random_sorting_is_canonical() {
+        let mut rng = Prng::new(9);
+        let mut s: Vec<Splat> =
+            (0..500).map(|i| splat(i, (rng.f32() * 10.0).round())).collect();
+        rng.shuffle(&mut s);
+        sort_splats(&mut s);
+        assert!(is_sorted(&s));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut s: Vec<Splat> = vec![];
+        sort_splats(&mut s);
+        assert!(is_sorted(&s));
+        let mut s = vec![splat(1, 1.0)];
+        sort_splats(&mut s);
+        assert!(is_sorted(&s));
+    }
+}

@@ -1,0 +1,162 @@
+//! Per-tile splat lists (the tile intersection stage of Fig 1's
+//! rasterization).
+//!
+//! Splats MUST be binned in sorted (depth, id) order so each tile list is
+//! depth-ordered by construction — the property the stereo merge relies
+//! on. The grid can be extended by `extra_cols` columns right of the
+//! visible image: with stereo, content near the left image's right edge
+//! shifts left into the right eye's view, so those splats must be binned
+//! even though the left eye never renders them (the widened FoV of paper
+//! Fig 13).
+
+use super::preprocess::Splat;
+use super::sort::is_sorted;
+
+/// Per-tile index lists over a (possibly extended) tile grid.
+#[derive(Debug, Clone)]
+pub struct TileBins {
+    /// Square tile side in pixels.
+    pub tile: u32,
+    /// Visible tile columns/rows.
+    pub tiles_x: u32,
+    pub tiles_y: u32,
+    /// Extra off-screen columns to the right.
+    pub extra_cols: u32,
+    /// Row-major lists (width = tiles_x + extra_cols), splat indices.
+    pub lists: Vec<Vec<u32>>,
+}
+
+impl TileBins {
+    /// Grid width including extension.
+    pub fn grid_x(&self) -> u32 {
+        self.tiles_x + self.extra_cols
+    }
+
+    pub fn list(&self, tx: u32, ty: u32) -> &[u32] {
+        &self.lists[(ty * self.grid_x() + tx) as usize]
+    }
+
+    /// Build bins for an image of `width`×`height` pixels. `splats` must
+    /// be in canonical (depth, id) order.
+    pub fn build(width: u32, height: u32, tile: u32, extra_cols: u32, splats: &[Splat]) -> Self {
+        debug_assert!(is_sorted(splats), "splats must be depth-sorted before binning");
+        let tiles_x = width.div_ceil(tile);
+        let tiles_y = height.div_ceil(tile);
+        let grid_x = tiles_x + extra_cols;
+        let mut bins = Self {
+            tile,
+            tiles_x,
+            tiles_y,
+            extra_cols,
+            lists: vec![Vec::new(); (grid_x * tiles_y) as usize],
+        };
+        let max_px_x = (grid_x * tile) as f32;
+        let max_px_y = height as f32;
+        for (i, s) in splats.iter().enumerate() {
+            let x0 = (s.mean.x - s.radius_px).max(0.0);
+            let x1 = (s.mean.x + s.radius_px).min(max_px_x - 1.0);
+            let y0 = (s.mean.y - s.radius_px).max(0.0);
+            let y1 = (s.mean.y + s.radius_px).min(max_px_y - 1.0);
+            if x1 < x0 || y1 < y0 {
+                continue; // fully outside the extended grid
+            }
+            let tx0 = (x0 as u32) / tile;
+            let tx1 = (x1 as u32) / tile;
+            let ty0 = (y0 as u32) / tile;
+            let ty1 = (y1 as u32) / tile;
+            for ty in ty0..=ty1 {
+                for tx in tx0..=tx1 {
+                    bins.lists[(ty * grid_x + tx) as usize].push(i as u32);
+                }
+            }
+        }
+        bins
+    }
+
+    /// Total (splat, tile) pairs — the rasterization workload measure.
+    pub fn total_pairs(&self) -> u64 {
+        self.lists.iter().map(|l| l.len() as u64).sum()
+    }
+
+    /// Longest tile list (load-imbalance diagnostics for the HW model).
+    pub fn max_list(&self) -> usize {
+        self.lists.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec2;
+
+    fn splat(id: u32, x: f32, y: f32, r: f32, depth: f32) -> Splat {
+        Splat {
+            id,
+            mean: Vec2::new(x, y),
+            conic: [1.0, 0.0, 1.0],
+            depth,
+            radius_px: r,
+            color: [0.0; 3],
+            opacity: 0.5,
+        }
+    }
+
+    #[test]
+    fn small_splat_lands_in_one_tile() {
+        let s = vec![splat(0, 24.0, 24.0, 2.0, 1.0)];
+        let bins = TileBins::build(64, 64, 16, 0, &s);
+        assert_eq!(bins.list(1, 1), &[0]);
+        assert_eq!(bins.total_pairs(), 1);
+    }
+
+    #[test]
+    fn large_splat_straddles_tiles() {
+        let s = vec![splat(0, 16.0, 16.0, 10.0, 1.0)];
+        let bins = TileBins::build(64, 64, 16, 0, &s);
+        // Covers tiles (0,0),(1,0),(0,1),(1,1).
+        assert_eq!(bins.total_pairs(), 4);
+        assert_eq!(bins.max_list(), 1);
+    }
+
+    #[test]
+    fn lists_preserve_sorted_order() {
+        let s = vec![
+            splat(5, 8.0, 8.0, 2.0, 1.0),
+            splat(2, 9.0, 9.0, 2.0, 2.0),
+            splat(9, 7.0, 7.0, 2.0, 3.0),
+        ];
+        let bins = TileBins::build(32, 32, 16, 0, &s);
+        assert_eq!(bins.list(0, 0), &[0, 1, 2], "indices in binning order");
+    }
+
+    #[test]
+    fn extended_columns_capture_offscreen_splats() {
+        // Splat centered beyond the right edge of a 64px image.
+        let s = vec![splat(0, 70.0, 8.0, 3.0, 1.0)];
+        let no_ext = TileBins::build(64, 64, 16, 0, &s);
+        assert_eq!(no_ext.total_pairs(), 0, "dropped without extension");
+        let ext = TileBins::build(64, 64, 16, 2, &s);
+        // Lands in extended column 4 (pixels 64..80).
+        assert_eq!(ext.list(4, 0), &[0]);
+        assert!(ext.list(3, 0).is_empty());
+    }
+
+    #[test]
+    fn out_of_grid_splats_dropped() {
+        let s = vec![splat(0, -50.0, 8.0, 3.0, 1.0), splat(1, 8.0, 500.0, 3.0, 1.0)];
+        let bins = TileBins::build(64, 64, 16, 1, &s);
+        // Both clamp into edge tiles because bbox clamping keeps
+        // overlapping ranges only; x∈[-53,-47] clamps to [0,-47]→empty.
+        assert_eq!(bins.total_pairs(), 0);
+    }
+
+    #[test]
+    fn tile_size_variants() {
+        let s = vec![splat(0, 31.0, 31.0, 1.0, 1.0)];
+        for tile in [4u32, 8, 16, 32] {
+            let bins = TileBins::build(64, 64, tile, 0, &s);
+            let t = 31 / tile;
+            assert!(bins.list(t, t).contains(&0), "tile={tile}");
+        }
+    }
+}

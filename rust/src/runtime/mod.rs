@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2 JAX
+//! graphs (which call the L1 Pallas kernels) to **HLO text** (the
+//! interchange the bundled xla_extension 0.5.1 accepts — serialized
+//! protos from jax ≥ 0.5 carry 64-bit ids it rejects), and this module
+//! compiles them once on the PJRT CPU client and invokes them per frame.
+
+pub mod pjrt;
+
+pub use pjrt::{ArtifactRuntime, PREPROCESS_CHUNK, RASTER_K, RASTER_TILE};

@@ -1,0 +1,212 @@
+//! xla-crate wrapper: compile-once, execute-per-frame.
+//!
+//! Adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+use crate::math::sh::SH_FLOATS;
+use crate::math::Vec2;
+use crate::render::preprocess::Splat;
+use crate::render::TileBins;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Gaussians per preprocess call (must match python/compile/aot.py).
+pub const PREPROCESS_CHUNK: usize = 4096;
+/// Splats per raster-tile call.
+pub const RASTER_K: usize = 256;
+/// Tile side of the raster artifact.
+pub const RASTER_TILE: usize = 16;
+
+/// Camera parameter vector layout shared with L2 (see model.py):
+/// [eye(3), conj-quat wxyz(4), fx, fy, cx, cy, near] = 12 floats.
+pub const CAM_PARAMS: usize = 12;
+
+/// Compiled artifact executables on the PJRT CPU client.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    preprocess: xla::PjRtLoadedExecutable,
+    raster: xla::PjRtLoadedExecutable,
+}
+
+impl ArtifactRuntime {
+    /// Load and compile `preprocess.hlo.txt` + `raster_tiles.hlo.txt`
+    /// from `dir`.
+    pub fn load(dir: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = Path::new(dir).join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path")?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compile {name}"))
+        };
+        Ok(Self {
+            preprocess: compile("preprocess.hlo.txt")?,
+            raster: compile("raster_tiles.hlo.txt")?,
+            client,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pack a camera into the shared parameter layout.
+    pub fn cam_params(cam: &crate::math::Camera) -> [f32; CAM_PARAMS] {
+        let q = cam.pose.orientation.conjugate();
+        [
+            cam.pose.position.x,
+            cam.pose.position.y,
+            cam.pose.position.z,
+            q.w,
+            q.x,
+            q.y,
+            q.z,
+            cam.intr.fx,
+            cam.intr.fy,
+            cam.intr.cx,
+            cam.intr.cy,
+            cam.intr.near,
+        ]
+    }
+
+    /// Run the preprocess artifact over one padded chunk of Gaussians.
+    /// Returns splats for entries whose `valid` output is > 0.
+    pub fn preprocess_chunk(
+        &self,
+        ids: &[u32],
+        pos: &[f32],     // n*3
+        scale: &[f32],   // n*3
+        rot: &[f32],     // n*4 (w,x,y,z)
+        opacity: &[f32], // n
+        sh: &[f32],      // n*48
+        cam: &[f32; CAM_PARAMS],
+    ) -> Result<Vec<Splat>> {
+        let n = ids.len();
+        anyhow::ensure!(n <= PREPROCESS_CHUNK, "chunk too large: {n}");
+        let pad = PREPROCESS_CHUNK;
+        let mut p = vec![0.0f32; pad * 3];
+        p[..n * 3].copy_from_slice(&pos[..n * 3]);
+        let mut sc = vec![1e-6f32; pad * 3];
+        sc[..n * 3].copy_from_slice(&scale[..n * 3]);
+        let mut r = vec![0.0f32; pad * 4];
+        r[..n * 4].copy_from_slice(&rot[..n * 4]);
+        // Identity quats for padding to keep math finite.
+        for i in n..pad {
+            r[i * 4] = 1.0;
+        }
+        let mut op = vec![0.0f32; pad];
+        op[..n].copy_from_slice(&opacity[..n]);
+        let mut s = vec![0.0f32; pad * SH_FLOATS];
+        s[..n * SH_FLOATS].copy_from_slice(&sh[..n * SH_FLOATS]);
+
+        let args = [
+            xla::Literal::vec1(&p).reshape(&[pad as i64, 3])?,
+            xla::Literal::vec1(&sc).reshape(&[pad as i64, 3])?,
+            xla::Literal::vec1(&r).reshape(&[pad as i64, 4])?,
+            xla::Literal::vec1(&op).reshape(&[pad as i64])?,
+            xla::Literal::vec1(&s).reshape(&[pad as i64, SH_FLOATS as i64])?,
+            xla::Literal::vec1(&cam[..]).reshape(&[CAM_PARAMS as i64])?,
+        ];
+        let result = self.preprocess.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 6, "preprocess artifact returned {}", outs.len());
+        let mean = outs[0].to_vec::<f32>()?;
+        let conic = outs[1].to_vec::<f32>()?;
+        let depth = outs[2].to_vec::<f32>()?;
+        let radius = outs[3].to_vec::<f32>()?;
+        let color = outs[4].to_vec::<f32>()?;
+        let valid = outs[5].to_vec::<f32>()?;
+
+        let mut splats = Vec::with_capacity(n);
+        for (i, &id) in ids.iter().enumerate() {
+            if valid[i] <= 0.5 {
+                continue;
+            }
+            splats.push(Splat {
+                id,
+                mean: Vec2::new(mean[i * 2], mean[i * 2 + 1]),
+                conic: [conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]],
+                depth: depth[i],
+                radius_px: radius[i],
+                color: [color[i * 3], color[i * 3 + 1], color[i * 3 + 2]],
+                opacity: opacity[i].clamp(0.0, 0.999),
+            });
+        }
+        Ok(splats)
+    }
+
+    /// Run the raster artifact for one tile: blends up to `RASTER_K`
+    /// depth-ordered splats into a `RASTER_TILE`² RGB tile.
+    pub fn raster_tile(
+        &self,
+        splats: &[Splat],
+        list: &[u32],
+        origin: (u32, u32),
+        alpha_min: f32,
+        t_min: f32,
+    ) -> Result<Vec<f32>> {
+        let k = RASTER_K;
+        let n = list.len().min(k);
+        let mut mean = vec![0.0f32; k * 2];
+        let mut conic = vec![1.0f32; k * 3];
+        let mut color = vec![0.0f32; k * 3];
+        let mut opacity = vec![0.0f32; k];
+        let mut valid = vec![0.0f32; k];
+        for (j, &si) in list.iter().take(n).enumerate() {
+            let s = &splats[si as usize];
+            mean[j * 2] = s.mean.x;
+            mean[j * 2 + 1] = s.mean.y;
+            conic[j * 3..j * 3 + 3].copy_from_slice(&s.conic);
+            color[j * 3..j * 3 + 3].copy_from_slice(&s.color);
+            opacity[j] = s.opacity;
+            valid[j] = 1.0;
+        }
+        let params = [origin.0 as f32, origin.1 as f32, alpha_min, t_min];
+        let args = [
+            xla::Literal::vec1(&mean).reshape(&[k as i64, 2])?,
+            xla::Literal::vec1(&conic).reshape(&[k as i64, 3])?,
+            xla::Literal::vec1(&color).reshape(&[k as i64, 3])?,
+            xla::Literal::vec1(&opacity).reshape(&[k as i64])?,
+            xla::Literal::vec1(&valid).reshape(&[k as i64])?,
+            xla::Literal::vec1(&params).reshape(&[4])?,
+        ];
+        let result = self.raster.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tile = result.to_tuple1()?;
+        Ok(tile.to_vec::<f32>()?)
+    }
+
+    /// Render a full image through the raster artifact (one call per
+    /// tile), for the e2e example and the runtime integration test.
+    pub fn render_image(
+        &self,
+        splats: &[Splat],
+        bins: &TileBins,
+        width: u32,
+        height: u32,
+        alpha_min: f32,
+        t_min: f32,
+    ) -> Result<crate::render::Image> {
+        anyhow::ensure!(bins.tile as usize == RASTER_TILE, "artifact tile is {RASTER_TILE}");
+        let mut img = crate::render::Image::new(width, height);
+        for ty in 0..bins.tiles_y {
+            for tx in 0..bins.tiles_x {
+                let list = bins.list(tx, ty);
+                let tile =
+                    self.raster_tile(splats, list, (tx * bins.tile, ty * bins.tile), alpha_min, t_min)?;
+                for py in 0..RASTER_TILE as u32 {
+                    for px in 0..RASTER_TILE as u32 {
+                        let (x, y) = (tx * bins.tile + px, ty * bins.tile + py);
+                        if x < width && y < height {
+                            let o = ((py as usize * RASTER_TILE) + px as usize) * 3;
+                            img.set(x, y, [tile[o], tile[o + 1], tile[o + 2]]);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(img)
+    }
+}

@@ -1,0 +1,433 @@
+//! Procedural city generator.
+//!
+//! Builds an irregular LoD tree directly: each tree node is a Gaussian
+//! summarizing a spatial box, children partition the box into jittered
+//! sub-boxes, and "air" above the procedural building height field is
+//! culled — which is what makes branching factors irregular, exactly as
+//! in real city-scale captures (HierGS-style trees). Generation is BFS,
+//! so the arena comes out in the level order the streaming traversal
+//! needs.
+
+use crate::gaussian::GaussianRecord;
+use crate::lod::tree::{LodTree, LodTreeBuilder, NO_PARENT};
+use crate::math::sh::{dc_from_color, SH_FLOATS};
+use crate::math::{Quat, Vec3};
+use crate::util::Prng;
+
+/// Generator parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CityParams {
+    pub target_gaussians: usize,
+    /// City footprint edge (meters).
+    pub extent_m: f32,
+    pub seed: u64,
+    /// Street-grid period (meters).
+    pub block_m: f32,
+    /// Max building height (meters).
+    pub max_height_m: f32,
+    /// Smallest feature worth refining (meters).
+    pub min_feature_m: f32,
+    /// Max children per node before air-culling.
+    pub max_branch: usize,
+}
+
+impl CityParams {
+    /// Sensible defaults for a target Gaussian budget.
+    pub fn for_target(target_gaussians: usize, extent_m: f32, seed: u64) -> Self {
+        Self {
+            target_gaussians: target_gaussians.max(1),
+            extent_m,
+            seed,
+            block_m: (extent_m / 12.0).clamp(8.0, 80.0),
+            max_height_m: (extent_m * 0.12).clamp(8.0, 120.0),
+            min_feature_m: 0.05,
+            max_branch: 6,
+        }
+    }
+}
+
+/// Axis-aligned box.
+#[derive(Debug, Clone, Copy)]
+struct Box3 {
+    lo: Vec3,
+    hi: Vec3,
+}
+
+impl Box3 {
+    fn center(&self) -> Vec3 {
+        (self.lo + self.hi) * 0.5
+    }
+    fn extent(&self) -> Vec3 {
+        self.hi - self.lo
+    }
+    fn longest_axis(&self) -> usize {
+        let e = self.extent();
+        if e.x >= e.y && e.x >= e.z {
+            0
+        } else if e.y >= e.z {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+/// The generator.
+pub struct CityGen {
+    pub params: CityParams,
+}
+
+/// Summary statistics of a generated scene.
+#[derive(Debug, Clone, Copy)]
+pub struct SceneStats {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub depth: u8,
+    pub bytes: u64,
+}
+
+impl CityGen {
+    pub fn new(params: CityParams) -> Self {
+        Self { params }
+    }
+
+    /// Deterministic per-block hash in [0,1).
+    fn block_hash(&self, bx: i32, bz: i32, salt: u64) -> f32 {
+        let mut h = (bx as u64).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (bz as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+            ^ salt.wrapping_mul(0x165667B19E3779F9)
+            ^ self.params.seed.wrapping_mul(0x27D4EB2F165667C5);
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xFF51AFD7ED558CCD);
+        h ^= h >> 33;
+        (h >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Building height field: 0 on streets, hash-modulated within blocks.
+    fn height_at(&self, x: f32, z: f32) -> f32 {
+        let p = self.params.block_m;
+        let bx = (x / p).floor() as i32;
+        let bz = (z / p).floor() as i32;
+        // Street margins: outer 15% of each block is road.
+        let fx = x / p - bx as f32;
+        let fz = z / p - bz as f32;
+        let in_building = (0.15..0.85).contains(&fx) && (0.15..0.85).contains(&fz);
+        if !in_building {
+            return 0.5; // street level clutter
+        }
+        // Some blocks are parks (low), most are buildings.
+        let kind = self.block_hash(bx, bz, 1);
+        if kind < 0.2 {
+            1.0 // park: trees/lawn
+        } else {
+            let h = self.block_hash(bx, bz, 2);
+            2.0 + h * h * self.params.max_height_m
+        }
+    }
+
+    /// True if the box plausibly contains scene content (not pure air).
+    fn occupied(&self, b: &Box3) -> bool {
+        if b.lo.y <= 0.6 {
+            return true; // touches the ground slab
+        }
+        // Sample the height field at the corners and center of the
+        // footprint; occupied if any column reaches the box bottom.
+        let c = b.center();
+        for (x, z) in [
+            (b.lo.x, b.lo.z),
+            (b.lo.x, b.hi.z),
+            (b.hi.x, b.lo.z),
+            (b.hi.x, b.hi.z),
+            (c.x, c.z),
+        ] {
+            if self.height_at(x, z) >= b.lo.y {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Façade/base color for a position: palette by block hash, vertical
+    /// gradient, streets gray, parks green.
+    fn base_color(&self, p: Vec3) -> [f32; 3] {
+        let bm = self.params.block_m;
+        let bx = (p.x / bm).floor() as i32;
+        let bz = (p.z / bm).floor() as i32;
+        let fx = p.x / bm - bx as f32;
+        let fz = p.z / bm - bz as f32;
+        let in_building = (0.15..0.85).contains(&fx) && (0.15..0.85).contains(&fz);
+        if !in_building || p.y < 0.4 {
+            let g = 0.25 + 0.1 * self.block_hash(bx, bz, 7);
+            return [g, g, g * 1.05]; // asphalt
+        }
+        let kind = self.block_hash(bx, bz, 1);
+        if kind < 0.2 {
+            return [0.15, 0.45 + 0.2 * self.block_hash(bx, bz, 8), 0.12]; // park
+        }
+        // Building palettes: brick / concrete / glass.
+        let pal = self.block_hash(bx, bz, 3);
+        let tint = self.block_hash(bx, bz, 4);
+        let height_shade = (1.0 - p.y / (self.params.max_height_m + 2.0) * 0.3).max(0.5);
+        let rgb = if pal < 0.35 {
+            [0.55 + 0.2 * tint, 0.30, 0.22] // brick
+        } else if pal < 0.7 {
+            let g = 0.5 + 0.25 * tint;
+            [g, g, g] // concrete
+        } else {
+            [0.25, 0.35 + 0.2 * tint, 0.55] // glass
+        };
+        [rgb[0] * height_shade, rgb[1] * height_shade, rgb[2] * height_shade]
+    }
+
+    /// Glass-like blocks get stronger view dependence (specular lobes).
+    fn specularity(&self, p: Vec3) -> f32 {
+        let bm = self.params.block_m;
+        let bx = (p.x / bm).floor() as i32;
+        let bz = (p.z / bm).floor() as i32;
+        if self.block_hash(bx, bz, 3) >= 0.7 {
+            0.25
+        } else {
+            0.05
+        }
+    }
+
+    fn make_record(&self, b: &Box3, rng: &mut Prng, parent_radius: f32) -> GaussianRecord {
+        let ext = b.extent();
+        let mut pos = b.center();
+        pos += Vec3::new(
+            rng.normal() * ext.x * 0.05,
+            rng.normal() * ext.y * 0.05,
+            rng.normal() * ext.z * 0.05,
+        );
+        // sigma = 0.55 * half-extent so the 3-sigma sphere covers the box.
+        let mut scale = ext * (0.5 * 0.55);
+        scale = scale.max(Vec3::splat(1e-4));
+        // Enforce radius monotonicity down the tree (validated invariant).
+        let max_scale = parent_radius / crate::gaussian::SIGMA_CUTOFF;
+        if scale.max_component() > max_scale {
+            let f = max_scale / scale.max_component();
+            scale = scale * f;
+        }
+        let rot = Quat::from_yaw_pitch(rng.range_f32(0.0, 0.4), rng.range_f32(-0.1, 0.1));
+        let color = self.base_color(pos);
+        let spec = self.specularity(pos);
+        let mut sh = [0.0f32; SH_FLOATS];
+        for c in 0..3 {
+            let noise = 1.0 + rng.normal() * 0.08;
+            sh[c * 16] = dc_from_color((color[c] * noise).clamp(0.02, 0.98));
+            // Degree-1 view dependence (specular-ish lobes).
+            for k in 1..4 {
+                sh[c * 16 + k] = rng.normal() * spec;
+            }
+            // Tiny degree-2/3 detail.
+            for k in 4..16 {
+                sh[c * 16 + k] = rng.normal() * spec * 0.2;
+            }
+        }
+        GaussianRecord {
+            pos,
+            scale,
+            rot,
+            opacity: rng.range_f32(0.55, 0.98),
+            sh,
+        }
+    }
+
+    /// Split a box into k jittered sub-boxes (recursive longest-axis
+    /// bisection).
+    fn partition(&self, b: Box3, k: usize, rng: &mut Prng) -> Vec<Box3> {
+        let mut parts = vec![b];
+        while parts.len() < k {
+            // Split the largest part.
+            let (idx, _) = parts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let e = p.extent();
+                    (i, e.x * e.y * e.z)
+                })
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let p = parts.swap_remove(idx);
+            let axis = p.longest_axis();
+            let t = rng.range_f32(0.35, 0.65);
+            let (mut a, mut c) = (p, p);
+            match axis {
+                0 => {
+                    let m = p.lo.x + (p.hi.x - p.lo.x) * t;
+                    a.hi.x = m;
+                    c.lo.x = m;
+                }
+                1 => {
+                    let m = p.lo.y + (p.hi.y - p.lo.y) * t;
+                    a.hi.y = m;
+                    c.lo.y = m;
+                }
+                _ => {
+                    let m = p.lo.z + (p.hi.z - p.lo.z) * t;
+                    a.hi.z = m;
+                    c.lo.z = m;
+                }
+            }
+            parts.push(a);
+            parts.push(c);
+        }
+        parts
+    }
+
+    /// Generate the LoD tree.
+    pub fn build(&self) -> LodTree {
+        let mut rng = Prng::new(self.params.seed);
+        let mut b = LodTreeBuilder::new();
+        let e = self.params.extent_m;
+        let root_box = Box3 {
+            lo: Vec3::new(0.0, 0.0, 0.0),
+            hi: Vec3::new(e, self.params.max_height_m + 2.0, e),
+        };
+        let root_rec = self.make_record(&root_box, &mut rng, f32::INFINITY);
+        b.push_node(&root_rec, NO_PARENT, 0);
+
+        // BFS frontier of (node id, box).
+        let mut frontier: Vec<(u32, Box3)> = vec![(0, root_box)];
+        let target = self.params.target_gaussians;
+        while !frontier.is_empty() && b.len() < target {
+            let mut next = Vec::with_capacity(frontier.len() * 3);
+            for (node, nbox) in frontier.drain(..) {
+                if b.len() >= target {
+                    break;
+                }
+                let ext = nbox.extent();
+                if ext.max_component() < self.params.min_feature_m {
+                    continue; // finest detail reached: leaf
+                }
+                let k = rng.range_usize(2, self.params.max_branch);
+                let parts = self.partition(nbox, k, &mut rng);
+                let level = b.level(node) + 1;
+                let parent_radius = b.radius(node);
+                let first = b.len() as u32;
+                let mut count = 0u32;
+                for part in parts {
+                    if !self.occupied(&part) {
+                        continue; // air-culling makes branching irregular
+                    }
+                    let rec = self.make_record(&part, &mut rng, parent_radius);
+                    let id = b.push_node(&rec, node, level);
+                    next.push((id, part));
+                    count += 1;
+                }
+                if count > 0 {
+                    b.set_children(node, first, count);
+                }
+            }
+            frontier = next;
+        }
+        b.build()
+    }
+
+    /// Build and return summary statistics.
+    pub fn build_with_stats(&self) -> (LodTree, SceneStats) {
+        let t = self.build();
+        let stats = SceneStats {
+            nodes: t.len(),
+            leaves: t.leaf_count(),
+            depth: t.depth(),
+            bytes: t.byte_size(),
+        };
+        (t, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    fn small_params(target: usize, seed: u64) -> CityParams {
+        CityParams::for_target(target, 100.0, seed)
+    }
+
+    #[test]
+    fn builds_valid_tree() {
+        let (t, stats) = CityGen::new(small_params(5000, 1)).build_with_stats();
+        t.validate().unwrap();
+        assert!(stats.nodes >= 4000, "nodes={}", stats.nodes);
+        assert!(stats.depth >= 4);
+        assert!(stats.leaves > stats.nodes / 3);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = CityGen::new(small_params(2000, 9)).build();
+        let c = CityGen::new(small_params(2000, 9)).build();
+        assert_eq!(a.len(), c.len());
+        assert_eq!(a.gaussians.pos, c.gaussians.pos);
+        assert_eq!(a.first_child, c.first_child);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = CityGen::new(small_params(2000, 1)).build();
+        let c = CityGen::new(small_params(2000, 2)).build();
+        assert_ne!(a.gaussians.pos, c.gaussians.pos);
+    }
+
+    #[test]
+    fn node_count_near_target() {
+        for target in [500usize, 5_000, 20_000] {
+            let t = CityGen::new(small_params(target, 3)).build();
+            let n = t.len();
+            // BFS stops once the budget is crossed; overshoot bounded by
+            // one frontier expansion.
+            assert!(n >= target, "n={n} target={target}");
+            assert!(n < target + target / 2 + 64, "n={n} target={target}");
+        }
+    }
+
+    #[test]
+    fn radii_shrink_down_the_tree() {
+        let t = CityGen::new(small_params(3000, 5)).build();
+        for i in 0..t.len() as u32 {
+            for c in t.children(i) {
+                assert!(t.radius[c as usize] <= t.radius[i as usize] * 1.0001);
+            }
+        }
+    }
+
+    #[test]
+    fn branching_is_irregular() {
+        let t = CityGen::new(small_params(10_000, 4)).build();
+        let mut counts = std::collections::BTreeSet::new();
+        for i in 0..t.len() as u32 {
+            if !t.is_leaf(i) {
+                counts.insert(t.child_count[i as usize]);
+            }
+        }
+        assert!(counts.len() >= 3, "branching factors: {counts:?}");
+    }
+
+    #[test]
+    fn height_field_has_streets_and_buildings() {
+        let g = CityGen::new(small_params(100, 1));
+        let p = g.params.block_m;
+        // Block center should usually be taller than street corners.
+        let mut taller = 0;
+        for i in 0..8 {
+            let cx = (i as f32 + 0.5) * p;
+            let h_center = g.height_at(cx, cx);
+            let h_street = g.height_at(i as f32 * p + 0.02 * p, cx);
+            if h_center > h_street {
+                taller += 1;
+            }
+        }
+        assert!(taller >= 5, "only {taller}/8 blocks taller than streets");
+    }
+
+    #[test]
+    fn prop_valid_across_sizes() {
+        check("citygen validates", Config { cases: 10, seed: 77 }, |rng| {
+            let target = rng.range_usize(100, 3000);
+            let t = CityGen::new(small_params(target, rng.next_u64())).build();
+            t.validate().unwrap();
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic scene substrate.
+//!
+//! The paper evaluates on six datasets (T&T, DB, M360, UrbanScene3D,
+//! Mega-NeRF, HierGS) that are not redistributable here; `citygen`
+//! procedurally builds LoD-tree scenes with the same *structural*
+//! properties (irregular hierarchy, spatial locality, view-dependent
+//! color), and `registry` pins one scale point per paper dataset. See
+//! DESIGN.md §Substitutions.
+
+pub mod citygen;
+pub mod registry;
+
+pub use citygen::{CityGen, CityParams};
+pub use registry::{dataset, DatasetSpec, ALL_DATASETS, LARGE_DATASETS, SMALL_DATASETS};

@@ -1,0 +1,158 @@
+//! Dataset registry: one synthetic scale point per paper dataset.
+//!
+//! `sim_gaussians` is what we instantiate locally (kept tractable);
+//! `paper_full_gaussians` is the full-scale count implied by the paper's
+//! memory figures (Fig 2; HierGS peaks at 66 GB ≈ 280 M Gaussians at our
+//! 236 B/Gaussian layout) and is used when reporting full-scale memory
+//! footprints.
+
+use super::citygen::CityParams;
+
+/// A named synthetic dataset specification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Paper analogue ("Tanks&Temples", ...).
+    pub analogue: &'static str,
+    pub large_scale: bool,
+    /// Gaussians instantiated in simulation.
+    pub sim_gaussians: usize,
+    /// Full-scale Gaussian count for memory extrapolation (Fig 2).
+    pub paper_full_gaussians: u64,
+    /// City footprint edge in meters.
+    pub extent_m: f32,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn city_params(&self, override_count: usize) -> CityParams {
+        let target = if override_count > 0 { override_count } else { self.sim_gaussians };
+        CityParams::for_target(target, self.extent_m, self.seed)
+    }
+}
+
+/// Small-scale datasets (paper: T&T, DB, M360).
+pub const SMALL_DATASETS: [DatasetSpec; 3] = [
+    DatasetSpec {
+        name: "tnt",
+        analogue: "Tanks&Temples",
+        large_scale: false,
+        sim_gaussians: 60_000,
+        paper_full_gaussians: 1_500_000,
+        extent_m: 60.0,
+        seed: 101,
+    },
+    DatasetSpec {
+        name: "db",
+        analogue: "Deep Blending",
+        large_scale: false,
+        sim_gaussians: 80_000,
+        paper_full_gaussians: 2_500_000,
+        extent_m: 40.0,
+        seed: 102,
+    },
+    DatasetSpec {
+        name: "m360",
+        analogue: "Mip-NeRF 360",
+        large_scale: false,
+        sim_gaussians: 100_000,
+        paper_full_gaussians: 4_000_000,
+        extent_m: 80.0,
+        seed: 103,
+    },
+];
+
+/// Large-scale datasets (paper: UrbanScene3D, Mega-NeRF, HierGS).
+pub const LARGE_DATASETS: [DatasetSpec; 3] = [
+    DatasetSpec {
+        name: "urban",
+        analogue: "UrbanScene3D",
+        large_scale: true,
+        sim_gaussians: 600_000,
+        paper_full_gaussians: 60_000_000,
+        extent_m: 600.0,
+        seed: 201,
+    },
+    DatasetSpec {
+        name: "mega",
+        analogue: "Mega-NeRF",
+        large_scale: true,
+        sim_gaussians: 900_000,
+        paper_full_gaussians: 90_000_000,
+        extent_m: 900.0,
+        seed: 202,
+    },
+    DatasetSpec {
+        name: "hiergs",
+        analogue: "HierGS (city-scale)",
+        large_scale: true,
+        sim_gaussians: 1_500_000,
+        paper_full_gaussians: 280_000_000,
+        extent_m: 1500.0,
+        seed: 203,
+    },
+];
+
+/// All datasets, small then large (paper figure ordering).
+pub const ALL_DATASETS: [DatasetSpec; 6] = [
+    SMALL_DATASETS[0],
+    SMALL_DATASETS[1],
+    SMALL_DATASETS[2],
+    LARGE_DATASETS[0],
+    LARGE_DATASETS[1],
+    LARGE_DATASETS[2],
+];
+
+/// Look up a dataset by registry name.
+pub fn dataset(name: &str) -> anyhow::Result<DatasetSpec> {
+    ALL_DATASETS
+        .iter()
+        .find(|d| d.name == name)
+        .copied()
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown dataset {name:?}; known: {}",
+                ALL_DATASETS.map(|d| d.name).join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_known_and_unknown() {
+        assert_eq!(dataset("hiergs").unwrap().analogue, "HierGS (city-scale)");
+        assert!(dataset("nope").is_err());
+    }
+
+    #[test]
+    fn large_datasets_exceed_vr_memory_at_full_scale() {
+        // The premise of the paper (Fig 2): full-scale large scenes exceed
+        // the <12 GB capacity of VR devices.
+        const VR_CAPACITY: u64 = 12 * (1 << 30);
+        for d in LARGE_DATASETS {
+            let bytes = d.paper_full_gaussians * crate::gaussian::BYTES_PER_GAUSSIAN as u64;
+            assert!(bytes > VR_CAPACITY, "{} should exceed VR memory", d.name);
+        }
+        for d in SMALL_DATASETS {
+            let bytes = d.paper_full_gaussians * crate::gaussian::BYTES_PER_GAUSSIAN as u64;
+            assert!(bytes < VR_CAPACITY, "{} should fit VR memory", d.name);
+        }
+    }
+
+    #[test]
+    fn hiergs_matches_66gb_claim() {
+        let d = dataset("hiergs").unwrap();
+        let gb = d.paper_full_gaussians as f64 * crate::gaussian::BYTES_PER_GAUSSIAN as f64 / 1e9;
+        assert!((60.0..75.0).contains(&gb), "HierGS full scale = {gb:.1} GB");
+    }
+
+    #[test]
+    fn override_count_respected() {
+        let d = dataset("tnt").unwrap();
+        assert_eq!(d.city_params(1234).target_gaussians, 1234);
+        assert_eq!(d.city_params(0).target_gaussians, d.sim_gaussians);
+    }
+}

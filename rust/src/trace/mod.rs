@@ -1,0 +1,212 @@
+//! VR pose-trace generator.
+//!
+//! The paper records real headset traces; we synthesize them from a
+//! head-motion model with VR-literature velocity ranges (Blandino et al.
+//! [4], Hendicott et al. [39]): smooth walking translation (~1.4 m/s)
+//! plus yaw/pitch angular velocity that is an Ornstein–Uhlenbeck process
+//! with occasional saccade-like bursts. Traces are sampled at the VR
+//! frame rate (90 FPS).
+
+use crate::math::{Pose, Vec3};
+use crate::util::Prng;
+
+/// Kind of camera path through the scene.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Street-level walkthrough (local views; the paper's main scenario).
+    Walk,
+    /// Bird's-eye flyover (global views exercising coarse LoD).
+    Flyover,
+    /// Stand in place, look around (pure rotation; zero Δcut expected).
+    LookAround,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceParams {
+    pub kind: TraceKind,
+    pub fps: f32,
+    /// Mean walking speed (m/s).
+    pub speed_mps: f32,
+    /// RMS yaw angular velocity (rad/s). ~20°/s typical, saccades higher.
+    pub yaw_rate_rms: f32,
+    /// Probability per second of a rapid head turn (saccade burst).
+    pub saccade_rate_hz: f32,
+    pub seed: u64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        Self {
+            kind: TraceKind::Walk,
+            fps: 90.0,
+            speed_mps: 1.4,
+            yaw_rate_rms: 0.35, // ≈ 20°/s
+            saccade_rate_hz: 0.25,
+            seed: 42,
+        }
+    }
+}
+
+/// Generates a deterministic sequence of head poses inside a city of the
+/// given extent.
+pub struct PoseTrace {
+    params: TraceParams,
+    extent: f32,
+    eye_height: f32,
+}
+
+impl PoseTrace {
+    pub fn new(params: TraceParams, extent_m: f32) -> Self {
+        Self { params, extent: extent_m, eye_height: 1.7 }
+    }
+
+    /// Generate `n` poses at the configured frame rate.
+    pub fn generate(&self, n: usize) -> Vec<Pose> {
+        let p = &self.params;
+        let dt = 1.0 / p.fps;
+        let mut rng = Prng::new(p.seed);
+        let mut poses = Vec::with_capacity(n);
+
+        // Start mid-city heading along +Z.
+        let mut pos = Vec3::new(self.extent * 0.5, self.eye_height, self.extent * 0.35);
+        if p.kind == TraceKind::Flyover {
+            pos.y = self.extent * 0.4; // bird's-eye altitude
+        }
+        let mut yaw = rng.range_f32(0.0, std::f32::consts::TAU);
+        let mut pitch = if p.kind == TraceKind::Flyover { 0.9 } else { 0.0 };
+        let mut yaw_rate = 0.0f32;
+        let mut pitch_rate = 0.0f32;
+        // Saccade state: remaining frames and rate.
+        let mut saccade_frames = 0u32;
+        let mut saccade_rate = 0.0f32;
+
+        for _ in 0..n {
+            // Ornstein–Uhlenbeck angular velocity (smooth wander).
+            let theta = 2.0; // mean reversion (1/s)
+            yaw_rate += (-theta * yaw_rate) * dt
+                + p.yaw_rate_rms * (2.0 * theta * dt).sqrt() * rng.normal();
+            pitch_rate += (-theta * pitch_rate) * dt
+                + p.yaw_rate_rms * 0.4 * (2.0 * theta * dt).sqrt() * rng.normal();
+            // Saccade bursts: rapid reorientation up to ~150°/s.
+            if saccade_frames == 0 && rng.chance(p.saccade_rate_hz * dt) {
+                saccade_frames = (0.3 * p.fps) as u32;
+                saccade_rate = rng.range_f32(1.2, 2.6) * if rng.chance(0.5) { 1.0 } else { -1.0 };
+            }
+            let mut eff_yaw_rate = yaw_rate;
+            if saccade_frames > 0 {
+                eff_yaw_rate += saccade_rate;
+                saccade_frames -= 1;
+            }
+            yaw += eff_yaw_rate * dt;
+            pitch = (pitch + pitch_rate * dt).clamp(-0.6, 1.2);
+
+            // Translation.
+            match p.kind {
+                TraceKind::Walk | TraceKind::Flyover => {
+                    let speed = if p.kind == TraceKind::Flyover {
+                        p.speed_mps * 8.0
+                    } else {
+                        p.speed_mps
+                    };
+                    // Move along the heading (walking where you look).
+                    let dir = Vec3::new(yaw.sin(), 0.0, yaw.cos());
+                    pos += dir * (speed * dt);
+                    // Reflect at city bounds.
+                    let margin = self.extent * 0.05;
+                    if pos.x < margin || pos.x > self.extent - margin {
+                        yaw = -yaw;
+                        pos.x = pos.x.clamp(margin, self.extent - margin);
+                    }
+                    if pos.z < margin || pos.z > self.extent - margin {
+                        yaw = std::f32::consts::PI - yaw;
+                        pos.z = pos.z.clamp(margin, self.extent - margin);
+                    }
+                }
+                TraceKind::LookAround => {}
+            }
+            poses.push(Pose::looking(pos, yaw, if p.kind == TraceKind::Flyover { pitch.max(0.6) } else { pitch }));
+        }
+        poses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let t = PoseTrace::new(TraceParams::default(), 200.0);
+        let a = t.generate(100);
+        let b = t.generate(100);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.position, y.position);
+            assert_eq!(x.orientation, y.orientation);
+        }
+    }
+
+    #[test]
+    fn walk_speed_close_to_configured() {
+        let p = TraceParams::default();
+        let t = PoseTrace::new(p, 500.0);
+        let poses = t.generate(900); // 10 s
+        let mut dist = 0.0;
+        for w in poses.windows(2) {
+            dist += (w[1].position - w[0].position).norm();
+        }
+        let speed = dist / 10.0;
+        assert!((speed - p.speed_mps).abs() < 0.2, "speed={speed}");
+    }
+
+    #[test]
+    fn per_frame_translation_is_small() {
+        // At 90 FPS and 1.4 m/s, consecutive frames move ~1.6 cm — the
+        // source of the temporal similarity the paper exploits (Fig 7).
+        let t = PoseTrace::new(TraceParams::default(), 500.0);
+        let poses = t.generate(300);
+        for w in poses.windows(2) {
+            let d = (w[1].position - w[0].position).norm();
+            assert!(d < 0.05, "frame-to-frame translation {d} too large");
+        }
+    }
+
+    #[test]
+    fn stays_in_bounds() {
+        let extent = 120.0;
+        let t = PoseTrace::new(TraceParams { seed: 5, ..Default::default() }, extent);
+        for pose in t.generate(5000) {
+            assert!(pose.position.x >= 0.0 && pose.position.x <= extent);
+            assert!(pose.position.z >= 0.0 && pose.position.z <= extent);
+        }
+    }
+
+    #[test]
+    fn lookaround_never_translates() {
+        let t = PoseTrace::new(
+            TraceParams { kind: TraceKind::LookAround, ..Default::default() },
+            100.0,
+        );
+        let poses = t.generate(200);
+        for w in poses.windows(2) {
+            assert_eq!(w[0].position, w[1].position);
+        }
+        // But it does rotate.
+        let a = poses[0].forward();
+        let b = poses[199].forward();
+        assert!(a.dot(b) < 0.9999);
+    }
+
+    #[test]
+    fn flyover_is_high_and_fast() {
+        let t = PoseTrace::new(
+            TraceParams { kind: TraceKind::Flyover, seed: 8, ..Default::default() },
+            400.0,
+        );
+        let poses = t.generate(180);
+        assert!(poses[0].position.y > 50.0);
+        let dist = (poses[179].position - poses[0].position).norm();
+        assert!(dist > 10.0, "flyover covered only {dist} m");
+    }
+}

@@ -1,0 +1,115 @@
+//! Micro-bench harness for the `fig*` benches (criterion is unavailable
+//! offline).
+//!
+//! Measures wall time with warmup, reports mean/median/min over samples,
+//! and prevents dead-code elimination via a volatile-read black box.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // Stable equivalent of std::hint::black_box for older toolchains; the
+    // read_volatile of a stack copy defeats value propagation.
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+/// Result of a timed run.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub iters: u32,
+}
+
+impl Sample {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Bench driver with time budget control via env:
+/// `NEBULA_BENCH_SAMPLES` (default 10), `NEBULA_BENCH_WARMUP` (default 2).
+pub struct Bencher {
+    samples: u32,
+    warmup: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        let samples = std::env::var("NEBULA_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        let warmup =
+            std::env::var("NEBULA_BENCH_WARMUP").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+        Self { samples, warmup }
+    }
+}
+
+impl Bencher {
+    pub fn new(samples: u32, warmup: u32) -> Self {
+        Self { samples, warmup }
+    }
+
+    /// Time `f`, which should perform one complete unit of work per call.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Sample {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples.max(1) {
+            let t = Instant::now();
+            black_box(f());
+            times.push(t.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        Sample {
+            mean: total / times.len() as u32,
+            median: times[times.len() / 2],
+            min: times[0],
+            iters: times.len() as u32,
+        }
+    }
+}
+
+/// Print a standard bench header so all figure benches look uniform.
+pub fn bench_header(fig: &str, what: &str) {
+    println!("\n=== {fig}: {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::new(3, 1);
+        let s = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min > Duration::ZERO);
+        assert!(s.mean >= s.min);
+        assert_eq!(s.iters, 3);
+    }
+
+    #[test]
+    fn black_box_passthrough() {
+        assert_eq!(black_box(42), 42);
+        let v = vec![1, 2, 3];
+        assert_eq!(black_box(v.clone()), v);
+    }
+}

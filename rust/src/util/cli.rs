@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option access with a default; panics with a clear message on
+    /// unparsable input (CLI misuse is a user error, not a bug).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?} as {}", std::any::type_name::<T>())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_forms() {
+        // Convention: `--key value` consumes the next token, so boolean
+        // flags must come last or use no trailing token.
+        let a = args(&["run", "extra", "--scene", "city-s", "--frames=10", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("scene"), Some("city-s"));
+        assert_eq!(a.get_parse_or::<u32>("frames", 0), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args(&["--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn default_on_missing() {
+        let a = args(&[]);
+        assert_eq!(a.get_parse_or::<f64>("tau", 2.5), 2.5);
+        assert_eq!(a.get_or("mode", "exact"), "exact");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_typed_value_panics() {
+        let a = args(&["--frames", "ten"]);
+        a.get_parse_or::<u32>("frames", 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities.
+//!
+//! The build is fully offline against a fixed vendor set (no `rand`,
+//! `proptest`, `clap`, or `criterion`), so this module provides the
+//! deterministic PRNG, property-test harness, CLI parser, table printer
+//! and timing helpers the rest of the crate relies on.
+
+pub mod bench;
+pub mod cli;
+pub mod prng;
+pub mod prop;
+pub mod table;
+pub mod timer;
+
+pub use prng::Prng;
+pub use timer::{StageTimer, Stopwatch};

@@ -1,0 +1,139 @@
+//! Wall-clock timing helpers used by the coordinator metrics and by the
+//! bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates per-stage wall time across many frames; used for the
+/// breakdown figures and the scheduler's metrics.
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and charge it to `stage`.
+    pub fn time<T>(&mut self, stage: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(stage, t.elapsed());
+        out
+    }
+
+    /// Charge an externally measured duration to `stage`.
+    pub fn add(&mut self, stage: &'static str, d: Duration) {
+        *self.totals.entry(stage).or_default() += d;
+        *self.counts.entry(stage).or_default() += 1;
+    }
+
+    /// Total time charged to `stage`.
+    pub fn total(&self, stage: &str) -> Duration {
+        self.totals.get(stage).copied().unwrap_or_default()
+    }
+
+    /// Mean time per invocation of `stage`.
+    pub fn mean_ms(&self, stage: &str) -> f64 {
+        let n = self.counts.get(stage).copied().unwrap_or(0);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total(stage).as_secs_f64() * 1e3 / n as f64
+    }
+
+    /// All stages with (total seconds, count), insertion-stable by name.
+    pub fn stages(&self) -> Vec<(&'static str, f64, u64)> {
+        self.totals
+            .iter()
+            .map(|(k, v)| (*k, v.as_secs_f64(), self.counts[k]))
+            .collect()
+    }
+
+    /// Fraction of the summed total charged to `stage`.
+    pub fn fraction(&self, stage: &str) -> f64 {
+        let sum: f64 = self.totals.values().map(|d| d.as_secs_f64()).sum();
+        if sum == 0.0 {
+            return 0.0;
+        }
+        self.total(stage).as_secs_f64() / sum
+    }
+
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_timer_accumulates() {
+        let mut t = StageTimer::new();
+        t.add("a", Duration::from_millis(10));
+        t.add("a", Duration::from_millis(20));
+        t.add("b", Duration::from_millis(30));
+        assert_eq!(t.total("a"), Duration::from_millis(30));
+        assert!((t.mean_ms("a") - 15.0).abs() < 1e-9);
+        assert!((t.fraction("b") - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let mut t = StageTimer::new();
+        let v = t.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(t.stages().len(), 1);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = StageTimer::new();
+        a.add("s", Duration::from_millis(5));
+        let mut b = StageTimer::new();
+        b.add("s", Duration::from_millis(7));
+        a.merge(&b);
+        assert_eq!(a.total("s"), Duration::from_millis(12));
+    }
+}

@@ -1,0 +1,109 @@
+//! Integration: cloud/client protocol over realistic walks — consistency,
+//! bounded client memory (the reuse-window GC), and decode fidelity.
+
+use nebula::benchkit;
+use nebula::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use nebula::config::PipelineConfig;
+use nebula::lod::{LodSearch, TemporalSearch};
+use nebula::manage::protocol::{ClientEndpoint, CloudEndpoint};
+use nebula::scene::{dataset, CityGen};
+
+fn endpoints(
+    tree: &nebula::lod::LodTree,
+    reuse: u32,
+) -> (CloudEndpoint<'_>, ClientEndpoint) {
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        CompressionMode::Quantized,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 3000, ..Default::default() }.train(&tree.gaussians.sh),
+    );
+    let cloud = CloudEndpoint::new(tree, codec, reuse);
+    let client =
+        ClientEndpoint::from_init(&cloud.scene_init(), CompressionMode::Quantized, reuse).unwrap();
+    (cloud, client)
+}
+
+#[test]
+fn long_walk_keeps_views_consistent_and_memory_bounded() {
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(40_000)).build();
+    let pl = PipelineConfig { reuse_threshold: 8, ..benchkit::calibrated_pipeline(&tree, &spec) };
+    let (mut cloud, mut client) = endpoints(&tree, pl.reuse_threshold);
+    let mut search = TemporalSearch::for_tree(&tree);
+    let poses = benchkit::walk_trace(&spec, 480);
+
+    let mut peak = 0usize;
+    let mut max_cut = 0usize;
+    for pose in poses.iter().step_by(pl.lod_interval as usize) {
+        let cut = search.search(&tree, &benchkit::query_at(pose, &pl));
+        let msg = cloud.publish_cut(&cut.nodes);
+        client.apply(&msg).unwrap();
+        assert_eq!(cloud.table.resident_ids(), client.store.resident_ids());
+        assert_eq!(client.store.cut_ids(), cut.nodes);
+        peak = peak.max(client.store.len());
+        max_cut = max_cut.max(cut.len());
+    }
+    // The reuse-window GC keeps the store within a small factor of the
+    // working set (the cut), rather than accumulating the whole walk.
+    assert!(peak < max_cut * 2, "store {peak} vs max cut {max_cut}");
+    assert!(peak >= max_cut, "store must cover the cut");
+}
+
+#[test]
+fn steady_state_deltas_are_small() {
+    let spec = dataset("mega").unwrap();
+    let tree = CityGen::new(spec.city_params(30_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let (mut cloud, mut client) = endpoints(&tree, pl.reuse_threshold);
+    let mut search = TemporalSearch::for_tree(&tree);
+    let poses = benchkit::walk_trace(&spec, 120);
+
+    let mut sizes = Vec::new();
+    for pose in poses.iter().step_by(pl.lod_interval as usize) {
+        let cut = search.search(&tree, &benchkit::query_at(pose, &pl));
+        let msg = cloud.publish_cut(&cut.nodes);
+        sizes.push(msg.payload.count);
+        client.apply(&msg).unwrap();
+    }
+    let initial = sizes[0];
+    let steady: f64 =
+        sizes[1..].iter().map(|&s| s as f64).sum::<f64>() / (sizes.len() - 1) as f64;
+    assert!(
+        steady < initial as f64 * 0.1,
+        "steady Δ {} vs initial {}",
+        steady,
+        initial
+    );
+}
+
+#[test]
+fn decoded_gaussians_render_like_originals() {
+    // Compression quality end-to-end: render a frame from the client's
+    // decoded store and from the pristine tree; images must be close.
+    use nebula::math::{Intrinsics, StereoCamera};
+    use nebula::render::raster::RasterConfig;
+    use nebula::render::stereo::{render_stereo, StereoMode};
+
+    let spec = dataset("tnt").unwrap();
+    let tree = CityGen::new(spec.city_params(20_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let (mut cloud, mut client) = endpoints(&tree, pl.reuse_threshold);
+    let pose = benchkit::walk_trace(&spec, 1)[0];
+    let cut = benchkit::cut_at(&tree, &pose, &pl);
+    let msg = cloud.publish_cut(&cut);
+    client.apply(&msg).unwrap();
+
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+    let cfg = RasterConfig::default();
+
+    let pristine = benchkit::queue_for(&tree, &cut);
+    let a = render_stereo(&cam, &benchkit::queue_refs(&pristine), 3, 16, &cfg, StereoMode::AlphaGated);
+
+    let decoded = client.store.render_queue();
+    let decoded_refs: Vec<_> = decoded.iter().map(|(id, g)| (*id, *g)).collect();
+    let b = render_stereo(&cam, &decoded_refs, 3, 16, &cfg, StereoMode::AlphaGated);
+
+    let psnr = a.left.psnr(&b.left);
+    assert!(psnr > 30.0, "decoded render degraded: {psnr:.1} dB");
+}

@@ -1,0 +1,111 @@
+//! Cross-stack integration: the AOT HLO artifacts (L2 JAX graphs calling
+//! the L1 Pallas kernel, compiled via PJRT) must reproduce the native
+//! rust pipeline numerically.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use nebula::math::{Camera, Intrinsics, Pose, Vec3};
+use nebula::render::raster::RasterConfig;
+use nebula::render::{preprocess_records, render_mono, TileBins};
+use nebula::runtime::{ArtifactRuntime, PREPROCESS_CHUNK};
+use nebula::scene::{CityGen, CityParams};
+
+fn runtime() -> Option<ArtifactRuntime> {
+    if !std::path::Path::new("artifacts/preprocess.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactRuntime::load("artifacts").expect("load artifacts"))
+}
+
+fn scene() -> (nebula::lod::LodTree, Camera) {
+    let tree = CityGen::new(CityParams::for_target(3000, 60.0, 31)).build();
+    let cam = Camera::new(
+        Pose::looking(Vec3::new(30.0, 1.7, 20.0), 0.6, 0.0),
+        Intrinsics::vr_eye_scaled(16),
+    );
+    (tree, cam)
+}
+
+#[test]
+fn hlo_preprocess_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (tree, cam) = scene();
+    let n = tree.len().min(PREPROCESS_CHUNK);
+    let ids: Vec<u32> = (0..n as u32).collect();
+
+    // Native path.
+    let records: Vec<_> = ids.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
+    let refs: Vec<(u32, &nebula::gaussian::GaussianRecord)> =
+        records.iter().map(|(id, g)| (*id, g)).collect();
+    let native = preprocess_records(&cam, &cam, &refs, 3);
+
+    // HLO path.
+    let pos: Vec<f32> = ids.iter().flat_map(|&i| tree.gaussians.pos[i as usize].to_array()).collect();
+    let scale: Vec<f32> =
+        ids.iter().flat_map(|&i| tree.gaussians.scale[i as usize].to_array()).collect();
+    let rot: Vec<f32> = ids.iter().flat_map(|&i| tree.gaussians.rot[i as usize].to_array()).collect();
+    let opacity: Vec<f32> = ids.iter().map(|&i| tree.gaussians.opacity[i as usize]).collect();
+    let sh: Vec<f32> = ids.iter().flat_map(|&i| tree.gaussians.sh_of(i).to_vec()).collect();
+    let cam_params = ArtifactRuntime::cam_params(&cam);
+    let hlo =
+        rt.preprocess_chunk(&ids, &pos, &scale, &rot, &opacity, &sh, &cam_params).expect("hlo run");
+
+    // Same survivors (floating-point boundary flips tolerated at <1%),
+    // same numbers on the intersection.
+    let native_ids: std::collections::HashMap<u32, &nebula::render::Splat> =
+        native.splats.iter().map(|s| (s.id, s)).collect();
+    let hlo_ids: std::collections::HashSet<u32> = hlo.iter().map(|s| s.id).collect();
+    let only_native = native.splats.iter().filter(|s| !hlo_ids.contains(&s.id)).count();
+    let only_hlo = hlo.iter().filter(|s| !native_ids.contains_key(&s.id)).count();
+    let max_flips = 1 + native.splats.len() / 100;
+    assert!(only_native <= max_flips && only_hlo <= max_flips,
+        "cull disagreement: {only_native} native-only, {only_hlo} hlo-only of {}", native.splats.len());
+    let mut compared = 0;
+    for b in &hlo {
+        let Some(a) = native_ids.get(&b.id) else { continue };
+        compared += 1;
+        assert!((a.mean - b.mean).norm() < 0.05, "mean {:?} vs {:?}", a.mean, b.mean);
+        assert!((a.depth - b.depth).abs() < 1e-3);
+        for k in 0..3 {
+            let rel = (a.conic[k] - b.conic[k]).abs() / a.conic[0].abs().max(1e-3);
+            assert!(rel < 1e-2, "conic[{k}] {:?} vs {:?}", a.conic, b.conic);
+            assert!((a.color[k] - b.color[k]).abs() < 1e-3);
+        }
+        assert!((a.radius_px - b.radius_px).abs() <= 1.0);
+    }
+    assert!(compared > 100, "too few surviving splats compared: {compared}");
+}
+
+#[test]
+fn hlo_raster_matches_native_image() {
+    let Some(rt) = runtime() else { return };
+    let (tree, cam) = scene();
+    let ids: Vec<u32> = tree.leaves();
+    let records: Vec<_> = ids.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
+    let refs: Vec<(u32, &nebula::gaussian::GaussianRecord)> =
+        records.iter().map(|(id, g)| (*id, g)).collect();
+    let cfg = RasterConfig::default();
+    let set = preprocess_records(&cam, &cam, &refs, 3);
+    let splats_sorted = {
+        let mut s = set.clone();
+        nebula::render::sort::sort_splats(&mut s.splats);
+        s.splats
+    };
+    let (native_img, _, _) = render_mono(set, cam.intr.width, cam.intr.height, 16, &cfg);
+
+    let bins = TileBins::build(cam.intr.width, cam.intr.height, 16, 0, &splats_sorted);
+    let hlo_img = rt
+        .render_image(&splats_sorted, &bins, cam.intr.width, cam.intr.height, cfg.alpha_min, cfg.t_min)
+        .expect("hlo render");
+
+    let psnr = native_img.psnr(&hlo_img);
+    assert!(psnr > 55.0, "HLO image diverges from native: {psnr:.1} dB");
+}
+
+#[test]
+fn hlo_runtime_reports_platform() {
+    let Some(rt) = runtime() else { return };
+    let platform = rt.platform();
+    assert!(platform.to_lowercase().contains("cpu") || !platform.is_empty());
+}

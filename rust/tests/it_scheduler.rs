@@ -1,0 +1,106 @@
+//! Integration: end-to-end scheduler runs across variants — the Fig
+//! 18/19/22 machinery holds its qualitative guarantees.
+
+use nebula::benchkit;
+use nebula::coordinator::metrics::{PlatformKind, Variant};
+use nebula::coordinator::scheduler::{run_remote_simulation, run_simulation, SimParams};
+use nebula::scene::{dataset, CityGen};
+
+fn setup() -> (nebula::lod::LodTree, Vec<nebula::math::Pose>, SimParams) {
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    let poses = benchkit::walk_trace(&spec, 36);
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    (tree, poses, params)
+}
+
+#[test]
+fn fig18_ordering_holds() {
+    let (tree, poses, params) = setup();
+    let results: Vec<_> = benchkit::fig18_variants()
+        .iter()
+        .map(|v| run_simulation(&tree, &poses, v, &params))
+        .collect();
+    let gpu = &results[0];
+    let nebula = results.last().unwrap();
+    // Nebula is the fastest variant and beats the GPU baseline clearly.
+    for r in &results {
+        assert!(
+            nebula.mtp_ms <= r.mtp_ms * 1.001,
+            "{} ({:.2} ms) beat Nebula ({:.2} ms)",
+            r.variant,
+            r.mtp_ms,
+            nebula.mtp_ms
+        );
+    }
+    assert!(nebula.speedup_over(gpu) > 2.0, "speedup {:.1}", nebula.speedup_over(gpu));
+    // And it is the most energy-efficient accelerator variant.
+    assert!(nebula.client_energy_j < gpu.client_energy_j);
+}
+
+#[test]
+fn remote_scenario_is_network_limited() {
+    let (_, _, params) = setup();
+    let remote = run_remote_simulation(&params, nebula::net::VideoQuality::LossyHigh, 32);
+    assert!(remote.bandwidth_bps > 200e6, "video stream must be heavy");
+    assert!(remote.fps < 45.0, "100 Mbps link cannot sustain VR video");
+}
+
+#[test]
+fn ablation_axes_all_contribute() {
+    let (tree, poses, params) = setup();
+    let base = Variant {
+        name: "BASE".into(),
+        platform: PlatformKind::NebulaArch,
+        stereo: false,
+        compression: nebula::compress::CompressionMode::Raw,
+        temporal: false,
+    };
+    let mut cmp = base.clone();
+    cmp.name = "BASE+CMP".into();
+    cmp.compression = nebula::compress::CompressionMode::Quantized;
+    let mut cmp_ta = cmp.clone();
+    cmp_ta.name = "BASE+CMP+TA".into();
+    cmp_ta.temporal = true;
+    let all = Variant::nebula();
+
+    let r_base = run_simulation(&tree, &poses, &base, &params);
+    let r_cmp = run_simulation(&tree, &poses, &cmp, &params);
+    let r_ta = run_simulation(&tree, &poses, &cmp_ta, &params);
+    let r_all = run_simulation(&tree, &poses, &all, &params);
+
+    // CMP shrinks the wire; TA shrinks cloud visits; SR shrinks MTP.
+    assert!(r_cmp.initial_bytes < r_base.initial_bytes / 3);
+    assert!(r_ta.cloud_visits < r_cmp.cloud_visits);
+    assert!(r_all.mtp_ms <= r_ta.mtp_ms * 1.001);
+}
+
+#[test]
+fn bandwidth_insensitive_to_lod_interval() {
+    // Fig 24: halving w increases bandwidth only modestly. Needs a trace
+    // long enough to have real cut churn (short walks ship empty rounds
+    // whose fixed headers scale exactly with the round count).
+    let spec = dataset("tnt").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    // Fast motion through a dense small scene so Δcut payload (churn)
+    // dominates the per-round fixed headers.
+    let poses = nebula::trace::PoseTrace::new(
+        nebula::trace::TraceParams { speed_mps: 8.0, seed: 3, ..Default::default() },
+        spec.extent_m,
+    )
+    .generate(360);
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    let mut bws = Vec::new();
+    for w in [2u32, 4, 8] {
+        params.pipeline.lod_interval = w;
+        let r = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+        bws.push(r.bandwidth_bps.max(1.0));
+    }
+    // w=2 vs w=8: 4x more rounds must NOT mean 4x the bytes (the payload
+    // is churn-bound, not round-bound).
+    assert!(bws[0] < bws[2] * 3.0, "bw(w=2)={} bw(w=8)={}", bws[0], bws[2]);
+}

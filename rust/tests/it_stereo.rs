@@ -1,0 +1,108 @@
+//! Integration: stereo rasterization across datasets, poses and tile
+//! sizes — the §4.4 guarantees at system scale.
+
+use nebula::benchkit;
+use nebula::math::{Intrinsics, StereoCamera};
+use nebula::render::raster::RasterConfig;
+use nebula::render::sort::sort_splats;
+use nebula::render::stereo::{
+    render_right_naive, render_stereo_from_splats, StereoMode,
+};
+use nebula::render::preprocess_records;
+use nebula::scene::{dataset, CityGen};
+
+fn shared_set(
+    cam: &StereoCamera,
+    queue: &[(u32, nebula::gaussian::GaussianRecord)],
+) -> nebula::render::ProjectedSet {
+    let refs = benchkit::queue_refs(queue);
+    let left = cam.left();
+    let shared = cam.shared_camera();
+    let mut set = preprocess_records(&left, &shared, &refs, 3);
+    sort_splats(&mut set.splats);
+    set
+}
+
+#[test]
+fn exact_mode_bitwise_across_datasets_and_tiles() {
+    for name in ["tnt", "urban"] {
+        let spec = dataset(name).unwrap();
+        let tree = CityGen::new(spec.city_params(15_000)).build();
+        let pl = benchkit::calibrated_pipeline(&tree, &spec);
+        for (fi, pose) in benchkit::walk_trace(&spec, 40).iter().step_by(13).enumerate() {
+            for tile in [8u32, 16, 32] {
+                let cam = StereoCamera::new(*pose, Intrinsics::vr_eye_scaled(16));
+                let cut = benchkit::cut_at(&tree, pose, &pl);
+                let queue = benchkit::queue_for(&tree, &cut);
+                let set = shared_set(&cam, &queue);
+                let cfg = RasterConfig::default();
+                let (naive, _) = render_right_naive(&cam, &set, tile, &cfg);
+                let out = render_stereo_from_splats(&cam, set, tile, &cfg, StereoMode::Exact);
+                assert_eq!(
+                    out.right.data, naive.data,
+                    "{name} frame#{fi} tile={tile}: Exact mode not bitwise"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn alpha_gated_quality_and_savings() {
+    let spec = dataset("m360").unwrap();
+    let tree = CityGen::new(spec.city_params(30_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let pose = benchkit::walk_trace(&spec, 10)[9];
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(8));
+    let cut = benchkit::cut_at(&tree, &pose, &pl);
+    let queue = benchkit::queue_for(&tree, &cut);
+    let set = shared_set(&cam, &queue);
+    let cfg = RasterConfig::default();
+    let (naive, naive_stats) = render_right_naive(&cam, &set, 16, &cfg);
+    let out = render_stereo_from_splats(&cam, set, 16, &cfg, StereoMode::AlphaGated);
+    let psnr = out.right.psnr(&naive);
+    assert!(psnr > 40.0, "AlphaGated PSNR {psnr:.1}");
+    assert!(
+        out.stats_right.pairs < naive_stats.pairs,
+        "gating must prune right-eye work: {} vs {}",
+        out.stats_right.pairs,
+        naive_stats.pairs
+    );
+}
+
+#[test]
+fn stereo_shares_preprocessing_work() {
+    // The §4.4 point: one preprocess+sort for two eyes, and the right
+    // eye's raster work is lower than the left's.
+    let spec = dataset("db").unwrap();
+    let tree = CityGen::new(spec.city_params(20_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let pose = benchkit::walk_trace(&spec, 5)[4];
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+    let cut = benchkit::cut_at(&tree, &pose, &pl);
+    let queue = benchkit::queue_for(&tree, &cut);
+    let set = shared_set(&cam, &queue);
+    let n_preprocessed = set.splats.len();
+    let out = render_stereo_from_splats(&cam, set, 16, &RasterConfig::default(), StereoMode::AlphaGated);
+    assert_eq!(out.preprocessed, n_preprocessed, "single shared preprocess");
+    assert!(out.stats_right.pairs <= out.stats_left.pairs);
+    // Workload accounting sees the sharing.
+    let wl = nebula::hw::FrameWorkload::from_stereo(&out, 1 << 20);
+    assert!(wl.shared_preproc);
+    assert_eq!(wl.preprocessed, n_preprocessed as u64);
+}
+
+#[test]
+fn disparity_lists_bounded_by_l() {
+    let spec = dataset("tnt").unwrap();
+    let tree = CityGen::new(spec.city_params(10_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let pose = benchkit::walk_trace(&spec, 3)[2];
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+    let cut = benchkit::cut_at(&tree, &pose, &pl);
+    let queue = benchkit::queue_for(&tree, &cut);
+    let set = shared_set(&cam, &queue);
+    let out = render_stereo_from_splats(&cam, set, 16, &RasterConfig::default(), StereoMode::Exact);
+    assert_eq!(out.num_lists, 4, "paper's four disparity categories");
+    assert!(out.max_disparity_px <= 48.0 + 1e-6);
+}
