@@ -48,7 +48,11 @@ fn main() -> anyhow::Result<()> {
     pl.tau_px = benchkit::calibrate_tau(&tree, spec.extent_m);
     let full_intr = Intrinsics::vr_eye();
     let intr = Intrinsics::vr_eye_scaled(pl.res_scale);
-    let cfg = RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min };
+    let cfg = RasterConfig {
+        alpha_min: pl.alpha_min,
+        t_min: pl.transmittance_min,
+        ..RasterConfig::default()
+    };
 
     // --- Cloud service on its own thread -------------------------------
     let handle = spawn_cloud(tree.clone(), pl, CompressionMode::Quantized, full_intr.fx, full_intr.near);
@@ -139,7 +143,7 @@ fn main() -> anyhow::Result<()> {
         // math is identical to the HLO kernel — see it_runtime_hlo).
         nebula::render::sort::sort_splats(&mut set.splats);
         let n_splats = set.splats.len();
-        let out = render_stereo_from_splats(&cam, set, pl.tile, &cfg, StereoMode::AlphaGated);
+        let out = render_stereo_from_splats(&cam, &set, pl.tile, &cfg, StereoMode::AlphaGated);
         let render_ms = sw.elapsed_ms();
         render_sum += render_ms;
 

@@ -59,9 +59,9 @@ fn main() -> anyhow::Result<()> {
     let cicero = warp_right(&left_img, &depth, &cam, WarpKind::Cicero);
     report("Cicero-proxy [27]", &cicero, 0);
 
-    let exact = render_stereo_from_splats(&cam, set.clone(), pl.tile, &cfg, StereoMode::Exact);
+    let exact = render_stereo_from_splats(&cam, &set, pl.tile, &cfg, StereoMode::Exact);
     report("Nebula (Exact)", &exact.right, exact.stats_right.pairs);
-    let gated = render_stereo_from_splats(&cam, set, pl.tile, &cfg, StereoMode::AlphaGated);
+    let gated = render_stereo_from_splats(&cam, &set, pl.tile, &cfg, StereoMode::AlphaGated);
     report("Nebula (AlphaGated)", &gated.right, gated.stats_right.pairs);
 
     table.print();

@@ -1,0 +1,192 @@
+//! BENCH_render: throughput of the parallel tile-scheduled rendering
+//! engine on a fixed `scene::citygen` scene, mono + stereo, swept over
+//! thread counts. Writes `BENCH_render.json` (ms/frame, pairs/s and
+//! speedups vs. the serial reference) so the perf trajectory of the hot
+//! path is tracked across PRs.
+//!
+//!     cargo bench --bench bench_render
+//!
+//! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
+//! `NEBULA_BENCH_SAMPLES` / `NEBULA_BENCH_WARMUP` (timing loop),
+//! `NEBULA_BENCH_OUT` (output path, default `BENCH_render.json`).
+
+use nebula::benchkit;
+use nebula::math::{Intrinsics, StereoCamera};
+use nebula::render::engine::Parallelism;
+use nebula::render::raster::{render_bins, RasterConfig};
+use nebula::render::stereo::{render_stereo_from_splats, StereoMode};
+use nebula::render::{preprocess_records, ProjectedSet, TileBins};
+use nebula::scene::{CityGen, CityParams};
+use nebula::trace::{PoseTrace, TraceParams};
+use nebula::util::bench::{bench_header, Bencher};
+
+struct Row {
+    mode: &'static str,
+    threads: usize, // 0 = serial reference
+    ms_per_frame: f64,
+    pairs_per_s: f64,
+    speedup_vs_serial: f64,
+}
+
+fn cfg(par: Parallelism) -> RasterConfig {
+    RasterConfig { parallelism: par, ..RasterConfig::default() }
+}
+
+fn main() {
+    bench_header("BENCH_render", "parallel tile engine, mono + stereo");
+    // Fixed citygen scene; NEBULA_BENCH_SCALE only trims the Gaussian
+    // count so CI-class machines finish in seconds.
+    let target = (400_000 / benchkit::bench_scale()).max(10_000);
+    let extent = 120.0f32;
+    let seed = 20_26u64;
+    let tree = CityGen::new(CityParams::for_target(target, extent, seed)).build();
+    let pose = PoseTrace::new(TraceParams::default(), extent).generate(4)[3];
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(4));
+    let (w, h, tile) = (cam.intr.width, cam.intr.height, 16u32);
+
+    // Shared preprocess once; every timed sample re-renders from the
+    // same sorted splat set.
+    let ids: Vec<u32> = tree.leaves();
+    let queue: Vec<_> = ids.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
+    let refs = benchkit::queue_refs(&queue);
+    let left = cam.left();
+    let shared = cam.shared_camera();
+    let mut set: ProjectedSet = preprocess_records(&left, &shared, &refs, 3);
+    nebula::render::sort::sort_splats(&mut set.splats);
+    println!(
+        "scene: {} Gaussians, {} visible splats, {w}x{h} @ tile {tile}",
+        tree.len(),
+        set.splats.len()
+    );
+
+    // Lighter defaults than Bencher::default() (env still overrides):
+    // the sweep times 10 full-frame configurations.
+    let env_u32 = |key: &str, default: u32| {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let bencher =
+        Bencher::new(env_u32("NEBULA_BENCH_SAMPLES", 5), env_u32("NEBULA_BENCH_WARMUP", 1));
+    let sweep: Vec<(&'static str, Parallelism)> = vec![
+        ("serial", Parallelism::Serial),
+        ("t1", Parallelism::Threads(1)),
+        ("t2", Parallelism::Threads(2)),
+        ("t4", Parallelism::Threads(4)),
+        ("t8", Parallelism::Threads(8)),
+    ];
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut parity: Option<Vec<f32>> = None;
+
+    // --- Mono sweep ----------------------------------------------------
+    // Time the rasterization stage the engine parallelizes — bins are
+    // prebuilt so the serial sort/bin stages don't dilute the sweep.
+    let bins = TileBins::build(w, h, tile, 0, &set.splats);
+    let mut mono_serial_ms = 0.0f64;
+    for (label, par) in &sweep {
+        let c = cfg(*par);
+        let (img, stats) = render_bins(&set.splats, &bins, w, h, &c);
+        if let Some(reference) = &parity {
+            assert_eq!(
+                reference, &img.data,
+                "PARITY VIOLATION: {label} mono image differs from serial"
+            );
+        } else {
+            parity = Some(img.data.clone());
+        }
+        let s = bencher.run(|| render_bins(&set.splats, &bins, w, h, &c));
+        let ms = s.median_ms();
+        let threads = match par {
+            Parallelism::Serial => 0,
+            Parallelism::Threads(n) => *n,
+        };
+        if threads == 0 {
+            mono_serial_ms = ms;
+        }
+        rows.push(Row {
+            mode: "mono",
+            threads,
+            ms_per_frame: ms,
+            pairs_per_s: stats.pairs as f64 / (ms * 1e-3),
+            speedup_vs_serial: if threads == 0 { 1.0 } else { mono_serial_ms / ms },
+        });
+        println!("  mono   {label:>6}: {ms:>8.2} ms/frame");
+    }
+
+    // --- Stereo sweep --------------------------------------------------
+    // Pair counters are thread-invariant (bitwise parity), so measure
+    // them once outside the timing loop.
+    let stereo_pairs = {
+        let out = render_stereo_from_splats(
+            &cam,
+            &set,
+            tile,
+            &cfg(Parallelism::Serial),
+            StereoMode::AlphaGated,
+        );
+        out.stats_left.pairs + out.stats_right.pairs
+    };
+    let mut stereo_serial_ms = 0.0f64;
+    for (label, par) in &sweep {
+        let c = cfg(*par);
+        let s = bencher
+            .run(|| render_stereo_from_splats(&cam, &set, tile, &c, StereoMode::AlphaGated));
+        let ms = s.median_ms();
+        let threads = match par {
+            Parallelism::Serial => 0,
+            Parallelism::Threads(n) => *n,
+        };
+        if threads == 0 {
+            stereo_serial_ms = ms;
+        }
+        rows.push(Row {
+            mode: "stereo",
+            threads,
+            ms_per_frame: ms,
+            pairs_per_s: stereo_pairs as f64 / (ms * 1e-3),
+            speedup_vs_serial: if threads == 0 { 1.0 } else { stereo_serial_ms / ms },
+        });
+        println!("  stereo {label:>6}: {ms:>8.2} ms/frame");
+    }
+
+    let speedup_of = |mode: &str, threads: usize| {
+        rows.iter()
+            .find(|r| r.mode == mode && r.threads == threads)
+            .map(|r| r.speedup_vs_serial)
+            .unwrap_or(0.0)
+    };
+    let mono4 = speedup_of("mono", 4);
+    let stereo4 = speedup_of("stereo", 4);
+    println!("speedup @4 threads: mono {mono4:.2}x, stereo {stereo4:.2}x");
+
+    // --- JSON (hand-rolled; serde unavailable offline) -----------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"bench\": \"render\",\n");
+    j.push_str(&format!(
+        "  \"scene\": {{\"generator\": \"citygen\", \"target_gaussians\": {target}, \"extent_m\": {extent:.1}, \"seed\": {seed}, \"splats\": {}}},\n",
+        set.splats.len()
+    ));
+    j.push_str(&format!(
+        "  \"image\": {{\"width\": {w}, \"height\": {h}, \"tile\": {tile}}},\n"
+    ));
+    j.push_str(&format!("  \"speedup_mono_4t\": {mono4:.3},\n"));
+    j.push_str(&format!("  \"speedup_stereo_4t\": {stereo4:.3},\n"));
+    j.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"threads\": {}, \"ms_per_frame\": {:.3}, \"pairs_per_s\": {:.0}, \"speedup_vs_serial\": {:.3}}}{}\n",
+            r.mode,
+            r.threads,
+            r.ms_per_frame,
+            r.pairs_per_s,
+            r.speedup_vs_serial,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+
+    let out_path =
+        std::env::var("NEBULA_BENCH_OUT").unwrap_or_else(|_| "BENCH_render.json".to_string());
+    std::fs::write(&out_path, &j).expect("write bench json");
+    println!("wrote {out_path}");
+}

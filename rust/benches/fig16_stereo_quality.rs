@@ -42,8 +42,8 @@ fn main() {
         let images = [
             warp_right(&left_img, &depth, &cam, WarpKind::Warp),
             warp_right(&left_img, &depth, &cam, WarpKind::Cicero),
-            render_stereo_from_splats(&cam, set.clone(), pl.tile, &cfg, StereoMode::AlphaGated).right,
-            render_stereo_from_splats(&cam, set, pl.tile, &cfg, StereoMode::Exact).right,
+            render_stereo_from_splats(&cam, &set, pl.tile, &cfg, StereoMode::AlphaGated).right,
+            render_stereo_from_splats(&cam, &set, pl.tile, &cfg, StereoMode::Exact).right,
         ];
         for (i, img) in images.iter().enumerate() {
             agg[i].0 += img.psnr(&reference);

@@ -43,6 +43,9 @@ pub struct PipelineConfig {
     pub reuse_threshold: u32,
     /// Downscale factor applied to the VR eye resolution (1 = full).
     pub res_scale: u32,
+    /// Rasterizer worker threads: 0 = auto-detect, 1 = serial, n = n
+    /// threads (bitwise-invariant; see `render::engine`).
+    pub threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -56,6 +59,7 @@ impl Default for PipelineConfig {
             lod_interval: 4,
             reuse_threshold: 32,
             res_scale: 8,
+            threads: 0,
         }
     }
 }
@@ -104,6 +108,7 @@ impl RunConfig {
         cfg.pipeline.tile = args.get_parse_or("tile", cfg.pipeline.tile);
         cfg.pipeline.lod_interval = args.get_parse_or("lod-interval", cfg.pipeline.lod_interval);
         cfg.pipeline.res_scale = args.get_parse_or("res-scale", cfg.pipeline.res_scale);
+        cfg.pipeline.threads = args.get_parse_or("threads", cfg.pipeline.threads);
         cfg.frames = args.get_parse_or("frames", cfg.frames);
         cfg.net.bandwidth_bps = args.get_parse_or("bandwidth-mbps", cfg.net.bandwidth_bps / 1e6) * 1e6;
         if let Some(a) = args.get("artifacts") {
@@ -134,6 +139,10 @@ impl RunConfig {
             cfg.pipeline.reuse_threshold =
                 s.int_or("reuse_threshold", cfg.pipeline.reuse_threshold as i64) as u32;
             cfg.pipeline.res_scale = s.int_or("res_scale", cfg.pipeline.res_scale as i64) as u32;
+            // Clamp negatives to 0 (= auto) instead of wrapping to a
+            // huge usize thread count.
+            cfg.pipeline.threads =
+                s.int_or("threads", cfg.pipeline.threads as i64).max(0) as usize;
         }
         if let Some(s) = doc.section("net") {
             cfg.net.bandwidth_bps = s.float_or("bandwidth_bps", cfg.net.bandwidth_bps);
@@ -158,6 +167,7 @@ mod tests {
         assert_eq!(p.lod_interval, 4);
         assert_eq!(p.reuse_threshold, 32);
         assert_eq!(p.tile, 16);
+        assert_eq!(p.threads, 0, "default = auto-detected parallelism");
         let n = NetConfig::default();
         assert_eq!(n.bandwidth_bps, 100e6);
         assert_eq!(n.energy_nj_per_byte, 100.0);
@@ -176,6 +186,7 @@ seed = 3
 tau_px = 4.0
 tile = 8
 lod_interval = 2
+threads = 2
 
 [net]
 bandwidth_bps = 50e6
@@ -189,6 +200,7 @@ frames = 16
         assert_eq!(cfg.pipeline.tau_px, 4.0);
         assert_eq!(cfg.pipeline.tile, 8);
         assert_eq!(cfg.pipeline.lod_interval, 2);
+        assert_eq!(cfg.pipeline.threads, 2);
         assert_eq!(cfg.net.bandwidth_bps, 50e6);
         assert_eq!(cfg.frames, 16);
         // Untouched values keep defaults.

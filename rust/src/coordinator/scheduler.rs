@@ -19,6 +19,7 @@ use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
 use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
 use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
+use crate::render::engine::Parallelism;
 use crate::render::raster::RasterConfig;
 use crate::render::stereo::{render_stereo, render_right_naive, StereoMode};
 use crate::render::{preprocess_records, render_mono};
@@ -67,8 +68,11 @@ pub fn run_simulation(
     let intr = Intrinsics::vr_eye_scaled(pl.res_scale.max(1));
     let s2 = (full_intr.pixels() as f64 / intr.pixels() as f64).max(1.0);
     let full_pixels = 2 * full_intr.pixels();
-    let raster_cfg =
-        RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min };
+    let raster_cfg = RasterConfig {
+        alpha_min: pl.alpha_min,
+        t_min: pl.transmittance_min,
+        parallelism: Parallelism::from_threads(pl.threads),
+    };
 
     // --- Cloud setup ----------------------------------------------------
     let (lo, hi) = tree.gaussians.bounds();

@@ -9,7 +9,7 @@
 //!
 //! Common flags: --scene <name> --gaussians <n> --frames <n> --tau <px>
 //! --tile <px> --lod-interval <w> --res-scale <s> --seed <n>
-//! --config <file.toml>
+//! --threads <n: 0=auto, 1=serial> --config <file.toml>
 
 use nebula::benchkit;
 use nebula::config::RunConfig;
@@ -126,7 +126,11 @@ fn render(args: &Args) -> anyhow::Result<()> {
         &benchkit::queue_refs(&queue),
         cfg.pipeline.sh_degree,
         cfg.pipeline.tile,
-        &RasterConfig { alpha_min: cfg.pipeline.alpha_min, t_min: cfg.pipeline.transmittance_min },
+        &RasterConfig {
+            alpha_min: cfg.pipeline.alpha_min,
+            t_min: cfg.pipeline.transmittance_min,
+            parallelism: nebula::render::Parallelism::from_threads(cfg.pipeline.threads),
+        },
         StereoMode::AlphaGated,
     );
     println!(

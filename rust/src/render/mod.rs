@@ -5,14 +5,20 @@
 //!   (conic, depth, radius, SH color), frustum culling;
 //! * [`sort`] — global (depth, id) ordering;
 //! * [`tiles`] — per-tile splat lists (depth-ordered by construction);
-//! * [`raster`] — reference tile-by-tile α-blending (the VRC functional
-//!   model);
+//! * [`engine`] — the parallel tile-scheduled execution engine: row
+//!   bands of the tile grid run concurrently on scoped threads with
+//!   disjoint output slabs, bitwise identical to serial execution
+//!   (see [`engine::Parallelism`]);
+//! * [`raster`] — tile α-blending core (the VRC functional model),
+//!   monomorphized over pass-flag tracking and splat layout, executed
+//!   through the engine;
 //! * [`stereo`] — triangulation-based stereo rasterization: the left eye
 //!   renders normally, the right eye reuses preprocessing/sorting and
 //!   merges per-tile disparity lists (bit-accurate; see module docs);
 //! * [`warp`] — WARP and Cicero-style image-warping baselines (Fig 16);
 //! * [`image`] — framebuffer + PSNR/SSIM/LPIPS-proxy metrics.
 
+pub mod engine;
 pub mod image;
 pub mod preprocess;
 pub mod raster;
@@ -21,8 +27,9 @@ pub mod stereo;
 pub mod tiles;
 pub mod warp;
 
+pub use engine::Parallelism;
 pub use image::Image;
-pub use preprocess::{preprocess_records, preprocess_tree, ProjectedSet, Splat};
+pub use preprocess::{preprocess_records, preprocess_tree, ProjectedSet, Splat, SplatSoa};
 pub use raster::{render_mono, RasterStats};
 pub use stereo::{render_stereo, StereoMode, StereoOutput};
 pub use tiles::TileBins;

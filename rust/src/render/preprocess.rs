@@ -24,6 +24,40 @@ pub struct Splat {
     pub opacity: f32,
 }
 
+/// SoA-friendly splat storage for the rasterizer hot loop. The α
+/// evaluation touches only `geom` — a dense 24-byte record per splat
+/// (half the AoS [`Splat`] footprint) — while `color` is a cold array
+/// loaded solely on a passing α-check. Built once per frame by the
+/// rendering engine from the depth-sorted splat slice; indices in tile
+/// lists address both layouts identically.
+#[derive(Debug, Default, Clone)]
+pub struct SplatSoa {
+    /// `[mean.x, mean.y, conic a, conic b, conic c, opacity]` per splat.
+    pub geom: Vec<[f32; 6]>,
+    /// RGB per splat (blend-only).
+    pub color: Vec<[f32; 3]>,
+}
+
+impl SplatSoa {
+    pub fn from_splats(splats: &[Splat]) -> Self {
+        Self {
+            geom: splats
+                .iter()
+                .map(|s| [s.mean.x, s.mean.y, s.conic[0], s.conic[1], s.conic[2], s.opacity])
+                .collect(),
+            color: splats.iter().map(|s| s.color).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.geom.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.geom.is_empty()
+    }
+}
+
 /// The preprocessed frame: splats in arbitrary order + stats.
 #[derive(Debug, Default, Clone)]
 pub struct ProjectedSet {

@@ -5,9 +5,18 @@
 //! `alpha_min` (the α-check), accumulate until the transmittance floor.
 //! The per-(tile, splat) α-check outcomes can be exported — that is the
 //! signal the stereo re-projection unit (SRU) consumes in §4.4.
+//!
+//! Execution: the tile grid runs on the parallel engine
+//! ([`super::engine`]) according to [`RasterConfig::parallelism`]; the
+//! blending core is a single monomorphized function
+//! (`raster_core`) specialized over (a) whether α-pass flags are
+//! tracked and (b) the splat storage layout ([`SplatSource`]), so the
+//! per-pixel inner loop carries no `Option` branch and no stats-memory
+//! traffic, and every path blends bit-identically.
 
+use super::engine::{self, Parallelism, Slab};
 use super::image::Image;
-use super::preprocess::Splat;
+use super::preprocess::{Splat, SplatSoa};
 use super::tiles::TileBins;
 
 /// Rasterization parameters.
@@ -17,16 +26,19 @@ pub struct RasterConfig {
     pub alpha_min: f32,
     /// Stop blending a pixel when transmittance drops below this.
     pub t_min: f32,
+    /// Tile-grid execution strategy (bitwise-invariant; see
+    /// [`super::engine`]).
+    pub parallelism: Parallelism,
 }
 
 impl Default for RasterConfig {
     fn default() -> Self {
-        Self { alpha_min: 1.0 / 255.0, t_min: 1.0 / 255.0 }
+        Self { alpha_min: 1.0 / 255.0, t_min: 1.0 / 255.0, parallelism: Parallelism::default() }
     }
 }
 
 /// Workload counters (consumed by the hardware timing models).
-#[derive(Debug, Default, Clone, Copy, PartialEq)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct RasterStats {
     /// Per-pixel α evaluations.
     pub alpha_checks: u64,
@@ -50,7 +62,115 @@ impl RasterStats {
     }
 }
 
-/// Rasterize one tile.
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for [super::Splat] {}
+    impl Sealed for super::SplatSoa {}
+}
+
+/// Splat attribute source for the blending core, monomorphized so the
+/// AoS compatibility path (`[Splat]`) and the engine's SoA layout
+/// ([`SplatSoa`]) share one loop. Sealed: the core's bit-accuracy
+/// contract (identical operation order on identical values) must not be
+/// weakened by foreign layouts.
+pub trait SplatSource: sealed::Sealed + Sync {
+    /// Hot record for the α evaluation:
+    /// `[mean.x, mean.y, conic a, conic b, conic c, opacity]`.
+    fn geom(&self, i: usize) -> [f32; 6];
+    /// RGB, loaded only when the α-check passes.
+    fn color3(&self, i: usize) -> [f32; 3];
+}
+
+impl SplatSource for [Splat] {
+    #[inline(always)]
+    fn geom(&self, i: usize) -> [f32; 6] {
+        let s = &self[i];
+        [s.mean.x, s.mean.y, s.conic[0], s.conic[1], s.conic[2], s.opacity]
+    }
+
+    #[inline(always)]
+    fn color3(&self, i: usize) -> [f32; 3] {
+        self[i].color
+    }
+}
+
+impl SplatSource for SplatSoa {
+    #[inline(always)]
+    fn geom(&self, i: usize) -> [f32; 6] {
+        self.geom[i]
+    }
+
+    #[inline(always)]
+    fn color3(&self, i: usize) -> [f32; 3] {
+        self.color[i]
+    }
+}
+
+/// Blend one tile into a slab. `TRACK` selects the α-pass-flag variant
+/// at compile time (`passed` must then have `list.len()` entries); both
+/// variants perform the identical f32 operation sequence. Per-pixel
+/// counters accumulate in locals and are flushed to `stats` once per
+/// tile, keeping the inner loop free of memory side effects.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn raster_core<const TRACK: bool, S: SplatSource + ?Sized>(
+    src: &S,
+    list: &[u32],
+    px0: u32,
+    py0: u32,
+    tile: u32,
+    out: &mut Slab<'_>,
+    cfg: &RasterConfig,
+    passed: &mut [bool],
+    stats: &mut RasterStats,
+) {
+    stats.tiles += 1;
+    stats.pairs += list.len() as u64;
+    let x_end = (px0 + tile).min(out.width());
+    let y_end = (py0 + tile).min(out.y_end());
+    let mut alpha_checks = 0u64;
+    let mut blends = 0u64;
+    let mut saturated = 0u64;
+    for py in py0..y_end {
+        for px in px0..x_end {
+            let mut t = 1.0f32;
+            let mut rgb = [0.0f32; 3];
+            for (li, &si) in list.iter().enumerate() {
+                let g = src.geom(si as usize);
+                let dx = px as f32 + 0.5 - g[0];
+                let dy = py as f32 + 0.5 - g[1];
+                let power = -0.5 * (g[2] * dx * dx + g[4] * dy * dy) - g[3] * dx * dy;
+                alpha_checks += 1;
+                if power > 0.0 {
+                    continue;
+                }
+                let alpha = (g[5] * power.exp()).min(0.99);
+                if alpha < cfg.alpha_min {
+                    continue;
+                }
+                blends += 1;
+                if TRACK {
+                    passed[li] = true;
+                }
+                let c = src.color3(si as usize);
+                let w = alpha * t;
+                rgb[0] += w * c[0];
+                rgb[1] += w * c[1];
+                rgb[2] += w * c[2];
+                t *= 1.0 - alpha;
+                if t < cfg.t_min {
+                    saturated += 1;
+                    break;
+                }
+            }
+            out.set(px, py, rgb);
+        }
+    }
+    stats.alpha_checks += alpha_checks;
+    stats.blends += blends;
+    stats.saturated += saturated;
+}
+
+/// Rasterize one tile (single-tile compatibility entry point).
 ///
 /// * `list` — depth-ordered splat indices intersecting the tile;
 /// * `(px0, py0)` — tile origin in the target image;
@@ -65,51 +185,21 @@ pub fn raster_tile(
     tile: u32,
     img: &mut Image,
     cfg: &RasterConfig,
-    mut passed: Option<&mut [bool]>,
+    passed: Option<&mut [bool]>,
     stats: &mut RasterStats,
 ) {
-    stats.tiles += 1;
-    stats.pairs += list.len() as u64;
-    let x_end = (px0 + tile).min(img.width);
-    let y_end = (py0 + tile).min(img.height);
-    for py in py0..y_end {
-        for px in px0..x_end {
-            let mut t = 1.0f32;
-            let mut rgb = [0.0f32; 3];
-            for (li, &si) in list.iter().enumerate() {
-                let s = &splats[si as usize];
-                let dx = px as f32 + 0.5 - s.mean.x;
-                let dy = py as f32 + 0.5 - s.mean.y;
-                let power =
-                    -0.5 * (s.conic[0] * dx * dx + s.conic[2] * dy * dy) - s.conic[1] * dx * dy;
-                stats.alpha_checks += 1;
-                if power > 0.0 {
-                    continue;
-                }
-                let alpha = (s.opacity * power.exp()).min(0.99);
-                if alpha < cfg.alpha_min {
-                    continue;
-                }
-                stats.blends += 1;
-                if let Some(p) = passed.as_deref_mut() {
-                    p[li] = true;
-                }
-                let w = alpha * t;
-                rgb[0] += w * s.color[0];
-                rgb[1] += w * s.color[1];
-                rgb[2] += w * s.color[2];
-                t *= 1.0 - alpha;
-                if t < cfg.t_min {
-                    stats.saturated += 1;
-                    break;
-                }
-            }
-            img.set(px, py, rgb);
+    let mut slab = Slab::full(img);
+    match passed {
+        Some(p) => raster_core::<true, _>(splats, list, px0, py0, tile, &mut slab, cfg, p, stats),
+        None => {
+            raster_core::<false, _>(splats, list, px0, py0, tile, &mut slab, cfg, &mut [], stats)
         }
     }
 }
 
 /// Render a full image from pre-binned splats (mono reference path).
+/// Tile rows execute on the engine per `cfg.parallelism`; the output is
+/// bitwise identical across thread counts.
 pub fn render_bins(
     splats: &[Splat],
     bins: &TileBins,
@@ -118,21 +208,36 @@ pub fn render_bins(
     cfg: &RasterConfig,
 ) -> (Image, RasterStats) {
     let mut img = Image::new(width, height);
+    let soa = SplatSoa::from_splats(splats);
+    let (tile, tiles_x, tiles_y) = (bins.tile, bins.tiles_x, bins.tiles_y);
+    let per_row = engine::run_rows(
+        &mut img,
+        tile,
+        tiles_y,
+        cfg.parallelism,
+        vec![(); tiles_y as usize],
+        |ty, rows, _extra: ()| {
+            let mut slab = Slab::for_row(rows, width, ty, tile, height);
+            let mut stats = RasterStats::default();
+            for tx in 0..tiles_x {
+                raster_core::<false, _>(
+                    &soa,
+                    bins.list(tx, ty),
+                    tx * tile,
+                    ty * tile,
+                    tile,
+                    &mut slab,
+                    cfg,
+                    &mut [],
+                    &mut stats,
+                );
+            }
+            stats
+        },
+    );
     let mut stats = RasterStats::default();
-    for ty in 0..bins.tiles_y {
-        for tx in 0..bins.tiles_x {
-            raster_tile(
-                splats,
-                bins.list(tx, ty),
-                tx * bins.tile,
-                ty * bins.tile,
-                bins.tile,
-                &mut img,
-                cfg,
-                None,
-                &mut stats,
-            );
-        }
+    for s in &per_row {
+        stats.merge(s);
     }
     (img, stats)
 }
@@ -265,5 +370,43 @@ mod tests {
         assert!(img.data.iter().all(|&v| v == 0.0));
         assert_eq!(stats.blends, 0);
         assert_eq!(stats.tiles, 4);
+    }
+
+    #[test]
+    fn aos_and_soa_sources_agree_bitwise() {
+        let splats: Vec<Splat> = (0..12)
+            .map(|i| splat(i, 4.0 + i as f32 * 2.3, 9.0 + i as f32, 1.0 + i as f32, [0.3, 0.5, 0.7], 0.6))
+            .collect();
+        let soa = SplatSoa::from_splats(&splats);
+        assert_eq!(soa.len(), splats.len());
+        let list: Vec<u32> = (0..splats.len() as u32).collect();
+        let cfg = RasterConfig::default();
+        let mut img_a = Image::new(32, 32);
+        let mut img_b = Image::new(32, 32);
+        let (mut sa, mut sb) = (RasterStats::default(), RasterStats::default());
+        raster_core::<false, _>(
+            splats.as_slice(),
+            &list,
+            0,
+            0,
+            32,
+            &mut Slab::full(&mut img_a),
+            &cfg,
+            &mut [],
+            &mut sa,
+        );
+        raster_core::<false, _>(
+            &soa,
+            &list,
+            0,
+            0,
+            32,
+            &mut Slab::full(&mut img_b),
+            &cfg,
+            &mut [],
+            &mut sb,
+        );
+        assert_eq!(img_a.data, img_b.data, "layouts must blend identically");
+        assert_eq!(sa, sb);
     }
 }

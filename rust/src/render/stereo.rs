@@ -20,14 +20,28 @@
 //! trading exactness for fewer right-eye pairs (quality measured in
 //! Fig 16).
 //!
+//! **Threading.** Both eyes execute on the parallel tile engine
+//! ([`super::engine`]) in three phases: (1) left-eye tile rows render
+//! concurrently, each worker owning a disjoint pixel slab and a disjoint
+//! slice of the flat α-pass bitmap; (2) the SRU insertion pass runs
+//! serially (it is Gaussian-, not pixel-, proportional) in the canonical
+//! tile order, so the disparity lists are identical to the serial
+//! build's; (3) right-eye tile rows merge + blend concurrently. Tiles
+//! never share pixels and each tile's merge and blend order is
+//! thread-count independent, so `Serial` and `Threads(n)` produce
+//! **bitwise identical** stereo pairs — disjoint tile slabs ⇒ identical
+//! blend order ⇒ identical f32 images — and identical merged workload
+//! counters (u64 sums commute). Enforced by `tests/it_parallel.rs`.
+//!
 //! Off-screen sliver: content within `(L-1)` tile columns right of the
 //! left image shifts into the right eye's view; those columns are binned
 //! (extended grid) and always footprint-inserted, mirroring the paper's
 //! independently-rendered edge tiles.
 
+use super::engine::{self, Slab};
 use super::image::Image;
-use super::preprocess::{preprocess_records, ProjectedSet, Splat};
-use super::raster::{raster_tile, RasterConfig, RasterStats};
+use super::preprocess::{preprocess_records, ProjectedSet, SplatSoa};
+use super::raster::{raster_core, RasterConfig, RasterStats};
 use super::sort::sort_splats;
 use super::tiles::TileBins;
 use crate::gaussian::{GaussianId, GaussianRecord};
@@ -88,14 +102,15 @@ pub fn render_stereo(
     let shared = stereo.shared_camera();
     let mut set: ProjectedSet = preprocess_records(&left_cam, &shared, queue, sh_degree);
     sort_splats(&mut set.splats);
-    render_stereo_from_splats(stereo, set, tile, cfg, mode)
+    render_stereo_from_splats(stereo, &set, tile, cfg, mode)
 }
 
 /// Stereo pipeline from already-preprocessed, sorted splats (used by the
-/// HLO runtime path, which preprocesses on the PJRT executable).
+/// HLO runtime path, which preprocesses on the PJRT executable). Borrows
+/// the set: rendering only reads it, so per-frame callers don't clone.
 pub fn render_stereo_from_splats(
     stereo: &StereoCamera,
-    set: ProjectedSet,
+    set: &ProjectedSet,
     tile: u32,
     cfg: &RasterConfig,
     mode: StereoMode,
@@ -105,22 +120,102 @@ pub fn render_stereo_from_splats(
     let max_disp = ((lists - 1) * tile) as f32;
     let bins = TileBins::build(w, h, tile, lists - 1, &set.splats);
     let splats = &set.splats;
+    let soa = SplatSoa::from_splats(splats);
 
     let grid_x = bins.grid_x();
     let tiles_x = bins.tiles_x;
     let tiles_y = bins.tiles_y;
 
+    // --- Phase 1: left-eye render (engine; paper Fig 13 right, step 1).
+    // AlphaGated needs per-(tile, splat) α-pass flags for the SRU gate;
+    // they live in one flat bitmap indexed by per-tile offsets so each
+    // tile row's worker owns a disjoint contiguous slice. Exact mode
+    // skips the tracking entirely (the gate is unconditional).
+    let need_passed = mode == StereoMode::AlphaGated;
+    let n_vis = (tiles_x * tiles_y) as usize;
+    let mut tile_off = vec![0usize; n_vis + 1];
+    if need_passed {
+        let mut acc = 0usize;
+        for ty in 0..tiles_y {
+            for tx in 0..tiles_x {
+                tile_off[(ty * tiles_x + tx) as usize] = acc;
+                acc += bins.list(tx, ty).len();
+            }
+        }
+        tile_off[n_vis] = acc;
+    }
+    let mut passed = vec![false; tile_off[n_vis]];
+
+    // Split the bitmap into one mutable slice per tile row (offsets are
+    // row-major, so each row's flags are contiguous).
+    let mut passed_rows: Vec<&mut [bool]> = Vec::with_capacity(tiles_y as usize);
+    {
+        let mut rest: &mut [bool] = &mut passed;
+        for ty in 0..tiles_y {
+            let len = tile_off[((ty + 1) * tiles_x) as usize] - tile_off[(ty * tiles_x) as usize];
+            let (row, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            passed_rows.push(row);
+            rest = tail;
+        }
+    }
+
+    let mut left = Image::new(w, h);
+    let per_row = engine::run_rows(
+        &mut left,
+        tile,
+        tiles_y,
+        cfg.parallelism,
+        passed_rows,
+        |ty, rows, row_passed: &mut [bool]| {
+            let mut slab = Slab::for_row(rows, w, ty, tile, h);
+            let mut stats = RasterStats::default();
+            let mut cursor = 0usize;
+            for tx in 0..tiles_x {
+                let list = bins.list(tx, ty);
+                if need_passed {
+                    let p = &mut row_passed[cursor..cursor + list.len()];
+                    cursor += list.len();
+                    if !list.is_empty() {
+                        raster_core::<true, _>(
+                            &soa,
+                            list,
+                            tx * tile,
+                            ty * tile,
+                            tile,
+                            &mut slab,
+                            cfg,
+                            p,
+                            &mut stats,
+                        );
+                    }
+                } else if !list.is_empty() {
+                    raster_core::<false, _>(
+                        &soa,
+                        list,
+                        tx * tile,
+                        ty * tile,
+                        tile,
+                        &mut slab,
+                        cfg,
+                        &mut [],
+                        &mut stats,
+                    );
+                }
+            }
+            stats
+        },
+    );
+    let mut stats_left = RasterStats::default();
+    for s in &per_row {
+        stats_left.merge(s);
+    }
+
+    // --- Phase 2: SRU insertion (serial, canonical tile order; step 2).
     // Per-(src tile, k) disparity lists — the stereo buffer (Fig 15).
     let mut disp_lists: Vec<Vec<u32>> =
         vec![Vec::new(); (grid_x * tiles_y * lists) as usize];
     let list_idx = |tx: u32, ty: u32, k: u32| ((ty * grid_x + tx) * lists + k) as usize;
-
-    let mut left = Image::new(w, h);
-    let mut stats_left = RasterStats::default();
     let mut sru_insertions = 0u64;
-    let mut passed: Vec<bool> = Vec::new();
-
-    // --- Left-eye render + SRU (paper Fig 13 right, steps 1–2) --------
     for ty in 0..tiles_y {
         for tx in 0..grid_x {
             let list = bins.list(tx, ty);
@@ -128,29 +223,18 @@ pub fn render_stereo_from_splats(
                 continue;
             }
             let visible = tx < tiles_x;
-            if visible {
-                passed.clear();
-                passed.resize(list.len(), false);
-                raster_tile(
-                    splats,
-                    list,
-                    tx * tile,
-                    ty * tile,
-                    tile,
-                    &mut left,
-                    cfg,
-                    Some(&mut passed),
-                    &mut stats_left,
-                );
-            }
-            // SRU: re-project each splat of this tile into the right eye.
+            let base = if visible && need_passed {
+                tile_off[(ty * tiles_x + tx) as usize]
+            } else {
+                0
+            };
             for (li, &si) in list.iter().enumerate() {
                 // Gating: α-passed splats always re-project. Off-screen
                 // (extended) columns are handled by footprint, as are all
                 // splats in Exact mode.
                 let gate = match mode {
                     StereoMode::Exact => true,
-                    StereoMode::AlphaGated => !visible || passed[li],
+                    StereoMode::AlphaGated => !visible || passed[base + li],
                 };
                 if !gate {
                     continue;
@@ -183,86 +267,101 @@ pub fn render_stereo_from_splats(
         }
     }
 
-    // --- Right-eye render: L-way merge + blend (steps 3–4) ------------
-    let mut right = Image::new(w, h);
-    let mut stats_right = RasterStats::default();
-    let mut merge_ops = 0u64;
-    let mut merged: Vec<u32> = Vec::new();
-    // Right-eye splats: shifted copies (made lazily per tile via closure
-    // would re-shift repeatedly; instead shift all once).
-    let mut right_splats: Vec<Splat> = splats.to_vec();
-    for s in right_splats.iter_mut() {
-        s.mean.x -= disparity(stereo, s.depth, max_disp);
+    // --- Phase 3: right eye, L-way merge + blend (engine; steps 3–4).
+    // Right-eye splats: the left SoA shifted horizontally by disparity,
+    // built once for all tiles (two memcpys, no AoS re-gather).
+    let mut right_soa = soa.clone();
+    for (g, s) in right_soa.geom.iter_mut().zip(splats.iter()) {
+        g[0] -= disparity(stereo, s.depth, max_disp);
     }
 
-    for ty in 0..tiles_y {
-        for tx in 0..tiles_x {
-            // Sources: src = tx + k for k in 0..L.
-            merged.clear();
-            let mut cursors: [(usize, usize); 8] = [(0, 0); 8]; // (list id, pos)
-            let mut n_src = 0usize;
-            for k in 0..lists {
-                let src = tx + k;
-                if src >= grid_x {
-                    break;
-                }
-                let id = list_idx(src, ty, k);
-                if !disp_lists[id].is_empty() {
-                    cursors[n_src] = (id, 0);
-                    n_src += 1;
-                }
-            }
-            // L-way merge by (depth, id) — the paper's merge unit.
-            loop {
-                let mut best: Option<(usize, u32)> = None;
-                for c in cursors.iter().take(n_src) {
-                    let l = &disp_lists[c.0];
-                    if c.1 >= l.len() {
-                        continue;
+    let mut right = Image::new(w, h);
+    let per_row = engine::run_rows(
+        &mut right,
+        tile,
+        tiles_y,
+        cfg.parallelism,
+        vec![(); tiles_y as usize],
+        |ty, rows, _extra: ()| {
+            let mut slab = Slab::for_row(rows, w, ty, tile, h);
+            let mut stats = RasterStats::default();
+            let mut merge_ops = 0u64;
+            let mut merged: Vec<u32> = Vec::new();
+            for tx in 0..tiles_x {
+                // Sources: src = tx + k for k in 0..L.
+                merged.clear();
+                let mut cursors: [(usize, usize); 8] = [(0, 0); 8]; // (list id, pos)
+                let mut n_src = 0usize;
+                for k in 0..lists {
+                    let src = tx + k;
+                    if src >= grid_x {
+                        break;
                     }
-                    let cand = l[c.1];
-                    merge_ops += 1;
-                    best = match best {
-                        None => Some((c.0, cand)),
-                        Some((_, b)) => {
-                            let (sa, sb) = (&splats[cand as usize], &splats[b as usize]);
-                            if (sa.depth, sa.id) < (sb.depth, sb.id) {
-                                Some((c.0, cand))
-                            } else {
-                                best
-                            }
-                        }
-                    };
-                }
-                match best {
-                    None => break,
-                    Some((list_id, si)) => {
-                        for c in cursors.iter_mut().take(n_src) {
-                            if c.0 == list_id {
-                                c.1 += 1;
-                                break;
-                            }
-                        }
-                        // Canonical-source construction makes duplicates
-                        // impossible; dedup defensively anyway.
-                        if merged.last() != Some(&si) {
-                            merged.push(si);
-                        }
+                    let id = list_idx(src, ty, k);
+                    if !disp_lists[id].is_empty() {
+                        cursors[n_src] = (id, 0);
+                        n_src += 1;
                     }
                 }
+                // L-way merge by (depth, id) — the paper's merge unit.
+                loop {
+                    let mut best: Option<(usize, u32)> = None;
+                    for c in cursors.iter().take(n_src) {
+                        let l = &disp_lists[c.0];
+                        if c.1 >= l.len() {
+                            continue;
+                        }
+                        let cand = l[c.1];
+                        merge_ops += 1;
+                        best = match best {
+                            None => Some((c.0, cand)),
+                            Some((_, b)) => {
+                                let (sa, sb) = (&splats[cand as usize], &splats[b as usize]);
+                                if (sa.depth, sa.id) < (sb.depth, sb.id) {
+                                    Some((c.0, cand))
+                                } else {
+                                    best
+                                }
+                            }
+                        };
+                    }
+                    match best {
+                        None => break,
+                        Some((list_id, si)) => {
+                            for c in cursors.iter_mut().take(n_src) {
+                                if c.0 == list_id {
+                                    c.1 += 1;
+                                    break;
+                                }
+                            }
+                            // Canonical-source construction makes duplicates
+                            // impossible; dedup defensively anyway.
+                            if merged.last() != Some(&si) {
+                                merged.push(si);
+                            }
+                        }
+                    }
+                }
+                raster_core::<false, _>(
+                    &right_soa,
+                    &merged,
+                    tx * tile,
+                    ty * tile,
+                    tile,
+                    &mut slab,
+                    cfg,
+                    &mut [],
+                    &mut stats,
+                );
             }
-            raster_tile(
-                &right_splats,
-                &merged,
-                tx * tile,
-                ty * tile,
-                tile,
-                &mut right,
-                cfg,
-                None,
-                &mut stats_right,
-            );
-        }
+            (stats, merge_ops)
+        },
+    );
+    let mut stats_right = RasterStats::default();
+    let mut merge_ops = 0u64;
+    for (s, m) in &per_row {
+        stats_right.merge(s);
+        merge_ops += m;
     }
 
     StereoOutput {
@@ -335,7 +434,7 @@ mod tests {
         sort_splats(&mut set.splats);
         let (naive_right, _) = render_right_naive(&cam, &set, 16, &cfg);
 
-        let out = render_stereo_from_splats(&cam, set, 16, &cfg, StereoMode::Exact);
+        let out = render_stereo_from_splats(&cam, &set, 16, &cfg, StereoMode::Exact);
         assert!(!out.right.data.iter().all(|&v| v == 0.0), "right eye must see content");
         assert_eq!(out.right.data, naive_right.data, "Exact mode must be bitwise identical");
     }
@@ -351,7 +450,7 @@ mod tests {
         let mut set = preprocess_records(&left_cam, &shared, &refs, 3);
         sort_splats(&mut set.splats);
         let (naive_right, naive_stats) = render_right_naive(&cam, &set, 16, &cfg);
-        let out = render_stereo_from_splats(&cam, set, 16, &cfg, StereoMode::AlphaGated);
+        let out = render_stereo_from_splats(&cam, &set, 16, &cfg, StereoMode::AlphaGated);
         let psnr = out.right.psnr(&naive_right);
         assert!(psnr > 45.0, "AlphaGated PSNR vs naive = {psnr:.1} dB");
         // And it must do less rasterization work for the right eye.

@@ -53,13 +53,26 @@ impl TileBins {
         let max_px_x = (grid_x * tile) as f32;
         let max_px_y = height as f32;
         for (i, s) in splats.iter().enumerate() {
+            // Explicit off-grid rejection BEFORE clamping: a splat whose
+            // whole footprint lies outside the extended grid must be
+            // dropped, never clamped into an edge tile. (Previously this
+            // relied on the clamped bbox collapsing — e.g. x ∈ [-53, -47]
+            // clamps to [0, -47], x1 < x0 — which worked but only
+            // incidentally.) The bounds mirror the clamp below exactly:
+            // a footprint is off-grid iff it ends before pixel 0 or
+            // starts after the last pixel (max_px - 1).
+            if s.mean.x + s.radius_px < 0.0
+                || s.mean.x - s.radius_px > max_px_x - 1.0
+                || s.mean.y + s.radius_px < 0.0
+                || s.mean.y - s.radius_px > max_px_y - 1.0
+            {
+                continue; // fully outside the extended grid
+            }
             let x0 = (s.mean.x - s.radius_px).max(0.0);
             let x1 = (s.mean.x + s.radius_px).min(max_px_x - 1.0);
             let y0 = (s.mean.y - s.radius_px).max(0.0);
             let y1 = (s.mean.y + s.radius_px).min(max_px_y - 1.0);
-            if x1 < x0 || y1 < y0 {
-                continue; // fully outside the extended grid
-            }
+            debug_assert!(x0 <= x1 && y0 <= y1, "bbox collapsed despite off-grid rejection");
             let tx0 = (x0 as u32) / tile;
             let tx1 = (x1 as u32) / tile;
             let ty0 = (y0 as u32) / tile;
@@ -143,11 +156,18 @@ mod tests {
 
     #[test]
     fn out_of_grid_splats_dropped() {
+        // Splat 0 is fully left of the grid (x ∈ [-53, -47]), splat 1
+        // fully below it (y ∈ [497, 503]): the explicit off-grid
+        // rejection must drop both BEFORE clamping, so neither leaks
+        // into an edge tile and no list sees them.
         let s = vec![splat(0, -50.0, 8.0, 3.0, 1.0), splat(1, 8.0, 500.0, 3.0, 1.0)];
         let bins = TileBins::build(64, 64, 16, 1, &s);
-        // Both clamp into edge tiles because bbox clamping keeps
-        // overlapping ranges only; x∈[-53,-47] clamps to [0,-47]→empty.
         assert_eq!(bins.total_pairs(), 0);
+        assert!(bins.lists.iter().all(|l| l.is_empty()), "no edge tile may contain them");
+        // Footprints that merely *touch* the grid edge are kept.
+        let touching = vec![splat(0, -2.0, 8.0, 3.0, 1.0)];
+        let bins = TileBins::build(64, 64, 16, 1, &touching);
+        assert_eq!(bins.list(0, 0), &[0], "edge-overlapping splat stays binned");
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Serial ↔ parallel parity: the tile-scheduled engine must produce
+//! **bitwise identical** images and equal merged workload counters for
+//! `Parallelism::Serial` and `Parallelism::Threads(1..=4)` — the
+//! property the whole engine design rests on (disjoint tile slabs ⇒
+//! identical blend order ⇒ identical f32 output).
+
+use nebula::gaussian::GaussianRecord;
+use nebula::math::{Intrinsics, StereoCamera, Vec2};
+use nebula::render::engine::Parallelism;
+use nebula::render::raster::{render_mono, RasterConfig};
+use nebula::render::stereo::{render_stereo, StereoMode};
+use nebula::render::{ProjectedSet, Splat};
+use nebula::scene::{CityGen, CityParams};
+use nebula::trace::{PoseTrace, TraceParams};
+use nebula::util::prop::{check, Config};
+use nebula::util::Prng;
+
+fn cfg_with(par: Parallelism) -> RasterConfig {
+    RasterConfig { parallelism: par, ..RasterConfig::default() }
+}
+
+/// A randomized screen-space scene: positive-definite conics, means in
+/// and around the viewport (including fully off-screen footprints, which
+/// exercise the binning rejection), mixed radii/depths/opacities.
+fn random_set(rng: &mut Prng, w: u32, h: u32) -> ProjectedSet {
+    let n = rng.range_usize(0, 300);
+    let splats: Vec<Splat> = (0..n)
+        .map(|i| {
+            let a = rng.range_f32(0.05, 1.5);
+            let c = rng.range_f32(0.05, 1.5);
+            let b_max = (a * c).sqrt() * 0.9;
+            Splat {
+                id: i as u32,
+                mean: Vec2::new(
+                    rng.range_f32(-24.0, w as f32 + 24.0),
+                    rng.range_f32(-24.0, h as f32 + 24.0),
+                ),
+                conic: [a, rng.range_f32(-b_max, b_max), c],
+                depth: rng.range_f32(0.2, 90.0),
+                radius_px: rng.range_f32(1.0, 9.0).ceil(),
+                color: [rng.f32(), rng.f32(), rng.f32()],
+                opacity: rng.range_f32(0.05, 0.999),
+            }
+        })
+        .collect();
+    ProjectedSet { splats, processed: n, culled: 0 }
+}
+
+#[test]
+fn mono_parallel_is_bitwise_equal_to_serial() {
+    check("mono serial ≡ threads", Config { cases: 20, seed: 0x90_01 }, |rng| {
+        let w = 16 + 8 * rng.below(7) as u32; // 16..64
+        let h = 16 + 8 * rng.below(7) as u32;
+        let tile = [8u32, 16][rng.below(2)];
+        let set = random_set(rng, w, h);
+        let (ref_img, ref_stats, ref_bins) =
+            render_mono(set.clone(), w, h, tile, &cfg_with(Parallelism::Serial));
+        for t in 1..=4usize {
+            let (img, stats, bins) =
+                render_mono(set.clone(), w, h, tile, &cfg_with(Parallelism::Threads(t)));
+            assert_eq!(ref_img.data, img.data, "mono image diverged at {t} threads");
+            assert_eq!(ref_stats, stats, "mono stats diverged at {t} threads");
+            assert_eq!(ref_bins.total_pairs(), bins.total_pairs());
+        }
+    });
+}
+
+#[test]
+fn stereo_parallel_is_bitwise_equal_to_serial() {
+    check("stereo serial ≡ threads", Config { cases: 5, seed: 0x90_02 }, |rng| {
+        let extent = rng.range_f32(40.0, 80.0);
+        let target = 2500 + rng.below(2500);
+        let tree = CityGen::new(CityParams::for_target(target, extent, rng.next_u64())).build();
+        let pose = PoseTrace::new(
+            TraceParams { seed: rng.next_u64(), ..Default::default() },
+            extent,
+        )
+        .generate(1)[0];
+        let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+        let queue: Vec<(u32, GaussianRecord)> = tree
+            .leaves()
+            .into_iter()
+            .map(|id| (id, tree.gaussians.record(id)))
+            .collect();
+        let refs: Vec<(u32, &GaussianRecord)> = queue.iter().map(|(id, g)| (*id, g)).collect();
+
+        for mode in [StereoMode::Exact, StereoMode::AlphaGated] {
+            let reference =
+                render_stereo(&cam, &refs, 3, 16, &cfg_with(Parallelism::Serial), mode);
+            for t in [2usize, 4] {
+                let out =
+                    render_stereo(&cam, &refs, 3, 16, &cfg_with(Parallelism::Threads(t)), mode);
+                assert_eq!(
+                    reference.left.data, out.left.data,
+                    "{mode:?}: left eye diverged at {t} threads"
+                );
+                assert_eq!(
+                    reference.right.data, out.right.data,
+                    "{mode:?}: right eye diverged at {t} threads"
+                );
+                assert_eq!(
+                    reference.stats_left, out.stats_left,
+                    "{mode:?}: left stats diverged at {t} threads"
+                );
+                assert_eq!(
+                    reference.stats_right, out.stats_right,
+                    "{mode:?}: right stats diverged at {t} threads"
+                );
+                assert_eq!(reference.sru_insertions, out.sru_insertions, "{mode:?}");
+                assert_eq!(reference.merge_ops, out.merge_ops, "{mode:?}");
+                assert_eq!(reference.preprocessed, out.preprocessed, "{mode:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn oversubscribed_thread_counts_stay_bitwise_equal() {
+    // More threads than tile rows (and than cores) must not change a bit.
+    let mut rng = Prng::new(77);
+    let set = random_set(&mut rng, 48, 32);
+    let (ref_img, ref_stats, _) =
+        render_mono(set.clone(), 48, 32, 16, &cfg_with(Parallelism::Serial));
+    for t in [3usize, 16, 64] {
+        let (img, stats, _) =
+            render_mono(set.clone(), 48, 32, 16, &cfg_with(Parallelism::Threads(t)));
+        assert_eq!(ref_img.data, img.data, "t={t}");
+        assert_eq!(ref_stats, stats, "t={t}");
+    }
+}

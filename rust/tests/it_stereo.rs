@@ -37,7 +37,7 @@ fn exact_mode_bitwise_across_datasets_and_tiles() {
                 let set = shared_set(&cam, &queue);
                 let cfg = RasterConfig::default();
                 let (naive, _) = render_right_naive(&cam, &set, tile, &cfg);
-                let out = render_stereo_from_splats(&cam, set, tile, &cfg, StereoMode::Exact);
+                let out = render_stereo_from_splats(&cam, &set, tile, &cfg, StereoMode::Exact);
                 assert_eq!(
                     out.right.data, naive.data,
                     "{name} frame#{fi} tile={tile}: Exact mode not bitwise"
@@ -59,7 +59,7 @@ fn alpha_gated_quality_and_savings() {
     let set = shared_set(&cam, &queue);
     let cfg = RasterConfig::default();
     let (naive, naive_stats) = render_right_naive(&cam, &set, 16, &cfg);
-    let out = render_stereo_from_splats(&cam, set, 16, &cfg, StereoMode::AlphaGated);
+    let out = render_stereo_from_splats(&cam, &set, 16, &cfg, StereoMode::AlphaGated);
     let psnr = out.right.psnr(&naive);
     assert!(psnr > 40.0, "AlphaGated PSNR {psnr:.1}");
     assert!(
@@ -83,7 +83,7 @@ fn stereo_shares_preprocessing_work() {
     let queue = benchkit::queue_for(&tree, &cut);
     let set = shared_set(&cam, &queue);
     let n_preprocessed = set.splats.len();
-    let out = render_stereo_from_splats(&cam, set, 16, &RasterConfig::default(), StereoMode::AlphaGated);
+    let out = render_stereo_from_splats(&cam, &set, 16, &RasterConfig::default(), StereoMode::AlphaGated);
     assert_eq!(out.preprocessed, n_preprocessed, "single shared preprocess");
     assert!(out.stats_right.pairs <= out.stats_left.pairs);
     // Workload accounting sees the sharing.
@@ -102,7 +102,7 @@ fn disparity_lists_bounded_by_l() {
     let cut = benchkit::cut_at(&tree, &pose, &pl);
     let queue = benchkit::queue_for(&tree, &cut);
     let set = shared_set(&cam, &queue);
-    let out = render_stereo_from_splats(&cam, set, 16, &RasterConfig::default(), StereoMode::Exact);
+    let out = render_stereo_from_splats(&cam, &set, 16, &RasterConfig::default(), StereoMode::Exact);
     assert_eq!(out.num_lists, 4, "paper's four disparity categories");
     assert!(out.max_disparity_px <= 48.0 + 1e-6);
 }

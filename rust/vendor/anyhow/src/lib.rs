@@ -1,0 +1,167 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build has no crates.io access, so this shim provides the subset
+//! the workspace uses: a message-carrying [`Error`], the [`Result`]
+//! alias, the [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the
+//! [`Context`] extension trait for `Result` and `Option`. Unlike the
+//! real crate it flattens the cause chain into a single message string
+//! ("context: cause"), which is all the call sites here observe.
+
+use std::fmt;
+
+/// A flattened error message (the shim's stand-in for `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow's blanket conversion. `Error` itself deliberately does
+// NOT implement `std::error::Error`, which is what keeps this impl
+// coherent next to core's reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error branch of a `Result` or an empty
+/// `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable
+/// expression).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening artifact").unwrap_err();
+        assert_eq!(e.to_string(), "opening artifact: gone");
+
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+        assert_eq!(Some(5u32).context("never").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_build_and_return_errors() {
+        fn checks(v: usize) -> Result<usize> {
+            ensure!(v < 10, "too large: {v}");
+            ensure!(v != 7);
+            if v == 3 {
+                bail!("three is right out");
+            }
+            Ok(v)
+        }
+        assert_eq!(checks(2).unwrap(), 2);
+        assert!(checks(12).unwrap_err().to_string().contains("too large: 12"));
+        assert!(checks(7).unwrap_err().to_string().contains("v != 7"));
+        assert!(checks(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!("plain {} message", 1);
+        assert_eq!(e.to_string(), "plain 1 message");
+    }
+}
