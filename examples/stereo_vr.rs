@@ -10,7 +10,7 @@ use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::raster::{render_bins, RasterConfig};
 use nebula::render::stereo::{render_right_naive, render_stereo_from_splats, StereoMode};
 use nebula::render::warp::{depth_map, warp_right, WarpKind};
-use nebula::render::{preprocess_records, TileBins};
+use nebula::render::{preprocess_records, Parallelism, TileBins};
 use nebula::scene::dataset;
 use nebula::util::cli::Args;
 use nebula::util::table::{fnum, Table};
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     // Shared preprocessing (left eye optics, widened FoV).
     let left_cam = cam.left();
     let shared = cam.shared_camera();
-    let mut set = preprocess_records(&left_cam, &shared, &refs, pl.sh_degree);
+    let mut set = preprocess_records(&left_cam, &shared, &refs, pl.sh_degree, Parallelism::auto());
     nebula::render::sort::sort_splats(&mut set.splats);
 
     // Reference right eye (the shared-preprocess pipeline definition).

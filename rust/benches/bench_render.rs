@@ -1,8 +1,10 @@
 //! BENCH_render: throughput of the parallel tile-scheduled rendering
 //! engine on a fixed `scene::citygen` scene, mono + stereo, swept over
 //! thread counts. Writes `BENCH_render.json` (ms/frame, pairs/s and
-//! speedups vs. the serial reference) so the perf trajectory of the hot
-//! path is tracked across PRs.
+//! speedups vs. the serial reference, plus a per-stage breakdown of the
+//! stereo frame — preprocess / left / SRU / right / LoD-validate — with
+//! the Amdahl serial fraction implied by each thread count) so the perf
+//! trajectory of the hot path is tracked across PRs.
 //!
 //!     cargo bench --bench bench_render
 //!
@@ -11,10 +13,11 @@
 //! `NEBULA_BENCH_OUT` (output path, default `BENCH_render.json`).
 
 use nebula::benchkit;
+use nebula::lod::LodSearch;
 use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::engine::Parallelism;
 use nebula::render::raster::{render_bins, RasterConfig};
-use nebula::render::stereo::{render_stereo_from_splats, StereoMode};
+use nebula::render::stereo::{render_stereo, render_stereo_from_splats, StereoMode};
 use nebula::render::{preprocess_records, ProjectedSet, TileBins};
 use nebula::scene::{CityGen, CityParams};
 use nebula::trace::{PoseTrace, TraceParams};
@@ -51,7 +54,7 @@ fn main() {
     let refs = benchkit::queue_refs(&queue);
     let left = cam.left();
     let shared = cam.shared_camera();
-    let mut set: ProjectedSet = preprocess_records(&left, &shared, &refs, 3);
+    let mut set: ProjectedSet = preprocess_records(&left, &shared, &refs, 3, Parallelism::auto());
     nebula::render::sort::sort_splats(&mut set.splats);
     println!(
         "scene: {} Gaussians, {} visible splats, {w}x{h} @ tile {tile}",
@@ -148,6 +151,87 @@ fn main() {
         println!("  stereo {label:>6}: {ms:>8.2} ms/frame");
     }
 
+    // --- Per-stage breakdown (preprocess / left / SRU / right / validate)
+    // The stages PR 1 left serial now ride the engine too; record their
+    // per-thread scaling plus the Amdahl serial fraction implied by the
+    // whole-frame speedup (s = (n/S - 1)/(n - 1)), so the stereo frame's
+    // serial fraction is tracked shrinking across PRs.
+    struct StageRow {
+        threads: usize,
+        pre_ms: f64,
+        left_ms: f64,
+        sru_ms: f64,
+        right_ms: f64,
+        validate_ms: f64,
+        frame_ms: f64,
+        amdahl_serial_fraction: f64,
+    }
+    let median = |xs: &mut Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    // A real LoD cut for the validate-stage timing.
+    let query = nebula::lod::LodQuery::new(pose.position, cam.intr.fx, 6.0, cam.intr.near);
+    let lod_cut = nebula::lod::StreamingSearch::default().search(&tree, &query);
+    let n_samples = env_u32("NEBULA_BENCH_SAMPLES", 5).max(1) as usize;
+    let n_warmup = env_u32("NEBULA_BENCH_WARMUP", 1) as usize;
+    let mut stage_rows: Vec<StageRow> = Vec::new();
+    let mut stage_serial_frame = 0.0f64;
+    for (label, par) in &sweep {
+        let c = cfg(*par);
+        let (mut pre, mut lft, mut sru, mut rgt, mut val) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for i in 0..n_samples + n_warmup {
+            let out = render_stereo(&cam, &refs, 3, tile, &c, StereoMode::AlphaGated);
+            let t = std::time::Instant::now();
+            lod_cut.validate_par(&tree, &query, *par).expect("cut is valid");
+            if i < n_warmup {
+                continue; // warmup
+            }
+            val.push(t.elapsed().as_secs_f64() * 1e3);
+            pre.push(out.stages.preprocess * 1e3);
+            lft.push(out.stages.left * 1e3);
+            sru.push(out.stages.sru * 1e3);
+            rgt.push(out.stages.right * 1e3);
+        }
+        let (pre_ms, left_ms, sru_ms, right_ms, validate_ms) = (
+            median(&mut pre),
+            median(&mut lft),
+            median(&mut sru),
+            median(&mut rgt),
+            median(&mut val),
+        );
+        let frame_ms = pre_ms + left_ms + sru_ms + right_ms;
+        let threads = match par {
+            Parallelism::Serial => 0,
+            Parallelism::Threads(n) => *n,
+        };
+        if threads == 0 {
+            stage_serial_frame = frame_ms;
+        }
+        let amdahl_serial_fraction = if threads >= 2 && frame_ms > 0.0 {
+            let s = stage_serial_frame / frame_ms; // whole-frame speedup
+            let n = threads as f64;
+            ((n / s - 1.0) / (n - 1.0)).clamp(0.0, 1.0)
+        } else {
+            1.0 // one worker: the whole frame is serial by definition
+        };
+        println!(
+            "  stages {label:>6}: pre {pre_ms:>7.2}  left {left_ms:>7.2}  sru {sru_ms:>6.2}  \
+             right {right_ms:>7.2}  validate {validate_ms:>6.3} ms  (serial frac {amdahl_serial_fraction:.2})"
+        );
+        stage_rows.push(StageRow {
+            threads,
+            pre_ms,
+            left_ms,
+            sru_ms,
+            right_ms,
+            validate_ms,
+            frame_ms,
+            amdahl_serial_fraction,
+        });
+    }
+
     let speedup_of = |mode: &str, threads: usize| {
         rows.iter()
             .find(|r| r.mode == mode && r.threads == threads)
@@ -181,6 +265,22 @@ fn main() {
             r.pairs_per_s,
             r.speedup_vs_serial,
             if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str("  \"stages\": [\n");
+    for (i, r) in stage_rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}}}{}\n",
+            r.threads,
+            r.pre_ms,
+            r.left_ms,
+            r.sru_ms,
+            r.right_ms,
+            r.validate_ms,
+            r.frame_ms,
+            r.amdahl_serial_fraction,
+            if i + 1 == stage_rows.len() { "" } else { "," }
         ));
     }
     j.push_str("  ]\n}\n");

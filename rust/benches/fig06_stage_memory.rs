@@ -5,7 +5,7 @@
 use nebula::benchkit::{self, build_scene, walk_trace};
 use nebula::lod::{LodSearch, StreamingSearch};
 use nebula::math::{Intrinsics, StereoCamera};
-use nebula::render::preprocess_records;
+use nebula::render::{preprocess_records, Parallelism};
 use nebula::scene::LARGE_DATASETS;
 use nebula::util::bench::bench_header;
 use nebula::util::table::{fnum, Table};
@@ -25,7 +25,7 @@ fn main() {
         let queue = benchkit::queue_for(&tree, &cut.nodes);
         let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
         let shared = StereoCamera::new(pose, cam.intr).shared_camera();
-        let set = preprocess_records(&cam.left(), &shared, &benchkit::queue_refs(&queue), 3);
+        let set = preprocess_records(&cam.left(), &shared, &benchkit::queue_refs(&queue), 3, Parallelism::auto());
         t.row(vec![
             spec.name.to_string(),
             lod_gaussians.to_string(),

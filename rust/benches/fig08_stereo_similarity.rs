@@ -6,7 +6,7 @@ use nebula::benchkit::{self, build_scene, walk_trace};
 use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::raster::{render_bins, RasterConfig};
 use nebula::render::warp::depth_map;
-use nebula::render::{preprocess_records, TileBins};
+use nebula::render::{preprocess_records, Parallelism, TileBins};
 use nebula::scene::ALL_DATASETS;
 use nebula::util::bench::bench_header;
 use nebula::util::table::{fnum, Table};
@@ -22,7 +22,7 @@ fn main() {
         let cut = benchkit::cut_at(&tree, &pose, &pl);
         let queue = benchkit::queue_for(&tree, &cut);
         let left = cam.left();
-        let mut set = preprocess_records(&left, &cam.shared_camera(), &benchkit::queue_refs(&queue), 3);
+        let mut set = preprocess_records(&left, &cam.shared_camera(), &benchkit::queue_refs(&queue), 3, Parallelism::auto());
         nebula::render::sort::sort_splats(&mut set.splats);
         let cfg = RasterConfig::default();
         let bins = TileBins::build(cam.intr.width, cam.intr.height, pl.tile, 0, &set.splats);

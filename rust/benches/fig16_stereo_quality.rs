@@ -8,7 +8,7 @@ use nebula::render::raster::{render_bins, RasterConfig};
 use nebula::render::sort::sort_splats;
 use nebula::render::stereo::{render_right_naive, render_stereo_from_splats, StereoMode};
 use nebula::render::warp::{depth_map, warp_right, WarpKind};
-use nebula::render::{preprocess_records, TileBins};
+use nebula::render::{preprocess_records, Parallelism, TileBins};
 use nebula::scene::ALL_DATASETS;
 use nebula::util::bench::bench_header;
 use nebula::util::table::{fnum, Table};
@@ -28,7 +28,7 @@ fn main() {
         let queue = benchkit::queue_for(&tree, &cut);
         let left_cam = cam.left();
         let mut set =
-            preprocess_records(&left_cam, &cam.shared_camera(), &benchkit::queue_refs(&queue), 3);
+            preprocess_records(&left_cam, &cam.shared_camera(), &benchkit::queue_refs(&queue), 3, Parallelism::auto());
         sort_splats(&mut set.splats);
         let cfg = RasterConfig::default();
         let (reference, _) = render_right_naive(&cam, &set, pl.tile, &cfg);

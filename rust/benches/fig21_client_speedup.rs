@@ -7,7 +7,7 @@ use nebula::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, 
 use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::raster::{render_mono, RasterConfig};
 use nebula::render::stereo::{render_stereo, StereoMode};
-use nebula::render::preprocess_records;
+use nebula::render::{preprocess_records, Parallelism};
 use nebula::scene::ALL_DATASETS;
 use nebula::util::bench::bench_header;
 use nebula::util::table::{fnum, Table};
@@ -35,8 +35,8 @@ fn main() {
         let pixels = 2 * Intrinsics::vr_eye().pixels();
 
         // Base workload: both eyes independently.
-        let lset = preprocess_records(&cam.left(), &cam.left(), &refs, 3);
-        let rset = preprocess_records(&cam.right(), &cam.right(), &refs, 3);
+        let lset = preprocess_records(&cam.left(), &cam.left(), &refs, 3, Parallelism::auto());
+        let rset = preprocess_records(&cam.right(), &cam.right(), &refs, 3, Parallelism::auto());
         let count = (lset.splats.len() + rset.splats.len()) / 2;
         let (_, ls, _) = render_mono(lset, cam.intr.width, cam.intr.height, pl.tile, &cfg);
         let (_, rs, _) = render_mono(rset, cam.intr.width, cam.intr.height, pl.tile, &cfg);

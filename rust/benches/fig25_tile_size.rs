@@ -8,7 +8,7 @@ use nebula::hw::{FrameWorkload, MobileGpu, Platform};
 use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::raster::{render_mono, RasterConfig};
 use nebula::render::stereo::{render_stereo, StereoMode};
-use nebula::render::preprocess_records;
+use nebula::render::{preprocess_records, Parallelism};
 use nebula::scene::dataset;
 use nebula::util::bench::bench_header;
 use nebula::util::table::{fnum, Table};
@@ -28,8 +28,8 @@ fn main() {
 
     let mut t = Table::new(vec!["tile", "base ms", "stereo ms", "speedup"]);
     for tile in [4u32, 8, 16, 32] {
-        let lset = preprocess_records(&cam.left(), &cam.left(), &refs, 3);
-        let rset = preprocess_records(&cam.right(), &cam.right(), &refs, 3);
+        let lset = preprocess_records(&cam.left(), &cam.left(), &refs, 3, Parallelism::auto());
+        let rset = preprocess_records(&cam.right(), &cam.right(), &refs, 3, Parallelism::auto());
         let count = (lset.splats.len() + rset.splats.len()) / 2;
         let (_, ls, _) = render_mono(lset, cam.intr.width, cam.intr.height, tile, &cfg);
         let (_, rs, _) = render_mono(rset, cam.intr.width, cam.intr.height, tile, &cfg);

@@ -43,9 +43,30 @@ pub struct PipelineConfig {
     pub reuse_threshold: u32,
     /// Downscale factor applied to the VR eye resolution (1 = full).
     pub res_scale: u32,
-    /// Rasterizer worker threads: 0 = auto-detect, 1 = serial, n = n
-    /// threads (bitwise-invariant; see `render::engine`).
+    /// Worker threads for EVERY data-parallel frame stage — left/right
+    /// rasterization, EWA preprocessing, the SRU disparity-list
+    /// insertion, and the temporal-LoD validation pass: 0 = auto-detect,
+    /// 1 = serial, n = n threads. Bitwise-invariant at every value; see
+    /// `render::engine`.
     pub threads: usize,
+}
+
+impl PipelineConfig {
+    /// Reject values that would panic deep in the pipeline: `tile = 0`
+    /// (`div_ceil(0)` in `TileBins::build`) and `lod_interval = 0`
+    /// (modulo in the simulation frame loop). Applied by
+    /// [`RunConfig::from_args`] / [`RunConfig::from_toml`], so both CLI
+    /// and TOML inputs fail up front with an error naming the offending
+    /// key instead of panicking mid-run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.tile >= 1, "pipeline.tile must be >= 1 (got {})", self.tile);
+        anyhow::ensure!(
+            self.lod_interval >= 1,
+            "pipeline.lod_interval must be >= 1 (got {})",
+            self.lod_interval
+        );
+        Ok(())
+    }
 }
 
 impl Default for PipelineConfig {
@@ -94,7 +115,10 @@ impl RunConfig {
     /// `--config <path>` was also given).
     pub fn from_args(args: &Args) -> anyhow::Result<Self> {
         let mut cfg = if let Some(path) = args.get("config") {
-            Self::from_toml_file(path)?
+            // Parse WITHOUT validating: only the merged file+CLI result
+            // is checked (below), so a bad file value repaired by a CLI
+            // flag is accepted.
+            Self::parse_toml(&std::fs::read_to_string(path)?)?
         } else {
             Self { frames: 64, artifacts_dir: "artifacts".into(), ..Default::default() }
         };
@@ -114,6 +138,9 @@ impl RunConfig {
         if let Some(a) = args.get("artifacts") {
             cfg.artifacts_dir = a.to_string();
         }
+        // Validate last: CLI overrides can re-introduce bad values after
+        // a valid config file.
+        cfg.pipeline.validate()?;
         Ok(cfg)
     }
 
@@ -123,6 +150,14 @@ impl RunConfig {
     }
 
     pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let cfg = Self::parse_toml(text)?;
+        cfg.pipeline.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse without validating — used by [`from_args`](Self::from_args)
+    /// so CLI overrides are applied before the single merged validation.
+    fn parse_toml(text: &str) -> anyhow::Result<Self> {
         let doc = toml::parse(text)?;
         let mut cfg = Self { frames: 64, artifacts_dir: "artifacts".into(), ..Default::default() };
         if let Some(s) = doc.section("scene") {
@@ -216,5 +251,54 @@ frames = 16
         assert_eq!(cfg.scene.dataset, "mega");
         assert_eq!(cfg.pipeline.tau_px, 3.5);
         assert_eq!(cfg.frames, 9);
+    }
+
+    #[test]
+    fn degenerate_values_rejected_with_key_names() {
+        // Regression: lod_interval = 0 used to reach a `i % 0` panic in
+        // run_simulation, tile = 0 a div_ceil(0) panic in TileBins.
+        let err = RunConfig::from_toml("[pipeline]\nlod_interval = 0\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.lod_interval"), "{err}");
+        let err = RunConfig::from_toml("[pipeline]\ntile = 0\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.tile"), "{err}");
+
+        let args =
+            Args::parse(["--lod-interval", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("pipeline.lod_interval"), "{err}");
+        let args = Args::parse(["--tile", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("pipeline.tile"), "{err}");
+
+        // Valid boundary values still pass.
+        let cfg = RunConfig::from_toml("[pipeline]\nlod_interval = 1\ntile = 4\n").unwrap();
+        assert_eq!(cfg.pipeline.lod_interval, 1);
+        assert_eq!(cfg.pipeline.tile, 4);
+        let args = Args::parse(["--frames", "1"].iter().map(|s| s.to_string()));
+        assert_eq!(RunConfig::from_args(&args).unwrap().frames, 1, "short runs are legal");
+    }
+
+    #[test]
+    fn cli_override_can_repair_bad_file_value() {
+        // Only the MERGED file+CLI config is validated: a degenerate
+        // file value replaced by a CLI flag must be accepted, while the
+        // same file without the repair is rejected.
+        // Unique per process so concurrent debug/release suites on one
+        // machine don't race on create/delete.
+        let path = std::env::temp_dir()
+            .join(format!("nebula_cfg_validate_test_{}.toml", std::process::id()));
+        std::fs::write(&path, "[pipeline]\ntile = 0\n").unwrap();
+        let p = path.to_str().unwrap().to_string();
+
+        let repaired = Args::parse(
+            ["--config", p.as_str(), "--tile", "16"].iter().map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&repaired).unwrap();
+        assert_eq!(cfg.pipeline.tile, 16);
+
+        let unrepaired = Args::parse(["--config", p.as_str()].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&unrepaired).unwrap_err();
+        assert!(err.to_string().contains("pipeline.tile"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -12,6 +12,7 @@ use crate::config::PipelineConfig;
 use crate::lod::{LodQuery, LodSearch, LodTree, TemporalSearch};
 use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg, SceneInit};
 use crate::math::Vec3;
+use crate::render::engine::Parallelism;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -98,7 +99,10 @@ pub fn spawn_cloud(
     let join = std::thread::spawn(move || {
         let tree_ref: &LodTree = &tree;
         let mut cloud = CloudEndpoint::new(tree_ref, codec, pipeline.reuse_threshold);
-        let mut search = TemporalSearch::for_tree(tree_ref);
+        // The validation pass rides the same `threads` knob as the
+        // client's render stages (bitwise-invariant).
+        let mut search = TemporalSearch::for_tree(tree_ref)
+            .with_parallelism(Parallelism::from_threads(pipeline.threads));
         while let Ok(req) = req_rx.recv() {
             match req {
                 CloudRequest::Shutdown => break,

@@ -45,6 +45,20 @@ const CLOUD_COMPRESS_BPS: f64 = 4.0e9;
 /// Client decode throughput on the Nebula decoder (Gaussians/s).
 const DECODE_RATE: f64 = 1.0e9;
 
+/// Nearest-rank percentile of an ascending-sorted sample: index
+/// `(len·q) - 1`, clamped into `[0, len-1]` so short runs (e.g.
+/// `--frames 1`, where the raw expression underflows) stay in bounds.
+/// For `len ≥ 2` this reproduces the historical index exactly. An empty
+/// sample yields `NaN` — consistent with the mean-of-zero-frames fields
+/// next to it, and panic-free for `frames == 0` library callers.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 * q) as usize).saturating_sub(1).min(sorted.len() - 1);
+    sorted[idx]
+}
+
 fn make_platform(kind: PlatformKind, tile: u32) -> Box<dyn Platform> {
     match kind {
         PlatformKind::Gpu => Box::new(MobileGpu::orin().with_tile(tile)),
@@ -68,11 +82,14 @@ pub fn run_simulation(
     let intr = Intrinsics::vr_eye_scaled(pl.res_scale.max(1));
     let s2 = (full_intr.pixels() as f64 / intr.pixels() as f64).max(1.0);
     let full_pixels = 2 * full_intr.pixels();
-    let raster_cfg = RasterConfig {
-        alpha_min: pl.alpha_min,
-        t_min: pl.transmittance_min,
-        parallelism: Parallelism::from_threads(pl.threads),
-    };
+    // One strategy for every data-parallel frame stage: rasterization,
+    // preprocess, SRU insertion, and the temporal-LoD validation pass.
+    let par = Parallelism::from_threads(pl.threads);
+    let raster_cfg =
+        RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min, parallelism: par };
+    // Defense in depth for direct SimParams construction; config-file /
+    // CLI zeros are rejected earlier by `PipelineConfig::validate`.
+    let lod_interval = (pl.lod_interval as usize).max(1);
 
     // --- Cloud setup ----------------------------------------------------
     let (lo, hi) = tree.gaussians.bounds();
@@ -82,7 +99,7 @@ pub fn run_simulation(
         VqTrainer { max_samples: 4000, ..Default::default() }.train(&tree.gaussians.sh),
     );
     let mut cloud = CloudEndpoint::new(tree, codec, pl.reuse_threshold);
-    let mut temporal = TemporalSearch::for_tree(tree);
+    let mut temporal = TemporalSearch::for_tree(tree).with_parallelism(par);
     let mut streaming = StreamingSearch::default();
     let mut client = ClientEndpoint::from_init(
         &cloud.scene_init(),
@@ -136,7 +153,7 @@ pub fn run_simulation(
         }
 
         // Cloud round every w frames (if the previous one was delivered).
-        if i % pl.lod_interval as usize == 0 && i > 0 && pending.is_none() {
+        if i % lod_interval == 0 && i > 0 && pending.is_none() {
             let q = LodQuery::new(pose.position, full_intr.fx, pl.tau_px, full_intr.near);
             let cut = search(&mut temporal, &mut streaming, &q);
             visits_sum += cut.nodes_visited;
@@ -165,7 +182,7 @@ pub fn run_simulation(
                 // Track right-eye quality on the final frame.
                 let left_cam = stereo_cam.left();
                 let shared = stereo_cam.shared_camera();
-                let mut set = preprocess_records(&left_cam, &shared, &queue, pl.sh_degree);
+                let mut set = preprocess_records(&left_cam, &shared, &queue, pl.sh_degree, par);
                 crate::render::sort::sort_splats(&mut set.splats);
                 let (reference, _) = render_right_naive(&stereo_cam, &set, pl.tile, &raster_cfg);
                 right_psnr = out.right.psnr(&reference);
@@ -174,8 +191,8 @@ pub fn run_simulation(
         } else {
             let lcam = stereo_cam.left();
             let rcam = stereo_cam.right();
-            let lset = preprocess_records(&lcam, &lcam, &queue, pl.sh_degree);
-            let rset = preprocess_records(&rcam, &rcam, &queue, pl.sh_degree);
+            let lset = preprocess_records(&lcam, &lcam, &queue, pl.sh_degree, par);
+            let rset = preprocess_records(&rcam, &rcam, &queue, pl.sh_degree, par);
             let n = lset.splats.len() + rset.splats.len();
             let (_, lstats, _) = render_mono(lset, intr.width, intr.height, pl.tile, &raster_cfg);
             let (_, rstats, _) = render_mono(rset, intr.width, intr.height, pl.tile, &raster_cfg);
@@ -217,7 +234,7 @@ pub fn run_simulation(
         variant: variant.name.clone(),
         frames: frames as u32,
         mtp_ms: mtp.iter().sum::<f64>() / frames as f64,
-        mtp_p99_ms: sorted_mtp[(frames as f64 * 0.99) as usize - 1],
+        mtp_p99_ms: percentile(&sorted_mtp, 0.99),
         fps: frames as f64 / render_s_sum,
         render_s: render_s_sum / frames as f64,
         wire_bytes: streamed_bytes,
@@ -262,7 +279,7 @@ pub fn run_remote_simulation(
         variant: format!("Remote-{}", quality.label()),
         frames,
         mtp_ms: mtp.iter().sum::<f64>() / frames as f64,
-        mtp_p99_ms: sorted[(frames as f64 * 0.99) as usize - 1],
+        mtp_p99_ms: percentile(&sorted, 0.99),
         fps: (params.fps).min(link.bytes_per_second() / codec.bytes_per_frame() as f64),
         render_s: codec.codec_latency_s(),
         wire_bytes: codec.bytes_per_frame() * frames as u64,
@@ -293,6 +310,66 @@ mod tests {
         let mut p = SimParams::default();
         p.pipeline.res_scale = 16;
         p
+    }
+
+    #[test]
+    fn percentile_clamps_into_bounds() {
+        assert!(percentile(&[], 0.99).is_nan(), "empty sample must not panic");
+        assert_eq!(percentile(&[7.0], 0.99), 7.0, "frames == 1 must not underflow");
+        assert_eq!(percentile(&[1.0, 2.0], 0.99), 1.0, "historical index for len 2");
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), 99.0, "historical nearest-rank index for len 100");
+        assert_eq!(percentile(&v, 1.0), 100.0);
+    }
+
+    #[test]
+    fn single_frame_simulation_runs() {
+        // Regression: `--frames 1` used to panic in the p99 computation.
+        let (tree, poses) = small_world();
+        let r = run_simulation(&tree, &poses[..1], &Variant::nebula(), &fast_params());
+        assert_eq!(r.frames, 1);
+        assert_eq!(r.mtp_ms, r.mtp_p99_ms, "one sample: mean == p99");
+        assert!(r.mtp_ms > 0.0);
+
+        let remote = run_remote_simulation(&fast_params(), crate::net::VideoQuality::LossyHigh, 1);
+        assert_eq!(remote.frames, 1);
+        assert!(remote.mtp_p99_ms > 0.0);
+
+        // frames == 0 must not panic either (NaN metrics, like the means).
+        let empty = run_remote_simulation(&fast_params(), crate::net::VideoQuality::LossyHigh, 0);
+        assert_eq!(empty.frames, 0);
+        assert!(empty.mtp_p99_ms.is_nan());
+    }
+
+    #[test]
+    fn degenerate_lod_interval_is_clamped() {
+        // Direct SimParams construction bypasses config validation; the
+        // frame loop must still not divide by zero.
+        let (tree, poses) = small_world();
+        let mut p = fast_params();
+        p.pipeline.lod_interval = 0;
+        let r = run_simulation(&tree, &poses[..4], &Variant::nebula(), &p);
+        assert_eq!(r.frames, 4);
+    }
+
+    #[test]
+    fn threaded_simulation_counters_match_serial() {
+        // `threads` now governs preprocess/SRU/validate too; every
+        // workload counter and quality metric must be thread-invariant
+        // (timing fields excluded — they are wall-clock).
+        let (tree, poses) = small_world();
+        let mut serial = fast_params();
+        serial.pipeline.threads = 1;
+        let mut threaded = fast_params();
+        threaded.pipeline.threads = 4;
+        let a = run_simulation(&tree, &poses[..8], &Variant::nebula(), &serial);
+        let b = run_simulation(&tree, &poses[..8], &Variant::nebula(), &threaded);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert_eq!(a.initial_bytes, b.initial_bytes);
+        assert_eq!(a.cloud_visits, b.cloud_visits);
+        assert_eq!(a.delta_gaussians, b.delta_gaussians);
+        assert_eq!(a.peak_client_gaussians, b.peak_client_gaussians);
+        assert_eq!(a.right_psnr_db, b.right_psnr_db, "rendering must be bitwise identical");
     }
 
     #[test]

@@ -11,6 +11,13 @@
 
 use super::tree::LodTree;
 use crate::math::Vec3;
+use crate::render::engine::{parallel_map_chunks, Parallelism};
+
+/// Nodes per validation band, shared by `Cut::validate_par` and
+/// `Partitioning::validate_par` (fixed, never thread-count derived, so
+/// the band boundaries — and therefore which band reports an error
+/// first — are identical on every `Parallelism`).
+pub(crate) const NODE_BAND: usize = 4096;
 
 /// A LoD query: camera position + the scalars the predicate needs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -98,22 +105,76 @@ impl Cut {
     /// Verify that this is exactly the cut induced by `query` on `tree`:
     /// each node unrefined with refined parent, and the whole tree is
     /// covered (every leaf-to-root path crosses the cut exactly once).
+    ///
+    /// Serial reference path; [`validate_par`](Self::validate_par) bands
+    /// the node ranges over threads with an identical verdict.
     pub fn validate(&self, tree: &LodTree, query: &LodQuery) -> anyhow::Result<()> {
+        self.validate_par(tree, query, Parallelism::Serial)
+    }
+
+    /// [`validate`](Self::validate) with the per-node predicate work —
+    /// the distance evaluations that dominate the pass — banded over
+    /// `par` on the engine. Band results merge in node order, so the
+    /// verdict (including *which* violation is reported first) is
+    /// identical at every thread count.
+    pub fn validate_par(
+        &self,
+        tree: &LodTree,
+        query: &LodQuery,
+        par: Parallelism,
+    ) -> anyhow::Result<()> {
         use std::collections::HashSet;
         let set: HashSet<u32> = self.nodes.iter().copied().collect();
         anyhow::ensure!(set.len() == self.nodes.len(), "duplicate cut nodes");
-        for &n in &self.nodes {
-            anyhow::ensure!(!query.refined(tree, n), "cut node {n} is refined");
-            let p = tree.parent[n as usize];
-            if p != super::tree::NO_PARENT {
-                anyhow::ensure!(query.refined(tree, p), "cut node {n}'s parent {p} not refined");
+        let cut_checks = parallel_map_chunks(self.nodes.len(), NODE_BAND, par, |range| {
+            for &n in &self.nodes[range] {
+                anyhow::ensure!(!query.refined(tree, n), "cut node {n} is refined");
+                let p = tree.parent[n as usize];
+                if p != super::tree::NO_PARENT {
+                    anyhow::ensure!(
+                        query.refined(tree, p),
+                        "cut node {n}'s parent {p} not refined"
+                    );
+                }
             }
+            Ok(())
+        });
+        for r in cut_checks {
+            r?;
         }
         // Coverage: walk from the root; every refined node's children are
         // either on the cut or refined themselves.
+        if par.threads() <= 1 {
+            // Lazy serial walk: evaluates the predicate only for nodes
+            // reachable through refined nodes — far fewer than
+            // tree.len() for coarse cuts — exactly like the historical
+            // validator.
+            let mut stack = vec![LodTree::ROOT];
+            while let Some(n) = stack.pop() {
+                if query.refined(tree, n) {
+                    for c in tree.children(n) {
+                        stack.push(c);
+                    }
+                } else {
+                    anyhow::ensure!(set.contains(&n), "node {n} should be on the cut but is not");
+                }
+            }
+            return Ok(());
+        }
+        // Threaded: the predicate — the expensive part — is
+        // pre-evaluated for ALL nodes in bands (trading the lazy walk's
+        // economy for parallelism); the cheap structural walk then
+        // replays the serial traversal order over the flags, so the
+        // first reported violation is unchanged.
+        let refined: Vec<bool> = parallel_map_chunks(tree.len(), NODE_BAND, par, |range| {
+            range.map(|n| query.refined(tree, n as u32)).collect::<Vec<bool>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
         let mut stack = vec![LodTree::ROOT];
         while let Some(n) = stack.pop() {
-            if query.refined(tree, n) {
+            if refined[n as usize] {
                 for c in tree.children(n) {
                     stack.push(c);
                 }
@@ -181,6 +242,30 @@ mod tests {
             if tree.is_leaf(i) {
                 assert!(!q.refined(&tree, i));
             }
+        }
+    }
+
+    #[test]
+    fn validate_par_verdict_identical_across_thread_counts() {
+        use crate::lod::search_streaming::StreamingSearch;
+        use crate::lod::LodSearch;
+        let mut rng = Prng::new(4);
+        let tree = random_tree(&mut rng, 900);
+        let q = LodQuery::new(Vec3::new(5.0, 1.7, -12.0), 900.0, 6.0, 0.2);
+        let cut = StreamingSearch::default().search(&tree, &q);
+        for par in [Parallelism::Threads(2), Parallelism::Threads(8)] {
+            cut.validate_par(&tree, &q, par).unwrap();
+        }
+        // A corrupted cut must fail with the SAME first error message on
+        // every thread count (bands merge in node order).
+        let mut bad = cut.clone();
+        if !bad.nodes.is_empty() {
+            bad.nodes.remove(0);
+        }
+        let want = bad.validate(&tree, &q).unwrap_err().to_string();
+        for par in [Parallelism::Threads(2), Parallelism::Threads(8)] {
+            let got = bad.validate_par(&tree, &q, par).unwrap_err().to_string();
+            assert_eq!(want, got, "{par:?}");
         }
     }
 

@@ -12,7 +12,9 @@
 //! equal size for balanced GPU-warp assignment; here the bound is
 //! `max_region` up to one branching factor.
 
+use super::cut::NODE_BAND;
 use super::tree::LodTree;
+use crate::render::engine::{parallel_map_chunks, Parallelism};
 
 /// Region id sentinel: node is not an entry of any region.
 pub const NOT_ENTRY: u32 = u32::MAX;
@@ -108,29 +110,50 @@ impl Partitioning {
         sizes
     }
 
-    /// Validate partitioning invariants against the tree.
+    /// Validate partitioning invariants against the tree. Serial
+    /// reference path; [`validate_par`](Self::validate_par) bands the
+    /// per-node sweep over threads with an identical verdict.
     pub fn validate(&self, tree: &LodTree) -> anyhow::Result<()> {
+        self.validate_par(tree, Parallelism::Serial)
+    }
+
+    /// [`validate`](Self::validate) with the per-node ownership sweep
+    /// banded over `par` on the engine (the same banding as
+    /// `Cut::validate_par`). Band results merge in node order, so the
+    /// verdict — including which violation is reported first — is
+    /// identical at every thread count.
+    pub fn validate_par(&self, tree: &LodTree, par: Parallelism) -> anyhow::Result<()> {
         let n = tree.len();
         anyhow::ensure!(self.owner.len() == n && self.entry_region.len() == n);
         anyhow::ensure!(self.entry_region[0] == 0, "root must be entry of region 0");
-        for i in 1..n as u32 {
-            let p = tree.parent[i as usize] as usize;
-            // A node's owner is its parent's interior region: either the
-            // parent's own owner (parent not an entry) or the parent's
-            // entry region.
-            let expect = if self.entry_region[p] != NOT_ENTRY && p != 0 {
-                self.entry_region[p]
-            } else if p == 0 {
-                // Root is entry of region 0 (also owner 0).
-                0
-            } else {
-                self.owner[p]
-            };
-            anyhow::ensure!(
-                self.owner[i as usize] == expect,
-                "owner of {i} is {} expected {expect}",
-                self.owner[i as usize]
-            );
+        let owner_checks = parallel_map_chunks(n, NODE_BAND, par, |range| {
+            for i in range {
+                if i == 0 {
+                    continue;
+                }
+                let i = i as u32;
+                let p = tree.parent[i as usize] as usize;
+                // A node's owner is its parent's interior region: either
+                // the parent's own owner (parent not an entry) or the
+                // parent's entry region.
+                let expect = if self.entry_region[p] != NOT_ENTRY && p != 0 {
+                    self.entry_region[p]
+                } else if p == 0 {
+                    // Root is entry of region 0 (also owner 0).
+                    0
+                } else {
+                    self.owner[p]
+                };
+                anyhow::ensure!(
+                    self.owner[i as usize] == expect,
+                    "owner of {i} is {} expected {expect}",
+                    self.owner[i as usize]
+                );
+            }
+            Ok(())
+        });
+        for r in owner_checks {
+            r?;
         }
         // Region entries and parents consistent.
         for (k, &e) in self.region_entry.iter().enumerate() {
@@ -166,6 +189,25 @@ mod tests {
             let p = Partitioning::with_max_region(&tree, m);
             p.validate(&tree).unwrap();
         });
+    }
+
+    #[test]
+    fn validate_par_verdict_identical_across_thread_counts() {
+        let mut rng = Prng::new(35);
+        let tree = random_tree(&mut rng, 900);
+        let mut p = Partitioning::with_max_region(&tree, 64);
+        for par in [Parallelism::Threads(2), Parallelism::Threads(8)] {
+            p.validate_par(&tree, par).unwrap();
+        }
+        // Corrupt one owner: the first reported violation must be the
+        // same on every thread count (bands merge in node order).
+        let victim = p.owner.len() / 2;
+        p.owner[victim] = p.owner[victim].wrapping_add(1);
+        let want = p.validate(&tree).unwrap_err().to_string();
+        for par in [Parallelism::Threads(2), Parallelism::Threads(8)] {
+            let got = p.validate_par(&tree, par).unwrap_err().to_string();
+            assert_eq!(want, got, "{par:?}");
+        }
     }
 
     #[test]

@@ -24,7 +24,14 @@ use super::cut::{Cut, LodQuery, LodSearch};
 use super::partition::{Partitioning, NOT_ENTRY};
 use super::tree::LodTree;
 use crate::math::Vec3;
+use crate::render::engine::{self, Parallelism};
 use std::collections::BTreeSet;
+
+/// Regions per validation band. Fixed (never thread-count derived):
+/// band boundaries don't affect the result — per-region checks are
+/// independent and the dirty set is a union — but keeping them fixed
+/// makes the banding trivially deterministic as well.
+const REGION_BAND: usize = 64;
 
 /// Per-region cached search state.
 #[derive(Debug, Clone)]
@@ -67,6 +74,9 @@ fn flip_distance(tree: &LodTree, query: &LodQuery, n: u32) -> f32 {
 pub struct TemporalSearch {
     pub part: Partitioning,
     regions: Vec<RegionState>,
+    /// Execution strategy for the validation pass (bitwise-invariant;
+    /// see [`find_dirty`](Self::find_dirty) and `render::engine`).
+    par: Parallelism,
     has_state: bool,
     /// (fx, tau, near) of the last query; margins are only valid while
     /// these scalars are unchanged.
@@ -88,6 +98,7 @@ impl TemporalSearch {
         Self {
             part,
             regions,
+            par: Parallelism::Serial,
             has_state: false,
             last_scalars: (0.0, 0.0, 0.0),
             cut_cache: Vec::new(),
@@ -99,6 +110,14 @@ impl TemporalSearch {
 
     pub fn for_tree(tree: &LodTree) -> Self {
         Self::new(Partitioning::new(tree))
+    }
+
+    /// Thread the per-frame validation pass. The cut, the dirty set and
+    /// every visit counter are identical at every value (enforced by the
+    /// parity tests); only wall time changes.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
     }
 
     /// Drop cached state (e.g., after a teleport).
@@ -199,46 +218,67 @@ impl TemporalSearch {
     /// eye-movement margin proves no flip is possible are skipped without
     /// touching their lists; regions that must be scanned get a fresh
     /// margin computed as a side effect.
+    ///
+    /// **Threading.** Active regions are banded over the engine in
+    /// fixed-size contiguous slices of the region array: per-region
+    /// checks and margin/eye updates touch only that region's own state,
+    /// so bands are fully independent and only the dirty-set union (and
+    /// the checked counter, a commuting u64 sum) is merged — in band
+    /// order, though a set union is order-invariant anyway. The dirty
+    /// set, every margin, and `checked` are identical at every thread
+    /// count.
     fn find_dirty(&mut self, tree: &LodTree, query: &LodQuery) -> (BTreeSet<u32>, u64) {
-        let mut dirty = BTreeSet::new();
-        let mut checked = 0u64;
-        for (k, st) in self.regions.iter_mut().enumerate() {
-            if !st.active {
-                continue;
-            }
-            if (query.eye - st.eye).norm() < st.margin {
-                continue; // conservatively unchanged — the temporal win
-            }
-            let mut bad = false;
-            let mut margin = f32::INFINITY;
-            for &n in &st.refined {
-                checked += 1;
-                let d = (tree.gaussians.pos[n as usize] - query.eye).norm().max(query.near);
-                let flip = flip_distance(tree, query, n);
-                if d >= flip {
-                    bad = true; // no longer refined
-                    break;
+        let bands: Vec<&mut [RegionState]> = self.regions.chunks_mut(REGION_BAND).collect();
+        let per_band = engine::parallel_map(bands, self.par, |bi, band| {
+            let base = (bi * REGION_BAND) as u32;
+            let mut dirty: Vec<u32> = Vec::new();
+            let mut checked = 0u64;
+            for (j, st) in band.iter_mut().enumerate() {
+                if !st.active {
+                    continue;
                 }
-                margin = margin.min(flip - d);
-            }
-            if !bad {
-                for &n in &st.cut {
+                if (query.eye - st.eye).norm() < st.margin {
+                    continue; // conservatively unchanged — the temporal win
+                }
+                let mut bad = false;
+                let mut margin = f32::INFINITY;
+                for &n in &st.refined {
                     checked += 1;
                     let d = (tree.gaussians.pos[n as usize] - query.eye).norm().max(query.near);
                     let flip = flip_distance(tree, query, n);
-                    if d < flip {
-                        bad = true; // became refined
+                    if d >= flip {
+                        bad = true; // no longer refined
                         break;
                     }
-                    margin = margin.min(d - flip);
+                    margin = margin.min(flip - d);
+                }
+                if !bad {
+                    for &n in &st.cut {
+                        checked += 1;
+                        let d =
+                            (tree.gaussians.pos[n as usize] - query.eye).norm().max(query.near);
+                        let flip = flip_distance(tree, query, n);
+                        if d < flip {
+                            bad = true; // became refined
+                            break;
+                        }
+                        margin = margin.min(d - flip);
+                    }
+                }
+                if bad {
+                    dirty.push(base + j as u32);
+                } else {
+                    st.eye = query.eye;
+                    st.margin = margin;
                 }
             }
-            if bad {
-                dirty.insert(k as u32);
-            } else {
-                st.eye = query.eye;
-                st.margin = margin;
-            }
+            (dirty, checked)
+        });
+        let mut dirty = BTreeSet::new();
+        let mut checked = 0u64;
+        for (d, c) in per_band {
+            dirty.extend(d);
+            checked += c;
         }
         (dirty, checked)
     }
@@ -420,6 +460,69 @@ mod tests {
         assert_eq!(a.nodes, b.nodes);
         // Second search must do validation only: strictly fewer visits.
         assert!(b.nodes_visited <= a.nodes_visited);
+    }
+
+    #[test]
+    fn find_dirty_identical_across_thread_counts() {
+        // Direct phase-level parity: the dirty set AND the checked
+        // counter from the banded validation pass must equal the serial
+        // pass's, with identical post-pass margins (observed through the
+        // next frame's behavior).
+        check("find_dirty serial ≡ threads", Config { cases: 16, ..Config::default() }, |rng| {
+            let n = rng.range_usize(50, 800);
+            let tree = random_tree(rng, n);
+            let part = Partitioning::with_max_region(&tree, rng.range_usize(4, 64));
+            let mk = |par| TemporalSearch::new(part.clone()).with_parallelism(par);
+            let mut searches = vec![
+                mk(Parallelism::Serial),
+                mk(Parallelism::Threads(2)),
+                mk(Parallelism::Threads(8)),
+            ];
+            let eye0 = Vec3::new(rng.range_f32(-40.0, 40.0), 1.7, rng.range_f32(-40.0, 40.0));
+            let tau = rng.range_f32(2.0, 40.0);
+            let q0 = query_at(eye0, tau);
+            for s in &mut searches {
+                s.search(&tree, &q0);
+            }
+            let step = if rng.chance(0.3) { 20.0 } else { 0.8 };
+            let q1 = query_at(
+                eye0 + Vec3::new(rng.normal() * step, 0.0, rng.normal() * step),
+                tau,
+            );
+            let (want_dirty, want_checked) = searches[0].find_dirty(&tree, &q1);
+            for s in searches.iter_mut().skip(1) {
+                let (dirty, checked) = s.find_dirty(&tree, &q1);
+                assert_eq!(want_dirty, dirty);
+                assert_eq!(want_checked, checked);
+            }
+        });
+    }
+
+    #[test]
+    fn threaded_search_matches_serial_along_a_walk() {
+        // End-to-end stage parity: cuts and visit counters from a
+        // threaded TemporalSearch must equal the serial one's on every
+        // frame of a mixed coherent/jumpy walk.
+        check("temporal threads ≡ serial walk", Config { cases: 12, ..Config::default() }, |rng| {
+            let n = rng.range_usize(50, 800);
+            let tree = random_tree(rng, n);
+            let part = Partitioning::with_max_region(&tree, rng.range_usize(8, 200));
+            let mut serial = TemporalSearch::new(part.clone());
+            let mut threaded =
+                TemporalSearch::new(part).with_parallelism(Parallelism::Threads(4));
+            let mut eye = Vec3::new(rng.range_f32(-40.0, 40.0), 1.7, rng.range_f32(-40.0, 40.0));
+            let tau = rng.range_f32(2.0, 40.0);
+            for _ in 0..10 {
+                let step = if rng.chance(0.15) { 30.0 } else { 0.5 };
+                eye += Vec3::new(rng.normal() * step, 0.0, rng.normal() * step);
+                let q = query_at(eye, tau);
+                let want = serial.search(&tree, &q);
+                let got = threaded.search(&tree, &q);
+                assert_eq!(want.nodes, got.nodes, "cut diverged at eye={eye:?}");
+                assert_eq!(want.nodes_visited, got.nodes_visited, "visits diverged");
+                assert_eq!(serial.active_regions(), threaded.active_regions());
+            }
+        });
     }
 
     #[test]

@@ -1,25 +1,29 @@
-//! Parallel tile-scheduled rendering engine.
+//! Parallel execution engine: an order-preserving data-parallel map
+//! ([`parallel_map`] / [`parallel_map_chunks`]) plus the tile-row slab
+//! scheduler ([`run_rows`]) built on top of it.
 //!
-//! Tiles are independent work units (disjoint pixels, per-tile blend
-//! order fixed by the depth-sorted bins), so the tile grid can be
-//! executed concurrently without changing a single bit of output. The
-//! engine partitions the grid into **tile rows**: row `ty` covers the
-//! contiguous pixel rows `[ty*tile, min((ty+1)*tile, height))`, i.e. a
-//! contiguous slab of the row-major [`Image`] buffer. Worker threads
-//! (plain `std::thread::scope`, no dependencies) own disjoint sets of
-//! row slabs assigned round-robin (`ty % threads`), which balances the
-//! spatially clustered load of city scenes without any synchronization
-//! or unsafe code.
+//! The core primitive runs a worker once per *item* on scoped threads
+//! (plain `std::thread::scope`, no dependencies) with items assigned
+//! round-robin (`i % threads`) and results reassembled **in item
+//! order**. Items own whatever per-item mutable state the caller splits
+//! off up front (`&mut` slab slices, region bands), so workers never
+//! synchronize and never touch each other's data. Every frame stage
+//! rides this one scheduler: rasterization tile rows, EWA preprocessing
+//! chunks, SRU disparity-list rows, and temporal-LoD validation bands.
 //!
-//! **Bit-accuracy argument.** A tile's pixels are written by exactly one
-//! worker, each tile blends its depth-ordered list with the identical
-//! monomorphized core regardless of the thread count, and f32 blending
-//! is deterministic for a fixed operation order — so `Serial` and
-//! `Threads(n)` produce byte-identical images for every `n`. Per-row
-//! [`RasterStats`](super::raster::RasterStats) are summed afterwards
-//! (u64 addition commutes), so merged counters are equal too. This is
-//! enforced by the serial↔parallel property tests in
-//! `tests/it_parallel.rs`.
+//! **Bit-accuracy argument.** A worker's result depends only on its
+//! item (and the shared read-only inputs), never on which thread ran it
+//! or in what order; f32 arithmetic is deterministic for a fixed
+//! operation order, and per-item operation order is fixed by the item
+//! itself. Reassembly is by item index, so `Serial` and `Threads(n)`
+//! produce identical result vectors for every `n` — identical images
+//! from [`run_rows`] (each tile's pixels are written by exactly one
+//! worker, blending its depth-ordered list with the same monomorphized
+//! core), identical concatenated splat vectors from chunked
+//! preprocessing, identical disparity lists and dirty sets. Merged
+//! counters are sums of per-item u64s (addition commutes), so they are
+//! equal too. Enforced per stage by the serial↔parallel property tests
+//! in `tests/it_parallel.rs`.
 
 use super::image::Image;
 
@@ -121,6 +125,85 @@ impl<'a> Slab<'a> {
     }
 }
 
+/// Run `worker(i, item)` once per item, concurrently per `par`, and
+/// return the per-item results **in item order** regardless of the
+/// thread count.
+///
+/// This is the engine's core scheduling primitive. Items are assigned
+/// round-robin (`i % threads`) to scoped worker threads; each thread
+/// exclusively owns the items it was handed, so per-item mutable state
+/// (disjoint `&mut` slices split off a buffer by the caller) rides
+/// along inside `T` without any synchronization or unsafe code.
+/// Bit-accuracy: a result depends only on `(i, item)` and shared
+/// read-only captures, never on thread placement, and the result vector
+/// is reassembled by index — so every `Parallelism` produces the
+/// identical vector.
+///
+/// # Panics
+/// Panics if a worker panics.
+pub fn parallel_map<T, R, W>(items: Vec<T>, par: Parallelism, worker: W) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    W: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = par.threads().min(n.max(1));
+
+    if threads <= 1 {
+        return items.into_iter().enumerate().map(|(i, item)| worker(i, item)).collect();
+    }
+
+    // Round-robin ownership: thread t runs items t, t+n, t+2n, …
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % threads].push((i, item));
+    }
+
+    let worker = &worker;
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                s.spawn(move || {
+                    bucket
+                        .into_iter()
+                        .map(|(i, item)| (i, worker(i, item)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("engine worker panicked") {
+                results[i] = Some(r);
+            }
+        }
+    });
+    results.into_iter().map(|r| r.expect("every item mapped")).collect()
+}
+
+/// Order-preserving parallel map over the chunked index range
+/// `[0, len)`: chunk `i` covers `[i*chunk, min((i+1)*chunk, len))`.
+///
+/// Chunk boundaries depend only on `(len, chunk)` — **never** on the
+/// thread count — so stages that concatenate chunk results in order
+/// (e.g. EWA preprocessing) reproduce the serial output bitwise on
+/// every [`Parallelism`].
+///
+/// # Panics
+/// Panics if `chunk == 0` or a worker panics.
+pub fn parallel_map_chunks<R, W>(len: usize, chunk: usize, par: Parallelism, worker: W) -> Vec<R>
+where
+    R: Send,
+    W: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..len).step_by(chunk).map(|lo| lo..(lo + chunk).min(len)).collect();
+    parallel_map(ranges, par, |_, r| worker(r))
+}
+
 /// Run `worker` once per tile row of `img`, concurrently per `par`.
 ///
 /// `worker(ty, rows, extra)` receives the tile-row index, the mutable
@@ -148,53 +231,17 @@ where
 {
     assert_eq!(extras.len(), tiles_y as usize, "one extra per tile row");
     let row_floats = (tile * img.width * 3) as usize;
-    let threads = par.threads().min(tiles_y.max(1) as usize);
 
-    if threads <= 1 {
-        let mut rest: &mut [f32] = &mut img.data;
-        let mut out = Vec::with_capacity(tiles_y as usize);
-        for (ty, extra) in extras.into_iter().enumerate() {
-            let take = row_floats.min(rest.len());
-            let (rows, tail) = std::mem::take(&mut rest).split_at_mut(take);
-            rest = tail;
-            out.push(worker(ty as u32, rows, extra));
-        }
-        return out;
-    }
-
-    // Round-robin row ownership: thread t renders rows t, t+n, t+2n, …
-    // Each bucket holds disjoint &mut slabs, so no synchronization.
-    let mut buckets: Vec<Vec<(u32, &mut [f32], E)>> =
-        (0..threads).map(|_| Vec::new()).collect();
+    // Split the image into per-row slabs; each becomes one engine item.
+    let mut items: Vec<(&mut [f32], E)> = Vec::with_capacity(tiles_y as usize);
     let mut rest: &mut [f32] = &mut img.data;
-    for (ty, extra) in extras.into_iter().enumerate() {
+    for extra in extras {
         let take = row_floats.min(rest.len());
         let (rows, tail) = std::mem::take(&mut rest).split_at_mut(take);
         rest = tail;
-        buckets[ty % threads].push((ty as u32, rows, extra));
+        items.push((rows, extra));
     }
-
-    let worker = &worker;
-    let mut results: Vec<Option<R>> = (0..tiles_y).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = buckets
-            .into_iter()
-            .map(|bucket| {
-                s.spawn(move || {
-                    bucket
-                        .into_iter()
-                        .map(|(ty, rows, extra)| (ty, worker(ty, rows, extra)))
-                        .collect::<Vec<_>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            for (ty, r) in h.join().expect("render worker panicked") {
-                results[ty as usize] = Some(r);
-            }
-        }
-    });
-    results.into_iter().map(|r| r.expect("every tile row rendered")).collect()
+    parallel_map(items, par, |ty, (rows, extra)| worker(ty as u32, rows, extra))
 }
 
 #[cfg(test)]
@@ -258,6 +305,56 @@ mod tests {
         for t in 1..=5 {
             let (b, _) = paint(Parallelism::Threads(t));
             assert_eq!(a.data, b.data, "t={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_item_order() {
+        let items: Vec<u64> = (0..37).collect();
+        let want: Vec<u64> = items.iter().map(|&v| v * v + 1).collect();
+        for par in [Parallelism::Serial, Parallelism::Threads(3), Parallelism::Threads(64)] {
+            let got = parallel_map(items.clone(), par, |i, v| {
+                assert_eq!(i as u64, v, "index must match item position");
+                v * v + 1
+            });
+            assert_eq!(got, want, "{par:?}");
+        }
+        let empty: Vec<u64> = Vec::new();
+        assert!(parallel_map(empty, Parallelism::Threads(4), |_, v: u64| v).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_delivers_owned_mutable_state() {
+        // Disjoint &mut slices ride along inside the items.
+        let mut buf = vec![0u32; 10];
+        let items: Vec<&mut u32> = buf.iter_mut().collect();
+        parallel_map(items, Parallelism::Threads(4), |i, slot| *slot = i as u32 + 1);
+        assert_eq!(buf, (1..=10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn chunk_boundaries_are_thread_invariant() {
+        // 23 items in chunks of 5 → ranges 0..5, 5..10, 10..15, 15..20,
+        // 20..23 on every parallelism.
+        let want = vec![0..5, 5..10, 10..15, 15..20, 20..23];
+        for par in [Parallelism::Serial, Parallelism::Threads(2), Parallelism::Threads(7)] {
+            let got = parallel_map_chunks(23, 5, par, |r| r);
+            assert_eq!(got, want, "{par:?}");
+        }
+        assert!(parallel_map_chunks(0, 5, Parallelism::Threads(2), |r| r).is_empty());
+    }
+
+    #[test]
+    fn chunked_concatenation_matches_serial_map() {
+        // The preprocess pattern: map each index, concatenate chunk
+        // outputs in order — must equal the plain serial map bitwise.
+        let want: Vec<f32> = (0..101).map(|i| (i as f32).sin()).collect();
+        for t in [1usize, 2, 5, 16] {
+            let chunks = parallel_map_chunks(101, 8, Parallelism::Threads(t), |r| {
+                r.map(|i| (i as f32).sin()).collect::<Vec<f32>>()
+            });
+            let got: Vec<f32> = chunks.into_iter().flatten().collect();
+            assert_eq!(got, want, "t={t}");
         }
     }
 

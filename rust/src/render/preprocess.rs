@@ -2,11 +2,27 @@
 //! splats (paper Fig 1 stage 2), with frustum culling and SH color
 //! evaluation. This is the stage the stereo pipeline runs ONCE for both
 //! eyes over the widened shared FoV (paper Fig 13 left).
+//!
+//! **Threading.** Projection is embarrassingly parallel: each queue
+//! entry is projected independently, so the queue is split into
+//! fixed-size chunks (boundaries depend only on the queue length, never
+//! on the thread count) that run concurrently on the engine
+//! ([`super::engine::parallel_map_chunks`]) and are concatenated in
+//! chunk order. The resulting splat vector — contents *and* order — is
+//! therefore bitwise identical to the serial pass at every
+//! [`Parallelism`], which makes everything downstream (sort, binning,
+//! rasterization, SRU) identical too.
 
+use super::engine::{parallel_map_chunks, Parallelism};
 use crate::gaussian::{GaussianId, GaussianRecord};
 use crate::lod::LodTree;
 use crate::math::sh::eval_color;
 use crate::math::{Camera, Mat3, Vec2};
+
+/// Queue chunk size for the parallel projection fan-out. Fixed (never
+/// derived from the thread count) so chunk boundaries — and thus the
+/// concatenated output order — are identical on every `Parallelism`.
+const PREPROCESS_CHUNK: usize = 2048;
 
 /// A projected (screen-space) Gaussian splat.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -133,41 +149,65 @@ pub fn project_one(
     Some(Splat { id, mean, conic, depth: t.z, radius_px, color, opacity: g.opacity.clamp(0.0, 0.999) })
 }
 
-/// Preprocess a rendering queue of records (the client path).
+/// Merge per-chunk projection outputs in chunk order.
+fn concat_chunks(processed: usize, chunks: Vec<(Vec<Splat>, usize)>) -> ProjectedSet {
+    let mut set = ProjectedSet { processed, ..Default::default() };
+    set.splats.reserve(chunks.iter().map(|(s, _)| s.len()).sum());
+    for (splats, culled) in chunks {
+        set.splats.extend(splats);
+        set.culled += culled;
+    }
+    set
+}
+
+/// Preprocess a rendering queue of records (the client path). Queue
+/// chunks project concurrently per `par`; the output splat vector is
+/// bitwise identical at every thread count (see module docs).
 pub fn preprocess_records(
     cam: &Camera,
     frustum_cam: &Camera,
     queue: &[(GaussianId, &GaussianRecord)],
     sh_degree: usize,
+    par: Parallelism,
 ) -> ProjectedSet {
-    let mut set = ProjectedSet { processed: queue.len(), ..Default::default() };
-    for (id, g) in queue {
-        match project_one(cam, frustum_cam, *id, g, sh_degree) {
-            Some(s) => set.splats.push(s),
-            None => set.culled += 1,
+    let chunks = parallel_map_chunks(queue.len(), PREPROCESS_CHUNK, par, |range| {
+        let mut splats = Vec::new();
+        let mut culled = 0usize;
+        for (id, g) in &queue[range] {
+            match project_one(cam, frustum_cam, *id, g, sh_degree) {
+                Some(s) => splats.push(s),
+                None => culled += 1,
+            }
         }
-    }
-    set
+        (splats, culled)
+    });
+    concat_chunks(queue.len(), chunks)
 }
 
 /// Preprocess a cut directly from the scene tree (cloud-free local path
-/// used by baselines and tests).
+/// used by baselines and tests). Parallel per `par`, bitwise identical
+/// at every thread count (see module docs).
 pub fn preprocess_tree(
     cam: &Camera,
     frustum_cam: &Camera,
     tree: &LodTree,
     cut: &[GaussianId],
     sh_degree: usize,
+    par: Parallelism,
 ) -> ProjectedSet {
-    let mut set = ProjectedSet { processed: cut.len(), ..Default::default() };
-    for &id in cut {
-        let g = tree.gaussians.record(id);
-        match project_one(cam, frustum_cam, id, &g, sh_degree) {
-            Some(s) => set.splats.push(s),
-            None => set.culled += 1,
+    let chunks = parallel_map_chunks(cut.len(), PREPROCESS_CHUNK, par, |range| {
+        let mut splats = Vec::new();
+        let mut culled = 0usize;
+        for &id in &cut[range] {
+            let g = tree.gaussians.record(id);
+            match project_one(cam, frustum_cam, id, &g, sh_degree) {
+                Some(s) => splats.push(s),
+                None => culled += 1,
+            }
         }
-    }
-    set
+        (splats, culled)
+    });
+    concat_chunks(cut.len(), chunks)
 }
 
 /// Estimated memory demand of this stage in Gaussians (Fig 6 proxy).
@@ -270,10 +310,38 @@ mod tests {
             Intrinsics::vr_eye_scaled(8),
         );
         let cut: Vec<u32> = (0..tree.len() as u32).collect();
-        let set = preprocess_tree(&c, &c, &tree, &cut, 3);
+        let set = preprocess_tree(&c, &c, &tree, &cut, 3, Parallelism::Serial);
         assert_eq!(set.processed, tree.len());
         assert_eq!(set.splats.len() + set.culled, set.processed);
         assert!(!set.splats.is_empty(), "some Gaussians must be visible");
         assert!(set.culled > 0, "some Gaussians must be culled");
+    }
+
+    #[test]
+    fn threaded_preprocess_is_identical_to_serial() {
+        // Splat vector (contents AND order) plus counters must not move
+        // by a bit across thread counts, including counts that don't
+        // divide the chunk size and thread counts beyond the chunk count.
+        let tree = crate::scene::CityGen::new(crate::scene::CityParams::for_target(3000, 60.0, 9)).build();
+        let c = Camera::new(
+            Pose::looking(Vec3::new(30.0, 1.7, 30.0), 0.7, 0.0),
+            Intrinsics::vr_eye_scaled(8),
+        );
+        let cut: Vec<u32> = (0..tree.len() as u32).collect();
+        let queue: Vec<(u32, GaussianRecord)> =
+            cut.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
+        let refs: Vec<(u32, &GaussianRecord)> = queue.iter().map(|(id, g)| (*id, g)).collect();
+
+        let want_t = preprocess_tree(&c, &c, &tree, &cut, 3, Parallelism::Serial);
+        let want_r = preprocess_records(&c, &c, &refs, 3, Parallelism::Serial);
+        for t in [2usize, 3, 8, 64] {
+            let got_t = preprocess_tree(&c, &c, &tree, &cut, 3, Parallelism::Threads(t));
+            assert_eq!(want_t.splats, got_t.splats, "tree path diverged at {t} threads");
+            assert_eq!((want_t.processed, want_t.culled), (got_t.processed, got_t.culled));
+            let got_r = preprocess_records(&c, &c, &refs, 3, Parallelism::Threads(t));
+            assert_eq!(want_r.splats, got_r.splats, "records path diverged at {t} threads");
+            assert_eq!((want_r.processed, want_r.culled), (got_r.processed, got_r.culled));
+        }
+        assert_eq!(want_t.splats, want_r.splats, "both paths agree on the same cut");
     }
 }

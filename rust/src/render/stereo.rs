@@ -20,27 +20,31 @@
 //! trading exactness for fewer right-eye pairs (quality measured in
 //! Fig 16).
 //!
-//! **Threading.** Both eyes execute on the parallel tile engine
-//! ([`super::engine`]) in three phases: (1) left-eye tile rows render
-//! concurrently, each worker owning a disjoint pixel slab and a disjoint
-//! slice of the flat α-pass bitmap; (2) the SRU insertion pass runs
-//! serially (it is Gaussian-, not pixel-, proportional) in the canonical
-//! tile order, so the disparity lists are identical to the serial
-//! build's; (3) right-eye tile rows merge + blend concurrently. Tiles
-//! never share pixels and each tile's merge and blend order is
-//! thread-count independent, so `Serial` and `Threads(n)` produce
-//! **bitwise identical** stereo pairs — disjoint tile slabs ⇒ identical
-//! blend order ⇒ identical f32 images — and identical merged workload
-//! counters (u64 sums commute). Enforced by `tests/it_parallel.rs`.
+//! **Threading.** All three phases execute on the parallel engine
+//! ([`super::engine`]): (1) left-eye tile rows render concurrently,
+//! each worker owning a disjoint pixel slab and a disjoint slice of the
+//! flat α-pass bitmap; (2) the SRU insertion pass runs concurrently
+//! over **source-tile rows** — a splat in source tile `(tx, ty)` only
+//! ever targets destination tiles in the same row `ty` (disparity is
+//! horizontal), so row `ty`'s worker exclusively owns the
+//! `disp_lists[(ty·grid_x + tx)·L + k]` slots it writes, and each
+//! list's contents and order equal the serial build's canonical
+//! `(tx, li)` insertion order; (3) right-eye tile rows merge + blend
+//! concurrently. Tiles never share pixels and each tile's merge and
+//! blend order is thread-count independent, so `Serial` and
+//! `Threads(n)` produce **bitwise identical** stereo pairs — disjoint
+//! tile slabs ⇒ identical blend order ⇒ identical f32 images — and
+//! identical merged workload counters (u64 sums commute). Enforced by
+//! `tests/it_parallel.rs`.
 //!
 //! Off-screen sliver: content within `(L-1)` tile columns right of the
 //! left image shifts into the right eye's view; those columns are binned
 //! (extended grid) and always footprint-inserted, mirroring the paper's
 //! independently-rendered edge tiles.
 
-use super::engine::{self, Slab};
+use super::engine::{self, Parallelism, Slab};
 use super::image::Image;
-use super::preprocess::{preprocess_records, ProjectedSet, SplatSoa};
+use super::preprocess::{preprocess_records, ProjectedSet, Splat, SplatSoa};
 use super::raster::{raster_core, RasterConfig, RasterStats};
 use super::sort::sort_splats;
 use super::tiles::TileBins;
@@ -55,6 +59,23 @@ pub enum StereoMode {
     /// Insert only α-passing splats (paper's pipeline): faster, ~equal
     /// quality.
     AlphaGated,
+}
+
+/// Wall-clock seconds spent in each stereo stage. Pure diagnostics for
+/// the per-stage bench breakdown (`benches/bench_render.rs`): every
+/// *other* [`StereoOutput`] field is thread-count invariant; these are
+/// the only values that legitimately change with [`Parallelism`].
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StageSeconds {
+    /// Shared EWA preprocess + depth sort. Only set by [`render_stereo`]
+    /// (zero when rendering from an already-preprocessed set).
+    pub preprocess: f64,
+    /// Left-eye rasterization (phase 1), including binning setup.
+    pub left: f64,
+    /// SRU disparity-list insertion (phase 2).
+    pub sru: f64,
+    /// Right-eye merge + blend (phase 3).
+    pub right: f64,
 }
 
 /// Stereo frame output + workload counters.
@@ -76,6 +97,8 @@ pub struct StereoOutput {
     pub num_lists: u32,
     /// Max disparity in pixels after clamping.
     pub max_disparity_px: f32,
+    /// Per-stage wall time (diagnostics; thread-count dependent).
+    pub stages: StageSeconds,
 }
 
 /// Number of disparity categories (paper: 4 lists ⇔ 16 px at 4 px
@@ -88,6 +111,126 @@ fn disparity(stereo: &StereoCamera, depth: f32, max_disp: f32) -> f32 {
     (stereo.baseline * stereo.intr.fx / depth.max(stereo.intr.near)).min(max_disp)
 }
 
+/// Destination tile columns `[dst0, dst1]` covered by a left splat's
+/// footprint after shifting it `disp` pixels toward the right eye, or
+/// `None` if the shifted footprint misses the right image's tile grid.
+///
+/// This is the SRU side of the bit-accuracy invariant: the arithmetic
+/// must mirror shifting the mean and then running
+/// [`TileBins::build`]'s clamp — to `[0, tiles_x·tile - 1]`, i.e. the
+/// TILE GRID (which can overhang a non-multiple image width) — and its
+/// off-grid rejection (`sx1 < sx0`), so the merged right-eye lists
+/// equal the naively re-binned ones. The shifted center `mean_x - disp`
+/// is computed FIRST and the radius applied second, exactly like the
+/// re-bin path: the historical `mean_x - radius_px - disp` association
+/// could differ by 1 ulp and flip a tile index on a boundary.
+/// Property-tested against `TileBins::build` across tile sizes in this
+/// module's tests.
+#[inline]
+pub fn sru_dst_cols(
+    mean_x: f32,
+    radius_px: f32,
+    disp: f32,
+    tile: u32,
+    tiles_x: u32,
+) -> Option<(u32, u32)> {
+    let sx = mean_x - disp;
+    let sx0 = (sx - radius_px).max(0.0);
+    let sx1 = (sx + radius_px).min((tiles_x * tile) as f32 - 1.0);
+    if sx1 < sx0 {
+        return None;
+    }
+    Some((sx0 as u32 / tile, (sx1 as u32 / tile).min(tiles_x - 1)))
+}
+
+/// Phase 2: build the per-(source tile, k) disparity lists — the stereo
+/// buffer of Fig 15 — concurrently over source-tile rows.
+///
+/// Row independence: disparity is purely horizontal, so source tile
+/// `(tx, ty)` only inserts into its own row's slots
+/// `row[tx·L + k]`; each engine worker owns a disjoint contiguous
+/// `grid_x·L`-list slice of the flat buffer. Within a row the insertion
+/// order is the serial canonical `(tx, li)` order, so every list's
+/// contents *and* order are identical at every thread count; only the
+/// per-row insertion counters are merged (u64 sums commute).
+///
+/// `tile_off`/`passed` carry the α-pass flags from phase 1 and are only
+/// read in [`StereoMode::AlphaGated`].
+#[allow(clippy::too_many_arguments)]
+fn build_disp_lists(
+    stereo: &StereoCamera,
+    splats: &[Splat],
+    bins: &TileBins,
+    tile_off: &[usize],
+    passed: &[bool],
+    lists: u32,
+    max_disp: f32,
+    mode: StereoMode,
+    par: Parallelism,
+) -> (Vec<Vec<u32>>, u64) {
+    let (tile, tiles_x, tiles_y) = (bins.tile, bins.tiles_x, bins.tiles_y);
+    let grid_x = bins.grid_x();
+    let need_passed = mode == StereoMode::AlphaGated;
+    let mut disp_lists: Vec<Vec<u32>> = vec![Vec::new(); (grid_x * tiles_y * lists) as usize];
+
+    let row_lists = (grid_x * lists) as usize;
+    let rows: Vec<&mut [Vec<u32>]> = disp_lists.chunks_mut(row_lists).collect();
+    let per_row = engine::parallel_map(rows, par, |ty, row| {
+        let ty = ty as u32;
+        let mut insertions = 0u64;
+        for tx in 0..grid_x {
+            let list = bins.list(tx, ty);
+            if list.is_empty() {
+                continue;
+            }
+            let visible = tx < tiles_x;
+            let base = if visible && need_passed {
+                tile_off[(ty * tiles_x + tx) as usize]
+            } else {
+                0
+            };
+            for (li, &si) in list.iter().enumerate() {
+                // Gating: α-passed splats always re-project. Off-screen
+                // (extended) columns are handled by footprint, as are all
+                // splats in Exact mode.
+                let gate = match mode {
+                    StereoMode::Exact => true,
+                    StereoMode::AlphaGated => !visible || passed[base + li],
+                };
+                if !gate {
+                    continue;
+                }
+                let s = &splats[si as usize];
+                let d = disparity(stereo, s.depth, max_disp);
+                let Some((dst0, dst1)) = sru_dst_cols(s.mean.x, s.radius_px, d, tile, tiles_x)
+                else {
+                    continue;
+                };
+                // Canonical source: first left tile containing the splat.
+                let lx0 = ((s.mean.x - s.radius_px).max(0.0) as u32 / tile).min(grid_x - 1);
+                for dst in dst0..=dst1 {
+                    if dst.max(lx0) != tx {
+                        continue; // another source tile owns this pair
+                    }
+                    let k = tx - dst;
+                    debug_assert!(k < lists, "disparity clamp violated: k={k}");
+                    if k >= lists {
+                        // f32 razor edge (half-ulp window): without this
+                        // guard a release build would write into the
+                        // NEXT tile's list slots. Dropping the pair is
+                        // the only order-preserving option.
+                        continue;
+                    }
+                    row[(tx * lists + k) as usize].push(si);
+                    insertions += 1;
+                }
+            }
+        }
+        insertions
+    });
+    (disp_lists, per_row.into_iter().sum())
+}
+
 /// Full stereo pipeline from a rendering queue.
 pub fn render_stereo(
     stereo: &StereoCamera,
@@ -98,11 +241,16 @@ pub fn render_stereo(
     mode: StereoMode,
 ) -> StereoOutput {
     // --- Shared preprocessing & sorting (paper Fig 13 left) -----------
+    let t_pre = std::time::Instant::now();
     let left_cam = stereo.left();
     let shared = stereo.shared_camera();
-    let mut set: ProjectedSet = preprocess_records(&left_cam, &shared, queue, sh_degree);
+    let mut set: ProjectedSet =
+        preprocess_records(&left_cam, &shared, queue, sh_degree, cfg.parallelism);
     sort_splats(&mut set.splats);
-    render_stereo_from_splats(stereo, &set, tile, cfg, mode)
+    let preprocess_s = t_pre.elapsed().as_secs_f64();
+    let mut out = render_stereo_from_splats(stereo, &set, tile, cfg, mode);
+    out.stages.preprocess = preprocess_s;
+    out
 }
 
 /// Stereo pipeline from already-preprocessed, sorted splats (used by the
@@ -118,6 +266,7 @@ pub fn render_stereo_from_splats(
     let (w, h) = (stereo.intr.width, stereo.intr.height);
     let lists = DEFAULT_LISTS;
     let max_disp = ((lists - 1) * tile) as f32;
+    let t_left = std::time::Instant::now();
     let bins = TileBins::build(w, h, tile, lists - 1, &set.splats);
     let splats = &set.splats;
     let soa = SplatSoa::from_splats(splats);
@@ -209,65 +358,27 @@ pub fn render_stereo_from_splats(
     for s in &per_row {
         stats_left.merge(s);
     }
+    let left_s = t_left.elapsed().as_secs_f64();
 
-    // --- Phase 2: SRU insertion (serial, canonical tile order; step 2).
+    // --- Phase 2: SRU insertion (engine, source-tile rows; step 2).
     // Per-(src tile, k) disparity lists — the stereo buffer (Fig 15).
-    let mut disp_lists: Vec<Vec<u32>> =
-        vec![Vec::new(); (grid_x * tiles_y * lists) as usize];
+    let t_sru = std::time::Instant::now();
     let list_idx = |tx: u32, ty: u32, k: u32| ((ty * grid_x + tx) * lists + k) as usize;
-    let mut sru_insertions = 0u64;
-    for ty in 0..tiles_y {
-        for tx in 0..grid_x {
-            let list = bins.list(tx, ty);
-            if list.is_empty() {
-                continue;
-            }
-            let visible = tx < tiles_x;
-            let base = if visible && need_passed {
-                tile_off[(ty * tiles_x + tx) as usize]
-            } else {
-                0
-            };
-            for (li, &si) in list.iter().enumerate() {
-                // Gating: α-passed splats always re-project. Off-screen
-                // (extended) columns are handled by footprint, as are all
-                // splats in Exact mode.
-                let gate = match mode {
-                    StereoMode::Exact => true,
-                    StereoMode::AlphaGated => !visible || passed[base + li],
-                };
-                if !gate {
-                    continue;
-                }
-                let s = &splats[si as usize];
-                let d = disparity(stereo, s.depth, max_disp);
-                // Unclamped left footprint, shifted, then clamped to the
-                // right image's TILE GRID (tiles_x * tile, which can
-                // overhang a non-multiple image width) — must mirror
-                // TileBins::build exactly for bit-accuracy.
-                let sx0 = (s.mean.x - s.radius_px - d).max(0.0);
-                let sx1 = (s.mean.x + s.radius_px - d).min((tiles_x * tile) as f32 - 1.0);
-                if sx1 < sx0 {
-                    continue;
-                }
-                let dst0 = sx0 as u32 / tile;
-                let dst1 = (sx1 as u32 / tile).min(tiles_x - 1);
-                // Canonical source: first left tile containing the splat.
-                let lx0 = ((s.mean.x - s.radius_px).max(0.0) as u32 / tile).min(grid_x - 1);
-                for dst in dst0..=dst1 {
-                    if dst.max(lx0) != tx {
-                        continue; // another source tile owns this pair
-                    }
-                    let k = tx - dst;
-                    debug_assert!(k < lists, "disparity clamp violated: k={k}");
-                    disp_lists[list_idx(tx, ty, k)].push(si);
-                    sru_insertions += 1;
-                }
-            }
-        }
-    }
+    let (disp_lists, sru_insertions) = build_disp_lists(
+        stereo,
+        splats,
+        &bins,
+        &tile_off,
+        &passed,
+        lists,
+        max_disp,
+        mode,
+        cfg.parallelism,
+    );
+    let sru_s = t_sru.elapsed().as_secs_f64();
 
     // --- Phase 3: right eye, L-way merge + blend (engine; steps 3–4).
+    let t_right = std::time::Instant::now();
     // Right-eye splats: the left SoA shifted horizontally by disparity,
     // built once for all tiles (two memcpys, no AoS re-gather).
     let mut right_soa = soa.clone();
@@ -287,11 +398,13 @@ pub fn render_stereo_from_splats(
             let mut stats = RasterStats::default();
             let mut merge_ops = 0u64;
             let mut merged: Vec<u32> = Vec::new();
+            // (list id, pos) cursors, sized from `lists` (not a fixed
+            // array) so a configurable L can never write out of bounds.
+            let mut cursors: Vec<(usize, usize)> = Vec::with_capacity(lists as usize);
             for tx in 0..tiles_x {
                 // Sources: src = tx + k for k in 0..L.
                 merged.clear();
-                let mut cursors: [(usize, usize); 8] = [(0, 0); 8]; // (list id, pos)
-                let mut n_src = 0usize;
+                cursors.clear();
                 for k in 0..lists {
                     let src = tx + k;
                     if src >= grid_x {
@@ -299,14 +412,13 @@ pub fn render_stereo_from_splats(
                     }
                     let id = list_idx(src, ty, k);
                     if !disp_lists[id].is_empty() {
-                        cursors[n_src] = (id, 0);
-                        n_src += 1;
+                        cursors.push((id, 0));
                     }
                 }
                 // L-way merge by (depth, id) — the paper's merge unit.
                 loop {
                     let mut best: Option<(usize, u32)> = None;
-                    for c in cursors.iter().take(n_src) {
+                    for c in cursors.iter() {
                         let l = &disp_lists[c.0];
                         if c.1 >= l.len() {
                             continue;
@@ -328,7 +440,7 @@ pub fn render_stereo_from_splats(
                     match best {
                         None => break,
                         Some((list_id, si)) => {
-                            for c in cursors.iter_mut().take(n_src) {
+                            for c in cursors.iter_mut() {
                                 if c.0 == list_id {
                                     c.1 += 1;
                                     break;
@@ -363,6 +475,7 @@ pub fn render_stereo_from_splats(
         stats_right.merge(s);
         merge_ops += m;
     }
+    let right_s = t_right.elapsed().as_secs_f64();
 
     StereoOutput {
         left,
@@ -375,6 +488,7 @@ pub fn render_stereo_from_splats(
         merge_ops,
         num_lists: lists,
         max_disparity_px: max_disp,
+        stages: StageSeconds { preprocess: 0.0, left: left_s, sru: sru_s, right: right_s },
     }
 }
 
@@ -401,9 +515,10 @@ pub fn render_right_naive(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::math::{Intrinsics, Pose, Vec3};
+    use crate::math::{Intrinsics, Pose, Vec2, Vec3};
     use crate::scene::{CityGen, CityParams};
     use crate::trace::{PoseTrace, TraceParams};
+    use crate::util::prop::{check, Config};
 
     fn test_stereo(extent: f32) -> (StereoCamera, crate::lod::LodTree) {
         let tree = CityGen::new(CityParams::for_target(4000, extent, 17)).build();
@@ -430,7 +545,7 @@ mod tests {
 
         let left_cam = cam.left();
         let shared = cam.shared_camera();
-        let mut set = preprocess_records(&left_cam, &shared, &refs, 3);
+        let mut set = preprocess_records(&left_cam, &shared, &refs, 3, Parallelism::Serial);
         sort_splats(&mut set.splats);
         let (naive_right, _) = render_right_naive(&cam, &set, 16, &cfg);
 
@@ -447,7 +562,7 @@ mod tests {
         let cfg = RasterConfig::default();
         let left_cam = cam.left();
         let shared = cam.shared_camera();
-        let mut set = preprocess_records(&left_cam, &shared, &refs, 3);
+        let mut set = preprocess_records(&left_cam, &shared, &refs, 3, Parallelism::Serial);
         sort_splats(&mut set.splats);
         let (naive_right, naive_stats) = render_right_naive(&cam, &set, 16, &cfg);
         let out = render_stereo_from_splats(&cam, &set, 16, &cfg, StereoMode::AlphaGated);
@@ -467,7 +582,7 @@ mod tests {
 
         let left_cam = cam.left();
         let shared = cam.shared_camera();
-        let set = preprocess_records(&left_cam, &shared, &refs, 3);
+        let set = preprocess_records(&left_cam, &shared, &refs, 3, Parallelism::Serial);
         let (mono, _, _) =
             super::super::raster::render_mono(set, cam.intr.width, cam.intr.height, 16, &cfg);
         assert_eq!(out.left.data, mono.data, "left eye is the standard pipeline");
@@ -508,6 +623,108 @@ mod tests {
         assert_eq!(out.max_disparity_px, ((DEFAULT_LISTS - 1) * 16) as f32);
         assert!(out.sru_insertions > 0);
         assert!(out.merge_ops > 0);
+    }
+
+    #[test]
+    fn sru_clamp_mirrors_tile_binning() {
+        // The bit-accuracy invariant previously asserted only in a doc
+        // comment: the SRU destination-column computation must agree
+        // with TileBins::build on the SHIFTED splat — same clamp to the
+        // tile grid (incl. widths that aren't tile multiples, where the
+        // grid overhangs the image) and same off-grid rejection.
+        check("sru_dst_cols == shifted re-bin", Config { cases: 256, seed: 0x5B_07 }, |rng| {
+            let tile = [4u32, 8, 16, 32][rng.below(4)];
+            let tiles_x = 1 + rng.below(8) as u32;
+            // Any width with div_ceil(w, tile) == tiles_x.
+            let w = tiles_x * tile - rng.below(tile as usize) as u32;
+            let h = 64u32;
+            let mean_x = rng.range_f32(-30.0, (tiles_x * tile) as f32 + 40.0);
+            let radius = rng.range_f32(0.5, 9.0).ceil();
+            let d = rng.range_f32(0.0, (3 * tile) as f32);
+
+            let shifted = Splat {
+                id: 0,
+                mean: Vec2::new(mean_x - d, 32.0),
+                conic: [1.0, 0.0, 1.0],
+                depth: 1.0,
+                radius_px: radius,
+                color: [0.0; 3],
+                opacity: 0.5,
+            };
+            let bins = TileBins::build(w, h, tile, 0, &[shifted]);
+            let ty = 32 / tile;
+            let binned: Vec<u32> =
+                (0..bins.tiles_x).filter(|&tx| bins.list(tx, ty).contains(&0)).collect();
+            let want: Vec<u32> = match sru_dst_cols(mean_x, radius, d, tile, tiles_x) {
+                None => Vec::new(),
+                Some((d0, d1)) => (d0..=d1).collect(),
+            };
+            assert_eq!(
+                want, binned,
+                "tile={tile} tiles_x={tiles_x} w={w} mean_x={mean_x} r={radius} d={d}"
+            );
+        });
+    }
+
+    #[test]
+    fn disparity_lists_identical_across_thread_counts() {
+        // Phase-2 parity at the list level: contents AND per-list order
+        // must match the serial build at every thread count, in both
+        // gating modes (AlphaGated driven by a synthetic α-pass bitmap).
+        check("disp lists serial ≡ threads", Config { cases: 16, seed: 0x5B_08 }, |rng| {
+            let (w, h, tile) = (48u32 + 16 * rng.below(3) as u32, 48u32, [8u32, 16][rng.below(2)]);
+            let cam = StereoCamera::new(
+                Pose::looking(Vec3::new(0.0, 1.7, 0.0), 0.0, 0.0),
+                Intrinsics::from_fov(w, h, 90f32.to_radians(), 0.1, 1000.0),
+            );
+            let lists = DEFAULT_LISTS;
+            let max_disp = ((lists - 1) * tile) as f32;
+            let n = rng.range_usize(0, 250);
+            let mut splats: Vec<Splat> = (0..n)
+                .map(|i| Splat {
+                    id: i as u32,
+                    mean: Vec2::new(
+                        rng.range_f32(-20.0, w as f32 + 60.0),
+                        rng.range_f32(-20.0, h as f32 + 20.0),
+                    ),
+                    conic: [1.0, 0.0, 1.0],
+                    depth: rng.range_f32(0.2, 90.0),
+                    radius_px: rng.range_f32(1.0, 9.0).ceil(),
+                    color: [rng.f32(); 3],
+                    opacity: rng.range_f32(0.05, 0.999),
+                })
+                .collect();
+            sort_splats(&mut splats);
+            let bins = TileBins::build(w, h, tile, lists - 1, &splats);
+
+            // Synthetic α-pass flags over the visible tiles.
+            let n_vis = (bins.tiles_x * bins.tiles_y) as usize;
+            let mut tile_off = vec![0usize; n_vis + 1];
+            let mut acc = 0usize;
+            for ty in 0..bins.tiles_y {
+                for tx in 0..bins.tiles_x {
+                    tile_off[(ty * bins.tiles_x + tx) as usize] = acc;
+                    acc += bins.list(tx, ty).len();
+                }
+            }
+            tile_off[n_vis] = acc;
+            let passed: Vec<bool> = (0..acc).map(|_| rng.chance(0.6)).collect();
+
+            for mode in [StereoMode::Exact, StereoMode::AlphaGated] {
+                let (want_lists, want_ins) = build_disp_lists(
+                    &cam, &splats, &bins, &tile_off, &passed, lists, max_disp, mode,
+                    Parallelism::Serial,
+                );
+                for t in [2usize, 3, 8] {
+                    let (got_lists, got_ins) = build_disp_lists(
+                        &cam, &splats, &bins, &tile_off, &passed, lists, max_disp, mode,
+                        Parallelism::Threads(t),
+                    );
+                    assert_eq!(want_lists, got_lists, "{mode:?} t={t}");
+                    assert_eq!(want_ins, got_ins, "{mode:?} t={t}");
+                }
+            }
+        });
     }
 
     #[test]

@@ -212,6 +212,7 @@ fn fill_push_pull(img: &mut Image, valid: &[bool]) {
 mod tests {
     use super::*;
     use crate::math::{Intrinsics, Pose, Vec3};
+    use crate::render::engine::Parallelism;
     use crate::render::preprocess::preprocess_records;
     use crate::render::sort::sort_splats;
     use crate::scene::{CityGen, CityParams};
@@ -226,7 +227,7 @@ mod tests {
             q.iter().map(|(id, g)| (*id, g)).collect();
         let cfg = RasterConfig::default();
         let left_cam = cam.left();
-        let mut set = preprocess_records(&left_cam, &left_cam, &refs, 3);
+        let mut set = preprocess_records(&left_cam, &left_cam, &refs, 3, Parallelism::Serial);
         sort_splats(&mut set.splats);
         let bins = TileBins::build(cam.intr.width, cam.intr.height, 16, 0, &set.splats);
         let (left, _) =

@@ -1,15 +1,23 @@
-//! Serial ↔ parallel parity: the tile-scheduled engine must produce
-//! **bitwise identical** images and equal merged workload counters for
-//! `Parallelism::Serial` and `Parallelism::Threads(1..=4)` — the
-//! property the whole engine design rests on (disjoint tile slabs ⇒
-//! identical blend order ⇒ identical f32 output).
+//! Serial ↔ parallel parity: every stage that rides the engine —
+//! rasterization tile rows, EWA preprocessing, SRU disparity-list
+//! insertion, temporal-LoD validation — must produce **bitwise
+//! identical** output and equal merged workload counters for
+//! `Parallelism::Serial` and `Parallelism::Threads(n)` at every `n` —
+//! the property the whole engine design rests on (disjoint per-item
+//! state ⇒ identical operation order ⇒ identical f32 output).
+//!
+//! Thread counts for the sweeping tests come from the
+//! `NEBULA_PARITY_THREADS` knob (comma-separated, default `2,4,8`); CI
+//! re-runs the suite in release mode at `1,2,8` so `debug_assert!`-gated
+//! invariants also hold with the asserts compiled out.
 
 use nebula::gaussian::GaussianRecord;
-use nebula::math::{Intrinsics, StereoCamera, Vec2};
+use nebula::lod::{Cut, LodQuery, LodSearch, Partitioning, StreamingSearch, TemporalSearch};
+use nebula::math::{Intrinsics, StereoCamera, Vec2, Vec3};
 use nebula::render::engine::Parallelism;
 use nebula::render::raster::{render_mono, RasterConfig};
 use nebula::render::stereo::{render_stereo, StereoMode};
-use nebula::render::{ProjectedSet, Splat};
+use nebula::render::{preprocess_records, preprocess_tree, ProjectedSet, Splat};
 use nebula::scene::{CityGen, CityParams};
 use nebula::trace::{PoseTrace, TraceParams};
 use nebula::util::prop::{check, Config};
@@ -17,6 +25,17 @@ use nebula::util::Prng;
 
 fn cfg_with(par: Parallelism) -> RasterConfig {
     RasterConfig { parallelism: par, ..RasterConfig::default() }
+}
+
+/// Thread counts the sweeping parity tests run at. Override with
+/// `NEBULA_PARITY_THREADS=1,2,8` (values of 1 exercise the serial path
+/// of `Threads(n)`, which must equal `Serial` too).
+fn parity_threads() -> Vec<usize> {
+    std::env::var("NEBULA_PARITY_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4, 8])
 }
 
 /// A randomized screen-space scene: positive-definite conics, means in
@@ -87,7 +106,7 @@ fn stereo_parallel_is_bitwise_equal_to_serial() {
         for mode in [StereoMode::Exact, StereoMode::AlphaGated] {
             let reference =
                 render_stereo(&cam, &refs, 3, 16, &cfg_with(Parallelism::Serial), mode);
-            for t in [2usize, 4] {
+            for t in parity_threads() {
                 let out =
                     render_stereo(&cam, &refs, 3, 16, &cfg_with(Parallelism::Threads(t)), mode);
                 assert_eq!(
@@ -112,6 +131,99 @@ fn stereo_parallel_is_bitwise_equal_to_serial() {
             }
         }
     });
+}
+
+#[test]
+fn preprocess_parallel_is_identical_to_serial() {
+    // Splat-set equality for the shared EWA preprocess: the projected
+    // splat vector (contents AND order) plus the processed/culled
+    // counters must not move by a bit across thread counts, for both
+    // the records (client) and tree (local) paths.
+    check("preprocess serial ≡ threads", Config { cases: 6, seed: 0x90_03 }, |rng| {
+        let extent = rng.range_f32(40.0, 80.0);
+        let tree =
+            CityGen::new(CityParams::for_target(2000 + rng.below(4000), extent, rng.next_u64()))
+                .build();
+        let pose = PoseTrace::new(
+            TraceParams { seed: rng.next_u64(), ..Default::default() },
+            extent,
+        )
+        .generate(1)[0];
+        let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+        let left = cam.left();
+        let shared = cam.shared_camera();
+        let cut: Vec<u32> = tree.leaves();
+        let queue: Vec<(u32, GaussianRecord)> =
+            cut.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
+        let refs: Vec<(u32, &GaussianRecord)> = queue.iter().map(|(id, g)| (*id, g)).collect();
+
+        let want_r = preprocess_records(&left, &shared, &refs, 3, Parallelism::Serial);
+        let want_t = preprocess_tree(&left, &shared, &tree, &cut, 3, Parallelism::Serial);
+        for t in parity_threads() {
+            let got = preprocess_records(&left, &shared, &refs, 3, Parallelism::Threads(t));
+            assert_eq!(want_r.splats, got.splats, "records diverged at {t} threads");
+            assert_eq!((want_r.processed, want_r.culled), (got.processed, got.culled));
+            let got = preprocess_tree(&left, &shared, &tree, &cut, 3, Parallelism::Threads(t));
+            assert_eq!(want_t.splats, got.splats, "tree diverged at {t} threads");
+            assert_eq!((want_t.processed, want_t.culled), (got.processed, got.culled));
+        }
+    });
+}
+
+#[test]
+fn temporal_lod_parallel_matches_serial_and_streaming() {
+    // Cut equality + dirty-set equality (observed through identical
+    // visit counters) for the threaded temporal validation pass, walked
+    // against both a serial TemporalSearch and the streaming reference.
+    check("temporal LoD serial ≡ threads", Config { cases: 8, seed: 0x90_04 }, |rng| {
+        let extent = rng.range_f32(60.0, 120.0);
+        let tree =
+            CityGen::new(CityParams::for_target(4000 + rng.below(8000), extent, rng.next_u64()))
+                .build();
+        let part = Partitioning::with_max_region(&tree, rng.range_usize(64, 512));
+        let mut streaming = StreamingSearch::default();
+        let mut serial = TemporalSearch::new(part.clone());
+        let mut threaded: Vec<TemporalSearch> = parity_threads()
+            .into_iter()
+            .map(|t| TemporalSearch::new(part.clone()).with_parallelism(Parallelism::Threads(t)))
+            .collect();
+        let mut eye = Vec3::new(extent * 0.5, 1.7, extent * 0.5);
+        let tau = rng.range_f32(3.0, 12.0);
+        for _ in 0..6 {
+            let step = if rng.chance(0.2) { extent * 0.2 } else { 0.3 };
+            eye += Vec3::new(rng.normal() * step, 0.0, rng.normal() * step);
+            let q = LodQuery::new(eye, 900.0, tau, 0.2);
+            let want = serial.search(&tree, &q);
+            let stream = streaming.search(&tree, &q);
+            assert_eq!(want.nodes, stream.nodes, "temporal != streaming");
+            for s in threaded.iter_mut() {
+                let got = s.search(&tree, &q);
+                assert_eq!(want.nodes, got.nodes, "cut diverged");
+                assert_eq!(want.nodes_visited, got.nodes_visited, "visits diverged");
+            }
+            // Cut::validate bands the same way; verdict must hold at
+            // every thread count.
+            for t in parity_threads() {
+                want.validate_par(&tree, &q, Parallelism::Threads(t)).unwrap();
+            }
+        }
+    });
+}
+
+#[test]
+fn cut_validate_rejects_identically_across_threads() {
+    // The banded validator must report the SAME first violation as the
+    // serial one (bands merge in node order).
+    let tree = CityGen::new(CityParams::for_target(6000, 80.0, 11)).build();
+    let q = LodQuery::new(Vec3::new(40.0, 1.7, 40.0), 900.0, 6.0, 0.2);
+    let good = StreamingSearch::default().search(&tree, &q);
+    let mut bad = Cut { nodes: good.nodes.clone(), ..Default::default() };
+    bad.nodes.remove(bad.nodes.len() / 2);
+    let want = bad.validate(&tree, &q).unwrap_err().to_string();
+    for t in parity_threads() {
+        let got = bad.validate_par(&tree, &q, Parallelism::Threads(t)).unwrap_err().to_string();
+        assert_eq!(want, got, "t={t}");
+    }
 }
 
 #[test]

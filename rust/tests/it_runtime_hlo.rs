@@ -6,7 +6,7 @@
 
 use nebula::math::{Camera, Intrinsics, Pose, Vec3};
 use nebula::render::raster::RasterConfig;
-use nebula::render::{preprocess_records, render_mono, TileBins};
+use nebula::render::{preprocess_records, render_mono, Parallelism, TileBins};
 use nebula::runtime::{ArtifactRuntime, PREPROCESS_CHUNK};
 use nebula::scene::{CityGen, CityParams};
 
@@ -38,7 +38,7 @@ fn hlo_preprocess_matches_native() {
     let records: Vec<_> = ids.iter().map(|&id| (id, tree.gaussians.record(id))).collect();
     let refs: Vec<(u32, &nebula::gaussian::GaussianRecord)> =
         records.iter().map(|(id, g)| (*id, g)).collect();
-    let native = preprocess_records(&cam, &cam, &refs, 3);
+    let native = preprocess_records(&cam, &cam, &refs, 3, Parallelism::Serial);
 
     // HLO path.
     let pos: Vec<f32> = ids.iter().flat_map(|&i| tree.gaussians.pos[i as usize].to_array()).collect();
@@ -86,7 +86,7 @@ fn hlo_raster_matches_native_image() {
     let refs: Vec<(u32, &nebula::gaussian::GaussianRecord)> =
         records.iter().map(|(id, g)| (*id, g)).collect();
     let cfg = RasterConfig::default();
-    let set = preprocess_records(&cam, &cam, &refs, 3);
+    let set = preprocess_records(&cam, &cam, &refs, 3, Parallelism::Serial);
     let splats_sorted = {
         let mut s = set.clone();
         nebula::render::sort::sort_splats(&mut s.splats);

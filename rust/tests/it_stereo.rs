@@ -8,7 +8,7 @@ use nebula::render::sort::sort_splats;
 use nebula::render::stereo::{
     render_right_naive, render_stereo_from_splats, StereoMode,
 };
-use nebula::render::preprocess_records;
+use nebula::render::{preprocess_records, Parallelism};
 use nebula::scene::{dataset, CityGen};
 
 fn shared_set(
@@ -18,7 +18,7 @@ fn shared_set(
     let refs = benchkit::queue_refs(queue);
     let left = cam.left();
     let shared = cam.shared_camera();
-    let mut set = preprocess_records(&left, &shared, &refs, 3);
+    let mut set = preprocess_records(&left, &shared, &refs, 3, Parallelism::auto());
     sort_splats(&mut set.splats);
     set
 }
@@ -90,6 +90,60 @@ fn stereo_shares_preprocessing_work() {
     let wl = nebula::hw::FrameWorkload::from_stereo(&out, 1 << 20);
     assert!(wl.shared_preproc);
     assert_eq!(wl.preprocessed, n_preprocessed as u64);
+}
+
+#[test]
+fn exact_mode_bitwise_on_random_splat_sets() {
+    // The binning↔SRU mirror invariant at system level: for ARBITRARY
+    // screen-space splat sets (on-screen, edge-straddling, off-screen in
+    // the extended columns, fully off-grid), the merged right eye must
+    // equal the naive re-bin of the shifted splats — bitwise — across
+    // tile sizes and image widths that don't divide the tile (where the
+    // tile grid overhangs the image and the clamps could drift apart).
+    use nebula::render::sort::is_sorted;
+    use nebula::render::{ProjectedSet, Splat};
+    use nebula::util::prop::{check, Config};
+    use nebula::math::{Pose, Vec2, Vec3};
+
+    check("random-set Exact ≡ naive", Config { cases: 24, seed: 0x57_E0 }, |rng| {
+        let tile = [4u32, 8, 16, 32][rng.below(4)];
+        let w = 33 + rng.below(64) as u32; // rarely a tile multiple
+        let h = 33 + rng.below(48) as u32;
+        let cam = StereoCamera::new(
+            Pose::looking(Vec3::new(0.0, 1.7, 0.0), 0.0, 0.0),
+            Intrinsics::from_fov(w, h, 90f32.to_radians(), 0.1, 1000.0),
+        );
+        let n = rng.range_usize(0, 300);
+        let mut splats: Vec<Splat> = (0..n)
+            .map(|i| {
+                let a = rng.range_f32(0.05, 1.5);
+                let c = rng.range_f32(0.05, 1.5);
+                let b_max = (a * c).sqrt() * 0.9;
+                Splat {
+                    id: i as u32,
+                    mean: Vec2::new(
+                        rng.range_f32(-24.0, w as f32 + 150.0),
+                        rng.range_f32(-24.0, h as f32 + 24.0),
+                    ),
+                    conic: [a, rng.range_f32(-b_max, b_max), c],
+                    depth: rng.range_f32(0.2, 90.0),
+                    radius_px: rng.range_f32(1.0, 9.0).ceil(),
+                    color: [rng.f32(), rng.f32(), rng.f32()],
+                    opacity: rng.range_f32(0.05, 0.999),
+                }
+            })
+            .collect();
+        sort_splats(&mut splats);
+        assert!(is_sorted(&splats));
+        let set = ProjectedSet { splats, processed: n, culled: 0 };
+        let cfg = RasterConfig::default();
+        let (naive, _) = render_right_naive(&cam, &set, tile, &cfg);
+        let out = render_stereo_from_splats(&cam, &set, tile, &cfg, StereoMode::Exact);
+        assert_eq!(
+            out.right.data, naive.data,
+            "tile={tile} w={w} h={h} n={n}: SRU/merge diverged from naive re-bin"
+        );
+    });
 }
 
 #[test]
