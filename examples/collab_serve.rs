@@ -141,7 +141,7 @@ fn main() -> anyhow::Result<()> {
 
         // Stereo rasterization (native stereo logic; the per-tile blend
         // math is identical to the HLO kernel — see it_runtime_hlo).
-        nebula::render::sort::sort_splats(&mut set.splats);
+        nebula::render::sort::sort_splats_par(&mut set.splats, cfg.parallelism);
         let n_splats = set.splats.len();
         let out = render_stereo_from_splats(&cam, &set, pl.tile, &cfg, StereoMode::AlphaGated);
         let render_ms = sw.elapsed_ms();

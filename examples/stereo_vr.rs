@@ -32,13 +32,20 @@ fn main() -> anyhow::Result<()> {
     let left_cam = cam.left();
     let shared = cam.shared_camera();
     let mut set = preprocess_records(&left_cam, &shared, &refs, pl.sh_degree, Parallelism::auto());
-    nebula::render::sort::sort_splats(&mut set.splats);
+    nebula::render::sort::sort_splats_par(&mut set.splats, Parallelism::auto());
 
     // Reference right eye (the shared-preprocess pipeline definition).
     let (reference, ref_stats) = render_right_naive(&cam, &set, pl.tile, &cfg);
 
     // Left image + depth for the warping baselines.
-    let bins = TileBins::build(cam.intr.width, cam.intr.height, pl.tile, 0, &set.splats);
+    let bins = TileBins::build_par(
+        cam.intr.width,
+        cam.intr.height,
+        pl.tile,
+        0,
+        &set.splats,
+        Parallelism::auto(),
+    );
     let (left_img, _) = render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
     let depth = depth_map(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg, cam.intr.far);
 

@@ -2,11 +2,18 @@
 //! engine on a fixed `scene::citygen` scene, mono + stereo, swept over
 //! thread counts. Writes `BENCH_render.json` (ms/frame, pairs/s and
 //! speedups vs. the serial reference, plus a per-stage breakdown of the
-//! stereo frame — preprocess / left / SRU / right / LoD-validate — with
-//! the Amdahl serial fraction implied by each thread count) so the perf
-//! trajectory of the hot path is tracked across PRs.
+//! stereo frame — preprocess / sort / binning / left / SRU / right /
+//! LoD-validate — with the Amdahl serial fraction implied by each
+//! thread count) so the perf trajectory of the hot path is tracked
+//! across PRs. Sort and binning are broken out of preprocess/left so
+//! the serial-fraction attribution shows them scaling with threads.
 //!
-//!     cargo bench --bench bench_render
+//!     cargo bench --bench bench_render [-- --smoke]
+//!
+//! `--smoke` is the CI canary: a minimal scene with one sample per
+//! configuration — fast enough for every push, still executing every
+//! stage and parity assertion so breakage can't hide behind a skipped
+//! bench.
 //!
 //! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
 //! `NEBULA_BENCH_SAMPLES` / `NEBULA_BENCH_WARMUP` (timing loop),
@@ -37,9 +44,13 @@ fn cfg(par: Parallelism) -> RasterConfig {
 
 fn main() {
     bench_header("BENCH_render", "parallel tile engine, mono + stereo");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("smoke mode: minimal scene, 1 sample/config");
+    }
     // Fixed citygen scene; NEBULA_BENCH_SCALE only trims the Gaussian
     // count so CI-class machines finish in seconds.
-    let target = (400_000 / benchkit::bench_scale()).max(10_000);
+    let target = (400_000 / benchkit::bench_scale() / if smoke { 4 } else { 1 }).max(10_000);
     let extent = 120.0f32;
     let seed = 20_26u64;
     let tree = CityGen::new(CityParams::for_target(target, extent, seed)).build();
@@ -55,7 +66,7 @@ fn main() {
     let left = cam.left();
     let shared = cam.shared_camera();
     let mut set: ProjectedSet = preprocess_records(&left, &shared, &refs, 3, Parallelism::auto());
-    nebula::render::sort::sort_splats(&mut set.splats);
+    nebula::render::sort::sort_splats_par(&mut set.splats, Parallelism::auto());
     println!(
         "scene: {} Gaussians, {} visible splats, {w}x{h} @ tile {tile}",
         tree.len(),
@@ -67,8 +78,11 @@ fn main() {
     let env_u32 = |key: &str, default: u32| {
         std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
     };
-    let bencher =
-        Bencher::new(env_u32("NEBULA_BENCH_SAMPLES", 5), env_u32("NEBULA_BENCH_WARMUP", 1));
+    let (default_samples, default_warmup) = if smoke { (1, 0) } else { (5, 1) };
+    let bencher = Bencher::new(
+        env_u32("NEBULA_BENCH_SAMPLES", default_samples),
+        env_u32("NEBULA_BENCH_WARMUP", default_warmup),
+    );
     let sweep: Vec<(&'static str, Parallelism)> = vec![
         ("serial", Parallelism::Serial),
         ("t1", Parallelism::Threads(1)),
@@ -151,14 +165,19 @@ fn main() {
         println!("  stereo {label:>6}: {ms:>8.2} ms/frame");
     }
 
-    // --- Per-stage breakdown (preprocess / left / SRU / right / validate)
-    // The stages PR 1 left serial now ride the engine too; record their
-    // per-thread scaling plus the Amdahl serial fraction implied by the
-    // whole-frame speedup (s = (n/S - 1)/(n - 1)), so the stereo frame's
-    // serial fraction is tracked shrinking across PRs.
+    // --- Per-stage breakdown
+    // (preprocess / sort / binning / left / SRU / right / validate).
+    // Every stage of the stereo frame now rides the engine — sort and
+    // binning are timed separately (they were folded into
+    // preprocess/left before this PR, hiding the last serial pieces) —
+    // so the Amdahl serial fraction implied by the whole-frame speedup
+    // (s = (n/S - 1)/(n - 1)) attributes correctly and is tracked
+    // shrinking across PRs.
     struct StageRow {
         threads: usize,
         pre_ms: f64,
+        sort_ms: f64,
+        bin_ms: f64,
         left_ms: f64,
         sru_ms: f64,
         right_ms: f64,
@@ -173,14 +192,21 @@ fn main() {
     // A real LoD cut for the validate-stage timing.
     let query = nebula::lod::LodQuery::new(pose.position, cam.intr.fx, 6.0, cam.intr.near);
     let lod_cut = nebula::lod::StreamingSearch::default().search(&tree, &query);
-    let n_samples = env_u32("NEBULA_BENCH_SAMPLES", 5).max(1) as usize;
-    let n_warmup = env_u32("NEBULA_BENCH_WARMUP", 1) as usize;
+    let n_samples = env_u32("NEBULA_BENCH_SAMPLES", default_samples).max(1) as usize;
+    let n_warmup = env_u32("NEBULA_BENCH_WARMUP", default_warmup) as usize;
     let mut stage_rows: Vec<StageRow> = Vec::new();
     let mut stage_serial_frame = 0.0f64;
     for (label, par) in &sweep {
         let c = cfg(*par);
-        let (mut pre, mut lft, mut sru, mut rgt, mut val) =
-            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let (mut pre, mut srt, mut bin, mut lft, mut sru, mut rgt, mut val) = (
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+        );
         for i in 0..n_samples + n_warmup {
             let out = render_stereo(&cam, &refs, 3, tile, &c, StereoMode::AlphaGated);
             let t = std::time::Instant::now();
@@ -190,18 +216,22 @@ fn main() {
             }
             val.push(t.elapsed().as_secs_f64() * 1e3);
             pre.push(out.stages.preprocess * 1e3);
+            srt.push(out.stages.sort * 1e3);
+            bin.push(out.stages.binning * 1e3);
             lft.push(out.stages.left * 1e3);
             sru.push(out.stages.sru * 1e3);
             rgt.push(out.stages.right * 1e3);
         }
-        let (pre_ms, left_ms, sru_ms, right_ms, validate_ms) = (
+        let (pre_ms, sort_ms, bin_ms, left_ms, sru_ms, right_ms, validate_ms) = (
             median(&mut pre),
+            median(&mut srt),
+            median(&mut bin),
             median(&mut lft),
             median(&mut sru),
             median(&mut rgt),
             median(&mut val),
         );
-        let frame_ms = pre_ms + left_ms + sru_ms + right_ms;
+        let frame_ms = pre_ms + sort_ms + bin_ms + left_ms + sru_ms + right_ms;
         let threads = match par {
             Parallelism::Serial => 0,
             Parallelism::Threads(n) => *n,
@@ -217,12 +247,15 @@ fn main() {
             1.0 // one worker: the whole frame is serial by definition
         };
         println!(
-            "  stages {label:>6}: pre {pre_ms:>7.2}  left {left_ms:>7.2}  sru {sru_ms:>6.2}  \
-             right {right_ms:>7.2}  validate {validate_ms:>6.3} ms  (serial frac {amdahl_serial_fraction:.2})"
+            "  stages {label:>6}: pre {pre_ms:>7.2}  sort {sort_ms:>6.2}  bin {bin_ms:>6.2}  \
+             left {left_ms:>7.2}  sru {sru_ms:>6.2}  right {right_ms:>7.2}  \
+             validate {validate_ms:>6.3} ms  (serial frac {amdahl_serial_fraction:.2})"
         );
         stage_rows.push(StageRow {
             threads,
             pre_ms,
+            sort_ms,
+            bin_ms,
             left_ms,
             sru_ms,
             right_ms,
@@ -271,9 +304,11 @@ fn main() {
     j.push_str("  \"stages\": [\n");
     for (i, r) in stage_rows.iter().enumerate() {
         j.push_str(&format!(
-            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}}}{}\n",
+            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"sort_ms\": {:.3}, \"binning_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}}}{}\n",
             r.threads,
             r.pre_ms,
+            r.sort_ms,
+            r.bin_ms,
             r.left_ms,
             r.sru_ms,
             r.right_ms,

@@ -23,9 +23,16 @@ fn main() {
         let queue = benchkit::queue_for(&tree, &cut);
         let left = cam.left();
         let mut set = preprocess_records(&left, &cam.shared_camera(), &benchkit::queue_refs(&queue), 3, Parallelism::auto());
-        nebula::render::sort::sort_splats(&mut set.splats);
+        nebula::render::sort::sort_splats_par(&mut set.splats, Parallelism::auto());
         let cfg = RasterConfig::default();
-        let bins = TileBins::build(cam.intr.width, cam.intr.height, pl.tile, 0, &set.splats);
+        let bins = TileBins::build_par(
+            cam.intr.width,
+            cam.intr.height,
+            pl.tile,
+            0,
+            &set.splats,
+            Parallelism::auto(),
+        );
         let (_, _) = render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
         let depth =
             depth_map(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg, cam.intr.far);

@@ -5,7 +5,7 @@
 use nebula::benchkit::{self, build_scene, walk_trace};
 use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::raster::{render_bins, RasterConfig};
-use nebula::render::sort::sort_splats;
+use nebula::render::sort::sort_splats_par;
 use nebula::render::stereo::{render_right_naive, render_stereo_from_splats, StereoMode};
 use nebula::render::warp::{depth_map, warp_right, WarpKind};
 use nebula::render::{preprocess_records, Parallelism, TileBins};
@@ -29,11 +29,18 @@ fn main() {
         let left_cam = cam.left();
         let mut set =
             preprocess_records(&left_cam, &cam.shared_camera(), &benchkit::queue_refs(&queue), 3, Parallelism::auto());
-        sort_splats(&mut set.splats);
+        sort_splats_par(&mut set.splats, Parallelism::auto());
         let cfg = RasterConfig::default();
         let (reference, _) = render_right_naive(&cam, &set, pl.tile, &cfg);
 
-        let bins = TileBins::build(cam.intr.width, cam.intr.height, pl.tile, 0, &set.splats);
+        let bins = TileBins::build_par(
+            cam.intr.width,
+            cam.intr.height,
+            pl.tile,
+            0,
+            &set.splats,
+            Parallelism::auto(),
+        );
         let (left_img, _) =
             render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
         let depth =

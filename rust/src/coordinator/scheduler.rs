@@ -89,7 +89,9 @@ pub fn run_simulation(
         RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min, parallelism: par };
     // Defense in depth for direct SimParams construction; config-file /
     // CLI zeros are rejected earlier by `PipelineConfig::validate`.
+    // tile = 0 would reach `div_ceil(0)` inside `TileBins::build_par`.
     let lod_interval = (pl.lod_interval as usize).max(1);
+    let tile = pl.tile.max(1);
 
     // --- Cloud setup ----------------------------------------------------
     let (lo, hi) = tree.gaussians.bounds();
@@ -108,7 +110,7 @@ pub fn run_simulation(
     )
     .expect("scene init");
     let mut link = SimLink::from_config(&params.net);
-    let platform = make_platform(variant.platform, pl.tile);
+    let platform = make_platform(variant.platform, tile);
 
     // --- Prefetch round 0 (initial scene load, off the trace clock) ----
     let q0 = LodQuery::new(poses[0].position, full_intr.fx, pl.tau_px, full_intr.near);
@@ -177,14 +179,14 @@ pub fn run_simulation(
         let stereo_cam = StereoCamera::new(*pose, intr);
 
         let mut wl = if variant.stereo {
-            let out = render_stereo(&stereo_cam, &queue, pl.sh_degree, pl.tile, &raster_cfg, StereoMode::AlphaGated);
+            let out = render_stereo(&stereo_cam, &queue, pl.sh_degree, tile, &raster_cfg, StereoMode::AlphaGated);
             if i + 1 == frames {
                 // Track right-eye quality on the final frame.
                 let left_cam = stereo_cam.left();
                 let shared = stereo_cam.shared_camera();
                 let mut set = preprocess_records(&left_cam, &shared, &queue, pl.sh_degree, par);
-                crate::render::sort::sort_splats(&mut set.splats);
-                let (reference, _) = render_right_naive(&stereo_cam, &set, pl.tile, &raster_cfg);
+                crate::render::sort::sort_splats_par(&mut set.splats, par);
+                let (reference, _) = render_right_naive(&stereo_cam, &set, tile, &raster_cfg);
                 right_psnr = out.right.psnr(&reference);
             }
             FrameWorkload::from_stereo(&out, full_pixels)
@@ -194,8 +196,8 @@ pub fn run_simulation(
             let lset = preprocess_records(&lcam, &lcam, &queue, pl.sh_degree, par);
             let rset = preprocess_records(&rcam, &rcam, &queue, pl.sh_degree, par);
             let n = lset.splats.len() + rset.splats.len();
-            let (_, lstats, _) = render_mono(lset, intr.width, intr.height, pl.tile, &raster_cfg);
-            let (_, rstats, _) = render_mono(rset, intr.width, intr.height, pl.tile, &raster_cfg);
+            let (_, lstats, _) = render_mono(lset, intr.width, intr.height, tile, &raster_cfg);
+            let (_, rstats, _) = render_mono(rset, intr.width, intr.height, tile, &raster_cfg);
             FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, full_pixels)
         };
         // Scale pixel-proportional counters to full resolution.
@@ -350,6 +352,17 @@ mod tests {
         p.pipeline.lod_interval = 0;
         let r = run_simulation(&tree, &poses[..4], &Variant::nebula(), &p);
         assert_eq!(r.frames, 4);
+    }
+
+    #[test]
+    fn degenerate_tile_is_clamped() {
+        // Same bypass for tile = 0, which would otherwise reach
+        // `div_ceil(0)` inside `TileBins::build_par`.
+        let (tree, poses) = small_world();
+        let mut p = fast_params();
+        p.pipeline.tile = 0;
+        let r = run_simulation(&tree, &poses[..2], &Variant::nebula(), &p);
+        assert_eq!(r.frames, 2);
     }
 
     #[test]

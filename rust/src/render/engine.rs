@@ -9,7 +9,9 @@
 //! off up front (`&mut` slab slices, region bands), so workers never
 //! synchronize and never touch each other's data. Every frame stage
 //! rides this one scheduler: rasterization tile rows, EWA preprocessing
-//! chunks, SRU disparity-list rows, and temporal-LoD validation bands.
+//! chunks, depth-sort bands and their pairwise merges, CSR tile-binning
+//! bands and row gathers, SRU disparity-list rows, and temporal-LoD
+//! validation bands.
 //!
 //! **Bit-accuracy argument.** A worker's result depends only on its
 //! item (and the shared read-only inputs), never on which thread ran it

@@ -3,8 +3,11 @@
 //!
 //! * [`preprocess`] — EWA projection of Gaussians to screen-space splats
 //!   (conic, depth, radius, SH color), frustum culling;
-//! * [`sort`] — global (depth, id) ordering;
-//! * [`tiles`] — per-tile splat lists (depth-ordered by construction);
+//! * [`sort`] — global (depth, id) ordering via `f32::total_cmp`:
+//!   fixed-width bands sort concurrently, then merge deterministically;
+//! * [`tiles`] — per-tile splat lists in a flat CSR layout
+//!   (offsets + indices), built by a parallel two-pass
+//!   count → prefix-sum → fill scheme, depth-ordered by construction;
 //! * [`engine`] — the parallel tile-scheduled execution engine: row
 //!   bands of the tile grid run concurrently on scoped threads with
 //!   disjoint output slabs, bitwise identical to serial execution
@@ -31,5 +34,6 @@ pub use engine::Parallelism;
 pub use image::Image;
 pub use preprocess::{preprocess_records, preprocess_tree, ProjectedSet, Splat, SplatSoa};
 pub use raster::{render_mono, RasterStats};
+pub use sort::{sort_splats, sort_splats_par};
 pub use stereo::{render_stereo, StereoMode, StereoOutput};
 pub use tiles::TileBins;

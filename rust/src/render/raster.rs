@@ -243,7 +243,9 @@ pub fn render_bins(
 }
 
 /// Full mono pipeline: sort → bin → rasterize. `set` is consumed (sorted
-/// in place).
+/// in place). Every stage — the parallel depth sort, the CSR tile
+/// binning, and rasterization — runs per `cfg.parallelism`, each with
+/// bitwise-identical output across thread counts.
 pub fn render_mono(
     mut set: super::preprocess::ProjectedSet,
     width: u32,
@@ -251,8 +253,8 @@ pub fn render_mono(
     tile: u32,
     cfg: &RasterConfig,
 ) -> (Image, RasterStats, TileBins) {
-    super::sort::sort_splats(&mut set.splats);
-    let bins = TileBins::build(width, height, tile, 0, &set.splats);
+    super::sort::sort_splats_par(&mut set.splats, cfg.parallelism);
+    let bins = TileBins::build_par(width, height, tile, 0, &set.splats, cfg.parallelism);
     let (img, stats) = render_bins(&set.splats, &bins, width, height, cfg);
     (img, stats, bins)
 }

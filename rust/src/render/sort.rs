@@ -1,26 +1,139 @@
-//! Depth sorting (paper Fig 1 stage 3).
+//! Depth sorting (paper Fig 1 stage 3) — parallel, deterministic.
 //!
 //! The global order is (depth, id): the id tiebreak makes every
 //! downstream stage deterministic, which the stereo rasterizer's
 //! bit-accuracy proof relies on (identical order ⇒ identical blending).
+//! Depth uses [`f32::total_cmp`] — a *total* order — so even NaN depths
+//! (which `partial_cmp` would make order-nondeterministic) land in one
+//! canonical position (after +∞, id-tiebroken).
+//!
+//! **Parallel scheme.** [`sort_splats_par`] splits the slice into
+//! fixed-width bands (`SORT_CHUNK`; boundaries depend only on the
+//! length, never on the thread count), sorts each band concurrently with
+//! `sort_unstable_by` on the engine ([`super::engine::parallel_map`]),
+//! then merges bands pairwise in rounds — each round's pair merges also
+//! run concurrently into disjoint output segments, with ties taking the
+//! left band first. Band structure and merge order are thread-count
+//! invariant, so `Serial` and `Threads(n)` produce the **identical
+//! permutation** for every input (ties, NaNs and duplicate ids
+//! included) — the property `tests/it_parallel.rs` enforces.
 
+use super::engine::{parallel_map, Parallelism};
 use super::preprocess::Splat;
+use std::cmp::Ordering;
 
-/// Sort splats in place by (depth ascending, id ascending).
-pub fn sort_splats(splats: &mut [Splat]) {
-    splats.sort_by(|a, b| {
-        a.depth
-            .partial_cmp(&b.depth)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.id.cmp(&b.id))
-    });
+/// Band width of the parallel sort. Fixed — never derived from the
+/// thread count — so band boundaries, and therefore the exact output
+/// permutation, are identical on every [`Parallelism`].
+const SORT_CHUNK: usize = 4096;
+
+/// The canonical splat order: depth ascending by [`f32::total_cmp`],
+/// then id ascending. A *total* order: NaN depths sort after +∞
+/// (negative NaN before −∞) instead of comparing "equal" to everything
+/// as the old `partial_cmp(..).unwrap_or(Equal)` comparator did.
+#[inline]
+pub fn cmp_splats(a: &Splat, b: &Splat) -> Ordering {
+    a.depth.total_cmp(&b.depth).then(a.id.cmp(&b.id))
 }
 
-/// True if `splats` are in canonical (depth, id) order.
+/// Sort splats in place by (depth ascending, id ascending) — the serial
+/// reference entry point (identical output to [`sort_splats_par`] at
+/// any thread count).
+pub fn sort_splats(splats: &mut [Splat]) {
+    sort_splats_par(splats, Parallelism::Serial);
+}
+
+/// Sort splats in place by (depth, id), concurrently per `par`.
+///
+/// The output permutation is bitwise identical for every `par` — see
+/// the module doc for the argument.
+pub fn sort_splats_par(splats: &mut [Splat], par: Parallelism) {
+    let n = splats.len();
+    if n <= SORT_CHUNK {
+        // One band on every parallelism: the plain sort IS the chunked
+        // algorithm's single-band case.
+        splats.sort_unstable_by(cmp_splats);
+        return;
+    }
+
+    // Phase 1: sort fixed-width bands concurrently, in place. Each band
+    // is an exclusively-owned &mut slice riding through the engine.
+    {
+        let bands: Vec<&mut [Splat]> = splats.chunks_mut(SORT_CHUNK).collect();
+        parallel_map(bands, par, |_, band| band.sort_unstable_by(cmp_splats));
+    }
+
+    // Phase 2: pairwise merge rounds, ping-ponging between the slice and
+    // one auxiliary buffer. Every round halves the band count; each
+    // pair's merge writes a disjoint contiguous output segment, so the
+    // merges of one round run concurrently too.
+    let mut bounds: Vec<usize> = (0..n).step_by(SORT_CHUNK).collect();
+    bounds.push(n);
+    let mut aux: Vec<Splat> = splats.to_vec();
+    let mut in_slice = true; // current sorted runs live in `splats`
+    while bounds.len() > 2 {
+        bounds = if in_slice {
+            merge_round(splats, &mut aux, &bounds, par)
+        } else {
+            merge_round(&aux, splats, &bounds, par)
+        };
+        in_slice = !in_slice;
+    }
+    if !in_slice {
+        splats.copy_from_slice(&aux);
+    }
+}
+
+/// One merge round: the sorted runs of `src` delimited by `bounds`
+/// merge two-at-a-time into `dst` (an unpaired trailing run is copied
+/// verbatim). Returns the surviving run boundaries. Ties take the left
+/// run first, so run order — and with it the full output permutation —
+/// is deterministic across rounds and thread counts.
+fn merge_round(
+    src: &[Splat],
+    dst: &mut [Splat],
+    bounds: &[usize],
+    par: Parallelism,
+) -> Vec<usize> {
+    let runs = bounds.len() - 1;
+    // Disjoint work items: (left run, right run, owned output segment).
+    let mut items: Vec<(&[Splat], &[Splat], &mut [Splat])> =
+        Vec::with_capacity(runs.div_ceil(2));
+    let mut rest: &mut [Splat] = dst;
+    let mut new_bounds: Vec<usize> = Vec::with_capacity(runs / 2 + 2);
+    new_bounds.push(bounds[0]);
+    let mut r = 0usize;
+    while r < runs {
+        let lo = bounds[r];
+        let a_end = bounds[r + 1];
+        let b_end = if r + 1 < runs { bounds[r + 2] } else { a_end };
+        let (out, tail) = std::mem::take(&mut rest).split_at_mut(b_end - lo);
+        rest = tail;
+        items.push((&src[lo..a_end], &src[a_end..b_end], out));
+        new_bounds.push(b_end);
+        r += 2;
+    }
+    parallel_map(items, par, |_, (a, b, out)| {
+        let (mut i, mut j) = (0usize, 0usize);
+        for slot in out.iter_mut() {
+            let take_a =
+                j >= b.len() || (i < a.len() && cmp_splats(&a[i], &b[j]) != Ordering::Greater);
+            if take_a {
+                *slot = a[i];
+                i += 1;
+            } else {
+                *slot = b[j];
+                j += 1;
+            }
+        }
+    });
+    new_bounds
+}
+
+/// True if `splats` are in canonical (depth, id) order — the same total
+/// order [`cmp_splats`] sorts by, so NaN-depth inputs validate too.
 pub fn is_sorted(splats: &[Splat]) -> bool {
-    splats.windows(2).all(|w| {
-        w[0].depth < w[1].depth || (w[0].depth == w[1].depth && w[0].id <= w[1].id)
-    })
+    splats.windows(2).all(|w| cmp_splats(&w[0], &w[1]) != Ordering::Greater)
 }
 
 #[cfg(test)]
@@ -66,6 +179,56 @@ mod tests {
         assert!(is_sorted(&s));
         let mut s = vec![splat(1, 1.0)];
         sort_splats(&mut s);
+        assert!(is_sorted(&s));
+    }
+
+    #[test]
+    fn nan_depths_sort_deterministically() {
+        // Regression for the partial_cmp(..).unwrap_or(Equal) comparator:
+        // NaN compared "equal" to every depth, so the output permutation
+        // depended on the input permutation. total_cmp gives NaN a fixed
+        // slot (after +∞) and the id tiebreak orders NaNs among
+        // themselves — any permutation of the input sorts identically.
+        let base = vec![splat(3, f32::NAN), splat(1, 2.0), splat(2, f32::NAN), splat(0, 5.0)];
+        let ids = |v: &[Splat]| v.iter().map(|s| s.id).collect::<Vec<u32>>();
+        let mut a = base.clone();
+        sort_splats(&mut a);
+        assert_eq!(ids(&a), vec![1, 0, 2, 3], "finite first, NaNs last in id order");
+        assert!(is_sorted(&a), "is_sorted must accept the canonical NaN order");
+        let mut rng = Prng::new(41);
+        for _ in 0..16 {
+            let mut b = base.clone();
+            rng.shuffle(&mut b);
+            sort_splats(&mut b);
+            assert_eq!(ids(&b), ids(&a), "permutation-dependent NaN order");
+        }
+        // And the parallel path agrees bit-for-bit.
+        for t in [2usize, 8] {
+            let mut b = base.clone();
+            sort_splats_par(&mut b, Parallelism::Threads(t));
+            assert_eq!(ids(&b), ids(&a), "t={t}");
+        }
+    }
+
+    #[test]
+    fn chunked_sort_matches_std_sort_across_bands() {
+        // > 2 bands (n > 2·SORT_CHUNK) with duplicate depths: the banded
+        // sort + merge must reproduce the reference stable sort exactly
+        // (ids are unique, so (depth, id) is a strict total order and
+        // every correct sort yields the same permutation).
+        let mut rng = Prng::new(11);
+        let mut s: Vec<Splat> =
+            (0..10_000).map(|i| splat(i, (rng.f32() * 500.0).round() * 0.25)).collect();
+        rng.shuffle(&mut s);
+        let mut want = s.clone();
+        want.sort_by(cmp_splats);
+        for t in [1usize, 2, 3, 8] {
+            let mut got = s.clone();
+            sort_splats_par(&mut got, Parallelism::Threads(t));
+            assert_eq!(want, got, "t={t}");
+        }
+        sort_splats(&mut s);
+        assert_eq!(want, s, "serial entry point");
         assert!(is_sorted(&s));
     }
 }

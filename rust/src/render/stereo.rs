@@ -20,8 +20,12 @@
 //! trading exactness for fewer right-eye pairs (quality measured in
 //! Fig 16).
 //!
-//! **Threading.** All three phases execute on the parallel engine
-//! ([`super::engine`]): (1) left-eye tile rows render concurrently,
+//! **Threading.** Every stage of the stereo frame executes on the
+//! parallel engine ([`super::engine`]): the shared preprocess and the
+//! depth sort ride `parallel_map{,_chunks}` (chunked bands + a
+//! deterministic merge), the CSR tile binning counts and gathers
+//! per-band ([`TileBins::build_par`]), and all three render phases run
+//! concurrently: (1) left-eye tile rows render concurrently,
 //! each worker owning a disjoint pixel slab and a disjoint slice of the
 //! flat α-pass bitmap; (2) the SRU insertion pass runs concurrently
 //! over **source-tile rows** — a splat in source tile `(tx, ty)` only
@@ -46,7 +50,7 @@ use super::engine::{self, Parallelism, Slab};
 use super::image::Image;
 use super::preprocess::{preprocess_records, ProjectedSet, Splat, SplatSoa};
 use super::raster::{raster_core, RasterConfig, RasterStats};
-use super::sort::sort_splats;
+use super::sort::sort_splats_par;
 use super::tiles::TileBins;
 use crate::gaussian::{GaussianId, GaussianRecord};
 use crate::math::StereoCamera;
@@ -67,10 +71,17 @@ pub enum StereoMode {
 /// the only values that legitimately change with [`Parallelism`].
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct StageSeconds {
-    /// Shared EWA preprocess + depth sort. Only set by [`render_stereo`]
-    /// (zero when rendering from an already-preprocessed set).
+    /// Shared EWA preprocess (projection + culling). Only set by
+    /// [`render_stereo`] (zero when rendering from an already
+    /// preprocessed set).
     pub preprocess: f64,
-    /// Left-eye rasterization (phase 1), including binning setup.
+    /// Parallel depth sort. Only set by [`render_stereo`], like
+    /// `preprocess`.
+    pub sort: f64,
+    /// CSR tile binning ([`TileBins::build_par`]) over the extended
+    /// grid.
+    pub binning: f64,
+    /// Left-eye rasterization (phase 1).
     pub left: f64,
     /// SRU disparity-list insertion (phase 2).
     pub sru: f64,
@@ -246,10 +257,13 @@ pub fn render_stereo(
     let shared = stereo.shared_camera();
     let mut set: ProjectedSet =
         preprocess_records(&left_cam, &shared, queue, sh_degree, cfg.parallelism);
-    sort_splats(&mut set.splats);
     let preprocess_s = t_pre.elapsed().as_secs_f64();
+    let t_sort = std::time::Instant::now();
+    sort_splats_par(&mut set.splats, cfg.parallelism);
+    let sort_s = t_sort.elapsed().as_secs_f64();
     let mut out = render_stereo_from_splats(stereo, &set, tile, cfg, mode);
     out.stages.preprocess = preprocess_s;
+    out.stages.sort = sort_s;
     out
 }
 
@@ -266,8 +280,10 @@ pub fn render_stereo_from_splats(
     let (w, h) = (stereo.intr.width, stereo.intr.height);
     let lists = DEFAULT_LISTS;
     let max_disp = ((lists - 1) * tile) as f32;
+    let t_bin = std::time::Instant::now();
+    let bins = TileBins::build_par(w, h, tile, lists - 1, &set.splats, cfg.parallelism);
+    let binning_s = t_bin.elapsed().as_secs_f64();
     let t_left = std::time::Instant::now();
-    let bins = TileBins::build(w, h, tile, lists - 1, &set.splats);
     let splats = &set.splats;
     let soa = SplatSoa::from_splats(splats);
 
@@ -488,7 +504,14 @@ pub fn render_stereo_from_splats(
         merge_ops,
         num_lists: lists,
         max_disparity_px: max_disp,
-        stages: StageSeconds { preprocess: 0.0, left: left_s, sru: sru_s, right: right_s },
+        stages: StageSeconds {
+            preprocess: 0.0,
+            sort: 0.0,
+            binning: binning_s,
+            left: left_s,
+            sru: sru_s,
+            right: right_s,
+        },
     }
 }
 
@@ -508,7 +531,7 @@ pub fn render_right_naive(
         s.mean.x -= disparity(stereo, s.depth, max_disp);
     }
     // Shifting preserves (depth, id) order.
-    let bins = TileBins::build(w, h, tile, 0, &shifted);
+    let bins = TileBins::build_par(w, h, tile, 0, &shifted, cfg.parallelism);
     super::raster::render_bins(&shifted, &bins, w, h, cfg)
 }
 
@@ -516,6 +539,7 @@ pub fn render_right_naive(
 mod tests {
     use super::*;
     use crate::math::{Intrinsics, Pose, Vec2, Vec3};
+    use crate::render::sort::sort_splats;
     use crate::scene::{CityGen, CityParams};
     use crate::trace::{PoseTrace, TraceParams};
     use crate::util::prop::{check, Config};

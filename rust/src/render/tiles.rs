@@ -1,18 +1,57 @@
 //! Per-tile splat lists (the tile intersection stage of Fig 1's
-//! rasterization).
+//! rasterization) in a flat **CSR layout**: one `offsets` buffer (one
+//! entry per tile plus a terminator) and one `indices` buffer holding
+//! every (tile, splat) pair — tile `t`'s list is
+//! `indices[offsets[t]..offsets[t+1]]`. Two allocations per frame
+//! instead of one `Vec` per tile, and `max_list`/`total_pairs` are
+//! O(tiles)/O(1) reads for the scheduler's load-imbalance diagnostics.
 //!
-//! Splats MUST be binned in sorted (depth, id) order so each tile list is
-//! depth-ordered by construction — the property the stereo merge relies
-//! on. The grid can be extended by `extra_cols` columns right of the
+//! **Order invariant.** Splats MUST be binned in sorted (depth, id)
+//! order, and every tile's list preserves that global order — the
+//! property the stereo merge proof relies on. The CSR build guarantees
+//! it by construction: pairs are counted and filled in ascending splat
+//! index, band by band, so each list is exactly the subsequence of
+//! `0..n` hitting that tile — a result that does not depend on band
+//! boundaries at all, hence identical to the serial nested-`Vec` push
+//! order at every [`Parallelism`] (property-tested in
+//! `tests/it_parallel.rs`).
+//!
+//! **Parallel two-pass build.** (1) each band builds a band-local CSR
+//! (count → prefix-sum → fill) concurrently on the engine; (2) a serial
+//! prefix-sum over the per-band counts produces the global `offsets`;
+//! (3) tile rows gather their bands' segments into `indices`
+//! concurrently — each row owns a disjoint contiguous slice because
+//! offsets are row-major. Band count is capped (`MAX_BIN_BANDS`) so the
+//! dense per-band offset arrays stay O(1)·tiles, and the serial path
+//! skips banding entirely for a direct O(n + tiles + pairs) build.
+//!
+//! The grid can be extended by `extra_cols` columns right of the
 //! visible image: with stereo, content near the left image's right edge
-//! shifts left into the right eye's view, so those splats must be binned
-//! even though the left eye never renders them (the widened FoV of paper
-//! Fig 13).
+//! shifts left into the right eye's view, so those splats must be
+//! binned even though the left eye never renders them (the widened FoV
+//! of paper Fig 13).
 
+use super::engine::{parallel_map, parallel_map_chunks, Parallelism};
 use super::preprocess::Splat;
 use super::sort::is_sorted;
 
-/// Per-tile index lists over a (possibly extended) tile grid.
+/// Minimum splat-band width of the parallel build. Banding is a pure
+/// performance knob: every tile list comes out as the ascending
+/// splat-index subsequence hitting that tile REGARDLESS of band
+/// boundaries, so any chunking produces the identical CSR. Boundaries
+/// are still derived from the splat count alone (never the thread
+/// count) to keep the execution structure deterministic too.
+const BIN_CHUNK: usize = 2048;
+
+/// Cap on the number of bands: each band carries a dense
+/// `(n_tiles + 1)`-entry offset array and passes 2–3 scan every band
+/// per tile, so unbounded band counts would cost O(bands · tiles) on
+/// tile-heavy frames (tiny tiles, full-res eyes). 16 bands keep that
+/// term negligible while saturating every realistic worker count.
+const MAX_BIN_BANDS: usize = 16;
+
+/// Per-tile splat index lists over a (possibly extended) tile grid,
+/// stored flat in CSR form.
 #[derive(Debug, Clone)]
 pub struct TileBins {
     /// Square tile side in pixels.
@@ -22,8 +61,87 @@ pub struct TileBins {
     pub tiles_y: u32,
     /// Extra off-screen columns to the right.
     pub extra_cols: u32,
-    /// Row-major lists (width = tiles_x + extra_cols), splat indices.
-    pub lists: Vec<Vec<u32>>,
+    /// CSR row pointers, row-major over the extended grid:
+    /// `offsets.len() == grid_x·tiles_y + 1`, monotonically
+    /// non-decreasing, `offsets[0] == 0`.
+    pub offsets: Vec<u32>,
+    /// All (tile, splat) pairs: tile `t`'s depth-ordered splat indices
+    /// are `indices[offsets[t] as usize..offsets[t+1] as usize]`.
+    pub indices: Vec<u32>,
+}
+
+/// Tile-rectangle of a splat footprint on the extended grid, or `None`
+/// if the footprint lies fully outside it. The explicit off-grid
+/// rejection runs BEFORE clamping: a splat whose whole footprint misses
+/// the grid must be dropped, never clamped into an edge tile. The
+/// bounds mirror the clamp exactly: a footprint is off-grid iff it ends
+/// before pixel 0 or starts after the last pixel (`max_px - 1`).
+#[inline]
+fn tile_rect(s: &Splat, tile: u32, max_px_x: f32, max_px_y: f32) -> Option<(u32, u32, u32, u32)> {
+    if s.mean.x + s.radius_px < 0.0
+        || s.mean.x - s.radius_px > max_px_x - 1.0
+        || s.mean.y + s.radius_px < 0.0
+        || s.mean.y - s.radius_px > max_px_y - 1.0
+    {
+        return None; // fully outside the extended grid
+    }
+    let x0 = (s.mean.x - s.radius_px).max(0.0);
+    let x1 = (s.mean.x + s.radius_px).min(max_px_x - 1.0);
+    let y0 = (s.mean.y - s.radius_px).max(0.0);
+    let y1 = (s.mean.y + s.radius_px).min(max_px_y - 1.0);
+    debug_assert!(x0 <= x1 && y0 <= y1, "bbox collapsed despite off-grid rejection");
+    Some((x0 as u32 / tile, x1 as u32 / tile, y0 as u32 / tile, y1 as u32 / tile))
+}
+
+/// Count → prefix-sum → fill for one contiguous splat run: returns the
+/// run-local CSR over the full tile grid, with stored indices offset by
+/// `base` (the run's global start). This is the SOLE binning
+/// implementation — the serial build is the single-run case and the
+/// parallel build maps it per band — so the serial↔banded equivalence
+/// the stereo merge proof relies on cannot drift between copies.
+fn csr_fill(
+    splats: &[Splat],
+    base: usize,
+    tile: u32,
+    grid_x: u32,
+    n_tiles: usize,
+    max_px_y: f32,
+) -> (Vec<u32>, Vec<u32>) {
+    let max_px_x = (grid_x * tile) as f32;
+    let rects: Vec<Option<(u32, u32, u32, u32)>> =
+        splats.iter().map(|s| tile_rect(s, tile, max_px_x, max_px_y)).collect();
+    let mut offsets = vec![0u32; n_tiles + 1];
+    for rect in rects.iter().flatten() {
+        let (tx0, tx1, ty0, ty1) = *rect;
+        for ty in ty0..=ty1 {
+            for tx in tx0..=tx1 {
+                offsets[(ty * grid_x + tx) as usize + 1] += 1;
+            }
+        }
+    }
+    // Prefix-sum in u64: per-tile counts always fit u32 (≤ run length)
+    // but the running total is the run's (splat, tile) pair count, which
+    // must fail LOUDLY rather than wrap the u32 offsets in release.
+    let mut acc = 0u64;
+    for t in 0..n_tiles {
+        acc += u64::from(offsets[t + 1]);
+        assert!(acc <= u64::from(u32::MAX), "CSR pair count overflows u32 offsets");
+        offsets[t + 1] = acc as u32;
+    }
+    let mut cursor: Vec<u32> = offsets[..n_tiles].to_vec();
+    let mut indices = vec![0u32; offsets[n_tiles] as usize];
+    for (j, rect) in rects.iter().enumerate() {
+        if let Some((tx0, tx1, ty0, ty1)) = *rect {
+            for ty in ty0..=ty1 {
+                for tx in tx0..=tx1 {
+                    let t = (ty * grid_x + tx) as usize;
+                    indices[cursor[t] as usize] = (base + j) as u32;
+                    cursor[t] += 1;
+                }
+            }
+        }
+    }
+    (offsets, indices)
 }
 
 impl TileBins {
@@ -32,68 +150,116 @@ impl TileBins {
         self.tiles_x + self.extra_cols
     }
 
-    pub fn list(&self, tx: u32, ty: u32) -> &[u32] {
-        &self.lists[(ty * self.grid_x() + tx) as usize]
+    /// Tiles in the extended grid (`offsets.len() - 1`).
+    pub fn n_tiles(&self) -> usize {
+        self.offsets.len() - 1
     }
 
-    /// Build bins for an image of `width`×`height` pixels. `splats` must
-    /// be in canonical (depth, id) order.
+    /// Tile `(tx, ty)`'s splat indices, in global (depth, id) order.
+    pub fn list(&self, tx: u32, ty: u32) -> &[u32] {
+        let t = (ty * self.grid_x() + tx) as usize;
+        &self.indices[self.offsets[t] as usize..self.offsets[t + 1] as usize]
+    }
+
+    /// Build bins for an image of `width`×`height` pixels — the serial
+    /// reference entry point (identical output to [`TileBins::build_par`]
+    /// at any thread count). `splats` must be in canonical (depth, id)
+    /// order.
     pub fn build(width: u32, height: u32, tile: u32, extra_cols: u32, splats: &[Splat]) -> Self {
+        Self::build_par(width, height, tile, extra_cols, splats, Parallelism::Serial)
+    }
+
+    /// Build bins concurrently per `par`. Offsets and indices are
+    /// bitwise identical for every `par` — see the module doc.
+    pub fn build_par(
+        width: u32,
+        height: u32,
+        tile: u32,
+        extra_cols: u32,
+        splats: &[Splat],
+        par: Parallelism,
+    ) -> Self {
         debug_assert!(is_sorted(splats), "splats must be depth-sorted before binning");
         let tiles_x = width.div_ceil(tile);
         let tiles_y = height.div_ceil(tile);
         let grid_x = tiles_x + extra_cols;
-        let mut bins = Self {
-            tile,
-            tiles_x,
-            tiles_y,
-            extra_cols,
-            lists: vec![Vec::new(); (grid_x * tiles_y) as usize],
-        };
-        let max_px_x = (grid_x * tile) as f32;
+        let n_tiles = (grid_x * tiles_y) as usize;
         let max_px_y = height as f32;
-        for (i, s) in splats.iter().enumerate() {
-            // Explicit off-grid rejection BEFORE clamping: a splat whose
-            // whole footprint lies outside the extended grid must be
-            // dropped, never clamped into an edge tile. (Previously this
-            // relied on the clamped bbox collapsing — e.g. x ∈ [-53, -47]
-            // clamps to [0, -47], x1 < x0 — which worked but only
-            // incidentally.) The bounds mirror the clamp below exactly:
-            // a footprint is off-grid iff it ends before pixel 0 or
-            // starts after the last pixel (max_px - 1).
-            if s.mean.x + s.radius_px < 0.0
-                || s.mean.x - s.radius_px > max_px_x - 1.0
-                || s.mean.y + s.radius_px < 0.0
-                || s.mean.y - s.radius_px > max_px_y - 1.0
-            {
-                continue; // fully outside the extended grid
-            }
-            let x0 = (s.mean.x - s.radius_px).max(0.0);
-            let x1 = (s.mean.x + s.radius_px).min(max_px_x - 1.0);
-            let y0 = (s.mean.y - s.radius_px).max(0.0);
-            let y1 = (s.mean.y + s.radius_px).min(max_px_y - 1.0);
-            debug_assert!(x0 <= x1 && y0 <= y1, "bbox collapsed despite off-grid rejection");
-            let tx0 = (x0 as u32) / tile;
-            let tx1 = (x1 as u32) / tile;
-            let ty0 = (y0 as u32) / tile;
-            let ty1 = (y1 as u32) / tile;
-            for ty in ty0..=ty1 {
-                for tx in tx0..=tx1 {
-                    bins.lists[(ty * grid_x + tx) as usize].push(i as u32);
-                }
-            }
+
+        // Serial fast path: one csr_fill over the whole slice IS the
+        // final CSR — O(n + tiles + pairs), no band-local buffers.
+        // Produces the same CSR as the banded path (lists are
+        // ascending-index subsequences either way).
+        if par.threads() <= 1 || splats.len() <= BIN_CHUNK {
+            let (offsets, indices) = csr_fill(splats, 0, tile, grid_x, n_tiles, max_px_y);
+            return Self { tile, tiles_x, tiles_y, extra_cols, offsets, indices };
         }
-        bins
+
+        // Pass 1 (parallel): band-local CSR per splat band, filled with
+        // GLOBAL splat indices in ascending order. Band width derives
+        // from the splat count alone, capped so the O(bands · tiles)
+        // terms of the dense per-band offsets and passes 2–3 stay
+        // bounded.
+        let chunk = BIN_CHUNK.max(splats.len().div_ceil(MAX_BIN_BANDS));
+        let bands: Vec<(Vec<u32>, Vec<u32>)> =
+            parallel_map_chunks(splats.len(), chunk, par, |r| {
+                csr_fill(&splats[r.clone()], r.start, tile, grid_x, n_tiles, max_px_y)
+            });
+
+        // Pass 2 (serial): global row pointers from the band counts,
+        // accumulated in u64 so a frame whose total (splat, tile) pairs
+        // exceed u32::MAX panics instead of silently wrapping the
+        // offsets (and with them every tile list) in release builds.
+        let mut offsets = vec![0u32; n_tiles + 1];
+        let mut acc = 0u64;
+        for t in 0..n_tiles {
+            let total: u64 = bands.iter().map(|(off, _)| u64::from(off[t + 1] - off[t])).sum();
+            acc += total;
+            assert!(acc <= u64::from(u32::MAX), "CSR pair count overflows u32 offsets");
+            offsets[t + 1] = acc as u32;
+        }
+
+        // Pass 3 (parallel): tile rows gather their bands' segments.
+        // Rows are contiguous in `indices` (offsets are row-major), so
+        // each row worker owns a disjoint &mut slice; copying bands in
+        // ascending band order keeps every list in global splat-index
+        // (= depth) order.
+        let mut indices = vec![0u32; offsets[n_tiles] as usize];
+        {
+            let mut rows: Vec<&mut [u32]> = Vec::with_capacity(tiles_y as usize);
+            let mut rest: &mut [u32] = &mut indices;
+            for ty in 0..tiles_y {
+                let lo = offsets[(ty * grid_x) as usize] as usize;
+                let hi = offsets[((ty + 1) * grid_x) as usize] as usize;
+                let (row, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                rows.push(row);
+                rest = tail;
+            }
+            parallel_map(rows, par, |ty, row| {
+                let mut cursor = 0usize;
+                for tx in 0..grid_x {
+                    let t = (ty as u32 * grid_x + tx) as usize;
+                    for (off, idx) in &bands {
+                        let seg = &idx[off[t] as usize..off[t + 1] as usize];
+                        row[cursor..cursor + seg.len()].copy_from_slice(seg);
+                        cursor += seg.len();
+                    }
+                }
+            });
+        }
+
+        Self { tile, tiles_x, tiles_y, extra_cols, offsets, indices }
     }
 
     /// Total (splat, tile) pairs — the rasterization workload measure.
     pub fn total_pairs(&self) -> u64 {
-        self.lists.iter().map(|l| l.len() as u64).sum()
+        self.indices.len() as u64
     }
 
-    /// Longest tile list (load-imbalance diagnostics for the HW model).
+    /// Longest tile list (load-imbalance diagnostics for the HW model
+    /// and the per-tile work-stealing follow-on).
     pub fn max_list(&self) -> usize {
-        self.lists.iter().map(|l| l.len()).max().unwrap_or(0)
+        self.offsets.windows(2).map(|w| (w[1] - w[0]) as usize).max().unwrap_or(0)
     }
 }
 
@@ -101,6 +267,7 @@ impl TileBins {
 mod tests {
     use super::*;
     use crate::math::Vec2;
+    use crate::util::Prng;
 
     fn splat(id: u32, x: f32, y: f32, r: f32, depth: f32) -> Splat {
         Splat {
@@ -163,7 +330,7 @@ mod tests {
         let s = vec![splat(0, -50.0, 8.0, 3.0, 1.0), splat(1, 8.0, 500.0, 3.0, 1.0)];
         let bins = TileBins::build(64, 64, 16, 1, &s);
         assert_eq!(bins.total_pairs(), 0);
-        assert!(bins.lists.iter().all(|l| l.is_empty()), "no edge tile may contain them");
+        assert!(bins.indices.is_empty(), "no edge tile may contain them");
         // Footprints that merely *touch* the grid edge are kept.
         let touching = vec![splat(0, -2.0, 8.0, 3.0, 1.0)];
         let bins = TileBins::build(64, 64, 16, 1, &touching);
@@ -177,6 +344,49 @@ mod tests {
             let bins = TileBins::build(64, 64, tile, 0, &s);
             let t = 31 / tile;
             assert!(bins.list(t, t).contains(&0), "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn csr_structure_invariants() {
+        let mut rng = Prng::new(5);
+        let mut s: Vec<Splat> = (0..200)
+            .map(|i| {
+                splat(
+                    i,
+                    rng.range_f32(-20.0, 84.0),
+                    rng.range_f32(-20.0, 84.0),
+                    rng.range_f32(1.0, 8.0).ceil(),
+                    rng.range_f32(0.2, 50.0),
+                )
+            })
+            .collect();
+        crate::render::sort::sort_splats(&mut s);
+        let bins = TileBins::build(64, 64, 16, 2, &s);
+        assert_eq!(bins.offsets.len(), bins.n_tiles() + 1);
+        assert_eq!(bins.offsets[0], 0);
+        assert!(bins.offsets.windows(2).all(|w| w[0] <= w[1]), "offsets monotone");
+        assert_eq!(*bins.offsets.last().unwrap() as usize, bins.indices.len());
+        // Every list is a strictly increasing splat-index subsequence
+        // (sorted input ⇒ binning order = index order, no duplicates).
+        for ty in 0..bins.tiles_y {
+            for tx in 0..bins.grid_x() {
+                let l = bins.list(tx, ty);
+                assert!(l.windows(2).all(|w| w[0] < w[1]), "tile ({tx},{ty})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_scene_has_empty_lists() {
+        let bins = TileBins::build(64, 48, 16, 1, &[]);
+        assert_eq!(bins.n_tiles(), 5 * 3);
+        assert_eq!(bins.total_pairs(), 0);
+        assert_eq!(bins.max_list(), 0);
+        for ty in 0..bins.tiles_y {
+            for tx in 0..bins.grid_x() {
+                assert!(bins.list(tx, ty).is_empty());
+            }
         }
     }
 }

@@ -1,7 +1,8 @@
 //! Serial ↔ parallel parity: every stage that rides the engine —
-//! rasterization tile rows, EWA preprocessing, SRU disparity-list
-//! insertion, temporal-LoD validation — must produce **bitwise
-//! identical** output and equal merged workload counters for
+//! rasterization tile rows, EWA preprocessing, depth-sort bands +
+//! merge, CSR tile binning, SRU disparity-list insertion, temporal-LoD
+//! validation — must produce **bitwise identical** output and equal
+//! merged workload counters for
 //! `Parallelism::Serial` and `Parallelism::Threads(n)` at every `n` —
 //! the property the whole engine design rests on (disjoint per-item
 //! state ⇒ identical operation order ⇒ identical f32 output).
@@ -16,8 +17,9 @@ use nebula::lod::{Cut, LodQuery, LodSearch, Partitioning, StreamingSearch, Tempo
 use nebula::math::{Intrinsics, StereoCamera, Vec2, Vec3};
 use nebula::render::engine::Parallelism;
 use nebula::render::raster::{render_mono, RasterConfig};
+use nebula::render::sort::{is_sorted, sort_splats, sort_splats_par};
 use nebula::render::stereo::{render_stereo, StereoMode};
-use nebula::render::{preprocess_records, preprocess_tree, ProjectedSet, Splat};
+use nebula::render::{preprocess_records, preprocess_tree, ProjectedSet, Splat, TileBins};
 use nebula::scene::{CityGen, CityParams};
 use nebula::trace::{PoseTrace, TraceParams};
 use nebula::util::prop::{check, Config};
@@ -38,12 +40,12 @@ fn parity_threads() -> Vec<usize> {
         .unwrap_or_else(|| vec![2, 4, 8])
 }
 
-/// A randomized screen-space scene: positive-definite conics, means in
-/// and around the viewport (including fully off-screen footprints, which
-/// exercise the binning rejection), mixed radii/depths/opacities.
-fn random_set(rng: &mut Prng, w: u32, h: u32) -> ProjectedSet {
-    let n = rng.range_usize(0, 300);
-    let splats: Vec<Splat> = (0..n)
+/// `n` randomized screen-space splats: positive-definite conics, means
+/// in and around the viewport (including fully off-screen footprints,
+/// which exercise the binning rejection), mixed radii/depths/opacities.
+/// Depths are quantized so ties (id-tiebroken) actually occur.
+fn random_splats(rng: &mut Prng, w: u32, h: u32, n: usize) -> Vec<Splat> {
+    (0..n)
         .map(|i| {
             let a = rng.range_f32(0.05, 1.5);
             let c = rng.range_f32(0.05, 1.5);
@@ -55,14 +57,19 @@ fn random_set(rng: &mut Prng, w: u32, h: u32) -> ProjectedSet {
                     rng.range_f32(-24.0, h as f32 + 24.0),
                 ),
                 conic: [a, rng.range_f32(-b_max, b_max), c],
-                depth: rng.range_f32(0.2, 90.0),
+                depth: (rng.range_f32(0.2, 90.0) * 8.0).round() * 0.125,
                 radius_px: rng.range_f32(1.0, 9.0).ceil(),
                 color: [rng.f32(), rng.f32(), rng.f32()],
                 opacity: rng.range_f32(0.05, 0.999),
             }
         })
-        .collect();
-    ProjectedSet { splats, processed: n, culled: 0 }
+        .collect()
+}
+
+/// A randomized screen-space scene (see [`random_splats`]).
+fn random_set(rng: &mut Prng, w: u32, h: u32) -> ProjectedSet {
+    let n = rng.range_usize(0, 300);
+    ProjectedSet { splats: random_splats(rng, w, h, n), processed: n, culled: 0 }
 }
 
 #[test]
@@ -224,6 +231,129 @@ fn cut_validate_rejects_identically_across_threads() {
         let got = bad.validate_par(&tree, &q, Parallelism::Threads(t)).unwrap_err().to_string();
         assert_eq!(want, got, "t={t}");
     }
+}
+
+#[test]
+fn depth_sort_parallel_is_bitwise_equal_to_serial() {
+    // Band-crossing sizes (the sort's fixed band width is 4096), depth
+    // ties, unique ids and occasional NaN depths: the banded sort +
+    // deterministic merge must produce the IDENTICAL permutation at
+    // every thread count. Compared via (id, depth bits) — NaN-safe, and
+    // with unique ids the key sequence pins the full permutation.
+    check("sort serial ≡ threads", Config { cases: 6, seed: 0x90_05 }, |rng| {
+        let n = rng.range_usize(0, 12_000);
+        let mut splats = random_splats(rng, 64, 64, n);
+        for s in splats.iter_mut() {
+            if rng.chance(0.01) {
+                s.depth = f32::NAN;
+            }
+        }
+        rng.shuffle(&mut splats);
+        let key = |v: &[Splat]| v.iter().map(|s| (s.id, s.depth.to_bits())).collect::<Vec<_>>();
+        let mut want = splats.clone();
+        sort_splats_par(&mut want, Parallelism::Serial);
+        assert!(is_sorted(&want), "canonical order violated (n={n})");
+        for t in parity_threads() {
+            let mut got = splats.clone();
+            sort_splats_par(&mut got, Parallelism::Threads(t));
+            assert_eq!(key(&want), key(&got), "sort diverged at {t} threads (n={n})");
+        }
+        // The serial entry point runs the same banded algorithm.
+        sort_splats(&mut splats);
+        assert_eq!(key(&want), key(&splats));
+    });
+}
+
+#[test]
+fn csr_binning_parallel_is_identical_to_serial() {
+    // The whole CSR — offsets AND indices — must match the serial build
+    // exactly at every thread count, across tile sizes, extended
+    // columns, image sizes that don't divide the tile, and sets large
+    // enough to span multiple fixed-width binning bands.
+    check("csr bins serial ≡ threads", Config { cases: 8, seed: 0x90_06 }, |rng| {
+        let w = 33 + rng.below(64) as u32;
+        let h = 33 + rng.below(48) as u32;
+        let tile = [4u32, 8, 16][rng.below(3)];
+        let extra = rng.below(4) as u32;
+        let n = rng.range_usize(0, 6000);
+        let mut splats = random_splats(rng, w, h, n);
+        sort_splats(&mut splats);
+        let want = TileBins::build(w, h, tile, extra, &splats);
+        for t in parity_threads() {
+            let got = TileBins::build_par(w, h, tile, extra, &splats, Parallelism::Threads(t));
+            assert_eq!(want.offsets, got.offsets, "offsets diverged at {t} threads (n={n})");
+            assert_eq!(want.indices, got.indices, "indices diverged at {t} threads (n={n})");
+        }
+    });
+}
+
+/// The pre-CSR nested-`Vec` builder, kept as the semantic reference:
+/// push each sorted splat into every tile its (rejected-then-clamped)
+/// footprint touches, in splat order.
+fn nested_bins_reference(
+    w: u32,
+    h: u32,
+    tile: u32,
+    extra_cols: u32,
+    splats: &[Splat],
+) -> Vec<Vec<u32>> {
+    let tiles_x = w.div_ceil(tile);
+    let tiles_y = h.div_ceil(tile);
+    let grid_x = tiles_x + extra_cols;
+    let mut lists = vec![Vec::new(); (grid_x * tiles_y) as usize];
+    let max_px_x = (grid_x * tile) as f32;
+    let max_px_y = h as f32;
+    for (i, s) in splats.iter().enumerate() {
+        if s.mean.x + s.radius_px < 0.0
+            || s.mean.x - s.radius_px > max_px_x - 1.0
+            || s.mean.y + s.radius_px < 0.0
+            || s.mean.y - s.radius_px > max_px_y - 1.0
+        {
+            continue; // fully off-grid: rejected, never clamped
+        }
+        let x0 = (s.mean.x - s.radius_px).max(0.0);
+        let x1 = (s.mean.x + s.radius_px).min(max_px_x - 1.0);
+        let y0 = (s.mean.y - s.radius_px).max(0.0);
+        let y1 = (s.mean.y + s.radius_px).min(max_px_y - 1.0);
+        for ty in (y0 as u32) / tile..=(y1 as u32) / tile {
+            for tx in (x0 as u32) / tile..=(x1 as u32) / tile {
+                lists[(ty * grid_x + tx) as usize].push(i as u32);
+            }
+        }
+    }
+    lists
+}
+
+#[test]
+fn csr_bins_match_nested_vec_reference() {
+    // List-for-list equality between the flat CSR build and the nested
+    // reference on randomized scenes: same membership, same order, same
+    // totals.
+    check("csr ≡ nested-Vec reference", Config { cases: 12, seed: 0x90_07 }, |rng| {
+        let w = 33 + rng.below(64) as u32;
+        let h = 33 + rng.below(48) as u32;
+        let tile = [4u32, 8, 16, 32][rng.below(4)];
+        let extra = rng.below(4) as u32;
+        let n = rng.range_usize(0, 5000);
+        let mut splats = random_splats(rng, w, h, n);
+        sort_splats(&mut splats);
+        let nested = nested_bins_reference(w, h, tile, extra, &splats);
+        let bins = TileBins::build_par(w, h, tile, extra, &splats, Parallelism::auto());
+        assert_eq!(bins.n_tiles(), nested.len());
+        let mut pairs = 0u64;
+        for ty in 0..bins.tiles_y {
+            for tx in 0..bins.grid_x() {
+                let want = &nested[(ty * bins.grid_x() + tx) as usize];
+                assert_eq!(
+                    bins.list(tx, ty),
+                    want.as_slice(),
+                    "tile ({tx},{ty}) w={w} h={h} tile={tile} extra={extra} n={n}"
+                );
+                pairs += want.len() as u64;
+            }
+        }
+        assert_eq!(bins.total_pairs(), pairs);
+    });
 }
 
 #[test]
