@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         &set.splats,
         Parallelism::auto(),
     );
-    let (left_img, _) = render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
+    let (left_img, _, _) = render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
     let depth = depth_map(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg, cam.intr.far);
 
     let mut table = Table::new(vec!["method", "PSNR dB", "SSIM", "LPIPS-proxy", "right-eye pairs"]);

@@ -3,17 +3,22 @@
 //! thread counts. Writes `BENCH_render.json` (ms/frame, pairs/s and
 //! speedups vs. the serial reference, plus a per-stage breakdown of the
 //! stereo frame — preprocess / sort / binning / left / SRU / right /
-//! LoD-validate — with the Amdahl serial fraction implied by each
-//! thread count) so the perf trajectory of the hot path is tracked
-//! across PRs. Sort and binning are broken out of preprocess/left so
-//! the serial-fraction attribution shows them scaling with threads.
+//! raster / LoD-validate — with the Amdahl serial fraction implied by
+//! each thread count) so the perf trajectory of the hot path is tracked
+//! across PRs. Also reports: the quad-lane core vs the scalar reference
+//! core (`"raster"`, single-worker core-vs-core), per-frame
+//! load-imbalance metrics (`"imbalance"`: max/mean tile-list lengths;
+//! per-row steal counts ride the sweep rows), and a skewed-list scene
+//! comparing round-robin against work-stealing dispatch (`"skewed"`:
+//! ms, stealing speedup, per-scheduler Amdahl serial fraction).
 //!
 //!     cargo bench --bench bench_render [-- --smoke]
 //!
 //! `--smoke` is the CI canary: a minimal scene with one sample per
 //! configuration — fast enough for every push, still executing every
 //! stage and parity assertion so breakage can't hide behind a skipped
-//! bench.
+//! bench — and it asserts the quad-lane core is not slower than the
+//! scalar reference on the smoke scene.
 //!
 //! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
 //! `NEBULA_BENCH_SAMPLES` / `NEBULA_BENCH_WARMUP` (timing loop),
@@ -22,8 +27,8 @@
 use nebula::benchkit;
 use nebula::lod::LodSearch;
 use nebula::math::{Intrinsics, StereoCamera};
-use nebula::render::engine::Parallelism;
-use nebula::render::raster::{render_bins, RasterConfig};
+use nebula::render::engine::{Parallelism, RowSchedule};
+use nebula::render::raster::{render_bins, render_bins_reference, RasterConfig};
 use nebula::render::stereo::{render_stereo, render_stereo_from_splats, StereoMode};
 use nebula::render::{preprocess_records, ProjectedSet, TileBins};
 use nebula::scene::{CityGen, CityParams};
@@ -36,6 +41,9 @@ struct Row {
     ms_per_frame: f64,
     pairs_per_s: f64,
     speedup_vs_serial: f64,
+    /// Work-stealing claims off the round-robin placement (mono raster
+    /// stage only; diagnostic, placement-dependent).
+    steals: u64,
 }
 
 fn cfg(par: Parallelism) -> RasterConfig {
@@ -101,7 +109,7 @@ fn main() {
     let mut mono_serial_ms = 0.0f64;
     for (label, par) in &sweep {
         let c = cfg(*par);
-        let (img, stats) = render_bins(&set.splats, &bins, w, h, &c);
+        let (img, stats, steals) = render_bins(&set.splats, &bins, w, h, &c);
         if let Some(reference) = &parity {
             assert_eq!(
                 reference, &img.data,
@@ -125,8 +133,128 @@ fn main() {
             ms_per_frame: ms,
             pairs_per_s: stats.pairs as f64 / (ms * 1e-3),
             speedup_vs_serial: if threads == 0 { 1.0 } else { mono_serial_ms / ms },
+            steals,
         });
-        println!("  mono   {label:>6}: {ms:>8.2} ms/frame");
+        println!("  mono   {label:>6}: {ms:>8.2} ms/frame  (steals {steals})");
+    }
+
+    // --- Quad-lane core vs scalar reference (single worker) ------------
+    // Core-vs-core: same bins, same thread count (1), so the delta is
+    // purely gather + quad blending vs the indirect scalar loop. The
+    // parity assert makes regression impossible to hide; the timing
+    // assert is the CI canary (smoke mode) for the perf claim itself.
+    let c_serial = cfg(Parallelism::Serial);
+    let (quad_img, quad_stats, _) = render_bins(&set.splats, &bins, w, h, &c_serial);
+    let (ref_img, ref_stats) = render_bins_reference(&set.splats, &bins, w, h, &c_serial);
+    assert_eq!(
+        quad_img.data, ref_img.data,
+        "PARITY VIOLATION: quad-lane core differs from scalar reference"
+    );
+    assert_eq!(quad_stats, ref_stats, "PARITY VIOLATION: quad-lane stats differ from scalar");
+    let best_of = |k: u32, f: &dyn Fn()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..k {
+            let t = std::time::Instant::now();
+            f();
+            best = best.min(t.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    // Smoke uses MORE reps, not fewer: the canary asserts on these
+    // timings, and best-of-k is the noise shield (one clean run is
+    // enough; preemption only ever inflates a sample).
+    let reps = if smoke { 7 } else { 5 };
+    let quad_ms = best_of(reps, &|| {
+        render_bins(&set.splats, &bins, w, h, &c_serial);
+    });
+    let scalar_ms = best_of(reps, &|| {
+        render_bins_reference(&set.splats, &bins, w, h, &c_serial);
+    });
+    let quad_speedup = scalar_ms / quad_ms;
+    println!(
+        "  raster core: quad {quad_ms:.2} ms vs scalar {scalar_ms:.2} ms ({quad_speedup:.2}x)"
+    );
+    if smoke {
+        // 25% tolerance on best-of-7: the smoke scene is tiny (few ms,
+        // weakest gather amortization), so the margin must absorb CI
+        // scheduling noise — a real regression (quad meaningfully
+        // slower than scalar) still trips it.
+        assert!(
+            quad_ms <= scalar_ms * 1.25,
+            "CANARY: quad-lane core slower than scalar reference \
+             ({quad_ms:.2} ms vs {scalar_ms:.2} ms)"
+        );
+    }
+
+    // --- Work stealing vs round-robin on a skewed scene ----------------
+    // City-scale frames concentrate giant lists in few tile rows
+    // (max_list >> mean). Model that: squash 3/4 of the splats into
+    // tile row 0 (depth order — the sort key — is untouched) and
+    // compare the schedulers at identical thread counts.
+    let mut skewed = set.splats.clone();
+    for (i, s) in skewed.iter_mut().enumerate() {
+        if i % 4 != 0 {
+            s.mean.y = (i % tile as usize) as f32 * 0.5 + 0.25; // rows 0..1
+        }
+    }
+    let skew_bins = TileBins::build(w, h, tile, 0, &skewed);
+    println!(
+        "  skewed scene: max_list {} vs mean {:.1} (base max {} mean {:.1})",
+        skew_bins.max_list(),
+        skew_bins.mean_list(),
+        bins.max_list(),
+        bins.mean_list()
+    );
+    struct SkewRow {
+        threads: usize,
+        rr_ms: f64,
+        steal_ms: f64,
+        steal_speedup_vs_rr: f64,
+        rr_serial_fraction: f64,
+        steal_serial_fraction: f64,
+        steals: u64,
+    }
+    let amdahl = |serial_ms: f64, ms: f64, n: usize| -> f64 {
+        if n < 2 || ms <= 0.0 {
+            return 1.0;
+        }
+        let s = serial_ms / ms;
+        ((n as f64 / s - 1.0) / (n as f64 - 1.0)).clamp(0.0, 1.0)
+    };
+    let skew_serial_ms = best_of(reps, &|| {
+        render_bins(&skewed, &skew_bins, w, h, &c_serial);
+    });
+    let mut skew_rows: Vec<SkewRow> = Vec::new();
+    for t in [2usize, 4, 8] {
+        let rr_cfg =
+            RasterConfig { schedule: RowSchedule::RoundRobin, ..cfg(Parallelism::Threads(t)) };
+        let st_cfg = cfg(Parallelism::Threads(t)); // stealing by default
+        let rr_ms = best_of(reps, &|| {
+            render_bins(&skewed, &skew_bins, w, h, &rr_cfg);
+        });
+        // Steal count rides the timed iterations (Cell: best_of takes
+        // &dyn Fn) — no extra probe frame, same as the stereo sweep.
+        let steal_cell = std::cell::Cell::new(0u64);
+        let steal_ms = best_of(reps, &|| {
+            let (_, _, s) = render_bins(&skewed, &skew_bins, w, h, &st_cfg);
+            steal_cell.set(s);
+        });
+        let steals = steal_cell.get();
+        let row = SkewRow {
+            threads: t,
+            rr_ms,
+            steal_ms,
+            steal_speedup_vs_rr: rr_ms / steal_ms,
+            rr_serial_fraction: amdahl(skew_serial_ms, rr_ms, t),
+            steal_serial_fraction: amdahl(skew_serial_ms, steal_ms, t),
+            steals,
+        };
+        println!(
+            "  skewed t{t}: round-robin {rr_ms:>7.2} ms (frac {:.2})  stealing {steal_ms:>7.2} ms \
+             (frac {:.2}, {:.2}x, steals {steals})",
+            row.rr_serial_fraction, row.steal_serial_fraction, row.steal_speedup_vs_rr
+        );
+        skew_rows.push(row);
     }
 
     // --- Stereo sweep --------------------------------------------------
@@ -145,8 +273,14 @@ fn main() {
     let mut stereo_serial_ms = 0.0f64;
     for (label, par) in &sweep {
         let c = cfg(*par);
-        let s = bencher
-            .run(|| render_stereo_from_splats(&cam, &set, tile, &c, StereoMode::AlphaGated));
+        // Steal counts ride the timed iterations (last sample wins) —
+        // no extra probe frame.
+        let mut steals = 0u64;
+        let s = bencher.run(|| {
+            let out = render_stereo_from_splats(&cam, &set, tile, &c, StereoMode::AlphaGated);
+            steals = out.stages.steals_left + out.stages.steals_right;
+            out
+        });
         let ms = s.median_ms();
         let threads = match par {
             Parallelism::Serial => 0,
@@ -161,8 +295,9 @@ fn main() {
             ms_per_frame: ms,
             pairs_per_s: stereo_pairs as f64 / (ms * 1e-3),
             speedup_vs_serial: if threads == 0 { 1.0 } else { stereo_serial_ms / ms },
+            steals,
         });
-        println!("  stereo {label:>6}: {ms:>8.2} ms/frame");
+        println!("  stereo {label:>6}: {ms:>8.2} ms/frame  (steals {steals})");
     }
 
     // --- Per-stage breakdown
@@ -184,6 +319,10 @@ fn main() {
         validate_ms: f64,
         frame_ms: f64,
         amdahl_serial_fraction: f64,
+        /// Raster stage total (left + right blend phases).
+        raster_ms: f64,
+        steals_left: u64,
+        steals_right: u64,
     }
     let median = |xs: &mut Vec<f64>| -> f64 {
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -207,6 +346,7 @@ fn main() {
             Vec::new(),
             Vec::new(),
         );
+        let (mut steals_left, mut steals_right) = (0u64, 0u64);
         for i in 0..n_samples + n_warmup {
             let out = render_stereo(&cam, &refs, 3, tile, &c, StereoMode::AlphaGated);
             let t = std::time::Instant::now();
@@ -221,6 +361,8 @@ fn main() {
             lft.push(out.stages.left * 1e3);
             sru.push(out.stages.sru * 1e3);
             rgt.push(out.stages.right * 1e3);
+            steals_left = out.stages.steals_left;
+            steals_right = out.stages.steals_right;
         }
         let (pre_ms, sort_ms, bin_ms, left_ms, sru_ms, right_ms, validate_ms) = (
             median(&mut pre),
@@ -249,7 +391,8 @@ fn main() {
         println!(
             "  stages {label:>6}: pre {pre_ms:>7.2}  sort {sort_ms:>6.2}  bin {bin_ms:>6.2}  \
              left {left_ms:>7.2}  sru {sru_ms:>6.2}  right {right_ms:>7.2}  \
-             validate {validate_ms:>6.3} ms  (serial frac {amdahl_serial_fraction:.2})"
+             validate {validate_ms:>6.3} ms  (serial frac {amdahl_serial_fraction:.2}, \
+             steals {steals_left}+{steals_right})"
         );
         stage_rows.push(StageRow {
             threads,
@@ -262,6 +405,9 @@ fn main() {
             validate_ms,
             frame_ms,
             amdahl_serial_fraction,
+            raster_ms: left_ms + right_ms,
+            steals_left,
+            steals_right,
         });
     }
 
@@ -288,15 +434,41 @@ fn main() {
     ));
     j.push_str(&format!("  \"speedup_mono_4t\": {mono4:.3},\n"));
     j.push_str(&format!("  \"speedup_stereo_4t\": {stereo4:.3},\n"));
+    j.push_str(&format!(
+        "  \"raster\": {{\"quad_ms\": {quad_ms:.3}, \"scalar_ms\": {scalar_ms:.3}, \"quad_vs_scalar_speedup\": {quad_speedup:.3}}},\n"
+    ));
+    j.push_str(&format!(
+        "  \"imbalance\": {{\"max_list\": {}, \"mean_list\": {:.2}, \"skewed_max_list\": {}, \"skewed_mean_list\": {:.2}}},\n",
+        bins.max_list(),
+        bins.mean_list(),
+        skew_bins.max_list(),
+        skew_bins.mean_list()
+    ));
+    j.push_str("  \"skewed\": [\n");
+    for (i, r) in skew_rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"threads\": {}, \"round_robin_ms\": {:.3}, \"stealing_ms\": {:.3}, \"stealing_speedup_vs_rr\": {:.3}, \"rr_serial_fraction\": {:.4}, \"stealing_serial_fraction\": {:.4}, \"steals\": {}}}{}\n",
+            r.threads,
+            r.rr_ms,
+            r.steal_ms,
+            r.steal_speedup_vs_rr,
+            r.rr_serial_fraction,
+            r.steal_serial_fraction,
+            r.steals,
+            if i + 1 == skew_rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ],\n");
     j.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         j.push_str(&format!(
-            "    {{\"mode\": \"{}\", \"threads\": {}, \"ms_per_frame\": {:.3}, \"pairs_per_s\": {:.0}, \"speedup_vs_serial\": {:.3}}}{}\n",
+            "    {{\"mode\": \"{}\", \"threads\": {}, \"ms_per_frame\": {:.3}, \"pairs_per_s\": {:.0}, \"speedup_vs_serial\": {:.3}, \"steals\": {}}}{}\n",
             r.mode,
             r.threads,
             r.ms_per_frame,
             r.pairs_per_s,
             r.speedup_vs_serial,
+            r.steals,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -304,7 +476,7 @@ fn main() {
     j.push_str("  \"stages\": [\n");
     for (i, r) in stage_rows.iter().enumerate() {
         j.push_str(&format!(
-            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"sort_ms\": {:.3}, \"binning_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}}}{}\n",
+            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"sort_ms\": {:.3}, \"binning_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"raster_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}, \"steals_left\": {}, \"steals_right\": {}}}{}\n",
             r.threads,
             r.pre_ms,
             r.sort_ms,
@@ -312,9 +484,12 @@ fn main() {
             r.left_ms,
             r.sru_ms,
             r.right_ms,
+            r.raster_ms,
             r.validate_ms,
             r.frame_ms,
             r.amdahl_serial_fraction,
+            r.steals_left,
+            r.steals_right,
             if i + 1 == stage_rows.len() { "" } else { "," }
         ));
     }

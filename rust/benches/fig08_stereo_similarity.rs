@@ -33,7 +33,7 @@ fn main() {
             &set.splats,
             Parallelism::auto(),
         );
-        let (_, _) = render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
+        let (_, _, _) = render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
         let depth =
             depth_map(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg, cam.intr.far);
 

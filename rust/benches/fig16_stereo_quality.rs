@@ -41,7 +41,7 @@ fn main() {
             &set.splats,
             Parallelism::auto(),
         );
-        let (left_img, _) =
+        let (left_img, _, _) =
             render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
         let depth =
             depth_map(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg, cam.intr.far);

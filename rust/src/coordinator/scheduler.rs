@@ -85,8 +85,16 @@ pub fn run_simulation(
     // One strategy for every data-parallel frame stage: rasterization,
     // preprocess, SRU insertion, and the temporal-LoD validation pass.
     let par = Parallelism::from_threads(pl.threads);
-    let raster_cfg =
-        RasterConfig { alpha_min: pl.alpha_min, t_min: pl.transmittance_min, parallelism: par };
+    let raster_cfg = RasterConfig {
+        alpha_min: pl.alpha_min,
+        t_min: pl.transmittance_min,
+        parallelism: par,
+        // Cost-ordered work stealing: city-scale scenes routinely put
+        // `max_list ≫ mean` splats in a handful of tile rows, which
+        // starves the static round-robin split (bitwise-equal either
+        // way — see render::engine).
+        schedule: crate::render::RowSchedule::Stealing,
+    };
     // Defense in depth for direct SimParams construction; config-file /
     // CLI zeros are rejected earlier by `PipelineConfig::validate`.
     // tile = 0 would reach `div_ceil(0)` inside `TileBins::build_par`.

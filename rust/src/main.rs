@@ -130,6 +130,7 @@ fn render(args: &Args) -> anyhow::Result<()> {
             alpha_min: cfg.pipeline.alpha_min,
             t_min: cfg.pipeline.transmittance_min,
             parallelism: nebula::render::Parallelism::from_threads(cfg.pipeline.threads),
+            schedule: nebula::render::RowSchedule::Stealing,
         },
         StereoMode::AlphaGated,
     );

@@ -1,14 +1,16 @@
 //! Parallel execution engine: an order-preserving data-parallel map
-//! ([`parallel_map`] / [`parallel_map_chunks`]) plus the tile-row slab
-//! scheduler ([`run_rows`]) built on top of it.
+//! ([`parallel_map`] / [`parallel_map_chunks`]), a cost-aware
+//! work-stealing map ([`parallel_map_stealing`]), and the tile-row slab
+//! scheduler ([`run_rows`]) built on top of them.
 //!
 //! The core primitive runs a worker once per *item* on scoped threads
 //! (plain `std::thread::scope`, no dependencies) with items assigned
-//! round-robin (`i % threads`) and results reassembled **in item
-//! order**. Items own whatever per-item mutable state the caller splits
-//! off up front (`&mut` slab slices, region bands), so workers never
-//! synchronize and never touch each other's data. Every frame stage
-//! rides this one scheduler: rasterization tile rows, EWA preprocessing
+//! either round-robin (`i % threads`) or dynamically off a shared
+//! atomic cursor, and results reassembled **in item order**. Items own
+//! whatever per-item mutable state the caller splits off up front
+//! (`&mut` slab slices, region bands), so workers never synchronize on
+//! data and never touch each other's state. Every frame stage rides
+//! this one scheduler: rasterization tile rows, EWA preprocessing
 //! chunks, depth-sort bands and their pairwise merges, CSR tile-binning
 //! bands and row gathers, SRU disparity-list rows, and temporal-LoD
 //! validation bands.
@@ -26,8 +28,22 @@
 //! counters are sums of per-item u64s (addition commutes), so they are
 //! equal too. Enforced per stage by the serial↔parallel property tests
 //! in `tests/it_parallel.rs`.
+//!
+//! **Work stealing preserves parity for free.** The same argument
+//! covers [`RowSchedule::Stealing`]: dynamic assignment only changes
+//! *which thread* runs an item and *when* — never the item's inputs,
+//! its operation order, or where its result lands in the reassembled
+//! vector. Thread placement is not an input to any computation, so
+//! round-robin, work-stealing, and serial execution are bitwise
+//! indistinguishable in their outputs; only wall-clock time and the
+//! steal diagnostics differ. Cost ordering (descending per-item cost
+//! under a shared cursor) is a pure scheduling heuristic with the same
+//! property. Enforced by the scheduler-parity suites in
+//! `tests/it_parallel.rs`.
 
 use super::image::Image;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Execution strategy for the tile grid. Bitwise-invariant: every
 /// variant renders the exact same image.
@@ -72,6 +88,25 @@ impl Default for Parallelism {
     fn default() -> Self {
         Self::auto()
     }
+}
+
+/// How [`run_rows`] hands tile rows to worker threads. Both variants
+/// produce bitwise identical output (see the module doc): the policy
+/// only decides which thread runs a row, never what the row computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RowSchedule {
+    /// Static round-robin (`row % threads`) — the reference policy the
+    /// scheduler-parity tests compare against. Degrades when one row
+    /// carries a giant splat list (`max_list ≫ mean`): the owning
+    /// thread also drags its whole static share behind the outlier.
+    RoundRobin,
+    /// Cost-ordered work stealing: rows are sorted by descending cost
+    /// (per-row splat-list lengths, O(1) reads off the CSR
+    /// [`super::tiles::TileBins::offsets`]) and handed out via a shared
+    /// atomic cursor, so an outlier row pins exactly one thread while
+    /// the rest drain the remainder. The default.
+    #[default]
+    Stealing,
 }
 
 /// A worker-owned horizontal slab of the output image: pixel rows
@@ -141,6 +176,10 @@ impl<'a> Slab<'a> {
 /// is reassembled by index — so every `Parallelism` produces the
 /// identical vector.
 ///
+/// Spawn economy: the worker count is clamped to the item count (tiny
+/// frames never spawn idle threads) and the calling thread runs the
+/// first bucket itself, so `k`-item work costs at most `k - 1` spawns.
+///
 /// # Panics
 /// Panics if a worker panics.
 pub fn parallel_map<T, R, W>(items: Vec<T>, par: Parallelism, worker: W) -> Vec<R>
@@ -163,19 +202,18 @@ where
     }
 
     let worker = &worker;
+    let run_bucket = |bucket: Vec<(usize, T)>| -> Vec<(usize, R)> {
+        bucket.into_iter().map(|(i, item)| (i, worker(i, item))).collect()
+    };
     let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let home = buckets.remove(0);
     std::thread::scope(|s| {
-        let handles: Vec<_> = buckets
-            .into_iter()
-            .map(|bucket| {
-                s.spawn(move || {
-                    bucket
-                        .into_iter()
-                        .map(|(i, item)| (i, worker(i, item)))
-                        .collect::<Vec<_>>()
-                })
-            })
-            .collect();
+        let handles: Vec<_> =
+            buckets.into_iter().map(|bucket| s.spawn(move || run_bucket(bucket))).collect();
+        // The calling thread is a worker too, not a join barrier.
+        for (i, r) in run_bucket(home) {
+            results[i] = Some(r);
+        }
         for h in handles {
             for (i, r) in h.join().expect("engine worker panicked") {
                 results[i] = Some(r);
@@ -183,6 +221,112 @@ where
         }
     });
     results.into_iter().map(|r| r.expect("every item mapped")).collect()
+}
+
+/// Run `worker(i, item)` once per item under **cost-ordered work
+/// stealing** and return `(results in item order, steal count)`.
+///
+/// Items are sorted by descending `costs[i]` (ties broken by ascending
+/// index, so the execution order is deterministic) and handed out
+/// through a shared atomic cursor: each worker claims the next
+/// most-expensive unclaimed item the moment it goes idle. A single
+/// outlier item therefore pins exactly one thread while the remaining
+/// threads drain everything else — the failure mode of static
+/// round-robin under skewed per-item cost (`max ≫ mean`).
+///
+/// Bit-accuracy is inherited from [`parallel_map`]'s argument verbatim:
+/// dynamic assignment changes which thread runs an item and when, never
+/// the item's inputs or operation order, and results are reassembled by
+/// original index. The returned steal count is the only
+/// placement-dependent output: it counts claims that deviated from the
+/// static round-robin placement over the cost-ordered sequence (claim
+/// `k` going to a worker other than `k % threads`) — 0 when the load is
+/// balanced enough that threads advance in lockstep, growing as
+/// imbalance forces idle threads to take over stalled shares. It is a
+/// wall-clock-class diagnostic, not part of the deterministic output.
+///
+/// # Panics
+/// Panics if `costs.len() != items.len()` or a worker panics.
+pub fn parallel_map_stealing<T, R, W>(
+    items: Vec<T>,
+    costs: &[u64],
+    par: Parallelism,
+    worker: W,
+) -> (Vec<R>, u64)
+where
+    T: Send,
+    R: Send,
+    W: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    assert_eq!(costs.len(), n, "one cost per item");
+    let threads = par.threads().min(n.max(1));
+
+    // Deterministic dispatch order: descending cost, ascending index.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(costs[i]), i));
+
+    if threads <= 1 {
+        // One worker claims every slot in dispatch order — the same
+        // execution order the threaded path's cursor hands out.
+        let mut by_index: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for &i in &order {
+            let item = by_index[i].take().expect("order is a permutation");
+            results[i] = Some(worker(i, item));
+        }
+        return (results.into_iter().map(|r| r.expect("every item mapped")).collect(), 0);
+    }
+
+    // Shared queue: slot k holds the k-th most expensive item. Each slot
+    // is locked exactly once (the cursor hands every k to one claimant),
+    // so the mutexes are uncontended — they exist to move `T` out safely.
+    let mut by_index: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let slots: Vec<Mutex<Option<(usize, T)>>> = order
+        .iter()
+        .map(|&i| Mutex::new(Some((i, by_index[i].take().expect("order is a permutation")))))
+        .collect();
+
+    let cursor = AtomicUsize::new(0);
+    let worker = &worker;
+    let slots = &slots;
+    let cursor = &cursor;
+    let run_worker = move |w: usize| -> (Vec<(usize, R)>, u64) {
+        let mut out = Vec::new();
+        let mut steals = 0u64;
+        loop {
+            let k = cursor.fetch_add(1, Ordering::Relaxed);
+            if k >= n {
+                break;
+            }
+            let (i, item) =
+                slots[k].lock().expect("slot lock").take().expect("slot claimed once");
+            if k % threads != w {
+                steals += 1;
+            }
+            out.push((i, worker(i, item)));
+        }
+        (out, steals)
+    };
+
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut steals = 0u64;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (1..threads).map(|w| s.spawn(move || run_worker(w))).collect();
+        let (home, home_steals) = run_worker(0);
+        steals += home_steals;
+        for (i, r) in home {
+            results[i] = Some(r);
+        }
+        for h in handles {
+            let (part, part_steals) = h.join().expect("engine worker panicked");
+            steals += part_steals;
+            for (i, r) in part {
+                results[i] = Some(r);
+            }
+        }
+    });
+    (results.into_iter().map(|r| r.expect("every item mapped")).collect(), steals)
 }
 
 /// Order-preserving parallel map over the chunked index range
@@ -206,26 +350,40 @@ where
     parallel_map(ranges, par, |_, r| worker(r))
 }
 
-/// Run `worker` once per tile row of `img`, concurrently per `par`.
+/// Run `worker` once per tile row of `img`, concurrently per `par`,
+/// scheduled per `sched`, and return `(per-row results, steal count)`.
 ///
 /// `worker(ty, rows, extra)` receives the tile-row index, the mutable
 /// pixel-row slice for rows `[ty*tile, min((ty+1)*tile, height))` (wrap
 /// it with [`Slab::for_row`]), and the row's element of `extras`
 /// (per-row mutable state split off by the caller, e.g. α-pass flag
 /// slices).
-/// Returns the per-row results **in row order** regardless of the
-/// thread count, so callers merge stats identically on every path.
+///
+/// `costs` drives [`RowSchedule::Stealing`]'s dispatch order: one cost
+/// per tile row, typically the row's total splat-list length
+/// ([`super::tiles::TileBins::row_costs`]). It is a pure scheduling
+/// heuristic — a wrong cost can only waste time, never change a bit of
+/// output. Ignored (may be empty) under [`RowSchedule::RoundRobin`].
+///
+/// Results come back **in row order** regardless of thread count or
+/// schedule, so callers merge stats identically on every path; the
+/// steal count is wall-clock-class diagnostics (always 0 for
+/// round-robin and serial runs).
 ///
 /// # Panics
-/// Panics if `extras.len() != tiles_y` or if a worker panics.
+/// Panics if `extras.len() != tiles_y`, if stealing is requested with
+/// `costs.len() != tiles_y`, or if a worker panics.
+#[allow(clippy::too_many_arguments)]
 pub fn run_rows<E, R, W>(
     img: &mut Image,
     tile: u32,
     tiles_y: u32,
     par: Parallelism,
+    sched: RowSchedule,
+    costs: &[u64],
     extras: Vec<E>,
     worker: W,
-) -> Vec<R>
+) -> (Vec<R>, u64)
 where
     E: Send,
     R: Send,
@@ -243,7 +401,16 @@ where
         rest = tail;
         items.push((rows, extra));
     }
-    parallel_map(items, par, |ty, (rows, extra)| worker(ty as u32, rows, extra))
+    match sched {
+        RowSchedule::RoundRobin => {
+            (parallel_map(items, par, |ty, (rows, extra)| worker(ty as u32, rows, extra)), 0)
+        }
+        RowSchedule::Stealing => {
+            parallel_map_stealing(items, costs, par, |ty, (rows, extra)| {
+                worker(ty as u32, rows, extra)
+            })
+        }
+    }
 }
 
 #[cfg(test)]
@@ -262,15 +429,18 @@ mod tests {
 
     /// Paint each row with its tile-row index via a Slab and check
     /// coverage, ordering of results, and the ragged last row.
-    fn paint(par: Parallelism) -> (Image, Vec<u32>) {
+    fn paint(par: Parallelism, sched: RowSchedule) -> (Image, Vec<u32>, u64) {
         let (w, h, tile) = (10u32, 23u32, 8u32); // 3 tile rows, last ragged
         let tiles_y = h.div_ceil(tile);
+        let costs = vec![1u64; tiles_y as usize];
         let mut img = Image::new(w, h);
-        let rows = run_rows(
+        let (rows, steals) = run_rows(
             &mut img,
             tile,
             tiles_y,
             par,
+            sched,
+            &costs,
             vec![(); tiles_y as usize],
             |ty, rows, _extra: ()| {
                 let mut slab = Slab::for_row(rows, w, ty, tile, h);
@@ -285,28 +455,127 @@ mod tests {
                 ty
             },
         );
-        (img, rows)
+        (img, rows, steals)
     }
 
     #[test]
     fn rows_cover_image_and_results_are_ordered() {
         for par in [Parallelism::Serial, Parallelism::Threads(2), Parallelism::Threads(7)] {
-            let (img, rows) = paint(par);
-            assert_eq!(rows, vec![0, 1, 2], "{par:?}");
-            for y in 0..23u32 {
-                for x in 0..10u32 {
-                    assert_eq!(img.get(x, y), [(y / 8) as f32, x as f32, y as f32], "{par:?}");
+            for sched in [RowSchedule::RoundRobin, RowSchedule::Stealing] {
+                let (img, rows, _) = paint(par, sched);
+                assert_eq!(rows, vec![0, 1, 2], "{par:?} {sched:?}");
+                for y in 0..23u32 {
+                    for x in 0..10u32 {
+                        assert_eq!(
+                            img.get(x, y),
+                            [(y / 8) as f32, x as f32, y as f32],
+                            "{par:?} {sched:?}"
+                        );
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn serial_and_threaded_images_identical() {
-        let (a, _) = paint(Parallelism::Serial);
+    fn serial_and_threaded_images_identical_under_both_schedules() {
+        let (a, _, steals) = paint(Parallelism::Serial, RowSchedule::RoundRobin);
+        assert_eq!(steals, 0, "serial round-robin cannot steal");
         for t in 1..=5 {
-            let (b, _) = paint(Parallelism::Threads(t));
-            assert_eq!(a.data, b.data, "t={t}");
+            for sched in [RowSchedule::RoundRobin, RowSchedule::Stealing] {
+                let (b, _, _) = paint(Parallelism::Threads(t), sched);
+                assert_eq!(a.data, b.data, "t={t} {sched:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_map_matches_round_robin_map() {
+        // Same results vector (contents AND order) for every thread
+        // count and any cost vector — costs are a scheduling heuristic,
+        // never an input.
+        let items: Vec<u64> = (0..53).collect();
+        let want: Vec<u64> = items.iter().map(|&v| v * 3 + 7).collect();
+        for t in [1usize, 2, 5, 16] {
+            for costs in [vec![1u64; 53], (0..53).rev().collect(), (0..53).collect()] {
+                let (got, _) = parallel_map_stealing(
+                    items.clone(),
+                    &costs,
+                    Parallelism::Threads(t),
+                    |i, v| {
+                        assert_eq!(i as u64, v, "index must match item position");
+                        v * 3 + 7
+                    },
+                );
+                assert_eq!(got, want, "t={t}");
+            }
+        }
+        let (empty, steals) =
+            parallel_map_stealing(Vec::<u64>::new(), &[], Parallelism::Threads(4), |_, v| v);
+        assert!(empty.is_empty());
+        assert_eq!(steals, 0);
+    }
+
+    #[test]
+    fn stealing_claims_expensive_items_first() {
+        // Single worker: the claim sequence IS the dispatch order —
+        // descending cost, ties broken by ascending index.
+        let order = std::sync::Mutex::new(Vec::new());
+        let costs = [5u64, 9, 1, 9, 7];
+        parallel_map_stealing(vec![(); 5], &costs, Parallelism::Serial, |i, _| {
+            order.lock().unwrap().push(i);
+        });
+        assert_eq!(*order.lock().unwrap(), vec![1, 3, 4, 0, 2]);
+        // Threaded claims are racy in order but exactly-once.
+        order.lock().unwrap().clear();
+        parallel_map_stealing(vec![(); 5], &costs, Parallelism::Threads(2), |i, _| {
+            order.lock().unwrap().push(i);
+        });
+        let mut claimed = order.lock().unwrap().clone();
+        claimed.sort_unstable();
+        assert_eq!(claimed, vec![0, 1, 2, 3, 4], "every item claimed exactly once");
+    }
+
+    #[test]
+    fn stealing_delivers_owned_mutable_state() {
+        let mut buf = vec![0u32; 10];
+        let items: Vec<&mut u32> = buf.iter_mut().collect();
+        let costs: Vec<u64> = (0..10).collect();
+        parallel_map_stealing(items, &costs, Parallelism::Threads(4), |i, slot| {
+            *slot = i as u32 + 1
+        });
+        assert_eq!(buf, (1..=10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn worker_threads_clamped_to_item_count() {
+        // 3 items on a 64-thread strategy must use at most 3 distinct
+        // threads (and one of them is the calling thread, which runs
+        // the first bucket inline instead of idling at the join).
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        for stealing in [false, true] {
+            let ids = Mutex::new(HashSet::new());
+            let record = |_i: usize, _item: ()| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            };
+            if stealing {
+                parallel_map_stealing(vec![(); 3], &[1, 1, 1], Parallelism::Threads(64), record);
+            } else {
+                parallel_map(vec![(); 3], Parallelism::Threads(64), record);
+            }
+            let ids = ids.lock().unwrap();
+            assert!(ids.len() <= 3, "stealing={stealing}: {} workers for 3 items", ids.len());
+            if !stealing {
+                // Deterministic for round-robin (the home bucket always
+                // runs inline); under stealing the spawned workers can
+                // legitimately drain the queue first.
+                assert!(
+                    ids.contains(&std::thread::current().id()),
+                    "calling thread must work, not idle"
+                );
+            }
         }
     }
 
@@ -362,14 +631,25 @@ mod tests {
 
     #[test]
     fn per_row_extras_are_delivered_mutably() {
-        let (w, h, tile) = (4u32, 16u32, 4u32);
-        let tiles_y = 4u32;
-        let mut marks = vec![0u8; tiles_y as usize];
-        let extras: Vec<&mut u8> = marks.iter_mut().collect();
-        let mut img = Image::new(w, h);
-        run_rows(&mut img, tile, tiles_y, Parallelism::Threads(3), extras, |ty, _rows, m| {
-            *m = ty as u8 + 1;
-        });
-        assert_eq!(marks, vec![1, 2, 3, 4]);
+        for sched in [RowSchedule::RoundRobin, RowSchedule::Stealing] {
+            let (w, h, tile) = (4u32, 16u32, 4u32);
+            let tiles_y = 4u32;
+            let mut marks = vec![0u8; tiles_y as usize];
+            let extras: Vec<&mut u8> = marks.iter_mut().collect();
+            let mut img = Image::new(w, h);
+            run_rows(
+                &mut img,
+                tile,
+                tiles_y,
+                Parallelism::Threads(3),
+                sched,
+                &[3, 1, 4, 1],
+                extras,
+                |ty, _rows, m| {
+                    *m = ty as u8 + 1;
+                },
+            );
+            assert_eq!(marks, vec![1, 2, 3, 4], "{sched:?}");
+        }
     }
 }

@@ -12,9 +12,11 @@
 //!   bands of the tile grid run concurrently on scoped threads with
 //!   disjoint output slabs, bitwise identical to serial execution
 //!   (see [`engine::Parallelism`]);
-//! * [`raster`] — tile α-blending core (the VRC functional model),
+//! * [`raster`] — quad-lane tile α-blending core (the VRC functional
+//!   model): per-tile geometry gather + 4 pixels per iteration,
 //!   monomorphized over pass-flag tracking and splat layout, executed
-//!   through the engine;
+//!   through the engine under cost-ordered work stealing (scalar
+//!   reference core retained for parity);
 //! * [`stereo`] — triangulation-based stereo rasterization: the left eye
 //!   renders normally, the right eye reuses preprocessing/sorting and
 //!   merges per-tile disparity lists (bit-accurate; see module docs);
@@ -30,7 +32,7 @@ pub mod stereo;
 pub mod tiles;
 pub mod warp;
 
-pub use engine::Parallelism;
+pub use engine::{Parallelism, RowSchedule};
 pub use image::Image;
 pub use preprocess::{preprocess_records, preprocess_tree, ProjectedSet, Splat, SplatSoa};
 pub use raster::{render_mono, RasterStats};

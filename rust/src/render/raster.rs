@@ -1,20 +1,59 @@
-//! Reference tile-based α-blending rasterizer (paper Fig 1 stage 4) —
-//! the functional model of the VRC (volume rendering core).
+//! Tile-based α-blending rasterizer (paper Fig 1 stage 4) — the
+//! functional model of the VRC (volume rendering core).
 //!
 //! Front-to-back blending per pixel: α from the conic, skip below
 //! `alpha_min` (the α-check), accumulate until the transmittance floor.
 //! The per-(tile, splat) α-check outcomes can be exported — that is the
 //! signal the stereo re-projection unit (SRU) consumes in §4.4.
 //!
+//! **Quad-lane core.** The production blending core (`raster_core`)
+//! processes a tile in two passes:
+//!
+//! 1. *Gather*: the tile's splat records are copied once, in list
+//!    order, into a contiguous [`TileScratch`] — `geom[li]` holds
+//!    `[mean.x, mean.y, conic a, b, c, opacity]` and `color[li]` the
+//!    RGB of `list[li]`. The per-pixel indirect `src.geom(list[li])`
+//!    loads of the scalar core (a 16×16 tile re-reads every record up
+//!    to 256×, through an index indirection each time) become one
+//!    sequential copy; the pixel loop then streams the scratch.
+//! 2. *Quad blend*: pixels are processed 4 per iteration (a row-major
+//!    quad of horizontally adjacent pixels). Each lane owns an
+//!    independent transmittance/RGB accumulator and a live flag; for
+//!    every (splat, lane) the lane executes the **identical scalar f32
+//!    operation sequence** as the reference core — dx/dy/power, the
+//!    `power > 0` reject, `opacity · power.exp()` clamped by
+//!    `min(0.99)`, the `alpha_min` check, front-to-back accumulate,
+//!    transmittance update, `t_min` early-out. A lane that saturates
+//!    stops counting and blending exactly where the scalar core's
+//!    per-pixel `break` would; a quad whose 4 lanes are all dead skips
+//!    the rest of the list, which is precisely the union of the scalar
+//!    per-pixel breaks. Remainder quads (tile width not a multiple of
+//!    4) simply start with the out-of-range lanes dead.
+//!
+//! **Lane-wise bit-accuracy argument.** A pixel's blend result depends
+//! only on its own (dx, dy) and the tile's splat list — never on any
+//! other pixel. The quad core runs, per (pixel, splat) pair, the same
+//! f32 ops in the same order on the same values as the scalar core; it
+//! only interleaves *which pair* executes next (splat-major across 4
+//! pixels instead of pixel-major). f32 arithmetic is deterministic per
+//! operation sequence, so every pixel, α-pass flag, and u64 counter
+//! (sums commute) is bitwise identical to the scalar reference — at
+//! every thread count and under both row schedules. The scalar path
+//! stays available behind [`raster_tile_reference`] /
+//! [`render_bins_reference`] and is property-tested against the quad
+//! core (NaN/Inf geometry, `alpha_min` boundary hits, mid-quad
+//! saturation, remainder lanes) in `tests/it_parallel.rs`.
+//!
 //! Execution: the tile grid runs on the parallel engine
-//! ([`super::engine`]) according to [`RasterConfig::parallelism`]; the
-//! blending core is a single monomorphized function
-//! (`raster_core`) specialized over (a) whether α-pass flags are
-//! tracked and (b) the splat storage layout ([`SplatSource`]), so the
-//! per-pixel inner loop carries no `Option` branch and no stats-memory
-//! traffic, and every path blends bit-identically.
+//! ([`super::engine`]) according to [`RasterConfig::parallelism`], with
+//! tile rows dispatched per [`RasterConfig::schedule`] — cost-ordered
+//! work stealing by default, using the CSR row costs
+//! ([`TileBins::row_costs`]). Both cores are monomorphized over (a)
+//! whether α-pass flags are tracked and (b) the splat storage layout
+//! ([`SplatSource`]), so the inner loop carries no `Option` branch and
+//! no stats-memory traffic, and every path blends bit-identically.
 
-use super::engine::{self, Parallelism, Slab};
+use super::engine::{self, Parallelism, RowSchedule, Slab};
 use super::image::Image;
 use super::preprocess::{Splat, SplatSoa};
 use super::tiles::TileBins;
@@ -29,11 +68,19 @@ pub struct RasterConfig {
     /// Tile-grid execution strategy (bitwise-invariant; see
     /// [`super::engine`]).
     pub parallelism: Parallelism,
+    /// Tile-row dispatch policy (bitwise-invariant; round-robin is the
+    /// reference the scheduler-parity tests pin against).
+    pub schedule: RowSchedule,
 }
 
 impl Default for RasterConfig {
     fn default() -> Self {
-        Self { alpha_min: 1.0 / 255.0, t_min: 1.0 / 255.0, parallelism: Parallelism::default() }
+        Self {
+            alpha_min: 1.0 / 255.0,
+            t_min: 1.0 / 255.0,
+            parallelism: Parallelism::default(),
+            schedule: RowSchedule::default(),
+        }
     }
 }
 
@@ -106,13 +153,40 @@ impl SplatSource for SplatSoa {
     }
 }
 
-/// Blend one tile into a slab. `TRACK` selects the α-pass-flag variant
-/// at compile time (`passed` must then have `list.len()` entries); both
-/// variants perform the identical f32 operation sequence. Per-pixel
-/// counters accumulate in locals and are flushed to `stats` once per
-/// tile, keeping the inner loop free of memory side effects.
+/// Reusable gather buffers for the quad-lane core: the tile's splat
+/// records copied once, in list order, so the pixel loop streams
+/// contiguous memory instead of chasing `list[li]` indirections per
+/// (pixel, splat) pair. Each row closure allocates one scratch and
+/// reuses it across that row's tiles — capacity converges to the
+/// row's longest list, two Vec allocations per row total (noise next
+/// to the row's blend work).
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    /// `[mean.x, mean.y, conic a, conic b, conic c, opacity]` of
+    /// `list[li]` — the α-evaluation hot record.
+    geom: Vec<[f32; 6]>,
+    /// RGB of `list[li]` (blend-only).
+    color: Vec<[f32; 3]>,
+}
+
+impl TileScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Blend one tile into a slab — the **scalar reference core**. One
+/// pixel at a time, indirect `src` loads per (pixel, splat) pair; the
+/// semantics every other path must reproduce bitwise. `TRACK` selects
+/// the α-pass-flag variant at compile time (`passed` must then have
+/// `list.len()` entries); both variants perform the identical f32
+/// operation sequence. Per-pixel counters accumulate in locals and are
+/// flushed to `stats` once per tile, keeping the inner loop free of
+/// memory side effects. Tiles fully clipped off the slab return before
+/// touching `stats` — they render nothing and must not inflate the
+/// tiles/pairs workload counters.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn raster_core<const TRACK: bool, S: SplatSource + ?Sized>(
+pub(crate) fn raster_core_scalar<const TRACK: bool, S: SplatSource + ?Sized>(
     src: &S,
     list: &[u32],
     px0: u32,
@@ -123,10 +197,13 @@ pub(crate) fn raster_core<const TRACK: bool, S: SplatSource + ?Sized>(
     passed: &mut [bool],
     stats: &mut RasterStats,
 ) {
-    stats.tiles += 1;
-    stats.pairs += list.len() as u64;
     let x_end = (px0 + tile).min(out.width());
     let y_end = (py0 + tile).min(out.y_end());
+    if x_end <= px0 || y_end <= py0 {
+        return; // fully clipped: no pixels, no work, no stats
+    }
+    stats.tiles += 1;
+    stats.pairs += list.len() as u64;
     let mut alpha_checks = 0u64;
     let mut blends = 0u64;
     let mut saturated = 0u64;
@@ -170,7 +247,113 @@ pub(crate) fn raster_core<const TRACK: bool, S: SplatSource + ?Sized>(
     stats.saturated += saturated;
 }
 
-/// Rasterize one tile (single-tile compatibility entry point).
+/// Blend one tile into a slab — the **quad-lane production core**:
+/// per-tile gather into `scratch`, then 4 pixels per iteration with
+/// per-lane independent transmittance/RGB/live state. Bitwise identical
+/// to [`raster_core_scalar`] in image, α-pass flags, and stats (see the
+/// module doc's lane-wise bit-accuracy argument; property-tested in
+/// `tests/it_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn raster_core<const TRACK: bool, S: SplatSource + ?Sized>(
+    src: &S,
+    list: &[u32],
+    px0: u32,
+    py0: u32,
+    tile: u32,
+    out: &mut Slab<'_>,
+    cfg: &RasterConfig,
+    passed: &mut [bool],
+    scratch: &mut TileScratch,
+    stats: &mut RasterStats,
+) {
+    let x_end = (px0 + tile).min(out.width());
+    let y_end = (py0 + tile).min(out.y_end());
+    if x_end <= px0 || y_end <= py0 {
+        return; // fully clipped: no pixels, no work, no stats
+    }
+    stats.tiles += 1;
+    stats.pairs += list.len() as u64;
+
+    // Gather pass: one sequential copy of the tile's records, killing
+    // the per-(pixel, splat) indirect loads of the scalar core. Pure
+    // data movement — the values blended are bit-identical.
+    scratch.geom.clear();
+    scratch.color.clear();
+    scratch.geom.extend(list.iter().map(|&si| src.geom(si as usize)));
+    scratch.color.extend(list.iter().map(|&si| src.color3(si as usize)));
+    let geom = scratch.geom.as_slice();
+    let color = scratch.color.as_slice();
+
+    let mut alpha_checks = 0u64;
+    let mut blends = 0u64;
+    let mut saturated = 0u64;
+    for py in py0..y_end {
+        let pcy = py as f32 + 0.5;
+        let mut px = px0;
+        while px < x_end {
+            let lanes = (x_end - px).min(4) as usize;
+            // Per-lane pixel centers: (px + l) as f32 + 0.5, exactly the
+            // scalar core's `px as f32 + 0.5` for that pixel.
+            let mut pcx = [0.0f32; 4];
+            for (l, c) in pcx.iter_mut().enumerate().take(lanes) {
+                *c = (px + l as u32) as f32 + 0.5;
+            }
+            let mut t = [1.0f32; 4];
+            let mut rgb = [[0.0f32; 3]; 4];
+            let mut live = [false; 4];
+            for flag in live.iter_mut().take(lanes) {
+                *flag = true; // remainder lanes (l >= lanes) start dead
+            }
+            let mut n_live = lanes;
+            for (li, g) in geom.iter().enumerate() {
+                for l in 0..lanes {
+                    if !live[l] {
+                        continue; // saturated: the scalar core broke here
+                    }
+                    let dx = pcx[l] - g[0];
+                    let dy = pcy - g[1];
+                    let power = -0.5 * (g[2] * dx * dx + g[4] * dy * dy) - g[3] * dx * dy;
+                    alpha_checks += 1;
+                    if power > 0.0 {
+                        continue;
+                    }
+                    let alpha = (g[5] * power.exp()).min(0.99);
+                    if alpha < cfg.alpha_min {
+                        continue;
+                    }
+                    blends += 1;
+                    if TRACK {
+                        passed[li] = true;
+                    }
+                    let c = color[li];
+                    let w = alpha * t[l];
+                    rgb[l][0] += w * c[0];
+                    rgb[l][1] += w * c[1];
+                    rgb[l][2] += w * c[2];
+                    t[l] *= 1.0 - alpha;
+                    if t[l] < cfg.t_min {
+                        saturated += 1;
+                        live[l] = false;
+                        n_live -= 1;
+                    }
+                }
+                if n_live == 0 {
+                    break; // union of the scalar per-pixel early-outs
+                }
+            }
+            for (l, px_rgb) in rgb.iter().enumerate().take(lanes) {
+                out.set(px + l as u32, py, *px_rgb);
+            }
+            px += lanes as u32;
+        }
+    }
+    stats.alpha_checks += alpha_checks;
+    stats.blends += blends;
+    stats.saturated += saturated;
+}
+
+/// Rasterize one tile with the quad-lane core (single-tile entry
+/// point).
 ///
 /// * `list` — depth-ordered splat indices intersecting the tile;
 /// * `(px0, py0)` — tile origin in the target image;
@@ -189,18 +372,128 @@ pub fn raster_tile(
     stats: &mut RasterStats,
 ) {
     let mut slab = Slab::full(img);
+    let mut scratch = TileScratch::new();
     match passed {
-        Some(p) => raster_core::<true, _>(splats, list, px0, py0, tile, &mut slab, cfg, p, stats),
-        None => {
-            raster_core::<false, _>(splats, list, px0, py0, tile, &mut slab, cfg, &mut [], stats)
-        }
+        Some(p) => raster_core::<true, _>(
+            splats,
+            list,
+            px0,
+            py0,
+            tile,
+            &mut slab,
+            cfg,
+            p,
+            &mut scratch,
+            stats,
+        ),
+        None => raster_core::<false, _>(
+            splats,
+            list,
+            px0,
+            py0,
+            tile,
+            &mut slab,
+            cfg,
+            &mut [],
+            &mut scratch,
+            stats,
+        ),
     }
 }
 
-/// Render a full image from pre-binned splats (mono reference path).
-/// Tile rows execute on the engine per `cfg.parallelism`; the output is
-/// bitwise identical across thread counts.
+/// Rasterize one tile with the **scalar reference core** — the parity
+/// oracle for [`raster_tile`]. Same signature, same bitwise output;
+/// kept public so the quad≡scalar property suites and the bench canary
+/// can pin the quad core against it.
+#[allow(clippy::too_many_arguments)]
+pub fn raster_tile_reference(
+    splats: &[Splat],
+    list: &[u32],
+    px0: u32,
+    py0: u32,
+    tile: u32,
+    img: &mut Image,
+    cfg: &RasterConfig,
+    passed: Option<&mut [bool]>,
+    stats: &mut RasterStats,
+) {
+    let mut slab = Slab::full(img);
+    match passed {
+        Some(p) => {
+            raster_core_scalar::<true, _>(splats, list, px0, py0, tile, &mut slab, cfg, p, stats)
+        }
+        None => raster_core_scalar::<false, _>(
+            splats,
+            list,
+            px0,
+            py0,
+            tile,
+            &mut slab,
+            cfg,
+            &mut [],
+            stats,
+        ),
+    }
+}
+
+/// Render a full image from pre-binned splats (mono production path).
+/// Tile rows execute on the engine per `cfg.parallelism`, dispatched
+/// per `cfg.schedule` with the CSR row costs; the output is bitwise
+/// identical across thread counts and schedules. Returns the image,
+/// the thread-invariant workload counters, and the (placement-
+/// dependent, diagnostic-only) steal count.
 pub fn render_bins(
+    splats: &[Splat],
+    bins: &TileBins,
+    width: u32,
+    height: u32,
+    cfg: &RasterConfig,
+) -> (Image, RasterStats, u64) {
+    let mut img = Image::new(width, height);
+    let soa = SplatSoa::from_splats(splats);
+    let (tile, tiles_x, tiles_y) = (bins.tile, bins.tiles_x, bins.tiles_y);
+    let costs = bins.row_costs();
+    let (per_row, steals) = engine::run_rows(
+        &mut img,
+        tile,
+        tiles_y,
+        cfg.parallelism,
+        cfg.schedule,
+        &costs,
+        vec![(); tiles_y as usize],
+        |ty, rows, _extra: ()| {
+            let mut slab = Slab::for_row(rows, width, ty, tile, height);
+            let mut scratch = TileScratch::new();
+            let mut stats = RasterStats::default();
+            for tx in 0..tiles_x {
+                raster_core::<false, _>(
+                    &soa,
+                    bins.list(tx, ty),
+                    tx * tile,
+                    ty * tile,
+                    tile,
+                    &mut slab,
+                    cfg,
+                    &mut [],
+                    &mut scratch,
+                    &mut stats,
+                );
+            }
+            stats
+        },
+    );
+    let mut stats = RasterStats::default();
+    for s in &per_row {
+        stats.merge(s);
+    }
+    (img, stats, steals)
+}
+
+/// Render a full image from pre-binned splats with the **scalar
+/// reference core** under static round-robin — the full-frame parity /
+/// perf oracle the quad-lane path is pinned against (bench canary +
+/// parity suites).
+pub fn render_bins_reference(
     splats: &[Splat],
     bins: &TileBins,
     width: u32,
@@ -210,17 +503,19 @@ pub fn render_bins(
     let mut img = Image::new(width, height);
     let soa = SplatSoa::from_splats(splats);
     let (tile, tiles_x, tiles_y) = (bins.tile, bins.tiles_x, bins.tiles_y);
-    let per_row = engine::run_rows(
+    let (per_row, _) = engine::run_rows(
         &mut img,
         tile,
         tiles_y,
         cfg.parallelism,
+        RowSchedule::RoundRobin,
+        &[],
         vec![(); tiles_y as usize],
         |ty, rows, _extra: ()| {
             let mut slab = Slab::for_row(rows, width, ty, tile, height);
             let mut stats = RasterStats::default();
             for tx in 0..tiles_x {
-                raster_core::<false, _>(
+                raster_core_scalar::<false, _>(
                     &soa,
                     bins.list(tx, ty),
                     tx * tile,
@@ -255,7 +550,7 @@ pub fn render_mono(
 ) -> (Image, RasterStats, TileBins) {
     super::sort::sort_splats_par(&mut set.splats, cfg.parallelism);
     let bins = TileBins::build_par(width, height, tile, 0, &set.splats, cfg.parallelism);
-    let (img, stats) = render_bins(&set.splats, &bins, width, height, cfg);
+    let (img, stats, _steals) = render_bins(&set.splats, &bins, width, height, cfg);
     (img, stats, bins)
 }
 
@@ -386,6 +681,7 @@ mod tests {
         let mut img_a = Image::new(32, 32);
         let mut img_b = Image::new(32, 32);
         let (mut sa, mut sb) = (RasterStats::default(), RasterStats::default());
+        let mut scratch = TileScratch::new();
         raster_core::<false, _>(
             splats.as_slice(),
             &list,
@@ -395,6 +691,7 @@ mod tests {
             &mut Slab::full(&mut img_a),
             &cfg,
             &mut [],
+            &mut scratch,
             &mut sa,
         );
         raster_core::<false, _>(
@@ -406,9 +703,134 @@ mod tests {
             &mut Slab::full(&mut img_b),
             &cfg,
             &mut [],
+            &mut scratch,
             &mut sb,
         );
         assert_eq!(img_a.data, img_b.data, "layouts must blend identically");
         assert_eq!(sa, sb);
+    }
+
+    /// Common fn-pointer type of the quad and scalar tile entry points.
+    type TileFn = fn(
+        &[Splat],
+        &[u32],
+        u32,
+        u32,
+        u32,
+        &mut Image,
+        &RasterConfig,
+        Option<&mut [bool]>,
+        &mut RasterStats,
+    );
+
+    /// Run both cores over the same tile and return (quad, scalar)
+    /// images + stats + α-pass flags.
+    #[allow(clippy::type_complexity)]
+    fn both_cores(
+        splats: &[Splat],
+        w: u32,
+        h: u32,
+        tile: u32,
+        cfg: &RasterConfig,
+    ) -> ((Image, RasterStats, Vec<bool>), (Image, RasterStats, Vec<bool>)) {
+        let list: Vec<u32> = (0..splats.len() as u32).collect();
+        let run = |reference: bool| {
+            let mut img = Image::new(w, h);
+            let mut stats = RasterStats::default();
+            let mut passed = vec![false; list.len()];
+            for ty in 0..h.div_ceil(tile) {
+                for tx in 0..w.div_ceil(tile) {
+                    let f: TileFn = if reference { raster_tile_reference } else { raster_tile };
+                    f(
+                        splats,
+                        &list,
+                        tx * tile,
+                        ty * tile,
+                        tile,
+                        &mut img,
+                        cfg,
+                        Some(&mut passed),
+                        &mut stats,
+                    );
+                }
+            }
+            (img, stats, passed)
+        };
+        (run(false), run(true))
+    }
+
+    #[test]
+    fn alpha_min_boundary_blends_in_both_cores() {
+        // mean exactly on a pixel center ⇒ dx = dy = 0 ⇒ power = -0.0 ⇒
+        // alpha == opacity exactly. opacity == alpha_min must blend
+        // (`alpha < alpha_min` is false on equality); the next f32 down
+        // must be skipped. Both cores must agree bitwise either way.
+        let cfg = RasterConfig::default();
+        let at = |opacity: f32| {
+            let s = vec![splat(0, 8.5, 8.5, 1.0, [1.0, 0.0, 0.0], opacity)];
+            both_cores(&s, 16, 16, 16, &cfg)
+        };
+        let ((qi, qs, qp), (ri, rs, rp)) = at(cfg.alpha_min);
+        assert_eq!(qi.data, ri.data);
+        assert_eq!(qs, rs);
+        assert_eq!(qp, rp);
+        assert!(qs.blends >= 1, "alpha == alpha_min is a blend");
+        assert_eq!(qp, vec![true]);
+
+        let below = f32::from_bits(cfg.alpha_min.to_bits() - 1);
+        let ((qi, qs, qp), (ri, rs, rp)) = at(below);
+        assert_eq!(qi.data, ri.data);
+        assert_eq!(qs, rs);
+        // The center pixel now skips; neighbours are even fainter.
+        assert_eq!(qp, rp);
+    }
+
+    #[test]
+    fn mid_quad_saturation_matches_scalar() {
+        // A stack of near-opaque splats centered off-lane-0 makes lanes
+        // saturate at different list positions inside one quad; the
+        // per-lane early-outs must replicate the scalar per-pixel breaks
+        // in stats AND image.
+        let splats: Vec<Splat> = (0..24)
+            .map(|i| splat(i, 6.3, 8.0, 1.0 + i as f32, [0.9, 0.4, 0.2], 0.97))
+            .collect();
+        let ((qi, qs, _), (ri, rs, _)) = both_cores(&splats, 16, 16, 16, &RasterConfig::default());
+        assert_eq!(qi.data, ri.data);
+        assert_eq!(qs, rs);
+        assert!(qs.saturated > 0, "scene must actually saturate");
+        assert!(qs.blends < qs.alpha_checks);
+    }
+
+    #[test]
+    fn clipped_tiles_do_not_count_work() {
+        // A tile fully off the image (origin past the width/height) must
+        // contribute nothing — not even to tiles/pairs — in either core.
+        let splats = vec![splat(0, 8.0, 8.0, 1.0, [1.0; 3], 0.9)];
+        let list = vec![0u32];
+        for f in [raster_tile as TileFn, raster_tile_reference as TileFn] {
+            let mut img = Image::new(16, 16);
+            let mut stats = RasterStats::default();
+            f(&splats, &list, 16, 0, 16, &mut img, &RasterConfig::default(), None, &mut stats);
+            f(&splats, &list, 0, 16, 16, &mut img, &RasterConfig::default(), None, &mut stats);
+            assert_eq!(stats, RasterStats::default(), "clipped tiles must not count");
+            assert!(img.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn remainder_lanes_cover_non_multiple_of_4_widths() {
+        // Tile width 16 against image widths 13/14/15: the last quad of
+        // each row runs 1–3 live lanes. Quad and scalar must agree
+        // bitwise and every in-image pixel must be written.
+        for w in [13u32, 14, 15] {
+            let splats: Vec<Splat> = (0..6)
+                .map(|i| splat(i, w as f32 * 0.5, 7.0, 1.0 + i as f32, [0.5; 3], 0.7))
+                .collect();
+            let cfg = RasterConfig::default();
+            let ((qi, qs, _), (ri, rs, _)) = both_cores(&splats, w, 15, 16, &cfg);
+            assert_eq!(qi.data, ri.data, "w={w}");
+            assert_eq!(qs, rs, "w={w}");
+            assert!(qi.get(w - 1, 7)[0] >= 0.0, "edge pixel written (w={w})");
+        }
     }
 }

@@ -38,7 +38,12 @@
 //! blend order is thread-count independent, so `Serial` and
 //! `Threads(n)` produce **bitwise identical** stereo pairs — disjoint
 //! tile slabs ⇒ identical blend order ⇒ identical f32 images — and
-//! identical merged workload counters (u64 sums commute). Enforced by
+//! identical merged workload counters (u64 sums commute). The left and
+//! right raster phases dispatch tile rows per
+//! [`RasterConfig::schedule`] — cost-ordered work stealing by default,
+//! fed by the CSR row costs (left) and the per-row disparity-list
+//! totals (right) — which by the engine's argument changes thread
+//! placement only, never a bit of output. Enforced by
 //! `tests/it_parallel.rs`.
 //!
 //! Off-screen sliver: content within `(L-1)` tile columns right of the
@@ -49,7 +54,7 @@
 use super::engine::{self, Parallelism, Slab};
 use super::image::Image;
 use super::preprocess::{preprocess_records, ProjectedSet, Splat, SplatSoa};
-use super::raster::{raster_core, RasterConfig, RasterStats};
+use super::raster::{raster_core, RasterConfig, RasterStats, TileScratch};
 use super::sort::sort_splats_par;
 use super::tiles::TileBins;
 use crate::gaussian::{GaussianId, GaussianRecord};
@@ -65,10 +70,11 @@ pub enum StereoMode {
     AlphaGated,
 }
 
-/// Wall-clock seconds spent in each stereo stage. Pure diagnostics for
-/// the per-stage bench breakdown (`benches/bench_render.rs`): every
-/// *other* [`StereoOutput`] field is thread-count invariant; these are
-/// the only values that legitimately change with [`Parallelism`].
+/// Wall-clock seconds and scheduler diagnostics per stereo stage. Pure
+/// diagnostics for the per-stage bench breakdown
+/// (`benches/bench_render.rs`): every *other* [`StereoOutput`] field is
+/// thread-count invariant; these are the only values that legitimately
+/// change with [`Parallelism`] / [`super::engine::RowSchedule`].
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct StageSeconds {
     /// Shared EWA preprocess (projection + culling). Only set by
@@ -87,6 +93,12 @@ pub struct StageSeconds {
     pub sru: f64,
     /// Right-eye merge + blend (phase 3).
     pub right: f64,
+    /// Work-stealing claims that deviated from the static round-robin
+    /// placement during phase 1 (see
+    /// [`super::engine::parallel_map_stealing`]); 0 under round-robin.
+    pub steals_left: u64,
+    /// Same for phase 3.
+    pub steals_right: u64,
 }
 
 /// Stereo frame output + workload counters.
@@ -324,15 +336,22 @@ pub fn render_stereo_from_splats(
         }
     }
 
+    // Row costs for the work-stealing dispatch: the CSR row totals
+    // (includes the extended columns — a harmless overestimate for the
+    // left eye, and costs are a pure scheduling heuristic anyway).
+    let row_costs = bins.row_costs();
     let mut left = Image::new(w, h);
-    let per_row = engine::run_rows(
+    let (per_row, steals_left) = engine::run_rows(
         &mut left,
         tile,
         tiles_y,
         cfg.parallelism,
+        cfg.schedule,
+        &row_costs,
         passed_rows,
         |ty, rows, row_passed: &mut [bool]| {
             let mut slab = Slab::for_row(rows, w, ty, tile, h);
+            let mut scratch = TileScratch::new();
             let mut stats = RasterStats::default();
             let mut cursor = 0usize;
             for tx in 0..tiles_x {
@@ -350,6 +369,7 @@ pub fn render_stereo_from_splats(
                             &mut slab,
                             cfg,
                             p,
+                            &mut scratch,
                             &mut stats,
                         );
                     }
@@ -363,6 +383,7 @@ pub fn render_stereo_from_splats(
                         &mut slab,
                         cfg,
                         &mut [],
+                        &mut scratch,
                         &mut stats,
                     );
                 }
@@ -402,15 +423,29 @@ pub fn render_stereo_from_splats(
         g[0] -= disparity(stereo, s.depth, max_disp);
     }
 
+    // Right-eye row costs: this row's total disparity-list entries —
+    // exactly the (splat, tile) pairs its merge + blend will consume.
+    let right_costs: Vec<u64> = (0..tiles_y)
+        .map(|ty| {
+            let base = (ty * grid_x * lists) as usize;
+            disp_lists[base..base + (grid_x * lists) as usize]
+                .iter()
+                .map(|l| l.len() as u64)
+                .sum()
+        })
+        .collect();
     let mut right = Image::new(w, h);
-    let per_row = engine::run_rows(
+    let (per_row, steals_right) = engine::run_rows(
         &mut right,
         tile,
         tiles_y,
         cfg.parallelism,
+        cfg.schedule,
+        &right_costs,
         vec![(); tiles_y as usize],
         |ty, rows, _extra: ()| {
             let mut slab = Slab::for_row(rows, w, ty, tile, h);
+            let mut scratch = TileScratch::new();
             let mut stats = RasterStats::default();
             let mut merge_ops = 0u64;
             let mut merged: Vec<u32> = Vec::new();
@@ -479,6 +514,7 @@ pub fn render_stereo_from_splats(
                     &mut slab,
                     cfg,
                     &mut [],
+                    &mut scratch,
                     &mut stats,
                 );
             }
@@ -511,6 +547,8 @@ pub fn render_stereo_from_splats(
             left: left_s,
             sru: sru_s,
             right: right_s,
+            steals_left,
+            steals_right,
         },
     }
 }
@@ -532,7 +570,8 @@ pub fn render_right_naive(
     }
     // Shifting preserves (depth, id) order.
     let bins = TileBins::build_par(w, h, tile, 0, &shifted, cfg.parallelism);
-    super::raster::render_bins(&shifted, &bins, w, h, cfg)
+    let (img, stats, _steals) = super::raster::render_bins(&shifted, &bins, w, h, cfg);
+    (img, stats)
 }
 
 #[cfg(test)]

@@ -257,9 +257,35 @@ impl TileBins {
     }
 
     /// Longest tile list (load-imbalance diagnostics for the HW model
-    /// and the per-tile work-stealing follow-on).
+    /// and the work-stealing scheduler's skew metrics).
     pub fn max_list(&self) -> usize {
         self.offsets.windows(2).map(|w| (w[1] - w[0]) as usize).max().unwrap_or(0)
+    }
+
+    /// Mean tile-list length over the extended grid — with
+    /// [`TileBins::max_list`] the per-frame load-imbalance signal
+    /// (`max ≫ mean` ⇔ a few tiles dominate the raster work).
+    pub fn mean_list(&self) -> f64 {
+        if self.n_tiles() == 0 {
+            return 0.0;
+        }
+        self.total_pairs() as f64 / self.n_tiles() as f64
+    }
+
+    /// Total (splat, tile) pairs in tile row `ty` — an O(1) read off
+    /// the row-major CSR `offsets` (the row's lists are contiguous in
+    /// `indices`). This is the work-stealing scheduler's per-row cost.
+    pub fn row_pairs(&self, ty: u32) -> u64 {
+        let g = self.grid_x() as usize;
+        let t = ty as usize * g;
+        u64::from(self.offsets[t + g]) - u64::from(self.offsets[t])
+    }
+
+    /// Per-row costs for [`super::engine::run_rows`] under
+    /// [`super::engine::RowSchedule::Stealing`]: `row_pairs` for every
+    /// tile row, O(tiles_y) total.
+    pub fn row_costs(&self) -> Vec<u64> {
+        (0..self.tiles_y).map(|ty| self.row_pairs(ty)).collect()
     }
 }
 
@@ -378,11 +404,43 @@ mod tests {
     }
 
     #[test]
+    fn row_costs_sum_rows_of_the_csr() {
+        let mut rng = Prng::new(9);
+        let mut s: Vec<Splat> = (0..150)
+            .map(|i| {
+                splat(
+                    i,
+                    rng.range_f32(-10.0, 90.0),
+                    rng.range_f32(-10.0, 70.0),
+                    rng.range_f32(1.0, 6.0).ceil(),
+                    rng.range_f32(0.2, 50.0),
+                )
+            })
+            .collect();
+        crate::render::sort::sort_splats(&mut s);
+        let bins = TileBins::build(64, 48, 16, 2, &s);
+        let costs = bins.row_costs();
+        assert_eq!(costs.len(), bins.tiles_y as usize);
+        for ty in 0..bins.tiles_y {
+            let want: u64 =
+                (0..bins.grid_x()).map(|tx| bins.list(tx, ty).len() as u64).sum();
+            assert_eq!(costs[ty as usize], want, "row {ty}");
+            assert_eq!(bins.row_pairs(ty), want);
+        }
+        assert_eq!(costs.iter().sum::<u64>(), bins.total_pairs());
+        let mean = bins.mean_list();
+        assert!((mean - bins.total_pairs() as f64 / bins.n_tiles() as f64).abs() < 1e-12);
+        assert!(bins.max_list() as f64 >= mean);
+    }
+
+    #[test]
     fn empty_scene_has_empty_lists() {
         let bins = TileBins::build(64, 48, 16, 1, &[]);
         assert_eq!(bins.n_tiles(), 5 * 3);
         assert_eq!(bins.total_pairs(), 0);
         assert_eq!(bins.max_list(), 0);
+        assert_eq!(bins.mean_list(), 0.0);
+        assert_eq!(bins.row_costs(), vec![0; 3]);
         for ty in 0..bins.tiles_y {
             for tx in 0..bins.grid_x() {
                 assert!(bins.list(tx, ty).is_empty());

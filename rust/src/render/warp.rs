@@ -230,8 +230,8 @@ mod tests {
         let mut set = preprocess_records(&left_cam, &left_cam, &refs, 3, Parallelism::Serial);
         sort_splats(&mut set.splats);
         let bins = TileBins::build(cam.intr.width, cam.intr.height, 16, 0, &set.splats);
-        let (left, _) =
-            crate::render::raster::render_bins(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg);
+        let (w, h) = (cam.intr.width, cam.intr.height);
+        let (left, _, _) = crate::render::raster::render_bins(&set.splats, &bins, w, h, &cfg);
         let depth =
             depth_map(&set.splats, &bins, cam.intr.width, cam.intr.height, &cfg, cam.intr.far);
         (cam, depth, left, set)

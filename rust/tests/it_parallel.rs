@@ -7,6 +7,13 @@
 //! the property the whole engine design rests on (disjoint per-item
 //! state ⇒ identical operation order ⇒ identical f32 output).
 //!
+//! Two more parity axes ride the same suites: the quad-lane raster
+//! core against the scalar reference core (identical per-(pixel,
+//! splat) f32 op sequence ⇒ identical images/flags/stats, incl. on
+//! NaN/Inf geometry and remainder lanes), and cost-ordered
+//! work-stealing dispatch against static round-robin (thread placement
+//! is not an input to any computation).
+//!
 //! Thread counts for the sweeping tests come from the
 //! `NEBULA_PARITY_THREADS` knob (comma-separated, default `2,4,8`); CI
 //! re-runs the suite in release mode at `1,2,8` so `debug_assert!`-gated
@@ -15,11 +22,13 @@
 use nebula::gaussian::GaussianRecord;
 use nebula::lod::{Cut, LodQuery, LodSearch, Partitioning, StreamingSearch, TemporalSearch};
 use nebula::math::{Intrinsics, StereoCamera, Vec2, Vec3};
-use nebula::render::engine::Parallelism;
-use nebula::render::raster::{render_mono, RasterConfig};
+use nebula::render::engine::{Parallelism, RowSchedule};
+use nebula::render::raster::{
+    raster_tile, raster_tile_reference, render_mono, RasterConfig, RasterStats,
+};
 use nebula::render::sort::{is_sorted, sort_splats, sort_splats_par};
 use nebula::render::stereo::{render_stereo, StereoMode};
-use nebula::render::{preprocess_records, preprocess_tree, ProjectedSet, Splat, TileBins};
+use nebula::render::{preprocess_records, preprocess_tree, Image, ProjectedSet, Splat, TileBins};
 use nebula::scene::{CityGen, CityParams};
 use nebula::trace::{PoseTrace, TraceParams};
 use nebula::util::prop::{check, Config};
@@ -27,6 +36,10 @@ use nebula::util::Prng;
 
 fn cfg_with(par: Parallelism) -> RasterConfig {
     RasterConfig { parallelism: par, ..RasterConfig::default() }
+}
+
+fn cfg_sched(par: Parallelism, sched: RowSchedule) -> RasterConfig {
+    RasterConfig { parallelism: par, schedule: sched, ..RasterConfig::default() }
 }
 
 /// Thread counts the sweeping parity tests run at. Override with
@@ -354,6 +367,159 @@ fn csr_bins_match_nested_vec_reference() {
         }
         assert_eq!(bins.total_pairs(), pairs);
     });
+}
+
+#[test]
+fn quad_core_is_bitwise_equal_to_scalar_reference() {
+    // The quad-lane production core (per-tile gather + 4 pixels per
+    // iteration) against the scalar reference: images, workload stats,
+    // and α-pass flags must not move by a bit, on tiles that include
+    // NaN/Inf geometry (NaN `power` takes the `min`-absorbs-NaN alpha
+    // path), α == alpha_min boundary hits, mid-quad `t_min` saturation
+    // (high opacities), and remainder lanes (widths ∤ 4).
+    check("quad ≡ scalar core", Config { cases: 24, seed: 0x90_08 }, |rng| {
+        let w = 5 + rng.below(60) as u32; // deliberately not 4-aligned
+        let h = 5 + rng.below(40) as u32;
+        let tile = [4u32, 8, 16][rng.below(3)];
+        let n = rng.range_usize(0, 120);
+        let mut splats = random_splats(rng, w, h, n);
+        for s in splats.iter_mut() {
+            if rng.chance(0.04) {
+                s.conic = [f32::NAN, 0.0, f32::NAN];
+            }
+            if rng.chance(0.04) {
+                s.conic[0] = f32::INFINITY;
+            }
+            if rng.chance(0.04) {
+                s.mean = Vec2::new(f32::NAN, s.mean.y);
+            }
+            if rng.chance(0.06) {
+                s.opacity = 50.0; // alpha clamps to 0.99: fast saturation
+            }
+            if rng.chance(0.06) {
+                s.opacity = 1.0 / 255.0; // the alpha_min boundary
+            }
+        }
+        sort_splats(&mut splats);
+        let cfg = RasterConfig::default();
+        // Every tile blends the full list — independent of binning, and
+        // it maximizes per-tile work (saturation, boundary hits).
+        let list: Vec<u32> = (0..splats.len() as u32).collect();
+        let run = |reference: bool| -> (Image, RasterStats, Vec<bool>) {
+            let mut img = Image::new(w, h);
+            let mut stats = RasterStats::default();
+            let mut passed = vec![false; list.len()];
+            for ty in 0..h.div_ceil(tile) {
+                for tx in 0..w.div_ceil(tile) {
+                    if reference {
+                        raster_tile_reference(
+                            &splats,
+                            &list,
+                            tx * tile,
+                            ty * tile,
+                            tile,
+                            &mut img,
+                            &cfg,
+                            Some(&mut passed),
+                            &mut stats,
+                        );
+                    } else {
+                        raster_tile(
+                            &splats,
+                            &list,
+                            tx * tile,
+                            ty * tile,
+                            tile,
+                            &mut img,
+                            &cfg,
+                            Some(&mut passed),
+                            &mut stats,
+                        );
+                    }
+                }
+            }
+            (img, stats, passed)
+        };
+        let (quad_img, quad_stats, quad_passed) = run(false);
+        let (ref_img, ref_stats, ref_passed) = run(true);
+        assert_eq!(quad_img.data, ref_img.data, "image diverged (w={w} h={h} tile={tile} n={n})");
+        assert_eq!(quad_stats, ref_stats, "stats diverged (w={w} h={h} tile={tile} n={n})");
+        assert_eq!(quad_passed, ref_passed, "α-pass flags diverged");
+    });
+}
+
+#[test]
+fn mono_work_stealing_is_bitwise_equal_to_round_robin() {
+    // Scheduler parity: cost-ordered work stealing must reproduce the
+    // round-robin (and serial) mono render bit-for-bit at every thread
+    // count — thread placement is not an input to any computation.
+    check("mono stealing ≡ round-robin", Config { cases: 10, seed: 0x90_09 }, |rng| {
+        let w = 16 + 8 * rng.below(7) as u32;
+        let h = 16 + 8 * rng.below(7) as u32;
+        let tile = [8u32, 16][rng.below(2)];
+        let set = random_set(rng, w, h);
+        let serial = cfg_sched(Parallelism::Serial, RowSchedule::RoundRobin);
+        let (ref_img, ref_stats, _) = render_mono(set.clone(), w, h, tile, &serial);
+        for t in parity_threads() {
+            for sched in [RowSchedule::RoundRobin, RowSchedule::Stealing] {
+                let (img, stats, _) = render_mono(
+                    set.clone(),
+                    w,
+                    h,
+                    tile,
+                    &cfg_sched(Parallelism::Threads(t), sched),
+                );
+                assert_eq!(ref_img.data, img.data, "image diverged at {t} threads ({sched:?})");
+                assert_eq!(ref_stats, stats, "stats diverged at {t} threads ({sched:?})");
+            }
+        }
+    });
+}
+
+#[test]
+fn stereo_work_stealing_is_bitwise_equal_to_round_robin() {
+    // Same scheduler parity for the full stereo frame (left, SRU,
+    // right), in both gating modes.
+    let tree = CityGen::new(CityParams::for_target(3000, 60.0, 0xAB)).build();
+    let pose = PoseTrace::new(TraceParams::default(), 60.0).generate(1)[0];
+    let cam = StereoCamera::new(pose, Intrinsics::vr_eye_scaled(16));
+    let queue: Vec<(u32, GaussianRecord)> =
+        tree.leaves().into_iter().map(|id| (id, tree.gaussians.record(id))).collect();
+    let refs: Vec<(u32, &GaussianRecord)> = queue.iter().map(|(id, g)| (*id, g)).collect();
+    for mode in [StereoMode::Exact, StereoMode::AlphaGated] {
+        let reference = render_stereo(
+            &cam,
+            &refs,
+            3,
+            16,
+            &cfg_sched(Parallelism::Serial, RowSchedule::RoundRobin),
+            mode,
+        );
+        for t in parity_threads() {
+            for sched in [RowSchedule::RoundRobin, RowSchedule::Stealing] {
+                let out = render_stereo(
+                    &cam,
+                    &refs,
+                    3,
+                    16,
+                    &cfg_sched(Parallelism::Threads(t), sched),
+                    mode,
+                );
+                assert_eq!(
+                    reference.left.data, out.left.data,
+                    "{mode:?}: left diverged at {t} threads ({sched:?})"
+                );
+                assert_eq!(
+                    reference.right.data, out.right.data,
+                    "{mode:?}: right diverged at {t} threads ({sched:?})"
+                );
+                assert_eq!(reference.stats_left, out.stats_left, "{mode:?} {sched:?}");
+                assert_eq!(reference.stats_right, out.stats_right, "{mode:?} {sched:?}");
+                assert_eq!(reference.sru_insertions, out.sru_insertions, "{mode:?} {sched:?}");
+                assert_eq!(reference.merge_ops, out.merge_ops, "{mode:?} {sched:?}");
+            }
+        }
+    }
 }
 
 #[test]
