@@ -1,0 +1,176 @@
+//! BENCH_multiclient: the multi-session cloud server swept over
+//! clients × threads. Writes `BENCH_multiclient.json` with a
+//! `"multiclient"` section: per configuration the wall ms for the whole
+//! trace, simulated session-frames/s, aggregate cloud LoD visits/s,
+//! mean/max per-client p99 MTP, shared-uplink utilization, cloud-budget
+//! utilization, and fairness (max/mean per-client MTP).
+//!
+//!     cargo bench --bench bench_multiclient [-- --smoke]
+//!
+//! `--smoke` is the CI canary: a minimal scene and a {1,4} × {1,2}
+//! sweep, but every parity assertion still executes:
+//! * clients = 1 with the default ServerConfig reproduces the legacy
+//!   single-client `run_simulation` SimResult field-for-field;
+//! * every clients value yields bitwise-identical per-client results at
+//!   every thread count (the across-session determinism discipline);
+//! * aggregate cloud visits/s grows with the client count.
+//!
+//! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
+//! `NEBULA_BENCH_OUT` (output path, default `BENCH_multiclient.json`).
+
+use nebula::benchkit;
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{run_multiclient, MulticlientResult, ServerConfig, Variant};
+use nebula::scene::{dataset, CityGen};
+use nebula::util::bench::bench_header;
+
+struct Row {
+    clients: usize,
+    threads: usize,
+    wall_ms: f64,
+    session_frames_per_s: f64,
+    aggregate_visits_per_s: f64,
+    mean_p99_mtp_ms: f64,
+    max_p99_mtp_ms: f64,
+    uplink_utilization: f64,
+    cloud_utilization: f64,
+    fairness: f64,
+}
+
+fn p99_stats(r: &MulticlientResult) -> (f64, f64) {
+    let mut mean = 0.0f64;
+    let mut max = f64::NEG_INFINITY;
+    for c in &r.per_client {
+        mean += c.mtp_p99_ms;
+        max = max.max(c.mtp_p99_ms);
+    }
+    (mean / r.per_client.len().max(1) as f64, max)
+}
+
+fn main() {
+    bench_header("BENCH_multiclient", "multi-session cloud server, clients x threads sweep");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("smoke mode: minimal scene, {{1,4}} clients x {{1,2}} threads");
+    }
+    let spec = dataset("urban").unwrap();
+    let target = (spec.sim_gaussians / benchkit::bench_scale() / if smoke { 4 } else { 1 })
+        .max(10_000);
+    let tree = CityGen::new(spec.city_params(target)).build();
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    let frames = if smoke { 12 } else { 48 };
+    let clients_sweep: Vec<usize> = if smoke { vec![1, 4] } else { vec![1, 4, 16, 64] };
+    let threads_sweep: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4, 8] };
+    // Finite shared budgets so the contended paths are what's measured:
+    // one A100-class cloud and a 1 Gbps egress for everyone.
+    let server = ServerConfig { cloud_budget: 1.0, uplink_bps: 1e9 };
+    println!(
+        "scene: {} Gaussians, {frames}-frame traces, cloud budget {:.1} A100, uplink 1 Gbps",
+        tree.len(),
+        server.cloud_budget
+    );
+
+    // --- Parity canary: N=1 + default config == legacy scheduler ------
+    let traces1 = benchkit::walk_traces(&spec, frames, 1);
+    params.pipeline.threads = 1;
+    let legacy = run_simulation(&tree, &traces1[0], &Variant::nebula(), &params);
+    let n1 =
+        run_multiclient(&tree, &traces1, &Variant::nebula(), &params, &ServerConfig::default());
+    assert_eq!(
+        n1.per_client[0], legacy,
+        "PARITY VIOLATION: N=1 CloudServer differs from the single-client scheduler"
+    );
+    println!("  parity: N=1 server == legacy scheduler (field-for-field)");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut visits_by_clients: Vec<f64> = Vec::new();
+    for &clients in &clients_sweep {
+        let traces = benchkit::walk_traces(&spec, frames, clients);
+        let mut reference: Option<MulticlientResult> = None;
+        for &t in &threads_sweep {
+            params.pipeline.threads = t;
+            let start = std::time::Instant::now();
+            let r = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+            let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+            if let Some(r0) = &reference {
+                assert_eq!(
+                    r.per_client, r0.per_client,
+                    "PARITY VIOLATION: clients={clients} diverged at {t} threads"
+                );
+            } else {
+                visits_by_clients.push(r.aggregate_visits_per_s);
+                reference = Some(r.clone());
+            }
+            let (mean_p99, max_p99) = p99_stats(&r);
+            println!(
+                "  clients {clients:>3} t{t}: {wall_ms:>8.1} ms wall, {:>10.0} visits/s, \
+                 p99 {mean_p99:>6.2}/{max_p99:>6.2} ms, uplink {:>5.1}%, cloud {:>5.1}%, \
+                 fairness {:.3}",
+                r.aggregate_visits_per_s,
+                r.uplink_utilization * 100.0,
+                r.cloud_utilization * 100.0,
+                r.fairness
+            );
+            rows.push(Row {
+                clients,
+                threads: t,
+                wall_ms,
+                session_frames_per_s: (clients * frames) as f64 / (wall_ms * 1e-3),
+                aggregate_visits_per_s: r.aggregate_visits_per_s,
+                mean_p99_mtp_ms: mean_p99,
+                max_p99_mtp_ms: max_p99,
+                uplink_utilization: r.uplink_utilization,
+                cloud_utilization: r.cloud_utilization,
+                fairness: r.fairness,
+            });
+        }
+    }
+
+    // --- Scaling canary: more clients must mean more cloud work -------
+    for w in visits_by_clients.windows(2) {
+        assert!(
+            w[1] > w[0],
+            "CANARY: aggregate visits/s must grow with the client count ({} -> {})",
+            w[0],
+            w[1]
+        );
+    }
+
+    // --- JSON (hand-rolled; serde unavailable offline) -----------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"bench\": \"multiclient\",\n");
+    j.push_str(&format!(
+        "  \"scene\": {{\"dataset\": \"{}\", \"target_gaussians\": {target}, \"frames\": {frames}}},\n",
+        spec.name
+    ));
+    j.push_str(&format!(
+        "  \"server\": {{\"cloud_budget\": {:.3}, \"uplink_bps\": {:.0}}},\n",
+        server.cloud_budget, server.uplink_bps
+    ));
+    j.push_str("  \"multiclient\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"clients\": {}, \"threads\": {}, \"wall_ms\": {:.3}, \"session_frames_per_s\": {:.1}, \"aggregate_visits_per_s\": {:.0}, \"mean_p99_mtp_ms\": {:.4}, \"max_p99_mtp_ms\": {:.4}, \"uplink_utilization\": {:.6}, \"cloud_utilization\": {:.6}, \"fairness\": {:.4}}}{}\n",
+            r.clients,
+            r.threads,
+            r.wall_ms,
+            r.session_frames_per_s,
+            r.aggregate_visits_per_s,
+            r.mean_p99_mtp_ms,
+            r.max_p99_mtp_ms,
+            r.uplink_utilization,
+            r.cloud_utilization,
+            r.fairness,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+
+    let out_path = std::env::var("NEBULA_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_multiclient.json".to_string());
+    std::fs::write(&out_path, &j).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -29,6 +29,19 @@ pub fn walk_trace(spec: &DatasetSpec, frames: usize) -> Vec<Pose> {
         .generate(frames)
 }
 
+/// Per-client walking traces for the multi-session server: client 0
+/// reproduces [`walk_trace`] exactly (the N=1 parity anchor); later
+/// clients decorrelate through a fixed seed stride.
+pub fn walk_traces(spec: &DatasetSpec, frames: usize, clients: usize) -> Vec<Vec<Pose>> {
+    (0..clients)
+        .map(|k| {
+            let seed = (spec.seed ^ 0x5eed).wrapping_add(k as u64 * 0x9e37_79b9_7f4a_7c15);
+            PoseTrace::new(TraceParams { seed, ..Default::default() }, spec.extent_m)
+                .generate(frames)
+        })
+        .collect()
+}
+
 /// A look-around trace (pure rotation).
 pub fn look_trace(spec: &DatasetSpec, frames: usize) -> Vec<Pose> {
     PoseTrace::new(

@@ -35,7 +35,10 @@ impl EncodedDelta {
 }
 
 /// Encoder/decoder pair parameterized by scene metadata (quantizer +
-/// codebook, shipped once with the scene install).
+/// codebook, shipped once with the scene install). `Clone` lets a
+/// multi-session server train the codebook once and hand every session
+/// the identical codec.
+#[derive(Clone)]
 pub struct DeltaCodec {
     pub mode: CompressionMode,
     pub quantizer: FixedQuantizer,

@@ -47,8 +47,17 @@ pub struct PipelineConfig {
     /// rasterization, EWA preprocessing, the SRU disparity-list
     /// insertion, and the temporal-LoD validation pass: 0 = auto-detect,
     /// 1 = serial, n = n threads. Bitwise-invariant at every value; see
-    /// `render::engine`.
+    /// `render::engine`. The multi-client server steps sessions across
+    /// the same knob.
     pub threads: usize,
+    /// Concurrent client sessions served by one simulated cloud
+    /// (`coordinator::server::CloudServer`). 1 = the single-client
+    /// scheduler path.
+    pub clients: u32,
+    /// Cloud compute budget in A100-equivalents shared by every session:
+    /// scales the LoD-search visit rate and compression rate all rounds
+    /// queue on. 1.0 = the single-client scheduler's dedicated cloud.
+    pub cloud_budget: f64,
 }
 
 impl PipelineConfig {
@@ -64,6 +73,16 @@ impl PipelineConfig {
             self.lod_interval >= 1,
             "pipeline.lod_interval must be >= 1 (got {})",
             self.lod_interval
+        );
+        anyhow::ensure!(
+            self.clients >= 1,
+            "pipeline.clients must be >= 1 (got {})",
+            self.clients
+        );
+        anyhow::ensure!(
+            self.cloud_budget.is_finite() && self.cloud_budget > 0.0,
+            "pipeline.cloud_budget must be finite and > 0 (got {})",
+            self.cloud_budget
         );
         Ok(())
     }
@@ -81,6 +100,8 @@ impl Default for PipelineConfig {
             reuse_threshold: 32,
             res_scale: 8,
             threads: 0,
+            clients: 1,
+            cloud_budget: 1.0,
         }
     }
 }
@@ -92,11 +113,51 @@ pub struct NetConfig {
     /// One-way propagation latency.
     pub latency_ms: f64,
     pub energy_nj_per_byte: f64,
+    /// Shared cloud-egress bandwidth for the multi-client server
+    /// (bits/s); `f64::INFINITY` (default) means only per-client links
+    /// throttle — the single-client model's assumption.
+    pub uplink_bps: f64,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        Self { bandwidth_bps: 100e6, latency_ms: 5.0, energy_nj_per_byte: 100.0 }
+        Self {
+            bandwidth_bps: 100e6,
+            latency_ms: 5.0,
+            energy_nj_per_byte: 100.0,
+            uplink_bps: f64::INFINITY,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Key-named rejection of values the timing model cannot absorb:
+    /// a zero/negative/NaN bandwidth or a negative latency would turn
+    /// into inf/NaN arrival times (`SimLink` clamps as defense in depth,
+    /// but config-file / CLI input must fail loudly up front, matching
+    /// [`PipelineConfig::validate`]).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.bandwidth_bps.is_finite() && self.bandwidth_bps > 0.0,
+            "net.bandwidth_bps must be finite and > 0 (got {})",
+            self.bandwidth_bps
+        );
+        anyhow::ensure!(
+            self.latency_ms.is_finite() && self.latency_ms >= 0.0,
+            "net.latency_ms must be finite and >= 0 (got {})",
+            self.latency_ms
+        );
+        anyhow::ensure!(
+            self.energy_nj_per_byte.is_finite() && self.energy_nj_per_byte >= 0.0,
+            "net.energy_nj_per_byte must be finite and >= 0 (got {})",
+            self.energy_nj_per_byte
+        );
+        anyhow::ensure!(
+            self.uplink_bps > 0.0,
+            "net.uplink_bps must be > 0 (got {}; +inf = unconstrained)",
+            self.uplink_bps
+        );
+        Ok(())
     }
 }
 
@@ -133,14 +194,21 @@ impl RunConfig {
         cfg.pipeline.lod_interval = args.get_parse_or("lod-interval", cfg.pipeline.lod_interval);
         cfg.pipeline.res_scale = args.get_parse_or("res-scale", cfg.pipeline.res_scale);
         cfg.pipeline.threads = args.get_parse_or("threads", cfg.pipeline.threads);
+        cfg.pipeline.clients = args.get_parse_or("clients", cfg.pipeline.clients);
+        cfg.pipeline.cloud_budget = args.get_parse_or("cloud-budget", cfg.pipeline.cloud_budget);
         cfg.frames = args.get_parse_or("frames", cfg.frames);
         cfg.net.bandwidth_bps = args.get_parse_or("bandwidth-mbps", cfg.net.bandwidth_bps / 1e6) * 1e6;
+        cfg.net.latency_ms = args.get_parse_or("latency-ms", cfg.net.latency_ms);
+        // inf/1e6*1e6 round-trips to inf, so the unconstrained default
+        // survives when the flag is absent.
+        cfg.net.uplink_bps = args.get_parse_or("uplink-mbps", cfg.net.uplink_bps / 1e6) * 1e6;
         if let Some(a) = args.get("artifacts") {
             cfg.artifacts_dir = a.to_string();
         }
         // Validate last: CLI overrides can re-introduce bad values after
         // a valid config file.
         cfg.pipeline.validate()?;
+        cfg.net.validate()?;
         Ok(cfg)
     }
 
@@ -152,6 +220,7 @@ impl RunConfig {
     pub fn from_toml(text: &str) -> anyhow::Result<Self> {
         let cfg = Self::parse_toml(text)?;
         cfg.pipeline.validate()?;
+        cfg.net.validate()?;
         Ok(cfg)
     }
 
@@ -178,11 +247,23 @@ impl RunConfig {
             // huge usize thread count.
             cfg.pipeline.threads =
                 s.int_or("threads", cfg.pipeline.threads as i64).max(0) as usize;
+            // Type-range check at parse time (distinct from semantic
+            // validation): a count that cannot fit the u32 field must
+            // not `as`-wrap into billions of sessions, and the error
+            // must name the value the user actually wrote.
+            let clients = s.int_or("clients", cfg.pipeline.clients as i64);
+            anyhow::ensure!(
+                (0..=u32::MAX as i64).contains(&clients),
+                "pipeline.clients does not fit in u32 (got {clients})"
+            );
+            cfg.pipeline.clients = clients as u32;
+            cfg.pipeline.cloud_budget = s.float_or("cloud_budget", cfg.pipeline.cloud_budget);
         }
         if let Some(s) = doc.section("net") {
             cfg.net.bandwidth_bps = s.float_or("bandwidth_bps", cfg.net.bandwidth_bps);
             cfg.net.latency_ms = s.float_or("latency_ms", cfg.net.latency_ms);
             cfg.net.energy_nj_per_byte = s.float_or("energy_nj_per_byte", cfg.net.energy_nj_per_byte);
+            cfg.net.uplink_bps = s.float_or("uplink_bps", cfg.net.uplink_bps);
         }
         if let Some(s) = doc.section("run") {
             cfg.frames = s.int_or("frames", cfg.frames as i64) as u32;
@@ -206,6 +287,74 @@ mod tests {
         let n = NetConfig::default();
         assert_eq!(n.bandwidth_bps, 100e6);
         assert_eq!(n.energy_nj_per_byte, 100.0);
+        assert_eq!(n.uplink_bps, f64::INFINITY, "default uplink unconstrained");
+        assert_eq!(p.clients, 1, "default = single-client scheduler");
+        assert_eq!(p.cloud_budget, 1.0, "default = one dedicated A100-class cloud");
+    }
+
+    #[test]
+    fn degenerate_net_values_rejected_with_key_names() {
+        // Regression: a zero/negative bandwidth or latency sailed into
+        // SimLink and produced inf/NaN arrival times silently.
+        let err = RunConfig::from_toml("[net]\nbandwidth_bps = 0\n").unwrap_err();
+        assert!(err.to_string().contains("net.bandwidth_bps"), "{err}");
+        let err = RunConfig::from_toml("[net]\nbandwidth_bps = -10e6\n").unwrap_err();
+        assert!(err.to_string().contains("net.bandwidth_bps"), "{err}");
+        let err = RunConfig::from_toml("[net]\nlatency_ms = -1.0\n").unwrap_err();
+        assert!(err.to_string().contains("net.latency_ms"), "{err}");
+        let err = RunConfig::from_toml("[net]\nenergy_nj_per_byte = -5\n").unwrap_err();
+        assert!(err.to_string().contains("net.energy_nj_per_byte"), "{err}");
+        let err = RunConfig::from_toml("[net]\nuplink_bps = 0\n").unwrap_err();
+        assert!(err.to_string().contains("net.uplink_bps"), "{err}");
+
+        let args = Args::parse(["--bandwidth-mbps", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.bandwidth_bps"), "{err}");
+        let args = Args::parse(["--latency-ms", "-2"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.latency_ms"), "{err}");
+
+        // Boundary values pass: zero latency is legal, so is a huge but
+        // finite uplink.
+        let cfg = RunConfig::from_toml("[net]\nlatency_ms = 0.0\nuplink_bps = 1e12\n").unwrap();
+        assert_eq!(cfg.net.latency_ms, 0.0);
+        assert_eq!(cfg.net.uplink_bps, 1e12);
+    }
+
+    #[test]
+    fn degenerate_server_knobs_rejected_with_key_names() {
+        let err = RunConfig::from_toml("[pipeline]\nclients = 0\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.clients"), "{err}");
+        // Out-of-range counts must not `as`-wrap or silently clamp into
+        // billions of sessions — both directions fail with the key name
+        // AND the value the user actually wrote.
+        let err = RunConfig::from_toml("[pipeline]\nclients = -1\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.clients"), "{err}");
+        assert!(err.to_string().contains("-1"), "{err}");
+        let err = RunConfig::from_toml("[pipeline]\nclients = 99999999999\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.clients"), "{err}");
+        assert!(err.to_string().contains("99999999999"), "{err}");
+        let err = RunConfig::from_toml("[pipeline]\ncloud_budget = 0.0\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.cloud_budget"), "{err}");
+        let err = RunConfig::from_toml("[pipeline]\ncloud_budget = -1.0\n").unwrap_err();
+        assert!(err.to_string().contains("pipeline.cloud_budget"), "{err}");
+
+        let args = Args::parse(["--clients", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("pipeline.clients"), "{err}");
+        let args = Args::parse(["--cloud-budget", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("pipeline.cloud_budget"), "{err}");
+
+        let args = Args::parse(
+            ["--clients", "16", "--cloud-budget", "0.5", "--uplink-mbps", "400"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.pipeline.clients, 16);
+        assert_eq!(cfg.pipeline.cloud_budget, 0.5);
+        assert_eq!(cfg.net.uplink_bps, 400e6);
     }
 
     #[test]

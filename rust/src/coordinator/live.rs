@@ -7,7 +7,7 @@
 //! decodes and renders on the calling thread. `examples/collab_serve.rs`
 //! drives this end-to-end with the PJRT runtime in the loop.
 
-use crate::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use crate::compress::CompressionMode;
 use crate::config::PipelineConfig;
 use crate::lod::{LodQuery, LodSearch, LodTree, TemporalSearch};
 use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg, SceneInit};
@@ -83,12 +83,7 @@ pub fn spawn_cloud(
     fx: f32,
     near: f32,
 ) -> CloudHandle {
-    let (lo, hi) = tree.gaussians.bounds();
-    let codec = DeltaCodec::new(
-        mode,
-        FixedQuantizer::for_bounds(lo, hi),
-        VqTrainer { max_samples: 4000, ..Default::default() }.train(&tree.gaussians.sh),
-    );
+    let codec = super::codec_for_tree(&tree, mode);
     // Build the init message before moving the codec into the thread.
     let init = SceneInit {
         quantizer: codec.quantizer.to_bytes(),

@@ -64,7 +64,12 @@ impl Variant {
 }
 
 /// Aggregated simulation output.
-#[derive(Debug, Clone, Default)]
+///
+/// Every field is derived from modeled (simulation-clock) quantities,
+/// never wall-clock, so results are bitwise reproducible and
+/// thread-count invariant — the property the multi-client parity suite
+/// (`tests/it_scheduler.rs`) pins with exact equality.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimResult {
     pub variant: String,
     pub frames: u32,
@@ -85,6 +90,15 @@ pub struct SimResult {
     pub bandwidth_bps: f64,
     /// Client-side energy per frame (J): compute + DRAM + wireless.
     pub client_energy_j: f64,
+    /// Total wireless reception energy (J) over the steady-state rounds:
+    /// each delivery frame charges the wire bytes of the round message
+    /// actually applied that frame (not a running per-round average).
+    pub wireless_j: f64,
+    /// Wire bytes of round messages actually delivered within the trace
+    /// (≤ [`wire_bytes`](Self::wire_bytes); a round still in flight when
+    /// the trace ends is issued but never delivered, hence never charged
+    /// to wireless energy).
+    pub delivered_bytes: u64,
     /// Cloud LoD-search node visits per round (mean).
     pub cloud_visits: f64,
     /// Mean Δcut size in Gaussians.

@@ -1,11 +1,17 @@
 //! L3 coordinator: the paper's collaborative rendering system (Fig 9/10).
 //!
-//! Two execution modes share the same cloud/client logic:
-//! * [`scheduler`] — deterministic simulation-clock driver: renders the
-//!   functional pipeline at a scaled resolution, feeds measured workload
-//!   counters into the hardware/network models, and reports
-//!   motion-to-photon latency, FPS, bandwidth and energy (Figs 18, 19,
-//!   22, 24);
+//! Three execution modes share the same cloud/client logic:
+//! * [`scheduler`] — deterministic simulation-clock driver for ONE
+//!   client: renders the functional pipeline at a scaled resolution,
+//!   feeds measured workload counters into the hardware/network models,
+//!   and reports motion-to-photon latency, FPS, bandwidth and energy
+//!   (Figs 18, 19, 22, 24). Kept as the bit-accuracy reference the
+//!   multi-client server is parity-tested against;
+//! * [`server`] — the multi-session cloud server: N [`server::Session`]s
+//!   (pose trace + LoD-search state + cloud/client endpoint pair +
+//!   per-client link) share one `LodTree`, one cloud compute budget and
+//!   one uplink, stepped frame-by-frame by [`server::CloudServer`] with
+//!   the repo's bitwise thread-invariance discipline;
 //! * [`live`] — a real std-thread deployment: the cloud service runs the
 //!   temporal LoD search + Gaussian management on its own thread and
 //!   streams Δcut messages over a channel to the client loop
@@ -14,6 +20,24 @@
 pub mod live;
 pub mod metrics;
 pub mod scheduler;
+pub mod server;
 
 pub use metrics::{SimResult, Variant};
 pub use scheduler::{run_simulation, SimParams};
+pub use server::{run_multiclient, CloudServer, MulticlientResult, ServerConfig, Session};
+
+use crate::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use crate::lod::LodTree;
+
+/// The scene codec every execution mode ships with the scene install:
+/// quantizer from the scene bounds + VQ codebook trained on the SH set.
+/// Deterministic for a given tree, so the scheduler, the multi-session
+/// server and the live thread all derive the identical codec.
+pub(crate) fn codec_for_tree(tree: &LodTree, mode: CompressionMode) -> DeltaCodec {
+    let (lo, hi) = tree.gaussians.bounds();
+    DeltaCodec::new(
+        mode,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 4000, ..Default::default() }.train(&tree.gaussians.sh),
+    )
+}

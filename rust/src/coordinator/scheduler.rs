@@ -12,7 +12,6 @@
 //! and bandwidth are full-scale quantities.
 
 use super::metrics::{PlatformKind, SimResult, Variant};
-use crate::compress::{DeltaCodec, FixedQuantizer, VqTrainer};
 use crate::config::{NetConfig, PipelineConfig};
 use crate::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, Platform};
 use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
@@ -39,11 +38,13 @@ impl Default for SimParams {
 }
 
 /// Cloud-GPU throughput for LoD-search visits (A100-class streaming).
-const CLOUD_VISITS_PER_S: f64 = 2.0e9;
+/// [`super::server::ServerConfig::cloud_budget`] scales this (and the
+/// compression rate) when N sessions share one cloud.
+pub(crate) const CLOUD_VISITS_PER_S: f64 = 2.0e9;
 /// Cloud compression throughput (B/s).
-const CLOUD_COMPRESS_BPS: f64 = 4.0e9;
+pub(crate) const CLOUD_COMPRESS_BPS: f64 = 4.0e9;
 /// Client decode throughput on the Nebula decoder (Gaussians/s).
-const DECODE_RATE: f64 = 1.0e9;
+pub(crate) const DECODE_RATE: f64 = 1.0e9;
 
 /// Nearest-rank percentile of an ascending-sorted sample: index
 /// `(len·q) - 1`, clamped into `[0, len-1]` so short runs (e.g.
@@ -51,7 +52,7 @@ const DECODE_RATE: f64 = 1.0e9;
 /// For `len ≥ 2` this reproduces the historical index exactly. An empty
 /// sample yields `NaN` — consistent with the mean-of-zero-frames fields
 /// next to it, and panic-free for `frames == 0` library callers.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
@@ -59,7 +60,7 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[idx]
 }
 
-fn make_platform(kind: PlatformKind, tile: u32) -> Box<dyn Platform> {
+pub(crate) fn make_platform(kind: PlatformKind, tile: u32) -> Box<dyn Platform + Send + Sync> {
     match kind {
         PlatformKind::Gpu => Box::new(MobileGpu::orin().with_tile(tile)),
         PlatformKind::GsCore => Box::new(Accelerator::new(AccelKind::GsCore, AccelConfig::default())),
@@ -102,12 +103,7 @@ pub fn run_simulation(
     let tile = pl.tile.max(1);
 
     // --- Cloud setup ----------------------------------------------------
-    let (lo, hi) = tree.gaussians.bounds();
-    let codec = DeltaCodec::new(
-        variant.compression,
-        FixedQuantizer::for_bounds(lo, hi),
-        VqTrainer { max_samples: 4000, ..Default::default() }.train(&tree.gaussians.sh),
-    );
+    let codec = super::codec_for_tree(tree, variant.compression);
     let mut cloud = CloudEndpoint::new(tree, codec, pl.reuse_threshold);
     let mut temporal = TemporalSearch::for_tree(tree).with_parallelism(par);
     let mut streaming = StreamingSearch::default();
@@ -140,10 +136,15 @@ pub fn run_simulation(
     let mut mtp = Vec::with_capacity(poses.len());
     let mut render_s_sum = 0.0f64;
     let mut energy_sum = 0.0f64;
-    let mut visits_sum = 0u64;
+    let mut wireless_sum = 0.0f64;
+    // Round 0 counts like every later round: `rounds` starts at 1 and
+    // `delta_sum` includes `msg0`, so `visits_sum` must include the
+    // prefetch search too or the reported average is biased low.
+    let mut visits_sum = cut0.nodes_visited;
     let mut rounds = 1u32;
     let mut delta_sum = msg0.payload.count as u64;
     let mut streamed_bytes = 0u64;
+    let mut delivered_bytes_sum = 0u64;
     let mut peak_client = client.store.len();
     let mut right_psnr = 99.0f64;
 
@@ -151,16 +152,19 @@ pub fn run_simulation(
     for (i, pose) in poses.iter().enumerate() {
         let t_frame = i as f64 * vsync;
         let mut decoded_this_frame = 0u64;
+        let mut delivered_bytes = 0u64;
 
         // Deliver an in-flight round if it has arrived.
         if let Some((arrival, msg)) = pending.take() {
             if arrival <= t_frame {
                 decoded_this_frame = msg.payload.count as u64;
+                delivered_bytes = msg.wire_bytes() as u64;
                 client.apply(&msg).expect("apply round");
             } else {
                 pending = Some((arrival, msg));
             }
         }
+        delivered_bytes_sum += delivered_bytes;
 
         // Cloud round every w frames (if the previous one was delivered).
         if i % lod_interval == 0 && i > 0 && pending.is_none() {
@@ -228,17 +232,21 @@ pub fn run_simulation(
         let display = (done / vsync).ceil() * vsync;
         mtp.push((display - t_frame) * 1e3);
 
-        // Client energy: compute + DRAM + wireless reception.
-        energy_sum += cost.total_energy_j()
-            + crate::net::wireless_energy_j(if decoded_this_frame > 0 {
-                streamed_bytes / rounds.max(1) as u64
-            } else {
-                0
-            });
+        // Client energy: compute + DRAM + wireless reception. Wireless
+        // charges the wire bytes of the message actually applied this
+        // frame (the old running average `streamed_bytes / rounds`
+        // mis-attributed energy whenever round sizes varied), at the
+        // configured per-byte cost.
+        let wireless =
+            crate::net::wireless_energy_j_at(delivered_bytes, params.net.energy_nj_per_byte);
+        wireless_sum += wireless;
+        energy_sum += cost.total_energy_j() + wireless;
     }
 
     let mut sorted_mtp = mtp.clone();
-    sorted_mtp.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN-safe (degenerate runs, e.g. fps == 0, produce NaN
+    // samples — the same panic pattern PR 3 purged from the splat sort).
+    sorted_mtp.sort_by(f64::total_cmp);
     let trace_seconds = frames as f64 * vsync;
     SimResult {
         variant: variant.name.clone(),
@@ -251,6 +259,8 @@ pub fn run_simulation(
         initial_bytes,
         bandwidth_bps: streamed_bytes as f64 * 8.0 / trace_seconds,
         client_energy_j: energy_sum / frames as f64,
+        wireless_j: wireless_sum,
+        delivered_bytes: delivered_bytes_sum,
         cloud_visits: visits_sum as f64 / rounds.max(1) as f64,
         delta_gaussians: delta_sum as f64 / rounds as f64,
         peak_client_gaussians: peak_client,
@@ -281,10 +291,13 @@ pub fn run_remote_simulation(
         let done = arrive + codec.codec_latency_s();
         let display = (done / vsync).ceil() * vsync;
         mtp.push((display - t) * 1e3);
-        energy += crate::net::wireless_energy_j(bytes) + codec.codec_latency_s() * 2.0;
+        energy += crate::net::wireless_energy_j_at(bytes, params.net.energy_nj_per_byte)
+            + codec.codec_latency_s() * 2.0;
     }
     let mut sorted = mtp.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // NaN-safe for degenerate parameters (see run_simulation's sort).
+    sorted.sort_by(f64::total_cmp);
+    let delivered = codec.bytes_per_frame() * frames as u64;
     SimResult {
         variant: format!("Remote-{}", quality.label()),
         frames,
@@ -292,10 +305,12 @@ pub fn run_remote_simulation(
         mtp_p99_ms: percentile(&sorted, 0.99),
         fps: (params.fps).min(link.bytes_per_second() / codec.bytes_per_frame() as f64),
         render_s: codec.codec_latency_s(),
-        wire_bytes: codec.bytes_per_frame() * frames as u64,
+        wire_bytes: delivered,
         initial_bytes: 0,
         bandwidth_bps: codec.bitrate_bps(),
         client_energy_j: energy / frames as f64,
+        wireless_j: crate::net::wireless_energy_j_at(delivered, params.net.energy_nj_per_byte),
+        delivered_bytes: delivered,
         cloud_visits: 0.0,
         delta_gaussians: 0.0,
         peak_client_gaussians: 0,
@@ -391,6 +406,120 @@ mod tests {
         assert_eq!(a.delta_gaussians, b.delta_gaussians);
         assert_eq!(a.peak_client_gaussians, b.peak_client_gaussians);
         assert_eq!(a.right_psnr_db, b.right_psnr_db, "rendering must be bitwise identical");
+    }
+
+    #[test]
+    fn round0_visits_counted_in_cloud_average() {
+        // Regression: round 0's `cut0.nodes_visited` was never added to
+        // `visits_sum` while `rounds` (the divisor) started at 1 — the
+        // reported average was biased low. Pin the exact value for a
+        // trace short enough that round 0 is the ONLY round: the average
+        // must equal the prefetch search's visit count, reproduced here
+        // with an identically-fresh TemporalSearch.
+        let (tree, poses) = small_world();
+        let p = fast_params();
+        assert!(poses.len() >= 3);
+        let short = &poses[..3]; // < lod_interval (4): no steady-state rounds
+        let r = run_simulation(&tree, short, &Variant::nebula(), &p);
+        let full = Intrinsics::vr_eye();
+        let q0 = LodQuery::new(short[0].position, full.fx, p.pipeline.tau_px, full.near);
+        let expected = TemporalSearch::for_tree(&tree).search(&tree, &q0).nodes_visited;
+        assert!(expected > 0, "prefetch search must visit nodes");
+        assert_eq!(r.cloud_visits, expected as f64, "round-0 visits missing from the average");
+    }
+
+    #[test]
+    fn mtp_sort_tolerates_nan_samples() {
+        // Regression: both MTP sorts used `partial_cmp().unwrap()` — the
+        // NaN-panic pattern PR 3 purged from the splat sort. fps == 0
+        // makes vsync infinite, so frame 0's `t_frame = 0 * inf` is NaN
+        // and every MTP sample degenerates to NaN; the percentile path
+        // must survive and report NaN rather than panic.
+        let (tree, poses) = small_world();
+        let mut p = fast_params();
+        p.fps = 0.0;
+        let r = run_simulation(&tree, &poses[..4], &Variant::nebula(), &p);
+        assert!(r.mtp_p99_ms.is_nan(), "degenerate fps must yield NaN, not panic");
+
+        let remote = run_remote_simulation(&p, crate::net::VideoQuality::LossyHigh, 4);
+        assert!(remote.mtp_p99_ms.is_nan());
+    }
+
+    #[test]
+    fn wireless_energy_charges_delivered_round_bytes() {
+        // Regression: delivery frames used to charge the running
+        // per-round average (`streamed_bytes / rounds`) instead of the
+        // wire bytes of the message actually applied. Replay the
+        // cloud/link timing model WITHOUT the renderer (round issuance
+        // and delivery are render-independent) and check the sim's total
+        // wireless energy equals the sum over the actually-delivered
+        // round sizes.
+        let (tree, poses) = small_world();
+        let p = fast_params();
+        let r = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+
+        let full = Intrinsics::vr_eye();
+        let mut temporal = TemporalSearch::for_tree(&tree);
+        let codec = crate::coordinator::codec_for_tree(&tree, Variant::nebula().compression);
+        let mut cloud = CloudEndpoint::new(&tree, codec, p.pipeline.reuse_threshold);
+        let mut link = SimLink::from_config(&p.net);
+        let vsync = 1.0 / p.fps;
+        let w = p.pipeline.lod_interval as usize;
+        let q0 = LodQuery::new(poses[0].position, full.fx, p.pipeline.tau_px, full.near);
+        let cut0 = temporal.search(&tree, &q0);
+        let _msg0 = cloud.publish_cut(&cut0.nodes); // round 0: off the trace clock, never charged
+        let mut pending: Option<(f64, u64)> = None;
+        let mut expected_j = 0.0f64;
+        let mut expected_bytes = 0u64;
+        // Old (buggy) accounting replayed alongside: at each delivery it
+        // charged the running per-round average `streamed / rounds`.
+        let mut streamed_replay = 0u64;
+        let mut rounds_replay = 1u32;
+        let mut charges: Vec<(u64, u64)> = Vec::new(); // (old average, actual)
+        for (i, pose) in poses.iter().enumerate() {
+            let t_frame = i as f64 * vsync;
+            if let Some((arrival, bytes)) = pending.take() {
+                if arrival <= t_frame {
+                    expected_j += crate::net::wireless_energy_j(bytes);
+                    expected_bytes += bytes;
+                    charges.push((streamed_replay / rounds_replay as u64, bytes));
+                } else {
+                    pending = Some((arrival, bytes));
+                }
+            }
+            if i % w == 0 && i > 0 && pending.is_none() {
+                let q = LodQuery::new(pose.position, full.fx, p.pipeline.tau_px, full.near);
+                let cut = temporal.search(&tree, &q);
+                let msg = cloud.publish_cut(&cut.nodes);
+                let bytes = msg.wire_bytes() as u64;
+                rounds_replay += 1;
+                streamed_replay += bytes;
+                let cloud_done = t_frame
+                    + cut.nodes_visited as f64 / CLOUD_VISITS_PER_S
+                    + bytes as f64 / CLOUD_COMPRESS_BPS;
+                pending = Some((link.send(cloud_done, bytes), bytes));
+            }
+        }
+        assert!(charges.len() >= 2, "trace must deliver several rounds");
+        // The first delivery alone proves the attribution bug: the old
+        // charge averaged the round over `rounds` (incl. round 0), so it
+        // can never equal the actual nonzero wire size there.
+        assert!(
+            charges.iter().any(|&(old, actual)| old != actual),
+            "old running-average charge must differ from per-round wire bytes"
+        );
+        assert_eq!(r.delivered_bytes, expected_bytes);
+        assert_eq!(r.wireless_j, expected_j, "wireless energy must sum the actual round sizes");
+
+        // The per-byte cost is a LIVE knob, not the hardcoded constant:
+        // doubling net.energy_nj_per_byte (100 -> 200, an exact power-of-
+        // two scaling) must exactly double the reported wireless energy
+        // without touching the delivery schedule.
+        let mut p2 = fast_params();
+        p2.net.energy_nj_per_byte = 2.0 * crate::net::WIRELESS_NJ_PER_BYTE;
+        let r2 = run_simulation(&tree, &poses, &Variant::nebula(), &p2);
+        assert_eq!(r2.delivered_bytes, r.delivered_bytes);
+        assert_eq!(r2.wireless_j, 2.0 * r.wireless_j, "energy_nj_per_byte must scale wireless_j");
     }
 
     #[test]

@@ -1,0 +1,652 @@
+//! Multi-session cloud server (the ROADMAP's serving-scale axis).
+//!
+//! [`run_simulation`](super::scheduler::run_simulation) models ONE
+//! client with a dedicated cloud. This module scales that timing model
+//! to N concurrent clients the way Voyager/L3GS-style systems serve
+//! them: one shared scene, one shared cloud, per-client sessions.
+//!
+//! * [`Session`] — everything one client owns: its pose trace, its
+//!   LoD-search state (temporal or streaming, per the variant), its
+//!   [`CloudEndpoint`]/[`ClientEndpoint`] pair (management table, codec,
+//!   store), its last-mile [`SimLink`], and its metric accumulators.
+//! * [`CloudServer`] — steps every session frame-by-frame on a common
+//!   vsync clock and owns the SHARED resources:
+//!   - **cloud compute budget**: each round's LoD-search + compression
+//!     time is charged against one cloud pipeline
+//!     ([`ServerConfig::cloud_budget`] A100-equivalents). Rounds from
+//!     different sessions queue on the cloud (`max(t, cloud_busy)`),
+//!     not just on their own links — the contention the single-client
+//!     model cannot express;
+//!   - **uplink byte budget**: round messages then pass a shared
+//!     cloud-egress link of [`ServerConfig::uplink_bps`] — a
+//!     continuous rate limit with in-order queueing (a message's bytes
+//!     serialize at `uplink_bps` behind everything already queued,
+//!     averaging `uplink_bps · vsync / 8` bytes per vsync) — before
+//!     entering the per-client link.
+//!
+//! # Determinism discipline
+//!
+//! Sessions are stepped via [`parallel_map`] with the repo's
+//! bit-accuracy rules: the per-frame phase A (deliver, search, publish,
+//! render, energy) touches only per-session state, and the shared-budget
+//! arbitration (phase B) runs serially in session-id order. Every
+//! [`SimResult`] field is a modeled (simulation-clock) quantity, so
+//! results are bitwise invariant across thread counts, and `clients = 1`
+//! with the default [`ServerConfig`] reproduces the single-client
+//! scheduler field-for-field: the cloud queue is empty whenever a lone
+//! session issues (its previous round was already delivered), and an
+//! unconstrained uplink forwards at the exact departure time. Both
+//! properties are pinned by `tests/it_scheduler.rs`.
+
+use super::metrics::{SimResult, Variant};
+use super::scheduler::{
+    make_platform, percentile, SimParams, CLOUD_COMPRESS_BPS, CLOUD_VISITS_PER_S, DECODE_RATE,
+};
+use crate::compress::DeltaCodec;
+use crate::config::PipelineConfig;
+use crate::hw::{FrameWorkload, Platform};
+use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
+use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
+use crate::math::{Intrinsics, Pose, StereoCamera};
+use crate::net::channel::SimLink;
+use crate::render::engine::{parallel_map, Parallelism};
+use crate::render::raster::RasterConfig;
+use crate::render::stereo::{render_right_naive, render_stereo, StereoMode};
+use crate::render::{preprocess_records, render_mono};
+
+/// Shared-resource configuration of the cloud server. The client count
+/// is NOT a field here: it is always the number of pose traces handed
+/// to [`CloudServer::new`] (the `--clients` knob lives in
+/// `PipelineConfig` and sizes the trace set at the call site).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerConfig {
+    /// Cloud compute budget in A100-equivalents: scales both the
+    /// LoD-search visit rate and the compression rate that ALL sessions'
+    /// rounds queue on. 1.0 = the single-client scheduler's cloud.
+    pub cloud_budget: f64,
+    /// Shared cloud-egress bandwidth (bits/s): a continuous rate limit
+    /// with in-order queueing (averaging `uplink_bps · vsync / 8` bytes
+    /// per vsync; a large round spills into later windows).
+    /// `f64::INFINITY` (the default) disables the shared constraint so
+    /// only the per-client links throttle, which is the single-client
+    /// model's assumption.
+    pub uplink_bps: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { cloud_budget: 1.0, uplink_bps: f64::INFINITY }
+    }
+}
+
+impl ServerConfig {
+    /// Build from the config/CLI knobs (`--cloud-budget`,
+    /// `--uplink-mbps`).
+    pub fn from_run(pl: &PipelineConfig, net: &crate::config::NetConfig) -> Self {
+        Self { cloud_budget: pl.cloud_budget, uplink_bps: net.uplink_bps }
+    }
+}
+
+/// Aggregate output of a multi-client run.
+#[derive(Debug, Clone)]
+pub struct MulticlientResult {
+    pub clients: usize,
+    /// Per-session results, in session-id order; with `clients = 1` and
+    /// the default [`ServerConfig`] the single entry equals
+    /// [`run_simulation`](super::scheduler::run_simulation)'s output
+    /// field-for-field.
+    pub per_client: Vec<SimResult>,
+    /// Aggregate cloud LoD-search visits per second of trace time
+    /// (all sessions, round 0 included) — the cloud-side throughput the
+    /// budget has to sustain.
+    pub aggregate_visits_per_s: f64,
+    /// Fraction of the trace the shared cloud compute pipeline was busy.
+    pub cloud_utilization: f64,
+    /// Fraction of the shared uplink capacity consumed (0 when the
+    /// uplink is unconstrained).
+    pub uplink_utilization: f64,
+    /// Fairness: max/mean of the per-client mean MTP (1.0 = perfectly
+    /// fair; grows as cloud/uplink contention starves some sessions).
+    pub fairness: f64,
+}
+
+/// A round published in phase A, awaiting shared-cloud timing (phase B).
+struct RoundRequest {
+    visits: u64,
+    bytes: u64,
+    msg: RoundMsg,
+}
+
+/// Per-frame constants shared by every session step.
+struct StepCtx {
+    pl: PipelineConfig,
+    full_intr: Intrinsics,
+    intr: Intrinsics,
+    s2: f64,
+    full_pixels: u64,
+    raster_cfg: RasterConfig,
+    lod_interval: usize,
+    tile: u32,
+    vsync: f64,
+    /// `NetConfig.energy_nj_per_byte` — wireless reception cost.
+    energy_nj_per_byte: f64,
+}
+
+/// One client's complete cloud⇄client state, stepped by [`CloudServer`].
+pub struct Session<'t> {
+    pub id: usize,
+    poses: Vec<Pose>,
+    variant: Variant,
+    temporal: TemporalSearch,
+    streaming: StreamingSearch,
+    cloud: CloudEndpoint<'t>,
+    client: ClientEndpoint,
+    link: SimLink,
+    platform: Box<dyn Platform + Send + Sync>,
+    pending: Option<(f64, RoundMsg)>,
+    request: Option<RoundRequest>,
+    // --- metric accumulators (mirror run_simulation's locals) ---------
+    mtp: Vec<f64>,
+    render_s_sum: f64,
+    energy_sum: f64,
+    wireless_sum: f64,
+    visits_sum: u64,
+    rounds: u32,
+    delta_sum: u64,
+    streamed_bytes: u64,
+    delivered_bytes_sum: u64,
+    initial_bytes: u64,
+    peak_client: usize,
+    right_psnr: f64,
+}
+
+impl<'t> Session<'t> {
+    /// Build a session over its own pose trace, including the round-0
+    /// prefetch (initial scene load, off the trace clock) — exactly the
+    /// single-client scheduler's setup. Internal render stages run
+    /// serially: the server parallelizes ACROSS sessions, and every
+    /// stage is bitwise parallelism-invariant anyway.
+    fn new(
+        id: usize,
+        tree: &'t LodTree,
+        poses: Vec<Pose>,
+        variant: &Variant,
+        params: &SimParams,
+        codec: DeltaCodec,
+    ) -> Self {
+        assert!(!poses.is_empty(), "session {id}: empty pose trace");
+        let pl = &params.pipeline;
+        let full_intr = Intrinsics::vr_eye();
+        let mut cloud = CloudEndpoint::new(tree, codec, pl.reuse_threshold);
+        let mut temporal = TemporalSearch::for_tree(tree);
+        let mut streaming = StreamingSearch::default();
+        let mut client = ClientEndpoint::from_init(
+            &cloud.scene_init(),
+            variant.compression,
+            pl.reuse_threshold,
+        )
+        .expect("scene init");
+
+        let q0 = LodQuery::new(poses[0].position, full_intr.fx, pl.tau_px, full_intr.near);
+        let cut0 = if variant.temporal {
+            temporal.search(tree, &q0)
+        } else {
+            streaming.search(tree, &q0)
+        };
+        let msg0 = cloud.publish_cut(&cut0.nodes);
+        let initial_bytes = msg0.wire_bytes() as u64;
+        client.apply(&msg0).expect("apply round 0");
+
+        let peak_client = client.store.len();
+        Self {
+            id,
+            variant: variant.clone(),
+            temporal,
+            streaming,
+            cloud,
+            client,
+            link: SimLink::from_config(&params.net),
+            platform: make_platform(variant.platform, pl.tile.max(1)),
+            pending: None,
+            request: None,
+            mtp: Vec::with_capacity(poses.len()),
+            render_s_sum: 0.0,
+            energy_sum: 0.0,
+            wireless_sum: 0.0,
+            visits_sum: cut0.nodes_visited,
+            rounds: 1,
+            delta_sum: msg0.payload.count as u64,
+            streamed_bytes: 0,
+            delivered_bytes_sum: 0,
+            initial_bytes,
+            peak_client,
+            right_psnr: 99.0,
+            poses,
+        }
+    }
+
+    /// Frames this session's trace spans.
+    pub fn frames(&self) -> usize {
+        self.poses.len()
+    }
+
+    /// Phase A of vsync tick `i`: deliver an arrived round, publish a
+    /// new round into [`Self::request`] if one is due (timing assigned
+    /// by the server in phase B), render the client frame, and account
+    /// energy/MTP. Touches only per-session state — safe to run for all
+    /// sessions concurrently.
+    fn step_frame(&mut self, i: usize, ctx: &StepCtx) {
+        if i >= self.poses.len() {
+            return;
+        }
+        debug_assert!(self.request.is_none(), "phase B must drain requests");
+        let pose = self.poses[i];
+        let t_frame = i as f64 * ctx.vsync;
+        let mut decoded_this_frame = 0u64;
+        let mut delivered_bytes = 0u64;
+
+        if let Some((arrival, msg)) = self.pending.take() {
+            if arrival <= t_frame {
+                decoded_this_frame = msg.payload.count as u64;
+                delivered_bytes = msg.wire_bytes() as u64;
+                self.client.apply(&msg).expect("apply round");
+            } else {
+                self.pending = Some((arrival, msg));
+            }
+        }
+        self.delivered_bytes_sum += delivered_bytes;
+
+        if i % ctx.lod_interval == 0 && i > 0 && self.pending.is_none() {
+            let q =
+                LodQuery::new(pose.position, ctx.full_intr.fx, ctx.pl.tau_px, ctx.full_intr.near);
+            let cut = if self.variant.temporal {
+                self.temporal.search(self.cloud.tree, &q)
+            } else {
+                self.streaming.search(self.cloud.tree, &q)
+            };
+            self.visits_sum += cut.nodes_visited;
+            self.rounds += 1;
+            let msg = self.cloud.publish_cut(&cut.nodes);
+            self.delta_sum += msg.payload.count as u64;
+            let bytes = msg.wire_bytes() as u64;
+            self.streamed_bytes += bytes;
+            self.request = Some(RoundRequest { visits: cut.nodes_visited, bytes, msg });
+        }
+        self.peak_client = self.peak_client.max(self.client.store.len());
+
+        // --- Client render (identical to the single-client scheduler) --
+        let queue_owned = self.client.store.render_queue();
+        let queue: Vec<(u32, &crate::gaussian::GaussianRecord)> =
+            queue_owned.iter().map(|(id, g)| (*id, *g)).collect();
+        let stereo_cam = StereoCamera::new(pose, ctx.intr);
+        let frames = self.poses.len();
+        let par = ctx.raster_cfg.parallelism;
+
+        let mut wl = if self.variant.stereo {
+            let out = render_stereo(
+                &stereo_cam,
+                &queue,
+                ctx.pl.sh_degree,
+                ctx.tile,
+                &ctx.raster_cfg,
+                StereoMode::AlphaGated,
+            );
+            if i + 1 == frames {
+                let left_cam = stereo_cam.left();
+                let shared = stereo_cam.shared_camera();
+                let mut set =
+                    preprocess_records(&left_cam, &shared, &queue, ctx.pl.sh_degree, par);
+                crate::render::sort::sort_splats_par(&mut set.splats, par);
+                let (reference, _) =
+                    render_right_naive(&stereo_cam, &set, ctx.tile, &ctx.raster_cfg);
+                self.right_psnr = out.right.psnr(&reference);
+            }
+            FrameWorkload::from_stereo(&out, ctx.full_pixels)
+        } else {
+            let lcam = stereo_cam.left();
+            let rcam = stereo_cam.right();
+            let lset = preprocess_records(&lcam, &lcam, &queue, ctx.pl.sh_degree, par);
+            let rset = preprocess_records(&rcam, &rcam, &queue, ctx.pl.sh_degree, par);
+            let n = lset.splats.len() + rset.splats.len();
+            let (_, lstats, _) =
+                render_mono(lset, ctx.intr.width, ctx.intr.height, ctx.tile, &ctx.raster_cfg);
+            let (_, rstats, _) =
+                render_mono(rset, ctx.intr.width, ctx.intr.height, ctx.tile, &ctx.raster_cfg);
+            FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, ctx.full_pixels)
+        };
+        wl.alpha_checks = (wl.alpha_checks as f64 * ctx.s2) as u64;
+        wl.blends = (wl.blends as f64 * ctx.s2) as u64;
+        wl.pairs = (wl.pairs as f64 * ctx.s2) as u64;
+        wl.tiles = (wl.tiles as f64 * ctx.s2) as u64;
+        wl.sru_insertions = (wl.sru_insertions as f64 * ctx.s2) as u64;
+        wl.merge_ops = (wl.merge_ops as f64 * ctx.s2) as u64;
+        wl = wl.with_decoded(decoded_this_frame);
+
+        let cost = self.platform.frame_cost(&wl);
+        let decode_s = decoded_this_frame as f64 / DECODE_RATE;
+        let render_s = cost.seconds + decode_s;
+        self.render_s_sum += render_s;
+
+        let done = t_frame + render_s;
+        let display = (done / ctx.vsync).ceil() * ctx.vsync;
+        self.mtp.push((display - t_frame) * 1e3);
+
+        let wireless =
+            crate::net::wireless_energy_j_at(delivered_bytes, ctx.energy_nj_per_byte);
+        self.wireless_sum += wireless;
+        self.energy_sum += cost.total_energy_j() + wireless;
+    }
+
+    /// Fold the accumulators into a [`SimResult`] (the single-client
+    /// scheduler's aggregation, verbatim).
+    fn finish(self, vsync: f64) -> SimResult {
+        let frames = self.poses.len();
+        let mut sorted_mtp = self.mtp.clone();
+        sorted_mtp.sort_by(f64::total_cmp);
+        let trace_seconds = frames as f64 * vsync;
+        SimResult {
+            variant: self.variant.name.clone(),
+            frames: frames as u32,
+            mtp_ms: self.mtp.iter().sum::<f64>() / frames as f64,
+            mtp_p99_ms: percentile(&sorted_mtp, 0.99),
+            fps: frames as f64 / self.render_s_sum,
+            render_s: self.render_s_sum / frames as f64,
+            wire_bytes: self.streamed_bytes,
+            initial_bytes: self.initial_bytes,
+            bandwidth_bps: self.streamed_bytes as f64 * 8.0 / trace_seconds,
+            client_energy_j: self.energy_sum / frames as f64,
+            wireless_j: self.wireless_sum,
+            delivered_bytes: self.delivered_bytes_sum,
+            cloud_visits: self.visits_sum as f64 / self.rounds.max(1) as f64,
+            delta_gaussians: self.delta_sum as f64 / self.rounds as f64,
+            peak_client_gaussians: self.peak_client,
+            right_psnr_db: self.right_psnr,
+        }
+    }
+}
+
+/// N sessions over one scene, one cloud compute budget, one uplink.
+pub struct CloudServer<'t> {
+    sessions: Vec<Session<'t>>,
+    cfg: ServerConfig,
+    /// Across-session stepping strategy (phase A); bitwise-invariant.
+    par: Parallelism,
+    ctx: StepCtx,
+    /// Time the shared cloud pipeline finishes its last queued round.
+    cloud_busy_until: f64,
+    /// Total busy seconds of the cloud pipeline (utilization metric).
+    cloud_busy_s: f64,
+    /// Shared cloud-egress link (zero latency: propagation is charged by
+    /// the per-client links).
+    uplink: SimLink,
+}
+
+impl<'t> CloudServer<'t> {
+    /// Build a server over one trace per client (the session count IS
+    /// `traces.len()`).
+    pub fn new(
+        tree: &'t LodTree,
+        traces: &[Vec<Pose>],
+        variant: &Variant,
+        params: &SimParams,
+        cfg: &ServerConfig,
+    ) -> Self {
+        assert!(!traces.is_empty(), "at least one client trace");
+        assert!(
+            cfg.cloud_budget > 0.0 && cfg.cloud_budget.is_finite(),
+            "cloud_budget must be positive and finite (got {})",
+            cfg.cloud_budget
+        );
+        assert!(
+            cfg.uplink_bps > 0.0,
+            "uplink_bps must be > 0 (got {}; +inf = unconstrained)",
+            cfg.uplink_bps
+        );
+        let pl = &params.pipeline;
+        let full_intr = Intrinsics::vr_eye();
+        let intr = Intrinsics::vr_eye_scaled(pl.res_scale.max(1));
+        let ctx = StepCtx {
+            pl: *pl,
+            full_intr,
+            intr,
+            s2: (full_intr.pixels() as f64 / intr.pixels() as f64).max(1.0),
+            full_pixels: 2 * full_intr.pixels(),
+            raster_cfg: RasterConfig {
+                alpha_min: pl.alpha_min,
+                t_min: pl.transmittance_min,
+                // Sessions render serially inside; the server's
+                // parallelism axis is across sessions.
+                parallelism: Parallelism::Serial,
+                schedule: crate::render::RowSchedule::Stealing,
+            },
+            lod_interval: (pl.lod_interval as usize).max(1),
+            tile: pl.tile.max(1),
+            vsync: 1.0 / params.fps,
+            energy_nj_per_byte: params.net.energy_nj_per_byte,
+        };
+        // Train the scene codec once; every session gets an identical
+        // clone (deterministic, and 64 sessions must not pay 64 VQ
+        // trainings). Construction (round-0 search + scene-init apply
+        // per session) is independent per trace, so it rides the same
+        // order-preserving parallel_map as phase A instead of paying a
+        // serial O(clients) setup prefix.
+        let codec = super::codec_for_tree(tree, variant.compression);
+        let par = Parallelism::from_threads(pl.threads);
+        let owned: Vec<(usize, Vec<Pose>)> =
+            traces.iter().cloned().enumerate().collect();
+        let sessions = parallel_map(owned, par, |_, (id, poses)| {
+            Session::new(id, tree, poses, variant, params, codec.clone())
+        });
+        Self {
+            sessions,
+            cfg: *cfg,
+            par,
+            ctx,
+            cloud_busy_until: 0.0,
+            cloud_busy_s: 0.0,
+            uplink: SimLink::new(cfg.uplink_bps, 0.0),
+        }
+    }
+
+    /// Step every session to the end of its trace and aggregate.
+    pub fn run(mut self) -> MulticlientResult {
+        let max_frames = self.sessions.iter().map(Session::frames).max().unwrap_or(0);
+        for i in 0..max_frames {
+            let t_frame = i as f64 * self.ctx.vsync;
+
+            // Phase A: independent per-session work, in parallel. The
+            // map preserves item order, so session ids stay aligned.
+            let ctx = &self.ctx;
+            let sessions = std::mem::take(&mut self.sessions);
+            self.sessions = parallel_map(sessions, self.par, |_, mut s| {
+                s.step_frame(i, ctx);
+                s
+            });
+
+            // Phase B: shared-budget arbitration, serial in session-id
+            // order (deterministic regardless of phase A's thread count).
+            for s in self.sessions.iter_mut() {
+                if let Some(req) = s.request.take() {
+                    let start = t_frame.max(self.cloud_busy_until);
+                    let done = start
+                        + req.visits as f64 / (self.cfg.cloud_budget * CLOUD_VISITS_PER_S)
+                        + req.bytes as f64 / (self.cfg.cloud_budget * CLOUD_COMPRESS_BPS);
+                    self.cloud_busy_s += done - start;
+                    self.cloud_busy_until = done;
+                    let released = self.uplink.send(done, req.bytes);
+                    let arrival = s.link.send(released, req.bytes);
+                    s.pending = Some((arrival, req.msg));
+                }
+            }
+        }
+
+        let vsync = self.ctx.vsync;
+        let trace_seconds = max_frames as f64 * vsync;
+        let total_visits: u64 = self.sessions.iter().map(|s| s.visits_sum).sum();
+        let uplink_bytes = self.uplink.bytes_sent;
+        let per_client: Vec<SimResult> =
+            self.sessions.into_iter().map(|s| s.finish(vsync)).collect();
+        let mean_mtp: Vec<f64> = per_client.iter().map(|r| r.mtp_ms).collect();
+        let mean = mean_mtp.iter().sum::<f64>() / mean_mtp.len().max(1) as f64;
+        let max = mean_mtp.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        MulticlientResult {
+            clients: per_client.len(),
+            aggregate_visits_per_s: if trace_seconds > 0.0 {
+                total_visits as f64 / trace_seconds
+            } else {
+                0.0
+            },
+            cloud_utilization: if trace_seconds > 0.0 {
+                self.cloud_busy_s / trace_seconds
+            } else {
+                0.0
+            },
+            uplink_utilization: if self.cfg.uplink_bps.is_finite() && trace_seconds > 0.0 {
+                (uplink_bytes as f64 * 8.0 / trace_seconds) / self.cfg.uplink_bps
+            } else {
+                0.0
+            },
+            fairness: if mean > 0.0 { max / mean } else { 1.0 },
+            per_client,
+        }
+    }
+}
+
+/// One-call driver: build a [`CloudServer`] over `traces` and run it.
+pub fn run_multiclient(
+    tree: &LodTree,
+    traces: &[Vec<Pose>],
+    variant: &Variant,
+    params: &SimParams,
+    cfg: &ServerConfig,
+) -> MulticlientResult {
+    CloudServer::new(tree, traces, variant, params, cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::run_simulation;
+    use crate::scene::{CityGen, CityParams};
+    use crate::trace::{PoseTrace, TraceParams};
+
+    fn small_world(clients: usize, frames: usize) -> (LodTree, Vec<Vec<Pose>>) {
+        let tree = CityGen::new(CityParams::for_target(8000, 100.0, 42)).build();
+        let traces = (0..clients)
+            .map(|k| {
+                PoseTrace::new(
+                    TraceParams { seed: 7 + k as u64 * 0x9e37, ..Default::default() },
+                    100.0,
+                )
+                .generate(frames)
+            })
+            .collect();
+        (tree, traces)
+    }
+
+    fn fast_params() -> SimParams {
+        let mut p = SimParams::default();
+        p.pipeline.res_scale = 16;
+        p
+    }
+
+    #[test]
+    fn one_client_default_config_matches_scheduler() {
+        // The structural parity claim: an empty cloud queue plus an
+        // unconstrained uplink reduce the server to the single-client
+        // timing model, bit for bit.
+        let (tree, traces) = small_world(1, 12);
+        let p = fast_params();
+        let legacy = run_simulation(&tree, &traces[0], &Variant::nebula(), &p);
+        let multi =
+            run_multiclient(&tree, &traces, &Variant::nebula(), &p, &ServerConfig::default());
+        assert_eq!(multi.clients, 1);
+        assert_eq!(multi.per_client[0], legacy, "N=1 must reproduce the scheduler exactly");
+        assert_eq!(multi.uplink_utilization, 0.0, "unconstrained uplink reports 0");
+    }
+
+    #[test]
+    fn shared_cloud_budget_saturates_under_load() {
+        // Shrinking the cloud budget must raise cloud utilization —
+        // rounds from all sessions queue behind each other on the one
+        // pipeline — while the same trace on a roomy cloud stays almost
+        // idle.
+        let (tree, traces) = small_world(4, 16);
+        let p = fast_params();
+        let roomy = run_multiclient(
+            &tree,
+            &traces,
+            &Variant::nebula(),
+            &p,
+            &ServerConfig { cloud_budget: 1.0, ..ServerConfig::default() },
+        );
+        let starved = run_multiclient(
+            &tree,
+            &traces,
+            &Variant::nebula(),
+            &p,
+            &ServerConfig { cloud_budget: 1e-4, ..ServerConfig::default() },
+        );
+        assert!(
+            starved.cloud_utilization > roomy.cloud_utilization,
+            "starved {} vs roomy {}",
+            starved.cloud_utilization,
+            roomy.cloud_utilization
+        );
+        // Per-session round accounting still balances under contention:
+        // delivered bytes can never exceed issued bytes.
+        for c in starved.per_client.iter().chain(roomy.per_client.iter()) {
+            assert!(
+                c.delivered_bytes <= c.wire_bytes,
+                "delivered {} > streamed {}",
+                c.delivered_bytes,
+                c.wire_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn constrained_uplink_reports_utilization() {
+        // A finite shared uplink must report non-zero utilization once
+        // steady-state rounds flow, and utilization must not exceed 1
+        // by more than the final in-flight message's spillover.
+        let (tree, traces) = small_world(4, 16);
+        let p = fast_params();
+        let r = run_multiclient(
+            &tree,
+            &traces,
+            &Variant::nebula(),
+            &p,
+            &ServerConfig { uplink_bps: 50e6, ..ServerConfig::default() },
+        );
+        let streamed: u64 = r.per_client.iter().map(|c| c.wire_bytes).sum();
+        if streamed > 0 {
+            assert!(r.uplink_utilization > 0.0);
+        }
+        assert!(r.fairness >= 1.0, "fairness is max/mean, bounded below by 1");
+    }
+
+    #[test]
+    fn session_counters_scale_with_clients() {
+        // Four clients on one cloud must do ~4x the cloud work of one
+        // (distinct traces, so not exactly 4x).
+        let (tree, traces) = small_world(4, 12);
+        let p = fast_params();
+        let one = run_multiclient(
+            &tree,
+            &traces[..1],
+            &Variant::nebula(),
+            &p,
+            &ServerConfig::default(),
+        );
+        let four =
+            run_multiclient(&tree, &traces, &Variant::nebula(), &p, &ServerConfig::default());
+        assert_eq!(four.per_client.len(), 4);
+        assert!(
+            four.aggregate_visits_per_s > 2.0 * one.aggregate_visits_per_s,
+            "4 clients: {} visits/s vs 1 client: {}",
+            four.aggregate_visits_per_s,
+            one.aggregate_visits_per_s
+        );
+    }
+}

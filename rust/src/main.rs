@@ -4,12 +4,15 @@
 //!   info       — dataset registry + scene statistics
 //!   search     — run/compare the LoD searches on a dataset
 //!   render     — render one stereo frame to PPM files
-//!   simulate   — end-to-end collaborative-rendering simulation
+//!   simulate   — end-to-end collaborative-rendering simulation; with
+//!                --clients N > 1 it runs the multi-session CloudServer
+//!                (N clients share one cloud compute budget + uplink)
 //!   serve      — live cloud/client loop (threaded), optional --hlo path
 //!
 //! Common flags: --scene <name> --gaussians <n> --frames <n> --tau <px>
 //! --tile <px> --lod-interval <w> --res-scale <s> --seed <n>
 //! --threads <n: 0=auto, 1=serial> --config <file.toml>
+//! --clients <n> --cloud-budget <A100-equivalents> --uplink-mbps <mbps>
 
 use nebula::benchkit;
 use nebula::config::RunConfig;
@@ -154,8 +157,11 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = RunConfig::from_args(args)?;
     let spec = dataset(&cfg.scene.dataset)?;
     let tree = nebula::scene::CityGen::new(spec.city_params(cfg.scene.target_gaussians)).build();
-    let poses = benchkit::walk_trace(&spec, cfg.frames.max(8) as usize);
     let params = SimParams { pipeline: cfg.pipeline, net: cfg.net, fps: 90.0 };
+    if cfg.pipeline.clients > 1 {
+        return simulate_multiclient(&cfg, &spec, &tree, &params);
+    }
+    let poses = benchkit::walk_trace(&spec, cfg.frames.max(8) as usize);
     let mut table = Table::new(vec![
         "variant", "MTP ms", "FPS", "bandwidth", "energy/frame", "Δ gauss", "right PSNR",
     ]);
@@ -172,6 +178,54 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// `simulate --clients N`: the multi-session CloudServer — N clients on
+/// distinct walking traces share one scene, one cloud compute budget
+/// and one uplink.
+fn simulate_multiclient(
+    cfg: &RunConfig,
+    spec: &nebula::scene::DatasetSpec,
+    tree: &nebula::lod::LodTree,
+    params: &SimParams,
+) -> anyhow::Result<()> {
+    let clients = cfg.pipeline.clients as usize;
+    let frames = cfg.frames.max(8) as usize;
+    let traces = benchkit::walk_traces(spec, frames, clients);
+    let server = nebula::coordinator::ServerConfig::from_run(&cfg.pipeline, &cfg.net);
+    let r = nebula::coordinator::run_multiclient(
+        tree,
+        &traces,
+        &nebula::coordinator::Variant::nebula(),
+        params,
+        &server,
+    );
+    let mut table = Table::new(vec![
+        "client", "MTP ms", "p99 ms", "FPS", "bandwidth", "energy/frame", "Δ gauss",
+    ]);
+    for (k, c) in r.per_client.iter().enumerate() {
+        table.row(vec![
+            k.to_string(),
+            fnum(c.mtp_ms, 2),
+            fnum(c.mtp_p99_ms, 2),
+            fnum(c.fps, 1),
+            human_bps(c.bandwidth_bps),
+            format!("{:.1} mJ", c.client_energy_j * 1e3),
+            fnum(c.delta_gaussians, 0),
+        ]);
+    }
+    table.print();
+    println!(
+        "{} clients: cloud {:.0} visits/s ({:.1}% busy at budget {:.2}), uplink {:.1}% used, \
+         fairness {:.3} (max/mean MTP)",
+        r.clients,
+        r.aggregate_visits_per_s,
+        r.cloud_utilization * 100.0,
+        server.cloud_budget,
+        r.uplink_utilization * 100.0,
+        r.fairness
+    );
     Ok(())
 }
 

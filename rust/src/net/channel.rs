@@ -19,7 +19,17 @@ pub struct SimLink {
 }
 
 impl SimLink {
+    /// Degenerate parameters are clamped so [`send`](Self::send) can
+    /// never produce inf/NaN arrival times silently: a non-positive or
+    /// NaN bandwidth becomes a 1 bps floor, a negative/NaN/infinite
+    /// latency becomes 0. (`+inf` bandwidth is legal and means zero
+    /// serialization time — the multi-session server's unconstrained
+    /// uplink.) This is defense in depth for direct construction;
+    /// config-file / CLI values are rejected up front with key-named
+    /// errors by `NetConfig::validate`.
     pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        let bandwidth_bps = if bandwidth_bps > 0.0 { bandwidth_bps } else { 1.0 };
+        let latency_s = if latency_s.is_finite() && latency_s >= 0.0 { latency_s } else { 0.0 };
         Self { bandwidth_bps, latency_s, busy_until: 0.0, bytes_sent: 0 }
     }
 
@@ -81,6 +91,40 @@ mod tests {
         l.send(0.0, 1_000);
         let arrival = l.send(10.0, 1_000); // long after the queue drained
         assert!((arrival - (10.0 + 0.001 + 0.001)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_params_clamped_to_finite_times() {
+        // Regression: bandwidth 0 / negative / NaN divided straight into
+        // serialize_time, silently yielding inf/NaN arrival times.
+        let cases = [
+            (0.0, 0.005),
+            (-5.0, 0.005),
+            (f64::NAN, 0.005),
+            (8e6, -1.0),
+            (8e6, f64::NAN),
+            (8e6, f64::INFINITY),
+        ];
+        for (bw, lat) in cases {
+            let mut l = SimLink::new(bw, lat);
+            let arrival = l.send(0.0, 1_000);
+            assert!(arrival.is_finite(), "bw={bw} lat={lat} gave arrival {arrival}");
+            assert!(l.serialize_time(1_000).is_finite());
+        }
+        // Zeroed config: same guard through the config path.
+        let cfg = crate::config::NetConfig { bandwidth_bps: 0.0, latency_ms: -3.0, ..Default::default() };
+        let mut l = SimLink::from_config(&cfg);
+        assert!(l.send(0.0, 10).is_finite());
+    }
+
+    #[test]
+    fn infinite_bandwidth_means_zero_serialization() {
+        // The multi-session server's unconstrained uplink: messages are
+        // released exactly when they depart, with no queueing.
+        let mut l = SimLink::new(f64::INFINITY, 0.0);
+        assert_eq!(l.serialize_time(1_000_000), 0.0);
+        assert_eq!(l.send(1.5, 1_000_000), 1.5);
+        assert_eq!(l.send(2.5, 0), 2.5);
     }
 
     #[test]

@@ -10,9 +10,17 @@ pub use video::{VideoCodec, VideoQuality};
 /// Wireless communication energy (paper §6: 100 nJ/B [63]).
 pub const WIRELESS_NJ_PER_BYTE: f64 = 100.0;
 
-/// Joules to transmit/receive `bytes` over the wireless interface.
+/// Joules to transmit/receive `bytes` over the wireless interface at
+/// the paper's default per-byte cost.
 pub fn wireless_energy_j(bytes: u64) -> f64 {
-    bytes as f64 * WIRELESS_NJ_PER_BYTE * 1e-9
+    wireless_energy_j_at(bytes, WIRELESS_NJ_PER_BYTE)
+}
+
+/// Joules at an explicit per-byte cost — the simulations thread
+/// `NetConfig.energy_nj_per_byte` through here so the config knob is
+/// live, not a silently ignored constant.
+pub fn wireless_energy_j_at(bytes: u64, nj_per_byte: f64) -> f64 {
+    bytes as f64 * nj_per_byte * 1e-9
 }
 
 #[cfg(test)]

@@ -4,6 +4,7 @@
 use nebula::benchkit;
 use nebula::coordinator::metrics::{PlatformKind, Variant};
 use nebula::coordinator::scheduler::{run_remote_simulation, run_simulation, SimParams};
+use nebula::coordinator::{run_multiclient, ServerConfig};
 use nebula::scene::{dataset, CityGen};
 
 fn setup() -> (nebula::lod::LodTree, Vec<nebula::math::Pose>, SimParams) {
@@ -14,6 +15,16 @@ fn setup() -> (nebula::lod::LodTree, Vec<nebula::math::Pose>, SimParams) {
     params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
     params.pipeline.res_scale = 16;
     (tree, poses, params)
+}
+
+/// Thread counts for the multi-client invariance sweep (mirrors
+/// `it_parallel.rs`; CI re-runs with `NEBULA_PARITY_THREADS=1,2,8`).
+fn parity_threads() -> Vec<usize> {
+    std::env::var("NEBULA_PARITY_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4, 8])
 }
 
 #[test]
@@ -75,6 +86,56 @@ fn ablation_axes_all_contribute() {
     assert!(r_cmp.initial_bytes < r_base.initial_bytes / 3);
     assert!(r_ta.cloud_visits < r_cmp.cloud_visits);
     assert!(r_all.mtp_ms <= r_ta.mtp_ms * 1.001);
+}
+
+#[test]
+fn multiclient_n1_matches_legacy_single_client() {
+    // Tentpole acceptance: the CloudServer with one session and the
+    // default shared-budget config (empty cloud queue, unconstrained
+    // uplink) must reproduce the legacy single-client scheduler's
+    // SimResult FIELD-FOR-FIELD — every metric is a modeled quantity,
+    // so exact equality, not tolerance.
+    let (tree, poses, params) = setup();
+    let legacy = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    let traces = vec![poses];
+    let multi =
+        run_multiclient(&tree, &traces, &Variant::nebula(), &params, &ServerConfig::default());
+    assert_eq!(multi.clients, 1);
+    assert_eq!(multi.per_client[0], legacy, "N=1 server diverged from the legacy scheduler");
+    // Aggregates are consistent with the single session too.
+    assert!(multi.fairness == 1.0, "one client is trivially fair");
+    assert_eq!(multi.uplink_utilization, 0.0, "unconstrained uplink");
+}
+
+#[test]
+fn multiclient_counters_thread_invariant() {
+    // clients = 4 on a shared cloud: every per-client SimResult and
+    // every aggregate must be bitwise identical across thread counts
+    // (mirrors `threaded_simulation_counters_match_serial`, but for the
+    // across-session parallel_map + serial phase-B arbitration).
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    let traces = benchkit::walk_traces(&spec, 24, 4);
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    // Finite shared budgets so the contended paths are exercised too.
+    let server = ServerConfig { cloud_budget: 0.25, uplink_bps: 200e6 };
+
+    params.pipeline.threads = 1;
+    let reference = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+    for t in parity_threads() {
+        params.pipeline.threads = t;
+        let got = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+        assert_eq!(
+            got.per_client, reference.per_client,
+            "per-client results diverged at {t} threads"
+        );
+        assert_eq!(got.aggregate_visits_per_s, reference.aggregate_visits_per_s);
+        assert_eq!(got.cloud_utilization, reference.cloud_utilization);
+        assert_eq!(got.uplink_utilization, reference.uplink_utilization);
+        assert_eq!(got.fairness, reference.fairness);
+    }
 }
 
 #[test]
