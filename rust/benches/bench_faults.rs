@@ -1,0 +1,240 @@
+//! BENCH_faults: the streaming path swept over link loss rate ×
+//! scheduled outage length. Writes `BENCH_faults.json` with a
+//! `"faults"` section: per cell the mean/p99 MTP, bandwidth demand,
+//! lost/retransmitted/abandoned message counts, keyframe resyncs, and
+//! the staleness distribution (mean / p99 / worst recovery span), plus
+//! a `"degraded"` section exercising the multi-client admission-control
+//! and quality-degradation knobs under a mid-run disconnect.
+//!
+//!     cargo bench --bench bench_faults [-- --smoke]
+//!
+//! `--smoke` is the CI canary: a minimal scene and a 2×2 sweep, but
+//! every parity assertion still executes:
+//! * a zero-probability `FaultPlan` (all fault knobs zero, nonzero
+//!   seed) reproduces the faultless baseline field-for-field, with
+//!   all-zero fault counters — the faults-off ≡ pre-fault-API canary;
+//! * the heaviest sweep cell is bitwise identical at 1 and 2 threads;
+//! * every swept cell reports finite p99 MTP and finite staleness
+//!   percentiles (clients recover within the retry/resync budget).
+//!
+//! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
+//! `NEBULA_BENCH_OUT` (output path, default `BENCH_faults.json`).
+
+use nebula::benchkit;
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{run_multiclient, Disconnect, FaultCounters, ServerConfig, Variant};
+use nebula::scene::{dataset, CityGen};
+use nebula::util::bench::bench_header;
+
+struct Row {
+    loss_prob: f64,
+    outage_len_s: f64,
+    mtp_ms: f64,
+    mtp_p99_ms: f64,
+    bandwidth_bps: f64,
+    faults: FaultCounters,
+}
+
+fn main() {
+    bench_header("BENCH_faults", "streaming path under loss x outage sweep");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("smoke mode: minimal scene, 2x2 loss x outage sweep");
+    }
+    let spec = dataset("urban").unwrap();
+    let target = (spec.sim_gaussians / benchkit::bench_scale() / if smoke { 4 } else { 1 })
+        .max(10_000);
+    let tree = CityGen::new(spec.city_params(target)).build();
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    params.pipeline.threads = 1;
+    let frames = if smoke { 24 } else { 96 };
+    let poses = benchkit::walk_trace(&spec, frames);
+    println!("scene: {} Gaussians, {frames}-frame trace", tree.len());
+
+    // --- Parity canary: zero-fault plan == faultless baseline ---------
+    // `params.net` is the pristine default (every fault knob zero); the
+    // second run sets a nonzero seed but leaves all probabilities and
+    // windows zero, so the plan must stay inactive and the results must
+    // match FIELD-FOR-FIELD with all-zero fault counters.
+    let baseline = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    let mut zeroed = params;
+    zeroed.net.fault_seed = 0xDEAD_BEEF;
+    zeroed.net.retry_limit = 7; // retry budget is inert on a clean link
+    let zero_fault = run_simulation(&tree, &poses, &Variant::nebula(), &zeroed);
+    assert_eq!(
+        zero_fault, baseline,
+        "PARITY VIOLATION: zero-probability FaultPlan diverged from the faultless baseline"
+    );
+    assert_eq!(
+        baseline.faults,
+        FaultCounters::default(),
+        "CANARY: faultless run must report all-zero fault counters"
+    );
+    println!("  parity: zero-fault plan == faultless baseline (field-for-field)");
+
+    // --- Loss x outage sweep ------------------------------------------
+    let loss_sweep: Vec<f64> = if smoke { vec![0.0, 0.05] } else { vec![0.0, 0.01, 0.05, 0.15] };
+    let outage_sweep: Vec<f64> = if smoke { vec![0.0, 0.5] } else { vec![0.0, 0.25, 0.5, 1.0] };
+    let mut rows: Vec<Row> = Vec::new();
+    for &loss in &loss_sweep {
+        for &outage in &outage_sweep {
+            let mut p = params;
+            p.net.fault_seed = 7;
+            p.net.loss_prob = loss;
+            p.net.jitter_ms = 2.0;
+            if outage > 0.0 {
+                // Early enough that even the 24-frame smoke trace
+                // (~0.27 s at 90 fps) sends rounds into the window.
+                p.net.outage_start_s = 0.1;
+                p.net.outage_period_s = 2.0;
+                p.net.outage_len_s = outage;
+            }
+            let r = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+            // Recovery canaries: the client must come back within the
+            // retry/resync budget in every cell — finite latency and
+            // staleness percentiles, never NaN/inf.
+            assert!(
+                r.mtp_p99_ms.is_finite(),
+                "CANARY: non-finite p99 MTP at loss={loss} outage={outage}"
+            );
+            assert!(
+                r.faults.staleness_mean_frames.is_finite()
+                    && r.faults.staleness_p99_frames.is_finite(),
+                "CANARY: non-finite staleness at loss={loss} outage={outage}"
+            );
+            assert!(
+                r.faults.recovery_frames_max <= frames as u64,
+                "CANARY: recovery span exceeds the trace at loss={loss} outage={outage}"
+            );
+            println!(
+                "  loss {loss:>4.2} outage {outage:>4.2}s: mtp p99 {:>7.2} ms, \
+                 lost {:>3}, rexmit {:>3}, resync {:>2}, stalls {:>2}, \
+                 stale p99 {:>5.1} f",
+                r.mtp_p99_ms,
+                r.faults.lost_msgs,
+                r.faults.retransmits,
+                r.faults.resyncs,
+                r.faults.stalls,
+                r.faults.staleness_p99_frames
+            );
+            rows.push(Row {
+                loss_prob: loss,
+                outage_len_s: outage,
+                mtp_ms: r.mtp_ms,
+                mtp_p99_ms: r.mtp_p99_ms,
+                bandwidth_bps: r.bandwidth_bps,
+                faults: r.faults,
+            });
+        }
+    }
+    // The heaviest cell must actually have exercised the fault path.
+    let heavy = rows.last().unwrap();
+    assert!(
+        heavy.faults.lost_msgs > 0,
+        "CANARY: heaviest cell (loss={} outage={}s) lost no messages",
+        heavy.loss_prob,
+        heavy.outage_len_s
+    );
+
+    // --- Thread-invariance canary on the heaviest cell ----------------
+    let mut heavy_params = params;
+    heavy_params.net.fault_seed = 7;
+    heavy_params.net.loss_prob = *loss_sweep.last().unwrap();
+    heavy_params.net.jitter_ms = 2.0;
+    heavy_params.net.outage_start_s = 0.1;
+    heavy_params.net.outage_period_s = 2.0;
+    heavy_params.net.outage_len_s = *outage_sweep.last().unwrap();
+    let t1 = run_simulation(&tree, &poses, &Variant::nebula(), &heavy_params);
+    heavy_params.pipeline.threads = 2;
+    let t2 = run_simulation(&tree, &poses, &Variant::nebula(), &heavy_params);
+    assert_eq!(
+        t1, t2,
+        "PARITY VIOLATION: heaviest fault cell diverged between 1 and 2 threads"
+    );
+    println!("  parity: heaviest cell bitwise identical at 1 and 2 threads");
+
+    // --- Multi-client degradation cell --------------------------------
+    // Tight shared budgets + a mid-run disconnect: admission control
+    // sheds, the uplink controller coarsens τ, and the dropped session
+    // resyncs on reconnect — all deterministically countable.
+    let clients = if smoke { 2 } else { 4 };
+    let traces = benchkit::walk_traces(&spec, frames, clients);
+    let mut mp = params;
+    mp.net.fault_seed = 7;
+    mp.net.loss_prob = 0.02;
+    let gap = (frames / 4, frames / 2);
+    let server = ServerConfig {
+        cloud_budget: 0.05,
+        uplink_bps: 50e6,
+        max_cloud_lag_s: 0.05,
+        degrade_lag_s: 0.01,
+        disconnects: vec![Disconnect { session: 0, from_frame: gap.0, to_frame: gap.1 }],
+    };
+    let degraded = run_multiclient(&tree, &traces, &Variant::nebula(), &mp, &server);
+    assert_eq!(
+        degraded.faults.disconnected_frames,
+        (gap.1 - gap.0) as u64,
+        "CANARY: disconnect window not fully accounted"
+    );
+    assert!(
+        degraded.faults.staleness_p99_frames.is_finite(),
+        "CANARY: non-finite staleness in the degraded multi-client cell"
+    );
+    println!(
+        "  degraded {clients}-client cell: shed {}, degraded {}, resyncs {}, \
+         disconnected {} frames, stale p99 {:.1} f",
+        degraded.faults.shed_rounds,
+        degraded.faults.degraded_rounds,
+        degraded.faults.resyncs,
+        degraded.faults.disconnected_frames,
+        degraded.faults.staleness_p99_frames
+    );
+
+    // --- JSON (hand-rolled; serde unavailable offline) -----------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"bench\": \"faults\",\n");
+    j.push_str(&format!(
+        "  \"scene\": {{\"dataset\": \"{}\", \"target_gaussians\": {target}, \"frames\": {frames}}},\n",
+        spec.name
+    ));
+    j.push_str("  \"faults\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"loss_prob\": {:.3}, \"outage_len_s\": {:.3}, \"mtp_ms\": {:.4}, \"mtp_p99_ms\": {:.4}, \"bandwidth_bps\": {:.0}, \"lost_msgs\": {}, \"retransmits\": {}, \"resyncs\": {}, \"stalls\": {}, \"staleness_mean_frames\": {:.4}, \"staleness_p99_frames\": {:.4}, \"recovery_frames_max\": {}}}{}\n",
+            r.loss_prob,
+            r.outage_len_s,
+            r.mtp_ms,
+            r.mtp_p99_ms,
+            r.bandwidth_bps,
+            r.faults.lost_msgs,
+            r.faults.retransmits,
+            r.faults.resyncs,
+            r.faults.stalls,
+            r.faults.staleness_mean_frames,
+            r.faults.staleness_p99_frames,
+            r.faults.recovery_frames_max,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"degraded\": {{\"clients\": {clients}, \"shed_rounds\": {}, \"degraded_rounds\": {}, \"resyncs\": {}, \"stalls\": {}, \"disconnected_frames\": {}, \"staleness_p99_frames\": {:.4}, \"cloud_utilization\": {:.6}, \"uplink_utilization\": {:.6}}}\n",
+        degraded.faults.shed_rounds,
+        degraded.faults.degraded_rounds,
+        degraded.faults.resyncs,
+        degraded.faults.stalls,
+        degraded.faults.disconnected_frames,
+        degraded.faults.staleness_p99_frames,
+        degraded.cloud_utilization,
+        degraded.uplink_utilization
+    ));
+    j.push_str("}\n");
+
+    let out_path =
+        std::env::var("NEBULA_BENCH_OUT").unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    std::fs::write(&out_path, &j).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -65,7 +65,7 @@ fn main() {
     let threads_sweep: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4, 8] };
     // Finite shared budgets so the contended paths are what's measured:
     // one A100-class cloud and a 1 Gbps egress for everyone.
-    let server = ServerConfig { cloud_budget: 1.0, uplink_bps: 1e9 };
+    let server = ServerConfig { cloud_budget: 1.0, uplink_bps: 1e9, ..ServerConfig::default() };
     println!(
         "scene: {} Gaussians, {frames}-frame traces, cloud budget {:.1} A100, uplink 1 Gbps",
         tree.len(),

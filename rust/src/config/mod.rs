@@ -117,6 +117,25 @@ pub struct NetConfig {
     /// (bits/s); `f64::INFINITY` (default) means only per-client links
     /// throttle — the single-client model's assumption.
     pub uplink_bps: f64,
+    /// Per-attempt packet-loss probability on the last-mile link, in
+    /// [0, 1]. 0 (default) = the paper's clean-link assumption.
+    pub loss_prob: f64,
+    /// Extra per-delivery latency, uniform in `[0, jitter_ms)` ms.
+    pub jitter_ms: f64,
+    /// First scheduled outage begins at this simulation time (s).
+    pub outage_start_s: f64,
+    /// Outage repetition period (s); 0 = a single outage at
+    /// `outage_start_s` (when `outage_len_s > 0`).
+    pub outage_period_s: f64,
+    /// Outage duration (s); 0 (default) disables outages.
+    pub outage_len_s: f64,
+    /// Retransmit attempts after a first loss (total sends ≤ 1 + limit).
+    pub retry_limit: u32,
+    /// Sender timeout before retry `a` is `retry_backoff_ms · 2^a`.
+    pub retry_backoff_ms: f64,
+    /// Base seed for the deterministic fault plan (mixed with the
+    /// session id; see `net::faults`).
+    pub fault_seed: u64,
 }
 
 impl Default for NetConfig {
@@ -126,6 +145,14 @@ impl Default for NetConfig {
             latency_ms: 5.0,
             energy_nj_per_byte: 100.0,
             uplink_bps: f64::INFINITY,
+            loss_prob: 0.0,
+            jitter_ms: 0.0,
+            outage_start_s: 0.0,
+            outage_period_s: 0.0,
+            outage_len_s: 0.0,
+            retry_limit: 3,
+            retry_backoff_ms: 25.0,
+            fault_seed: 0,
         }
     }
 }
@@ -156,6 +183,42 @@ impl NetConfig {
             self.uplink_bps > 0.0,
             "net.uplink_bps must be > 0 (got {}; +inf = unconstrained)",
             self.uplink_bps
+        );
+        anyhow::ensure!(
+            self.loss_prob.is_finite() && (0.0..=1.0).contains(&self.loss_prob),
+            "net.loss_prob must be in [0, 1] (got {})",
+            self.loss_prob
+        );
+        anyhow::ensure!(
+            self.jitter_ms.is_finite() && self.jitter_ms >= 0.0,
+            "net.jitter_ms must be finite and >= 0 (got {})",
+            self.jitter_ms
+        );
+        anyhow::ensure!(
+            self.outage_start_s.is_finite() && self.outage_start_s >= 0.0,
+            "net.outage_start_s must be finite and >= 0 (got {})",
+            self.outage_start_s
+        );
+        anyhow::ensure!(
+            self.outage_period_s.is_finite() && self.outage_period_s >= 0.0,
+            "net.outage_period_s must be finite and >= 0 (got {})",
+            self.outage_period_s
+        );
+        anyhow::ensure!(
+            self.outage_len_s.is_finite() && self.outage_len_s >= 0.0,
+            "net.outage_len_s must be finite and >= 0 (got {})",
+            self.outage_len_s
+        );
+        anyhow::ensure!(
+            self.outage_period_s == 0.0 || self.outage_len_s <= self.outage_period_s,
+            "net.outage_len_s ({}) must not exceed net.outage_period_s ({})",
+            self.outage_len_s,
+            self.outage_period_s
+        );
+        anyhow::ensure!(
+            self.retry_backoff_ms.is_finite() && self.retry_backoff_ms >= 0.0,
+            "net.retry_backoff_ms must be finite and >= 0 (got {})",
+            self.retry_backoff_ms
         );
         Ok(())
     }
@@ -202,6 +265,15 @@ impl RunConfig {
         // inf/1e6*1e6 round-trips to inf, so the unconstrained default
         // survives when the flag is absent.
         cfg.net.uplink_bps = args.get_parse_or("uplink-mbps", cfg.net.uplink_bps / 1e6) * 1e6;
+        cfg.net.loss_prob = args.get_parse_or("loss-prob", cfg.net.loss_prob);
+        cfg.net.jitter_ms = args.get_parse_or("jitter-ms", cfg.net.jitter_ms);
+        cfg.net.outage_start_s = args.get_parse_or("outage-start", cfg.net.outage_start_s);
+        cfg.net.outage_period_s = args.get_parse_or("outage-period", cfg.net.outage_period_s);
+        cfg.net.outage_len_s = args.get_parse_or("outage-len", cfg.net.outage_len_s);
+        cfg.net.retry_limit = args.get_parse_or("retry-limit", cfg.net.retry_limit);
+        cfg.net.retry_backoff_ms =
+            args.get_parse_or("retry-backoff-ms", cfg.net.retry_backoff_ms);
+        cfg.net.fault_seed = args.get_parse_or("fault-seed", cfg.net.fault_seed);
         if let Some(a) = args.get("artifacts") {
             cfg.artifacts_dir = a.to_string();
         }
@@ -264,6 +336,23 @@ impl RunConfig {
             cfg.net.latency_ms = s.float_or("latency_ms", cfg.net.latency_ms);
             cfg.net.energy_nj_per_byte = s.float_or("energy_nj_per_byte", cfg.net.energy_nj_per_byte);
             cfg.net.uplink_bps = s.float_or("uplink_bps", cfg.net.uplink_bps);
+            cfg.net.loss_prob = s.float_or("loss_prob", cfg.net.loss_prob);
+            cfg.net.jitter_ms = s.float_or("jitter_ms", cfg.net.jitter_ms);
+            cfg.net.outage_start_s = s.float_or("outage_start_s", cfg.net.outage_start_s);
+            cfg.net.outage_period_s = s.float_or("outage_period_s", cfg.net.outage_period_s);
+            cfg.net.outage_len_s = s.float_or("outage_len_s", cfg.net.outage_len_s);
+            // Type-range check at parse time, like pipeline.clients: a
+            // retry count that cannot fit u32 must not `as`-wrap.
+            let retries = s.int_or("retry_limit", cfg.net.retry_limit as i64);
+            anyhow::ensure!(
+                (0..=u32::MAX as i64).contains(&retries),
+                "net.retry_limit does not fit in u32 (got {retries})"
+            );
+            cfg.net.retry_limit = retries as u32;
+            cfg.net.retry_backoff_ms = s.float_or("retry_backoff_ms", cfg.net.retry_backoff_ms);
+            // Seeds are raw 64-bit material: negative TOML integers wrap
+            // to the corresponding u64 bit pattern.
+            cfg.net.fault_seed = s.int_or("fault_seed", cfg.net.fault_seed as i64) as u64;
         }
         if let Some(s) = doc.section("run") {
             cfg.frames = s.int_or("frames", cfg.frames as i64) as u32;
@@ -355,6 +444,60 @@ mod tests {
         assert_eq!(cfg.pipeline.clients, 16);
         assert_eq!(cfg.pipeline.cloud_budget, 0.5);
         assert_eq!(cfg.net.uplink_bps, 400e6);
+    }
+
+    #[test]
+    fn degenerate_fault_knobs_rejected_with_key_names() {
+        // Each new fault key fails with its own name, from both inputs.
+        for (text, key) in [
+            ("[net]\nloss_prob = 1.5\n", "net.loss_prob"),
+            ("[net]\nloss_prob = -0.1\n", "net.loss_prob"),
+            ("[net]\nloss_prob = nan\n", "net.loss_prob"),
+            ("[net]\njitter_ms = -1\n", "net.jitter_ms"),
+            ("[net]\noutage_start_s = -2\n", "net.outage_start_s"),
+            ("[net]\noutage_period_s = -1\n", "net.outage_period_s"),
+            ("[net]\noutage_len_s = -0.5\n", "net.outage_len_s"),
+            ("[net]\noutage_period_s = 1.0\noutage_len_s = 2.0\n", "net.outage_len_s"),
+            ("[net]\nretry_limit = -1\n", "net.retry_limit"),
+            ("[net]\nretry_limit = 99999999999\n", "net.retry_limit"),
+            ("[net]\nretry_backoff_ms = -5\n", "net.retry_backoff_ms"),
+        ] {
+            let err = RunConfig::from_toml(text).unwrap_err();
+            assert!(err.to_string().contains(key), "{text:?}: {err}");
+        }
+        let args = Args::parse(["--loss-prob", "2.0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.loss_prob"), "{err}");
+        let args = Args::parse(["--jitter-ms", "-1"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.jitter_ms"), "{err}");
+        let args = Args::parse(["--outage-len", "-1"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.outage_len_s"), "{err}");
+
+        // Valid boundary/typical values pass through both inputs.
+        let cfg = RunConfig::from_toml(
+            "[net]\nloss_prob = 0.05\njitter_ms = 2.0\noutage_start_s = 1.0\n\
+             outage_period_s = 10.0\noutage_len_s = 0.5\nretry_limit = 5\n\
+             retry_backoff_ms = 10.0\nfault_seed = 99\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.net.loss_prob, 0.05);
+        assert_eq!(cfg.net.jitter_ms, 2.0);
+        assert_eq!(cfg.net.outage_len_s, 0.5);
+        assert_eq!(cfg.net.retry_limit, 5);
+        assert_eq!(cfg.net.fault_seed, 99);
+        let args = Args::parse(
+            ["--loss-prob", "0.05", "--fault-seed", "1234", "--retry-limit", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.net.loss_prob, 0.05);
+        assert_eq!(cfg.net.fault_seed, 1234);
+        assert_eq!(cfg.net.retry_limit, 2);
+        // Defaults stay faultless: the plan built from them is inactive.
+        assert!(!crate::net::FaultPlan::from_net(&NetConfig::default(), 0).is_active());
     }
 
     #[test]

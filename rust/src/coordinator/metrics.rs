@@ -63,6 +63,55 @@ impl Variant {
     }
 }
 
+/// Fault / degradation counters for one session (or, summed, a whole
+/// multi-client run). Every field is an exact simulation-clock quantity
+/// — bitwise thread-invariant, and all-zero (floats 0.0, never NaN) for
+/// a faultless run so exact-equality parity tests stay valid.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Individual transmission attempts killed by loss or an outage.
+    pub lost_msgs: u64,
+    /// Retransmission attempts (sends beyond the first, per message).
+    pub retransmits: u64,
+    /// Keyframe resyncs published (full-cut re-publishes).
+    pub resyncs: u64,
+    /// Rounds abandoned after exhausting the retry budget (incl. rounds
+    /// shed by cloud admission control and rounds dropped mid-flight by
+    /// a disconnect).
+    pub stalls: u64,
+    /// Rounds shed by the cloud's admission control (subset of stalls).
+    pub shed_rounds: u64,
+    /// Rounds issued at degraded quality (coarsened τ) under uplink
+    /// pressure.
+    pub degraded_rounds: u64,
+    /// Frames skipped while the session was disconnected.
+    pub disconnected_frames: u64,
+    /// Mean frames-since-last-applied-round over the trace.
+    pub staleness_mean_frames: f64,
+    /// 99th-percentile staleness (frames).
+    pub staleness_p99_frames: f64,
+    /// Longest stall-to-recovery span (frames from the first abandoned /
+    /// shed / disconnected round to the next applied one).
+    pub recovery_frames_max: u64,
+}
+
+impl FaultCounters {
+    /// Accumulate another session's counters (staleness fields combine
+    /// as mean-of-means / max — finalized by the caller).
+    pub fn absorb(&mut self, other: &FaultCounters) {
+        self.lost_msgs += other.lost_msgs;
+        self.retransmits += other.retransmits;
+        self.resyncs += other.resyncs;
+        self.stalls += other.stalls;
+        self.shed_rounds += other.shed_rounds;
+        self.degraded_rounds += other.degraded_rounds;
+        self.disconnected_frames += other.disconnected_frames;
+        self.staleness_mean_frames += other.staleness_mean_frames;
+        self.staleness_p99_frames = self.staleness_p99_frames.max(other.staleness_p99_frames);
+        self.recovery_frames_max = self.recovery_frames_max.max(other.recovery_frames_max);
+    }
+}
+
 /// Aggregated simulation output.
 ///
 /// Every field is derived from modeled (simulation-clock) quantities,
@@ -108,6 +157,8 @@ pub struct SimResult {
     /// Right-eye PSNR of the last frame vs the shared-preprocess
     /// reference (quality tracking; 99 = bit-accurate).
     pub right_psnr_db: f64,
+    /// Link-fault and degradation accounting (all-zero on a clean link).
+    pub faults: FaultCounters,
 }
 
 impl SimResult {

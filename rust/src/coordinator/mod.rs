@@ -22,9 +22,9 @@ pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use metrics::{SimResult, Variant};
+pub use metrics::{FaultCounters, SimResult, Variant};
 pub use scheduler::{run_simulation, SimParams};
-pub use server::{run_multiclient, CloudServer, MulticlientResult, ServerConfig, Session};
+pub use server::{run_multiclient, CloudServer, Disconnect, MulticlientResult, ServerConfig, Session};
 
 use crate::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
 use crate::lod::LodTree;

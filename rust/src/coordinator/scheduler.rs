@@ -11,13 +11,14 @@
 //! LoD queries always use full-resolution optics (f_x, τ*), so cut sizes
 //! and bandwidth are full-scale quantities.
 
-use super::metrics::{PlatformKind, SimResult, Variant};
+use super::metrics::{FaultCounters, PlatformKind, SimResult, Variant};
 use crate::config::{NetConfig, PipelineConfig};
 use crate::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, Platform};
 use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
 use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
 use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
+use crate::net::faults::{FaultPlan, FaultyLink, Transmit};
 use crate::render::engine::Parallelism;
 use crate::render::raster::RasterConfig;
 use crate::render::stereo::{render_stereo, render_right_naive, StereoMode};
@@ -113,7 +114,11 @@ pub fn run_simulation(
         pl.reuse_threshold,
     )
     .expect("scene init");
-    let mut link = SimLink::from_config(&params.net);
+    // Last-mile link with the (possibly inactive) fault plan layered on
+    // top. Session id 0: the single-client scheduler IS session 0 of the
+    // multi-client server, and their fault draws must agree for the N=1
+    // parity property to keep holding under faults.
+    let mut link = FaultyLink::new(SimLink::from_config(&params.net), FaultPlan::from_net(&params.net, 0));
     let platform = make_platform(variant.platform, tile);
 
     // --- Prefetch round 0 (initial scene load, off the trace clock) ----
@@ -147,6 +152,21 @@ pub fn run_simulation(
     let mut delivered_bytes_sum = 0u64;
     let mut peak_client = client.store.len();
     let mut right_psnr = 99.0f64;
+    // --- Fault / degradation state -------------------------------------
+    // Next published round must be a keyframe (the delta base is gone:
+    // a round exhausted its retry budget).
+    let mut needs_keyframe = false;
+    // Per-frame staleness: frames since the last applied round (round 0
+    // counts as applied at frame 0). The client keeps re-rendering the
+    // last good cut while stale — degrading, never stalling the display.
+    let mut staleness: Vec<f64> = Vec::with_capacity(poses.len());
+    let mut last_apply = 0usize;
+    // First frame of the current outage-of-service (an abandoned round),
+    // for the recovery-span metric.
+    let mut stall_start: Option<usize> = None;
+    let mut resyncs = 0u64;
+    let mut stalls = 0u64;
+    let mut recovery_max = 0u64;
 
     let frames = poses.len();
     for (i, pose) in poses.iter().enumerate() {
@@ -160,11 +180,16 @@ pub fn run_simulation(
                 decoded_this_frame = msg.payload.count as u64;
                 delivered_bytes = msg.wire_bytes() as u64;
                 client.apply(&msg).expect("apply round");
+                last_apply = i;
+                if let Some(s0) = stall_start.take() {
+                    recovery_max = recovery_max.max((i - s0) as u64);
+                }
             } else {
                 pending = Some((arrival, msg));
             }
         }
         delivered_bytes_sum += delivered_bytes;
+        staleness.push((i - last_apply) as f64);
 
         // Cloud round every w frames (if the previous one was delivered).
         if i % lod_interval == 0 && i > 0 && pending.is_none() {
@@ -172,15 +197,32 @@ pub fn run_simulation(
             let cut = search(&mut temporal, &mut streaming, &q);
             visits_sum += cut.nodes_visited;
             rounds += 1;
-            let msg = cloud.publish_cut(&cut.nodes);
+            let msg = if needs_keyframe {
+                resyncs += 1;
+                cloud.publish_keyframe(&cut.nodes)
+            } else {
+                cloud.publish_cut(&cut.nodes)
+            };
             delta_sum += msg.payload.count as u64;
             let bytes = msg.wire_bytes() as u64;
             streamed_bytes += bytes;
             let cloud_done = t_frame
                 + cut.nodes_visited as f64 / CLOUD_VISITS_PER_S
                 + bytes as f64 / CLOUD_COMPRESS_BPS;
-            let arrival = link.send(cloud_done, bytes);
-            pending = Some((arrival, msg));
+            match link.transmit(cloud_done, bytes, msg.seq) {
+                Transmit::Delivered { arrival, .. } => {
+                    needs_keyframe = false;
+                    pending = Some((arrival, msg));
+                }
+                Transmit::Abandoned { .. } => {
+                    // Retry budget exhausted: the round is gone; re-base
+                    // the stream at the next opportunity and keep
+                    // rendering the last good cut meanwhile.
+                    stalls += 1;
+                    needs_keyframe = true;
+                    stall_start.get_or_insert(i);
+                }
+            }
         }
         peak_client = peak_client.max(client.store.len());
 
@@ -247,6 +289,24 @@ pub fn run_simulation(
     // total_cmp: NaN-safe (degenerate runs, e.g. fps == 0, produce NaN
     // samples — the same panic pattern PR 3 purged from the splat sort).
     sorted_mtp.sort_by(f64::total_cmp);
+    let mut sorted_staleness = staleness.clone();
+    sorted_staleness.sort_by(f64::total_cmp);
+    let faults = FaultCounters {
+        lost_msgs: link.stats.lost,
+        retransmits: link.stats.retransmits,
+        resyncs,
+        stalls,
+        shed_rounds: 0,
+        degraded_rounds: 0,
+        disconnected_frames: 0,
+        staleness_mean_frames: staleness.iter().sum::<f64>() / frames.max(1) as f64,
+        staleness_p99_frames: if staleness.is_empty() {
+            0.0
+        } else {
+            percentile(&sorted_staleness, 0.99)
+        },
+        recovery_frames_max: recovery_max,
+    };
     let trace_seconds = frames as f64 * vsync;
     SimResult {
         variant: variant.name.clone(),
@@ -265,6 +325,7 @@ pub fn run_simulation(
         delta_gaussians: delta_sum as f64 / rounds as f64,
         peak_client_gaussians: peak_client,
         right_psnr_db: right_psnr,
+        faults,
     }
 }
 
@@ -315,6 +376,7 @@ pub fn run_remote_simulation(
         delta_gaussians: 0.0,
         peak_client_gaussians: 0,
         right_psnr_db: quality.psnr_db(),
+        faults: FaultCounters::default(),
     }
 }
 

@@ -8,7 +8,9 @@
 //! * [`Session`] — everything one client owns: its pose trace, its
 //!   LoD-search state (temporal or streaming, per the variant), its
 //!   [`CloudEndpoint`]/[`ClientEndpoint`] pair (management table, codec,
-//!   store), its last-mile [`SimLink`], and its metric accumulators.
+//!   store), its last-mile [`FaultyLink`] (a [`SimLink`] wrapped in the
+//!   seeded fault injector, inert by default), and its metric
+//!   accumulators.
 //! * [`CloudServer`] — steps every session frame-by-frame on a common
 //!   vsync clock and owns the SHARED resources:
 //!   - **cloud compute budget**: each round's LoD-search + compression
@@ -24,6 +26,24 @@
 //!     averaging `uplink_bps · vsync / 8` bytes per vsync) — before
 //!     entering the per-client link.
 //!
+//! # Graceful degradation (paper §6's loss-tolerant streaming)
+//!
+//! Under saturation or faults the server degrades instead of stalling:
+//! * **admission control** ([`ServerConfig::max_cloud_lag_s`]) sheds
+//!   rounds the backlogged cloud could only serve late — the client
+//!   keeps re-rendering its last good cut (staleness is measured, not
+//!   hidden) and resyncs via a keyframe;
+//! * **quality degradation** ([`ServerConfig::degrade_lag_s`]) coarsens
+//!   a session's LoD threshold τ (×2 steps, ≤ 8×) while its rounds
+//!   queue too long on the shared uplink, relaxing back once it drains;
+//! * **disconnect/reconnect** ([`ServerConfig::disconnects`]) drops a
+//!   session mid-run — in-flight rounds die, its budget share is
+//!   reclaimed by the others — and resyncs it on return.
+//!
+//! All of it is deterministic (seeded per-message fault draws, serial
+//! phase-B decisions), so the fault suite pins results bitwise across
+//! thread counts.
+//!
 //! # Determinism discipline
 //!
 //! Sessions are stepped via [`parallel_map`] with the repo's
@@ -38,7 +58,7 @@
 //! unconstrained uplink forwards at the exact departure time. Both
 //! properties are pinned by `tests/it_scheduler.rs`.
 
-use super::metrics::{SimResult, Variant};
+use super::metrics::{FaultCounters, SimResult, Variant};
 use super::scheduler::{
     make_platform, percentile, SimParams, CLOUD_COMPRESS_BPS, CLOUD_VISITS_PER_S, DECODE_RATE,
 };
@@ -49,6 +69,7 @@ use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
 use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
 use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
+use crate::net::faults::{FaultPlan, FaultyLink, Transmit};
 use crate::render::engine::{parallel_map, Parallelism};
 use crate::render::raster::RasterConfig;
 use crate::render::stereo::{render_right_naive, render_stereo, StereoMode};
@@ -58,7 +79,7 @@ use crate::render::{preprocess_records, render_mono};
 /// is NOT a field here: it is always the number of pose traces handed
 /// to [`CloudServer::new`] (the `--clients` knob lives in
 /// `PipelineConfig` and sizes the trace set at the call site).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     /// Cloud compute budget in A100-equivalents: scales both the
     /// LoD-search visit rate and the compression rate that ALL sessions'
@@ -71,24 +92,61 @@ pub struct ServerConfig {
     /// only the per-client links throttle, which is the single-client
     /// model's assumption.
     pub uplink_bps: f64,
+    /// Admission control: a round arriving while the shared cloud
+    /// pipeline is backlogged more than this many seconds behind the
+    /// frame clock is SHED (not computed, not sent — the budget it would
+    /// have burned stays available), and the session recovers through
+    /// the keyframe-resync path like any lost round. `f64::INFINITY`
+    /// (the default) disables shedding — the pre-admission behavior
+    /// where MTP can grow without bound under saturation.
+    pub max_cloud_lag_s: f64,
+    /// Per-session quality degradation: when a round's uplink queueing
+    /// delay exceeds this, the session's LoD threshold τ is coarsened
+    /// (×2, capped at 8× nominal) for subsequent rounds — smaller cuts,
+    /// fewer bytes; it relaxes back (÷2) once the queue drains.
+    /// `f64::INFINITY` (the default) disables degradation.
+    pub degrade_lag_s: f64,
+    /// Scheduled mid-run disconnects: while a window is active the
+    /// session renders nothing, issues no rounds (its shares of the
+    /// cloud/uplink budgets are reclaimed by the other sessions), and
+    /// any in-flight round dies; on reconnect it resyncs via keyframe.
+    pub disconnects: Vec<Disconnect>,
+}
+
+/// One scheduled disconnect window: session `session` is offline for
+/// frames `from_frame..to_frame` (half-open).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnect {
+    pub session: usize,
+    pub from_frame: usize,
+    pub to_frame: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { cloud_budget: 1.0, uplink_bps: f64::INFINITY }
+        Self {
+            cloud_budget: 1.0,
+            uplink_bps: f64::INFINITY,
+            max_cloud_lag_s: f64::INFINITY,
+            degrade_lag_s: f64::INFINITY,
+            disconnects: Vec::new(),
+        }
     }
 }
 
 impl ServerConfig {
     /// Build from the config/CLI knobs (`--cloud-budget`,
-    /// `--uplink-mbps`).
+    /// `--uplink-mbps`). Admission/degradation/disconnects stay at their
+    /// inert defaults — they are programmatic knobs (`bench_faults`,
+    /// tests) until they grow config keys.
     pub fn from_run(pl: &PipelineConfig, net: &crate::config::NetConfig) -> Self {
-        Self { cloud_budget: pl.cloud_budget, uplink_bps: net.uplink_bps }
+        Self { cloud_budget: pl.cloud_budget, uplink_bps: net.uplink_bps, ..Self::default() }
     }
 }
 
-/// Aggregate output of a multi-client run.
-#[derive(Debug, Clone)]
+/// Aggregate output of a multi-client run. `PartialEq` is exact — the
+/// thread-invariance suite compares whole results bitwise.
+#[derive(Debug, Clone, PartialEq)]
 pub struct MulticlientResult {
     pub clients: usize,
     /// Per-session results, in session-id order; with `clients = 1` and
@@ -108,6 +166,10 @@ pub struct MulticlientResult {
     /// Fairness: max/mean of the per-client mean MTP (1.0 = perfectly
     /// fair; grows as cloud/uplink contention starves some sessions).
     pub fairness: f64,
+    /// Fault/degradation counters summed over all sessions (staleness
+    /// fields are mean-of-means / max-of-p99s). All-zero when faults,
+    /// admission control and disconnects are disabled.
+    pub faults: FaultCounters,
 }
 
 /// A round published in phase A, awaiting shared-cloud timing (phase B).
@@ -141,10 +203,17 @@ pub struct Session<'t> {
     streaming: StreamingSearch,
     cloud: CloudEndpoint<'t>,
     client: ClientEndpoint,
-    link: SimLink,
+    link: FaultyLink,
     platform: Box<dyn Platform + Send + Sync>,
     pending: Option<(f64, RoundMsg)>,
     request: Option<RoundRequest>,
+    /// Disconnect windows owned by this session, as half-open frame
+    /// ranges (from [`ServerConfig::disconnects`]).
+    offline: Vec<(usize, usize)>,
+    /// τ multiplier driven by the uplink-pressure controller (1.0 =
+    /// nominal quality; ×1.0 is bitwise-neutral so faultless parity
+    /// holds).
+    tau_scale: f64,
     // --- metric accumulators (mirror run_simulation's locals) ---------
     mtp: Vec<f64>,
     render_s_sum: f64,
@@ -158,6 +227,17 @@ pub struct Session<'t> {
     initial_bytes: u64,
     peak_client: usize,
     right_psnr: f64,
+    // --- fault / degradation accumulators ------------------------------
+    needs_keyframe: bool,
+    staleness: Vec<f64>,
+    last_apply: usize,
+    stall_start: Option<usize>,
+    resyncs: u64,
+    stalls: u64,
+    shed: u64,
+    degraded: u64,
+    disconnected: u64,
+    recovery_max: u64,
 }
 
 impl<'t> Session<'t> {
@@ -173,6 +253,7 @@ impl<'t> Session<'t> {
         variant: &Variant,
         params: &SimParams,
         codec: DeltaCodec,
+        offline: Vec<(usize, usize)>,
     ) -> Self {
         assert!(!poses.is_empty(), "session {id}: empty pose trace");
         let pl = &params.pipeline;
@@ -205,10 +286,16 @@ impl<'t> Session<'t> {
             streaming,
             cloud,
             client,
-            link: SimLink::from_config(&params.net),
+            // Session ids seed independent per-message fault streams.
+            link: FaultyLink::new(
+                SimLink::from_config(&params.net),
+                FaultPlan::from_net(&params.net, id as u64),
+            ),
             platform: make_platform(variant.platform, pl.tile.max(1)),
             pending: None,
             request: None,
+            offline,
+            tau_scale: 1.0,
             mtp: Vec::with_capacity(poses.len()),
             render_s_sum: 0.0,
             energy_sum: 0.0,
@@ -221,8 +308,23 @@ impl<'t> Session<'t> {
             initial_bytes,
             peak_client,
             right_psnr: 99.0,
+            needs_keyframe: false,
+            staleness: Vec::with_capacity(poses.len()),
+            last_apply: 0,
+            stall_start: None,
+            resyncs: 0,
+            stalls: 0,
+            shed: 0,
+            degraded: 0,
+            disconnected: 0,
+            recovery_max: 0,
             poses,
         }
+    }
+
+    /// Is the session inside a scheduled disconnect window at frame `i`?
+    fn is_offline(&self, i: usize) -> bool {
+        self.offline.iter().any(|&(from, to)| (from..to).contains(&i))
     }
 
     /// Frames this session's trace spans.
@@ -240,6 +342,21 @@ impl<'t> Session<'t> {
             return;
         }
         debug_assert!(self.request.is_none(), "phase B must drain requests");
+        if self.is_offline(i) {
+            // Disconnected: no render, no round, no MTP/staleness sample.
+            // An in-flight round dies with the connection; the session
+            // will resync via keyframe once it is back. The rounds it
+            // does NOT issue here are the reclaimed budget — phase B
+            // simply has nothing of ours to charge.
+            self.disconnected += 1;
+            if self.pending.take().is_some() {
+                self.link.stats.lost += 1;
+                self.stalls += 1;
+            }
+            self.needs_keyframe = true;
+            self.stall_start.get_or_insert(i);
+            return;
+        }
         let pose = self.poses[i];
         let t_frame = i as f64 * ctx.vsync;
         let mut decoded_this_frame = 0u64;
@@ -249,16 +366,27 @@ impl<'t> Session<'t> {
             if arrival <= t_frame {
                 decoded_this_frame = msg.payload.count as u64;
                 delivered_bytes = msg.wire_bytes() as u64;
+                // Never fails under the single-round-in-flight invariant:
+                // sequence gaps only arise from losses, which force the
+                // next publish to be a gap-tolerant keyframe.
                 self.client.apply(&msg).expect("apply round");
+                self.last_apply = i;
+                if let Some(s0) = self.stall_start.take() {
+                    self.recovery_max = self.recovery_max.max((i - s0) as u64);
+                }
             } else {
                 self.pending = Some((arrival, msg));
             }
         }
         self.delivered_bytes_sum += delivered_bytes;
+        self.staleness.push((i - self.last_apply) as f64);
 
         if i % ctx.lod_interval == 0 && i > 0 && self.pending.is_none() {
-            let q =
-                LodQuery::new(pose.position, ctx.full_intr.fx, ctx.pl.tau_px, ctx.full_intr.near);
+            // Degraded quality coarsens τ (tau_scale > 1 ⇒ shallower cut,
+            // fewer bytes); ×1.0 is exact so the faultless path is
+            // untouched.
+            let tau = (ctx.pl.tau_px as f64 * self.tau_scale) as f32;
+            let q = LodQuery::new(pose.position, ctx.full_intr.fx, tau, ctx.full_intr.near);
             let cut = if self.variant.temporal {
                 self.temporal.search(self.cloud.tree, &q)
             } else {
@@ -266,7 +394,15 @@ impl<'t> Session<'t> {
             };
             self.visits_sum += cut.nodes_visited;
             self.rounds += 1;
-            let msg = self.cloud.publish_cut(&cut.nodes);
+            if self.tau_scale > 1.0 {
+                self.degraded += 1;
+            }
+            let msg = if self.needs_keyframe {
+                self.resyncs += 1;
+                self.cloud.publish_keyframe(&cut.nodes)
+            } else {
+                self.cloud.publish_cut(&cut.nodes)
+            };
             self.delta_sum += msg.payload.count as u64;
             let bytes = msg.wire_bytes() as u64;
             self.streamed_bytes += bytes;
@@ -338,29 +474,53 @@ impl<'t> Session<'t> {
     }
 
     /// Fold the accumulators into a [`SimResult`] (the single-client
-    /// scheduler's aggregation, verbatim).
+    /// scheduler's aggregation, verbatim). Per-frame means divide by the
+    /// frames the session actually RENDERED (`mtp.len()`): equal to the
+    /// trace length when never disconnected, so the faultless path is
+    /// untouched, and offline frames don't dilute the averages.
     fn finish(self, vsync: f64) -> SimResult {
         let frames = self.poses.len();
+        let rendered = self.mtp.len();
         let mut sorted_mtp = self.mtp.clone();
         sorted_mtp.sort_by(f64::total_cmp);
+        let mut sorted_staleness = self.staleness.clone();
+        sorted_staleness.sort_by(f64::total_cmp);
         let trace_seconds = frames as f64 * vsync;
+        let faults = FaultCounters {
+            lost_msgs: self.link.stats.lost,
+            retransmits: self.link.stats.retransmits,
+            resyncs: self.resyncs,
+            stalls: self.stalls,
+            shed_rounds: self.shed,
+            degraded_rounds: self.degraded,
+            disconnected_frames: self.disconnected,
+            staleness_mean_frames: self.staleness.iter().sum::<f64>()
+                / self.staleness.len().max(1) as f64,
+            staleness_p99_frames: if sorted_staleness.is_empty() {
+                0.0
+            } else {
+                percentile(&sorted_staleness, 0.99)
+            },
+            recovery_frames_max: self.recovery_max,
+        };
         SimResult {
             variant: self.variant.name.clone(),
             frames: frames as u32,
-            mtp_ms: self.mtp.iter().sum::<f64>() / frames as f64,
+            mtp_ms: self.mtp.iter().sum::<f64>() / rendered as f64,
             mtp_p99_ms: percentile(&sorted_mtp, 0.99),
-            fps: frames as f64 / self.render_s_sum,
-            render_s: self.render_s_sum / frames as f64,
+            fps: rendered as f64 / self.render_s_sum,
+            render_s: self.render_s_sum / rendered as f64,
             wire_bytes: self.streamed_bytes,
             initial_bytes: self.initial_bytes,
             bandwidth_bps: self.streamed_bytes as f64 * 8.0 / trace_seconds,
-            client_energy_j: self.energy_sum / frames as f64,
+            client_energy_j: self.energy_sum / rendered as f64,
             wireless_j: self.wireless_sum,
             delivered_bytes: self.delivered_bytes_sum,
             cloud_visits: self.visits_sum as f64 / self.rounds.max(1) as f64,
             delta_gaussians: self.delta_sum as f64 / self.rounds as f64,
             peak_client_gaussians: self.peak_client,
             right_psnr_db: self.right_psnr,
+            faults,
         }
     }
 }
@@ -402,6 +562,31 @@ impl<'t> CloudServer<'t> {
             "uplink_bps must be > 0 (got {}; +inf = unconstrained)",
             cfg.uplink_bps
         );
+        assert!(
+            cfg.max_cloud_lag_s > 0.0 && !cfg.max_cloud_lag_s.is_nan(),
+            "max_cloud_lag_s must be > 0 (got {}; +inf = no shedding)",
+            cfg.max_cloud_lag_s
+        );
+        assert!(
+            cfg.degrade_lag_s > 0.0 && !cfg.degrade_lag_s.is_nan(),
+            "degrade_lag_s must be > 0 (got {}; +inf = no degradation)",
+            cfg.degrade_lag_s
+        );
+        for d in &cfg.disconnects {
+            assert!(
+                d.session < traces.len(),
+                "disconnect names session {} but only {} clients exist",
+                d.session,
+                traces.len()
+            );
+            assert!(
+                d.from_frame < d.to_frame,
+                "disconnect window [{}, {}) for session {} is empty",
+                d.from_frame,
+                d.to_frame,
+                d.session
+            );
+        }
         let pl = &params.pipeline;
         let full_intr = Intrinsics::vr_eye();
         let intr = Intrinsics::vr_eye_scaled(pl.res_scale.max(1));
@@ -435,11 +620,17 @@ impl<'t> CloudServer<'t> {
         let owned: Vec<(usize, Vec<Pose>)> =
             traces.iter().cloned().enumerate().collect();
         let sessions = parallel_map(owned, par, |_, (id, poses)| {
-            Session::new(id, tree, poses, variant, params, codec.clone())
+            let offline: Vec<(usize, usize)> = cfg
+                .disconnects
+                .iter()
+                .filter(|d| d.session == id)
+                .map(|d| (d.from_frame, d.to_frame))
+                .collect();
+            Session::new(id, tree, poses, variant, params, codec.clone(), offline)
         });
         Self {
             sessions,
-            cfg: *cfg,
+            cfg: cfg.clone(),
             par,
             ctx,
             cloud_busy_until: 0.0,
@@ -467,6 +658,18 @@ impl<'t> CloudServer<'t> {
             // order (deterministic regardless of phase A's thread count).
             for s in self.sessions.iter_mut() {
                 if let Some(req) = s.request.take() {
+                    // Admission control: shed instead of queueing once the
+                    // shared pipeline is too far behind the frame clock
+                    // (the round was published in phase A, so the session
+                    // recovers exactly like a lost round: keyframe next).
+                    let backlog = (self.cloud_busy_until - t_frame).max(0.0);
+                    if backlog > self.cfg.max_cloud_lag_s {
+                        s.shed += 1;
+                        s.stalls += 1;
+                        s.needs_keyframe = true;
+                        s.stall_start.get_or_insert(i);
+                        continue;
+                    }
                     let start = t_frame.max(self.cloud_busy_until);
                     let done = start
                         + req.visits as f64 / (self.cfg.cloud_budget * CLOUD_VISITS_PER_S)
@@ -474,8 +677,27 @@ impl<'t> CloudServer<'t> {
                     self.cloud_busy_s += done - start;
                     self.cloud_busy_until = done;
                     let released = self.uplink.send(done, req.bytes);
-                    let arrival = s.link.send(released, req.bytes);
-                    s.pending = Some((arrival, req.msg));
+                    // Quality controller: uplink queueing beyond the
+                    // budget coarsens the session's τ for FUTURE rounds
+                    // (read in the next phase A); it halves back toward
+                    // nominal as the queue drains. Pure per-session
+                    // state, serial order ⇒ thread-invariant.
+                    if released - done > self.cfg.degrade_lag_s {
+                        s.tau_scale = (s.tau_scale * 2.0).min(8.0);
+                    } else if s.tau_scale > 1.0 {
+                        s.tau_scale = (s.tau_scale * 0.5).max(1.0);
+                    }
+                    match s.link.transmit(released, req.bytes, req.msg.seq) {
+                        Transmit::Delivered { arrival, .. } => {
+                            s.needs_keyframe = false;
+                            s.pending = Some((arrival, req.msg));
+                        }
+                        Transmit::Abandoned { .. } => {
+                            s.stalls += 1;
+                            s.needs_keyframe = true;
+                            s.stall_start.get_or_insert(i);
+                        }
+                    }
                 }
             }
         }
@@ -489,6 +711,11 @@ impl<'t> CloudServer<'t> {
         let mean_mtp: Vec<f64> = per_client.iter().map(|r| r.mtp_ms).collect();
         let mean = mean_mtp.iter().sum::<f64>() / mean_mtp.len().max(1) as f64;
         let max = mean_mtp.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut faults = FaultCounters::default();
+        for c in &per_client {
+            faults.absorb(&c.faults);
+        }
+        faults.staleness_mean_frames /= per_client.len().max(1) as f64;
         MulticlientResult {
             clients: per_client.len(),
             aggregate_visits_per_s: if trace_seconds > 0.0 {
@@ -507,6 +734,7 @@ impl<'t> CloudServer<'t> {
                 0.0
             },
             fairness: if mean > 0.0 { max / mean } else { 1.0 },
+            faults,
             per_client,
         }
     }
@@ -624,6 +852,107 @@ mod tests {
             assert!(r.uplink_utilization > 0.0);
         }
         assert!(r.fairness >= 1.0, "fairness is max/mean, bounded below by 1");
+    }
+
+    #[test]
+    fn admission_control_sheds_rounds_under_saturation() {
+        // A starved cloud with a lag cap must shed rounds (counted per
+        // session) and burn less cloud time than the uncapped run,
+        // because shed rounds never queue compute.
+        let (tree, traces) = small_world(4, 24);
+        let p = fast_params();
+        let starved = ServerConfig { cloud_budget: 1e-4, ..ServerConfig::default() };
+        let uncapped = run_multiclient(&tree, &traces, &Variant::nebula(), &p, &starved);
+        let capped = run_multiclient(
+            &tree,
+            &traces,
+            &Variant::nebula(),
+            &p,
+            &ServerConfig { max_cloud_lag_s: 0.05, ..starved },
+        );
+        assert_eq!(uncapped.faults.shed_rounds, 0, "no cap ⇒ no shedding");
+        assert!(capped.faults.shed_rounds > 0, "0.05 s cap on a 1e-4 cloud must shed");
+        assert_eq!(
+            capped.faults.shed_rounds, capped.faults.stalls,
+            "every stall here is a shed round (no link faults configured)"
+        );
+        assert!(capped.faults.resyncs > 0, "shed sessions recover via keyframes");
+        assert!(
+            capped.cloud_utilization < uncapped.cloud_utilization,
+            "shed rounds must not charge the cloud: capped {} vs uncapped {}",
+            capped.cloud_utilization,
+            uncapped.cloud_utilization
+        );
+        for c in &capped.per_client {
+            assert!(c.faults.staleness_p99_frames.is_finite());
+        }
+    }
+
+    #[test]
+    fn uplink_pressure_degrades_quality_then_recovers_bytes() {
+        // A severely constrained uplink with a tight degrade budget must
+        // coarsen τ (degraded rounds counted) and stream fewer bytes
+        // than the same uplink without degradation.
+        let (tree, traces) = small_world(4, 24);
+        let p = fast_params();
+        let tight = ServerConfig { uplink_bps: 2e6, ..ServerConfig::default() };
+        let plain = run_multiclient(&tree, &traces, &Variant::nebula(), &p, &tight);
+        let degraded = run_multiclient(
+            &tree,
+            &traces,
+            &Variant::nebula(),
+            &p,
+            &ServerConfig { degrade_lag_s: 0.01, ..tight },
+        );
+        assert_eq!(plain.faults.degraded_rounds, 0);
+        assert!(degraded.faults.degraded_rounds > 0, "2 Mbps uplink must trip the controller");
+        let bytes = |r: &MulticlientResult| -> u64 {
+            r.per_client.iter().map(|c| c.wire_bytes).sum()
+        };
+        assert!(
+            bytes(&degraded) < bytes(&plain),
+            "coarser τ must shrink streamed bytes: {} vs {}",
+            bytes(&degraded),
+            bytes(&plain)
+        );
+    }
+
+    #[test]
+    fn disconnect_reclaims_budget_and_resyncs() {
+        // Session 1 goes offline mid-run: it must record the skipped
+        // frames, resync via keyframe on return, and render fewer frames
+        // — while the other session's results are byte-identical to a
+        // run where nobody disconnects EXCEPT through shared-queue
+        // timing (here the cloud is roomy, so they match exactly).
+        let (tree, traces) = small_world(2, 24);
+        let p = fast_params();
+        let clean =
+            run_multiclient(&tree, &traces, &Variant::nebula(), &p, &ServerConfig::default());
+        let dropped = run_multiclient(
+            &tree,
+            &traces,
+            &Variant::nebula(),
+            &p,
+            &ServerConfig {
+                disconnects: vec![Disconnect { session: 1, from_frame: 8, to_frame: 16 }],
+                ..ServerConfig::default()
+            },
+        );
+        let s1 = &dropped.per_client[1];
+        assert_eq!(s1.faults.disconnected_frames, 8);
+        assert!(s1.faults.resyncs >= 1, "reconnect must resync via keyframe");
+        assert!(
+            s1.faults.recovery_frames_max >= 8,
+            "recovery span covers the outage: {}",
+            s1.faults.recovery_frames_max
+        );
+        assert!(s1.faults.staleness_p99_frames > clean.per_client[1].faults.staleness_p99_frames);
+        // Budget reclamation: the disconnected session issued fewer
+        // rounds, so total cloud busy time shrinks.
+        assert!(dropped.cloud_utilization < clean.cloud_utilization);
+        // The untouched session is bit-identical: session 0's rounds see
+        // the same (empty) queue whether or not session 1 is offline.
+        assert_eq!(dropped.per_client[0], clean.per_client[0]);
     }
 
     #[test]

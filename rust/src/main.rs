@@ -13,6 +13,11 @@
 //! --tile <px> --lod-interval <w> --res-scale <s> --seed <n>
 //! --threads <n: 0=auto, 1=serial> --config <file.toml>
 //! --clients <n> --cloud-budget <A100-equivalents> --uplink-mbps <mbps>
+//!
+//! Link-fault flags (deterministic; see `net::faults`): --loss-prob <p>
+//! --jitter-ms <ms> --outage-start <s> --outage-period <s>
+//! --outage-len <s> --retry-limit <n> --retry-backoff-ms <ms>
+//! --fault-seed <n>
 
 use nebula::benchkit;
 use nebula::config::RunConfig;
@@ -165,6 +170,8 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let mut table = Table::new(vec![
         "variant", "MTP ms", "FPS", "bandwidth", "energy/frame", "Δ gauss", "right PSNR",
     ]);
+    let faulty = nebula::net::FaultPlan::from_net(&cfg.net, 0).is_active();
+    let mut fault_rows = Vec::new();
     for v in benchkit::fig18_variants() {
         let r = run_simulation(&tree, &poses, &v, &params);
         table.row(vec![
@@ -176,8 +183,28 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             fnum(r.delta_gaussians, 0),
             fnum(r.right_psnr_db, 1),
         ]);
+        fault_rows.push((r.variant.clone(), r.faults));
     }
     table.print();
+    if faulty {
+        let mut ft = Table::new(vec![
+            "variant", "lost", "rexmit", "resync", "stalls", "stale mean", "stale p99", "recovery",
+        ]);
+        for (name, f) in fault_rows {
+            ft.row(vec![
+                name,
+                f.lost_msgs.to_string(),
+                f.retransmits.to_string(),
+                f.resyncs.to_string(),
+                f.stalls.to_string(),
+                fnum(f.staleness_mean_frames, 2),
+                fnum(f.staleness_p99_frames, 1),
+                format!("{} fr", f.recovery_frames_max),
+            ]);
+        }
+        println!("\nlink faults (seed {}):", cfg.net.fault_seed);
+        ft.print();
+    }
     Ok(())
 }
 
@@ -226,6 +253,21 @@ fn simulate_multiclient(
         r.uplink_utilization * 100.0,
         r.fairness
     );
+    if nebula::net::FaultPlan::from_net(&cfg.net, 0).is_active() {
+        let f = &r.faults;
+        println!(
+            "faults (seed {}): lost {} / retransmits {} / resyncs {} / stalls {}; \
+             staleness mean {:.2} fr, p99 {:.1} fr; worst recovery {} fr",
+            cfg.net.fault_seed,
+            f.lost_msgs,
+            f.retransmits,
+            f.resyncs,
+            f.stalls,
+            f.staleness_mean_frames,
+            f.staleness_p99_frames,
+            f.recovery_frames_max
+        );
+    }
     Ok(())
 }
 

@@ -86,6 +86,17 @@ impl ClientStore {
         evicted
     }
 
+    /// Drop every resident Gaussian, reuse window, and cut member —
+    /// the client half of a keyframe resync (`protocol::MsgKind::
+    /// Keyframe`): the store rebuilds from the keyframe's full cut so
+    /// both ends restart from an identical state. Instrumentation
+    /// counters (`gaussians_received`) keep accumulating.
+    pub fn reset(&mut self) {
+        self.store.clear();
+        self.reuse.clear();
+        self.cut.clear();
+    }
+
     /// The rendering queue: current-cut Gaussians, sorted by id. Missing
     /// records (payload still in flight) are skipped — the paper's
     /// "continue rendering without waiting for cloud data".

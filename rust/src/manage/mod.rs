@@ -15,4 +15,5 @@ pub mod table;
 
 pub use client_store::ClientStore;
 pub use delta::DeltaCut;
+pub use protocol::{MsgKind, ProtocolError};
 pub use table::ManagementTable;

@@ -9,6 +9,23 @@
 //! Eviction is never transmitted: both ends apply the identical
 //! reuse-window rule, which keeps their views consistent — the property
 //! checked by `consistency_holds_over_random_rounds`.
+//!
+//! # Loss hardening
+//!
+//! The delta stream is stateful: round `n` is only decodable on a store
+//! that has applied rounds `0..n` (the Δcut base). A perfect link makes
+//! that implicit; a faulty one (`net::faults`) does not, so the protocol
+//! carries explicit sequencing:
+//! * every [`RoundMsg`] has a [`seq`](RoundMsg::seq) number and a
+//!   [`kind`](RoundMsg::kind);
+//! * [`ClientEndpoint::apply`] rejects duplicate / out-of-order /
+//!   gapped deltas with a typed [`ProtocolError`] instead of silently
+//!   corrupting the store;
+//! * after the retransmit budget is exhausted (K consecutive losses),
+//!   the cloud publishes a [`MsgKind::Keyframe`] — a full-cut re-publish
+//!   built on a RESET management table. Applying it resets the client
+//!   store too, so both ends restart from an identical state and the
+//!   consistency invariant holds again from that round onward.
 
 use super::client_store::ClientStore;
 use super::delta::DeltaCut;
@@ -30,10 +47,59 @@ impl SceneInit {
     }
 }
 
+/// Whether a round message is an incremental delta or a full resync.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Incremental Δcut on top of the previous applied round.
+    Delta,
+    /// Full-cut re-publish from a reset table: applying it rebuilds the
+    /// client store from scratch, re-basing the delta stream.
+    Keyframe,
+}
+
+/// Typed `ClientEndpoint::apply` failure — the faults a lossy link can
+/// surface, each naming exactly what the sequence check saw.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// `seq` was already applied (re-delivery of the last round).
+    Duplicate { seq: u64 },
+    /// `seq` is older than the duplicate window — a stale retransmit
+    /// arriving after later rounds were applied.
+    OutOfOrder { seq: u64, expected: u64 },
+    /// `seq` skips ahead of `expected`: an intermediate delta was lost,
+    /// so applying this one would corrupt the delta base.
+    Gap { expected: u64, got: u64 },
+    /// The payload failed to decode.
+    Decode { seq: u64, reason: String },
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::Duplicate { seq } => write!(f, "duplicate round msg seq {seq}"),
+            ProtocolError::OutOfOrder { seq, expected } => {
+                write!(f, "out-of-order round msg seq {seq} (expected {expected})")
+            }
+            ProtocolError::Gap { expected, got } => {
+                write!(f, "sequence gap: expected seq {expected}, got {got}")
+            }
+            ProtocolError::Decode { seq, reason } => {
+                write!(f, "round msg seq {seq} failed to decode: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
 /// Per-round streaming message.
 #[derive(Debug, Clone)]
 pub struct RoundMsg {
     pub round: u64,
+    /// Link-level sequence number (monotone per session; keyframes and
+    /// deltas share one sequence space).
+    pub seq: u64,
+    pub kind: MsgKind,
     /// Ids entering the cut this round (includes already-resident ones).
     pub added: Vec<GaussianId>,
     /// Ids leaving the cut this round.
@@ -44,7 +110,9 @@ pub struct RoundMsg {
 
 impl RoundMsg {
     /// Total wire size: id lists (delta-varint + zstd would shrink them
-    /// further; we charge the conservative varint size) + payload.
+    /// further; we charge the conservative varint size) + payload + a
+    /// 16-byte header (round, seq, kind/flags — `seq`/`kind` live in
+    /// bytes the header always carried, so hardening is wire-free).
     pub fn wire_bytes(&self) -> usize {
         varint_list_bytes(&self.added) + varint_list_bytes(&self.removed) + self.payload.wire_bytes() + 16
     }
@@ -67,13 +135,23 @@ pub struct CloudEndpoint<'t> {
     pub tree: &'t LodTree,
     pub table: ManagementTable,
     pub codec: DeltaCodec,
+    reuse_threshold: u32,
     prev_cut: Vec<GaussianId>,
     round: u64,
+    seq: u64,
 }
 
 impl<'t> CloudEndpoint<'t> {
     pub fn new(tree: &'t LodTree, codec: DeltaCodec, reuse_threshold: u32) -> Self {
-        Self { tree, table: ManagementTable::new(reuse_threshold), codec, prev_cut: Vec::new(), round: 0 }
+        Self {
+            tree,
+            table: ManagementTable::new(reuse_threshold),
+            codec,
+            reuse_threshold,
+            prev_cut: Vec::new(),
+            round: 0,
+            seq: 0,
+        }
     }
 
     pub fn scene_init(&self) -> SceneInit {
@@ -89,9 +167,34 @@ impl<'t> CloudEndpoint<'t> {
         let (delta_ids, _evicted) = self.table.update(cut);
         let (added, removed) = diff_sorted(&self.prev_cut, cut);
         self.prev_cut = cut.to_vec();
-        let payload = DeltaCut::gather(self.round, self.tree, &delta_ids).encode(&self.codec);
-        let msg = RoundMsg { round: self.round, added, removed, payload };
+        self.emit(MsgKind::Delta, added, removed, &delta_ids)
+    }
+
+    /// Keyframe resync: reset the management table and re-publish the
+    /// FULL cut, so a client whose delta base diverged (lost rounds)
+    /// rebuilds from scratch. Applying the message resets the client
+    /// store too — afterwards both ends hold exactly `cut`, restoring
+    /// the consistency invariant regardless of what was lost.
+    pub fn publish_keyframe(&mut self, cut: &[GaussianId]) -> RoundMsg {
+        debug_assert!(cut.windows(2).all(|w| w[0] < w[1]), "cut must be sorted");
+        self.table = ManagementTable::new(self.reuse_threshold);
+        let (delta_ids, _evicted) = self.table.update(cut);
+        debug_assert_eq!(delta_ids, cut, "a fresh table treats the whole cut as new");
+        self.prev_cut = cut.to_vec();
+        self.emit(MsgKind::Keyframe, cut.to_vec(), Vec::new(), &delta_ids)
+    }
+
+    fn emit(
+        &mut self,
+        kind: MsgKind,
+        added: Vec<GaussianId>,
+        removed: Vec<GaussianId>,
+        delta_ids: &[GaussianId],
+    ) -> RoundMsg {
+        let payload = DeltaCut::gather(self.round, self.tree, delta_ids).encode(&self.codec);
+        let msg = RoundMsg { round: self.round, seq: self.seq, kind, added, removed, payload };
         self.round += 1;
+        self.seq += 1;
         msg
     }
 }
@@ -100,8 +203,10 @@ impl<'t> CloudEndpoint<'t> {
 pub struct ClientEndpoint {
     pub store: ClientStore,
     pub codec: DeltaCodec,
-    /// Wire bytes received so far.
+    /// Wire bytes received so far (accepted messages only).
     pub bytes_received: u64,
+    /// Next delta sequence number this endpoint can apply.
+    next_seq: u64,
 }
 
 impl ClientEndpoint {
@@ -113,13 +218,57 @@ impl ClientEndpoint {
             store: ClientStore::new(reuse_threshold),
             codec: DeltaCodec::new(mode, quantizer, codebook),
             bytes_received: 0,
+            next_seq: 0,
         })
     }
 
+    /// Sequence number of the next applicable delta.
+    pub fn expected_seq(&self) -> u64 {
+        self.next_seq
+    }
+
     /// Apply one round; returns evicted ids (for test cross-checking).
-    pub fn apply(&mut self, msg: &RoundMsg) -> anyhow::Result<Vec<GaussianId>> {
+    ///
+    /// Deltas must arrive exactly in sequence — anything else is a typed
+    /// [`ProtocolError`] and the store is left untouched (a gapped delta
+    /// applied anyway would silently corrupt the delta base forever).
+    /// Keyframes re-base the stream: any seq at or past the expected one
+    /// is accepted (the gap is what the keyframe repairs), the store is
+    /// reset, and the sequence resumes from the keyframe. The error
+    /// converts into `anyhow::Error` at legacy `?` call sites.
+    pub fn apply(&mut self, msg: &RoundMsg) -> Result<Vec<GaussianId>, ProtocolError> {
+        match msg.kind {
+            MsgKind::Delta => {
+                if msg.seq != self.next_seq {
+                    return Err(if msg.seq.wrapping_add(1) == self.next_seq {
+                        ProtocolError::Duplicate { seq: msg.seq }
+                    } else if msg.seq < self.next_seq {
+                        ProtocolError::OutOfOrder { seq: msg.seq, expected: self.next_seq }
+                    } else {
+                        ProtocolError::Gap { expected: self.next_seq, got: msg.seq }
+                    });
+                }
+            }
+            MsgKind::Keyframe => {
+                if msg.seq.wrapping_add(1) == self.next_seq {
+                    return Err(ProtocolError::Duplicate { seq: msg.seq });
+                }
+                if msg.seq < self.next_seq {
+                    return Err(ProtocolError::OutOfOrder { seq: msg.seq, expected: self.next_seq });
+                }
+            }
+        }
+        let items = self
+            .codec
+            .decode(&msg.payload)
+            .map_err(|e| ProtocolError::Decode { seq: msg.seq, reason: e.to_string() })?;
+        if msg.kind == MsgKind::Keyframe {
+            // Reset only after decode succeeded: a rejected message must
+            // leave the store untouched.
+            self.store.reset();
+        }
+        self.next_seq = msg.seq + 1;
         self.bytes_received += msg.wire_bytes() as u64;
-        let items = self.codec.decode(&msg.payload)?;
         Ok(self.store.apply_round(&msg.added, &msg.removed, items))
     }
 }
@@ -260,6 +409,74 @@ mod tests {
             let orig = tree.gaussians.pos[id as usize];
             assert!((g.pos - orig).norm() < 0.05, "id {id} drifted");
         }
+    }
+
+    #[test]
+    fn sequence_violations_yield_typed_errors() {
+        let tree = CityGen::new(CityParams::for_target(600, 60.0, 21)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        let m0 = cloud.publish_cut(&(0..40).collect::<Vec<u32>>());
+        let m1 = cloud.publish_cut(&(10..50).collect::<Vec<u32>>());
+        let m2 = cloud.publish_cut(&(20..60).collect::<Vec<u32>>());
+        assert_eq!((m0.seq, m1.seq, m2.seq), (0, 1, 2));
+
+        client.apply(&m0).unwrap();
+        let before = client.bytes_received;
+        // Re-delivery of the last applied round.
+        assert_eq!(client.apply(&m0), Err(ProtocolError::Duplicate { seq: 0 }));
+        // Skipping m1 is a gap — applying m2 would corrupt the base.
+        assert_eq!(client.apply(&m2), Err(ProtocolError::Gap { expected: 1, got: 2 }));
+        assert_eq!(client.bytes_received, before, "rejected msgs are not counted");
+        // In-order continues fine.
+        client.apply(&m1).unwrap();
+        client.apply(&m2).unwrap();
+        // A stale retransmit from two rounds back is out-of-order.
+        assert_eq!(client.apply(&m1), Err(ProtocolError::OutOfOrder { seq: 1, expected: 3 }));
+        assert_eq!(client.expected_seq(), 3);
+    }
+
+    #[test]
+    fn keyframe_resyncs_both_ends_after_loss() {
+        // Lose two rounds, then resync with a keyframe: the client must
+        // match a never-faulted view of the SAME final cut exactly.
+        let tree = CityGen::new(CityParams::for_target(900, 60.0, 23)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        let cuts: Vec<Vec<u32>> =
+            vec![(0..60).collect(), (20..80).collect(), (40..100).collect(), (50..110).collect()];
+        client.apply(&cloud.publish_cut(&cuts[0])).unwrap();
+        let _lost1 = cloud.publish_cut(&cuts[1]); // never delivered
+        let _lost2 = cloud.publish_cut(&cuts[2]); // never delivered
+        // The gap is detected if a later delta does sneak through...
+        let stray = cloud.publish_cut(&cuts[3]);
+        assert!(matches!(client.apply(&stray), Err(ProtocolError::Gap { .. })));
+        // ...and the keyframe repairs it.
+        let kf = cloud.publish_keyframe(&cuts[3]);
+        assert_eq!(kf.kind, MsgKind::Keyframe);
+        assert_eq!(kf.payload.count as usize, cuts[3].len(), "keyframe ships the full cut");
+        client.apply(&kf).unwrap();
+        assert_eq!(client.store.cut_ids(), cuts[3]);
+        assert_eq!(cloud.table.resident_ids(), client.store.resident_ids());
+        assert_eq!(client.store.render_queue().len(), cuts[3].len());
+        // The stream continues incrementally from the keyframe base.
+        let next: Vec<u32> = (55..115).collect();
+        let m = cloud.publish_cut(&next);
+        assert_eq!(m.kind, MsgKind::Delta);
+        client.apply(&m).unwrap();
+        assert_eq!(client.store.cut_ids(), next);
+        assert_eq!(cloud.table.resident_ids(), client.store.resident_ids());
+        // Duplicate keyframe re-delivery is rejected like any duplicate.
+        assert_eq!(client.apply(&kf), Err(ProtocolError::Duplicate { seq: kf.seq }));
+    }
+
+    #[test]
+    fn protocol_error_converts_to_anyhow() {
+        // Legacy call sites use `?` into anyhow::Result — the typed
+        // error must keep satisfying that conversion.
+        fn legacy(r: Result<Vec<GaussianId>, ProtocolError>) -> anyhow::Result<usize> {
+            Ok(r?.len())
+        }
+        let err = legacy(Err(ProtocolError::Gap { expected: 3, got: 7 })).unwrap_err();
+        assert!(err.to_string().contains("expected seq 3"), "{err}");
     }
 
     #[test]

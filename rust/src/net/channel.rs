@@ -48,8 +48,16 @@ impl SimLink {
     pub fn send(&mut self, now: f64, bytes: u64) -> f64 {
         let start = now.max(self.busy_until);
         let done = start + self.serialize_time(bytes);
+        // Monotonicity guard: the clamps in `new` make every serialize
+        // time finite and non-negative, so the queue horizon can only
+        // move forward — an inf/NaN here means a constructor bypass.
+        debug_assert!(
+            done.is_finite() && done >= self.busy_until,
+            "busy_until must stay finite and monotone (was {}, got {done})",
+            self.busy_until
+        );
         self.busy_until = done;
-        self.bytes_sent += bytes;
+        self.bytes_sent = self.bytes_sent.saturating_add(bytes);
         done + self.latency_s
     }
 
@@ -125,6 +133,27 @@ mod tests {
         assert_eq!(l.serialize_time(1_000_000), 0.0);
         assert_eq!(l.send(1.5, 1_000_000), 1.5);
         assert_eq!(l.send(2.5, 0), 2.5);
+    }
+
+    #[test]
+    fn bytes_sent_saturates_instead_of_overflowing() {
+        // Regression: `bytes_sent += bytes` overflow-panicked in long
+        // debug runs once the counter neared u64::MAX.
+        let mut l = SimLink::new(f64::INFINITY, 0.0);
+        l.bytes_sent = u64::MAX - 10;
+        l.send(0.0, 1_000);
+        assert_eq!(l.bytes_sent, u64::MAX, "counter must saturate, not wrap/panic");
+    }
+
+    #[test]
+    fn sustains_at_the_clamp_floor() {
+        // The 1 bps degenerate-bandwidth floor: 1 byte takes 8 s, so a
+        // message per 8 s window fits exactly and anything more does not.
+        let l = SimLink::new(0.0, 0.0);
+        assert_eq!(l.bandwidth_bps, 1.0, "degenerate bandwidth clamps to the 1 bps floor");
+        assert!(l.sustains(1, 8.0));
+        assert!(!l.sustains(2, 8.0));
+        assert!(!l.sustains(1, 7.9));
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! Deterministic fault injection for the cloud→client link.
+//!
+//! The paper's §6 evaluation assumes a *clean* 100 Mbps Wi-Fi link with
+//! a fixed 5 ms one-way latency. Real last-mile wireless is not clean,
+//! and a reproduction that claims "VR streaming" must stay smooth when
+//! the link misbehaves. This module perturbs [`SimLink`]'s timing model
+//! with four fault families, each mapped to a §6 link assumption it
+//! relaxes:
+//!
+//! * **packet loss** ([`FaultPlan::loss_prob`]) — §6 assumes every round
+//!   message arrives; a lost Δcut silently diverges the client's delta
+//!   base, so loss forces the retransmit + keyframe-resync machinery in
+//!   `manage::protocol` / the coordinator to earn its keep;
+//! * **latency jitter** ([`FaultPlan::jitter_s`]) — §6's constant 5 ms
+//!   propagation becomes `5 ms + U[0, jitter)`, which can push a round's
+//!   arrival past the vsync it would have made;
+//! * **scheduled outages** ([`FaultPlan::outage_len_s`] every
+//!   [`FaultPlan::outage_period_s`], first at
+//!   [`FaultPlan::outage_start_s`]) — §6 assumes the link is always up;
+//!   an outage window drops every attempt that departs inside it,
+//!   modeling handover / blockage / AP roaming;
+//! * **bandwidth dips** ([`FaultPlan::dip_factor`] during periodic dip
+//!   windows) — §6's 100 Mbps is the *peak* rate; inside a dip the
+//!   effective serialization rate drops to `dip_factor ×` nominal,
+//!   stretching delivery without dropping it.
+//!
+//! # Determinism discipline
+//!
+//! Every stochastic decision is drawn from a *fresh* [`Prng`] keyed on
+//! `(seed, session_id, seq, attempt)` — no generator state is carried
+//! between messages, so a draw's outcome depends only on *what* is being
+//! transmitted, never on call order, thread count, or how many other
+//! sessions exist. That is the same bit-reproducibility rule the rest of
+//! the repo enforces (PRs 1–5): fault counters are exact integers on the
+//! simulation clock and bitwise identical across
+//! `NEBULA_PARITY_THREADS`. With an inactive plan ([`FaultPlan::is_active`]
+//! false) the wrapper takes a structural fast path that performs *zero*
+//! RNG draws and returns exactly `SimLink::send` — the zero-fault ≡
+//! faultless-baseline parity canary in `benches/bench_faults.rs`.
+
+use super::channel::SimLink;
+use crate::util::prng::Prng;
+
+/// Odd 64-bit mixing constants (SplitMix64 / PCG lineage) keeping the
+/// per-message key streams of distinct sessions / sequence numbers /
+/// attempts independent.
+const MIX_SESSION: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX_SEQ: u64 = 0xD1B5_4A32_D192_ED03;
+const MIX_ATTEMPT: u64 = 0x2545_F491_4F6C_DD1D;
+
+/// A deterministic schedule of link misbehavior for one session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed shared by every session of a run (`NetConfig::fault_seed`).
+    pub seed: u64,
+    /// Session id mixed into every draw so clients fault independently.
+    pub session_id: u64,
+    /// Per-attempt loss probability in [0, 1].
+    pub loss_prob: f64,
+    /// Extra per-delivery latency, uniform in `[0, jitter_s)`.
+    pub jitter_s: f64,
+    /// First outage begins at this simulation time (s).
+    pub outage_start_s: f64,
+    /// Outage repetition period (s); 0 = a single outage at
+    /// `outage_start_s` (if `outage_len_s > 0`).
+    pub outage_period_s: f64,
+    /// Outage duration (s); 0 disables outages entirely.
+    pub outage_len_s: f64,
+    /// Bandwidth-dip repetition period (s); 0 disables dips.
+    pub dip_period_s: f64,
+    /// Dip duration at the start of each dip period (s).
+    pub dip_len_s: f64,
+    /// Surviving bandwidth fraction inside a dip window, in (0, 1].
+    pub dip_factor: f64,
+    /// Retransmit attempts after the first loss (total sends ≤ 1 + limit).
+    pub retry_limit: u32,
+    /// Sender timeout before retry `a` is `backoff · 2^a` (s).
+    pub retry_backoff_s: f64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the faultless baseline.
+    pub fn disabled() -> Self {
+        Self {
+            seed: 0,
+            session_id: 0,
+            loss_prob: 0.0,
+            jitter_s: 0.0,
+            outage_start_s: 0.0,
+            outage_period_s: 0.0,
+            outage_len_s: 0.0,
+            dip_period_s: 0.0,
+            dip_len_s: 0.0,
+            dip_factor: 1.0,
+            retry_limit: 3,
+            retry_backoff_s: 0.025,
+        }
+    }
+
+    /// Build a session's plan from the config knobs. The dip family has
+    /// no config keys (programmatic sweeps only, e.g. `bench_faults`),
+    /// so it starts disabled.
+    pub fn from_net(net: &crate::config::NetConfig, session_id: u64) -> Self {
+        Self {
+            seed: net.fault_seed,
+            session_id,
+            loss_prob: net.loss_prob,
+            jitter_s: net.jitter_ms * 1e-3,
+            outage_start_s: net.outage_start_s,
+            outage_period_s: net.outage_period_s,
+            outage_len_s: net.outage_len_s,
+            retry_limit: net.retry_limit,
+            retry_backoff_s: net.retry_backoff_ms * 1e-3,
+            ..Self::disabled()
+        }
+    }
+
+    /// Whether any fault family can fire. Inactive plans get the
+    /// zero-draw fast path in [`FaultyLink::transmit`].
+    pub fn is_active(&self) -> bool {
+        self.loss_prob > 0.0
+            || self.jitter_s > 0.0
+            || self.outage_len_s > 0.0
+            || (self.dip_len_s > 0.0 && self.dip_factor < 1.0)
+    }
+
+    /// Whether simulation time `t` falls inside an outage window.
+    pub fn in_outage(&self, t: f64) -> bool {
+        if self.outage_len_s <= 0.0 || t < self.outage_start_s {
+            return false;
+        }
+        if self.outage_period_s > 0.0 {
+            (t - self.outage_start_s) % self.outage_period_s < self.outage_len_s
+        } else {
+            t < self.outage_start_s + self.outage_len_s
+        }
+    }
+
+    /// Whether simulation time `t` falls inside a bandwidth-dip window
+    /// (dips tile the clock from t = 0).
+    pub fn in_dip(&self, t: f64) -> bool {
+        self.dip_period_s > 0.0
+            && self.dip_len_s > 0.0
+            && t >= 0.0
+            && t % self.dip_period_s < self.dip_len_s
+    }
+
+    /// Fresh generator for one (message, attempt) pair: outcome depends
+    /// only on the key, never on draw history — thread/call-order
+    /// invariant by construction.
+    fn draw_rng(&self, seq: u64, attempt: u32) -> Prng {
+        let key = self.seed
+            ^ self.session_id.wrapping_mul(MIX_SESSION)
+            ^ seq.wrapping_mul(MIX_SEQ)
+            ^ (attempt as u64 + 1).wrapping_mul(MIX_ATTEMPT);
+        Prng::new(key)
+    }
+}
+
+/// Exact per-link fault accounting (simulation-clock integers).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Messages that reached the client (counting each message once).
+    pub delivered: u64,
+    /// Individual attempts killed by loss or an outage window.
+    pub lost: u64,
+    /// Attempts beyond the first, per message.
+    pub retransmits: u64,
+    /// Messages abandoned after exhausting the retry budget.
+    pub abandoned: u64,
+}
+
+/// Outcome of transmitting one message through a [`FaultyLink`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Transmit {
+    /// The message (eventually) arrived; `attempts` sends were charged.
+    Delivered { arrival: f64, attempts: u32 },
+    /// Every attempt in the retry budget was lost.
+    Abandoned { attempts: u32 },
+}
+
+/// [`SimLink`] wrapper that injects the plan's faults per message.
+///
+/// Lost attempts still occupy airtime on the inner link (the radio does
+/// not know the frame died), so loss degrades goodput twice: the bytes
+/// are re-sent AND the queue behind them grows.
+#[derive(Debug, Clone)]
+pub struct FaultyLink {
+    pub inner: SimLink,
+    pub plan: FaultPlan,
+    pub stats: FaultStats,
+}
+
+impl FaultyLink {
+    pub fn new(inner: SimLink, plan: FaultPlan) -> Self {
+        Self { inner, plan, stats: FaultStats::default() }
+    }
+
+    /// One send attempt departing at `t`: returns the arrival time or
+    /// `None` if this attempt was lost.
+    fn attempt(&mut self, t: f64, bytes: u64, seq: u64, attempt: u32) -> Option<f64> {
+        let mut rng = self.plan.draw_rng(seq, attempt);
+        // Airtime is spent whether or not the packet survives.
+        let mut arrival = self.inner.send(t, bytes);
+        if self.plan.in_outage(t) {
+            return None;
+        }
+        if self.plan.loss_prob > 0.0 && rng.f64() < self.plan.loss_prob {
+            return None;
+        }
+        if self.plan.dip_factor < 1.0 && self.plan.in_dip(t) {
+            // Serialization inside a dip runs at dip_factor × nominal:
+            // charge the extra stretch on top of the nominal-rate model.
+            arrival += self.inner.serialize_time(bytes) * (1.0 / self.plan.dip_factor - 1.0);
+        }
+        if self.plan.jitter_s > 0.0 {
+            arrival += rng.f64() * self.plan.jitter_s;
+        }
+        Some(arrival)
+    }
+
+    /// Transmit message `seq` departing at `depart`, retransmitting lost
+    /// attempts with exponential backoff until delivery or the retry
+    /// budget runs out. With an inactive plan this is *exactly*
+    /// `SimLink::send` — zero RNG draws, zero timing perturbation.
+    pub fn transmit(&mut self, depart: f64, bytes: u64, seq: u64) -> Transmit {
+        if !self.plan.is_active() {
+            self.stats.delivered += 1;
+            return Transmit::Delivered { arrival: self.inner.send(depart, bytes), attempts: 1 };
+        }
+        let mut t = depart;
+        for attempt in 0..=self.plan.retry_limit {
+            if attempt > 0 {
+                self.stats.retransmits += 1;
+            }
+            if let Some(arrival) = self.attempt(t, bytes, seq, attempt) {
+                self.stats.delivered += 1;
+                return Transmit::Delivered { arrival, attempts: attempt + 1 };
+            }
+            self.stats.lost += 1;
+            // Sender timeout before the next attempt (shift capped so a
+            // huge configured retry_limit cannot overflow).
+            t += self.plan.retry_backoff_s * (1u64 << attempt.min(16)) as f64;
+        }
+        self.stats.abandoned += 1;
+        Transmit::Abandoned { attempts: self.plan.retry_limit + 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> SimLink {
+        SimLink::new(100e6, 0.005)
+    }
+
+    #[test]
+    fn inactive_plan_is_exactly_simlink() {
+        // Structural zero-fault parity: same arrival times, same inner
+        // byte accounting, no perturbation of any kind.
+        let mut plain = link();
+        let mut faulty = FaultyLink::new(link(), FaultPlan::disabled());
+        for (seq, (t, bytes)) in
+            [(0.0, 10_000u64), (0.01, 250_000), (0.5, 5_000)].iter().enumerate()
+        {
+            let want = plain.send(*t, *bytes);
+            match faulty.transmit(*t, *bytes, seq as u64) {
+                Transmit::Delivered { arrival, attempts } => {
+                    assert_eq!(arrival, want, "msg {seq} diverged from SimLink");
+                    assert_eq!(attempts, 1);
+                }
+                Transmit::Abandoned { .. } => panic!("inactive plan must always deliver"),
+            }
+        }
+        assert_eq!(faulty.inner.bytes_sent, plain.bytes_sent);
+        assert_eq!(faulty.stats.lost, 0);
+        assert_eq!(faulty.stats.retransmits, 0);
+    }
+
+    #[test]
+    fn draws_are_call_order_invariant() {
+        // The same (seed, session, seq) key gives the same outcome no
+        // matter which other messages were transmitted before — the
+        // property that makes fault counters thread-invariant.
+        let plan = FaultPlan { loss_prob: 0.5, seed: 42, ..FaultPlan::disabled() };
+        let mut a = FaultyLink::new(link(), plan);
+        let mut b = FaultyLink::new(link(), plan);
+        // a transmits 0..8 in order; b transmits only the even ones.
+        let outcomes_a: Vec<bool> = (0..8)
+            .map(|seq| matches!(a.transmit(seq as f64, 1_000, seq), Transmit::Delivered { .. }))
+            .collect();
+        for seq in (0..8).step_by(2) {
+            let got = matches!(b.transmit(seq as f64, 1_000, seq), Transmit::Delivered { .. });
+            assert_eq!(got, outcomes_a[seq as usize], "seq {seq} outcome depends on history");
+        }
+    }
+
+    #[test]
+    fn sessions_fault_independently() {
+        let base = FaultPlan { loss_prob: 0.5, seed: 7, ..FaultPlan::disabled() };
+        let mut draws = Vec::new();
+        for session in 0..4u64 {
+            let plan = FaultPlan { session_id: session, ..base };
+            let mut l = FaultyLink::new(link(), plan);
+            draws.push(
+                (0..32)
+                    .map(|seq| matches!(l.transmit(0.0, 100, seq), Transmit::Delivered { .. }))
+                    .collect::<Vec<bool>>(),
+            );
+        }
+        assert!(draws.windows(2).any(|w| w[0] != w[1]), "sessions drew identical loss patterns");
+    }
+
+    #[test]
+    fn outage_windows_drop_every_attempt() {
+        // One 1 s outage at t = 2 with a retry budget too short to
+        // escape it: the message must be abandoned, and each attempt
+        // still burned airtime on the inner link.
+        let plan = FaultPlan {
+            outage_start_s: 2.0,
+            outage_len_s: 1.0,
+            retry_limit: 2,
+            retry_backoff_s: 0.01,
+            ..FaultPlan::disabled()
+        };
+        let mut l = FaultyLink::new(link(), plan);
+        match l.transmit(2.1, 10_000, 0) {
+            Transmit::Abandoned { attempts } => assert_eq!(attempts, 3),
+            Transmit::Delivered { .. } => panic!("outage must drop all attempts"),
+        }
+        assert_eq!(l.stats.lost, 3);
+        assert_eq!(l.stats.abandoned, 1);
+        assert_eq!(l.inner.bytes_sent, 30_000, "lost attempts still occupy airtime");
+        // Outside the window the same plan delivers.
+        assert!(matches!(l.transmit(4.0, 10_000, 1), Transmit::Delivered { .. }));
+        // Backoff long enough to escape the window delivers too.
+        let plan2 = FaultPlan { retry_backoff_s: 1.0, ..plan };
+        let mut l2 = FaultyLink::new(link(), plan2);
+        match l2.transmit(2.1, 10_000, 0) {
+            Transmit::Delivered { arrival, attempts } => {
+                assert!(attempts > 1, "first attempt departs inside the outage");
+                assert!(arrival > 3.0, "delivery must happen after the outage ends");
+            }
+            Transmit::Abandoned { .. } => panic!("backoff reaches past the outage"),
+        }
+    }
+
+    #[test]
+    fn periodic_outage_schedule() {
+        let plan = FaultPlan {
+            outage_start_s: 1.0,
+            outage_period_s: 10.0,
+            outage_len_s: 2.0,
+            ..FaultPlan::disabled()
+        };
+        assert!(!plan.in_outage(0.5));
+        assert!(plan.in_outage(1.0));
+        assert!(plan.in_outage(2.9));
+        assert!(!plan.in_outage(3.1));
+        assert!(plan.in_outage(11.5), "second period");
+        assert!(!plan.in_outage(14.0));
+        // One-shot (period 0): only the first window exists.
+        let once = FaultPlan { outage_period_s: 0.0, ..plan };
+        assert!(once.in_outage(1.5));
+        assert!(!once.in_outage(11.5));
+    }
+
+    #[test]
+    fn jitter_bounded_and_deterministic() {
+        let plan = FaultPlan { jitter_s: 0.004, seed: 9, ..FaultPlan::disabled() };
+        let mut a = FaultyLink::new(link(), plan);
+        let mut b = FaultyLink::new(link(), plan);
+        for seq in 0..64u64 {
+            let base = link().send(0.0, 1_000);
+            let (ta, tb) = match (a.transmit(0.0, 1_000, seq), b.transmit(0.0, 1_000, seq)) {
+                (
+                    Transmit::Delivered { arrival: ta, .. },
+                    Transmit::Delivered { arrival: tb, .. },
+                ) => (ta, tb),
+                _ => panic!("jitter-only plan never drops"),
+            };
+            assert_eq!(ta, tb, "jitter must be reproducible");
+            assert!(ta >= base && ta < base + 0.004 + 1e-12, "jitter out of bounds: {ta}");
+            // fresh links each draw so queueing doesn't accumulate
+            a.inner = link();
+            b.inner = link();
+        }
+    }
+
+    #[test]
+    fn bandwidth_dip_stretches_delivery() {
+        let plan = FaultPlan {
+            dip_period_s: 10.0,
+            dip_len_s: 1.0,
+            dip_factor: 0.25,
+            ..FaultPlan::disabled()
+        };
+        assert!(plan.is_active());
+        let mut l = FaultyLink::new(link(), plan);
+        // In a dip (t=0.5): serialization runs at 25% rate = 4x time.
+        let bytes = 1_250_000u64; // 0.1 s nominal at 100 Mbps
+        let in_dip = match l.transmit(0.5, bytes, 0) {
+            Transmit::Delivered { arrival, .. } => arrival,
+            _ => panic!(),
+        };
+        let mut l2 = FaultyLink::new(link(), plan);
+        let clear = match l2.transmit(5.0, bytes, 0) {
+            Transmit::Delivered { arrival, .. } => arrival - 5.0,
+            _ => panic!(),
+        };
+        assert!((clear - 0.105).abs() < 1e-9, "clear window is nominal rate");
+        assert!(((in_dip - 0.5) - (0.105 + 0.3)).abs() < 1e-9, "dip adds 3x the serialize time");
+    }
+
+    #[test]
+    fn loss_rate_roughly_matches_probability() {
+        let plan =
+            FaultPlan { loss_prob: 0.2, seed: 11, retry_limit: 0, ..FaultPlan::disabled() };
+        let mut l = FaultyLink::new(link(), plan);
+        let n = 5_000u64;
+        for seq in 0..n {
+            l.transmit(0.0, 10, seq);
+        }
+        let rate = l.stats.lost as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "empirical loss {rate}");
+        assert_eq!(l.stats.delivered + l.stats.abandoned, n);
+    }
+
+    #[test]
+    fn retransmit_backoff_recovers_most_messages() {
+        // 30% loss with 3 retries: P(all 4 lost) < 1%, so the vast
+        // majority deliver; delivered arrivals grow with each backoff.
+        let plan = FaultPlan {
+            loss_prob: 0.3,
+            seed: 13,
+            retry_limit: 3,
+            retry_backoff_s: 0.05,
+            ..FaultPlan::disabled()
+        };
+        let mut l = FaultyLink::new(link(), plan);
+        let n = 1_000u64;
+        let mut delivered = 0u64;
+        for seq in 0..n {
+            l.inner = link(); // isolate queueing
+            if let Transmit::Delivered { arrival, attempts } = l.transmit(0.0, 1_000, seq) {
+                delivered += 1;
+                if attempts > 1 {
+                    assert!(arrival > 0.05, "retries must include the backoff delay");
+                }
+            }
+        }
+        assert!(delivered as f64 > 0.97 * n as f64, "delivered {delivered}/{n}");
+        assert!(l.stats.retransmits > 0);
+        assert_eq!(l.stats.abandoned, n - delivered);
+    }
+}

@@ -1,10 +1,13 @@
 //! Network substrate: the simulated wireless link between cloud and
-//! client, the H.265 video-streaming proxy model, and wireless energy.
+//! client, the deterministic fault injector layered over it, the H.265
+//! video-streaming proxy model, and wireless energy.
 
 pub mod channel;
+pub mod faults;
 pub mod video;
 
 pub use channel::SimLink;
+pub use faults::{FaultPlan, FaultStats, FaultyLink, Transmit};
 pub use video::{VideoCodec, VideoQuality};
 
 /// Wireless communication energy (paper §6: 100 nJ/B [63]).

@@ -1,0 +1,238 @@
+//! Integration: deterministic link faults and graceful degradation —
+//! the zero-fault parity guarantee, thread-invariant fault counters,
+//! typed protocol errors over a real walk, keyframe resync equivalence,
+//! and end-to-end recovery under seeded loss + outages.
+
+use nebula::benchkit;
+use nebula::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{run_multiclient, Disconnect, FaultCounters, ServerConfig, Variant};
+use nebula::lod::TemporalSearch;
+use nebula::manage::protocol::{ClientEndpoint, CloudEndpoint};
+use nebula::manage::{MsgKind, ProtocolError};
+use nebula::scene::{dataset, CityGen};
+
+fn setup() -> (nebula::lod::LodTree, Vec<nebula::math::Pose>, SimParams) {
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    let poses = benchkit::walk_trace(&spec, 96);
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    params.pipeline.threads = 1;
+    (tree, poses, params)
+}
+
+/// Thread counts for the fault-counter invariance sweep (mirrors
+/// `it_scheduler.rs`; CI re-runs with `NEBULA_PARITY_THREADS=1,2,8`).
+fn parity_threads() -> Vec<usize> {
+    std::env::var("NEBULA_PARITY_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4, 8])
+}
+
+/// A seeded fault mix whose outage window provably intersects the trace
+/// (frames at 90 fps start at t = 0, so 96 frames span ~1.07 s).
+fn faulty_net(params: &SimParams) -> SimParams {
+    let mut p = *params;
+    p.net.fault_seed = 11;
+    p.net.loss_prob = 0.05;
+    p.net.jitter_ms = 2.0;
+    p.net.outage_start_s = 0.1;
+    p.net.outage_period_s = 2.0;
+    p.net.outage_len_s = 0.25;
+    p
+}
+
+#[test]
+fn zero_fault_plan_reproduces_faultless_results() {
+    // The acceptance gate: with every fault probability/window at zero,
+    // the FaultPlan must stay inactive — a nonzero seed or retry budget
+    // alone must not perturb a single field of the result. Exact
+    // equality, not tolerance: every metric is a simulation-clock
+    // quantity.
+    let (tree, poses, params) = setup();
+    let baseline = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    assert_eq!(
+        baseline.faults,
+        FaultCounters::default(),
+        "a clean link must report all-zero fault counters"
+    );
+
+    let mut zeroed = params;
+    zeroed.net.fault_seed = 0xFEED_FACE;
+    zeroed.net.retry_limit = 9;
+    zeroed.net.retry_backoff_ms = 100.0;
+    let got = run_simulation(&tree, &poses, &Variant::nebula(), &zeroed);
+    assert_eq!(got, baseline, "zero-probability FaultPlan diverged from the faultless run");
+
+    // Same guarantee for the multi-client server.
+    let spec = dataset("urban").unwrap();
+    let traces = benchkit::walk_traces(&spec, 36, 2);
+    let clean = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &ServerConfig::default());
+    let seeded =
+        run_multiclient(&tree, &traces, &Variant::nebula(), &zeroed, &ServerConfig::default());
+    assert_eq!(seeded, clean, "zero-fault multi-client run diverged");
+    assert_eq!(clean.faults, FaultCounters::default());
+}
+
+#[test]
+fn fault_counters_thread_invariant() {
+    // Seeded faults + every degradation knob live at once (admission
+    // control, τ degradation, a mid-run disconnect): per-client results
+    // AND the aggregated fault counters must be bitwise identical at
+    // every thread count.
+    let (tree, _, mut params) = setup();
+    let spec = dataset("urban").unwrap();
+    let traces = benchkit::walk_traces(&spec, 48, 3);
+    params = faulty_net(&params);
+    let server = ServerConfig {
+        cloud_budget: 0.25,
+        uplink_bps: 200e6,
+        max_cloud_lag_s: 0.05,
+        degrade_lag_s: 0.02,
+        disconnects: vec![Disconnect { session: 1, from_frame: 12, to_frame: 24 }],
+    };
+
+    params.pipeline.threads = 1;
+    let reference = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+    assert_eq!(reference.faults.disconnected_frames, 12);
+    for t in parity_threads() {
+        params.pipeline.threads = t;
+        let got = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+        assert_eq!(
+            got.per_client, reference.per_client,
+            "per-client fault results diverged at {t} threads"
+        );
+        assert_eq!(got.faults, reference.faults, "fault counters diverged at {t} threads");
+        assert_eq!(got.cloud_utilization, reference.cloud_utilization);
+        assert_eq!(got.uplink_utilization, reference.uplink_utilization);
+    }
+}
+
+fn endpoints(tree: &nebula::lod::LodTree, reuse: u32) -> (CloudEndpoint<'_>, ClientEndpoint) {
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        CompressionMode::Quantized,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 3000, ..Default::default() }.train(&tree.gaussians.sh),
+    );
+    let cloud = CloudEndpoint::new(tree, codec, reuse);
+    let client =
+        ClientEndpoint::from_init(&cloud.scene_init(), CompressionMode::Quantized, reuse).unwrap();
+    (cloud, client)
+}
+
+#[test]
+fn sequence_faults_yield_typed_errors_over_a_real_walk() {
+    // Drive the protocol with genuine LoD cuts from a walk, then replay
+    // the three corruption shapes a lossy link can produce. Each must
+    // map to its exact typed error and leave the store untouched.
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(20_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let (mut cloud, mut client) = endpoints(&tree, pl.reuse_threshold);
+    let mut search = TemporalSearch::for_tree(&tree);
+    let poses = benchkit::walk_trace(&spec, 24);
+
+    let msgs: Vec<_> = poses
+        .iter()
+        .step_by(pl.lod_interval as usize)
+        .map(|pose| cloud.publish_cut(&search.search(&tree, &benchkit::query_at(pose, &pl)).nodes))
+        .collect();
+    assert!(msgs.len() >= 4, "walk too short to exercise the sequence checks");
+
+    client.apply(&msgs[0]).unwrap();
+    let cut_before = client.store.cut_ids();
+    // Duplicate re-delivery of the last applied round.
+    assert_eq!(client.apply(&msgs[0]), Err(ProtocolError::Duplicate { seq: 0 }));
+    // A gap: msgs[1] lost, msgs[2] arrives.
+    assert_eq!(client.apply(&msgs[2]), Err(ProtocolError::Gap { expected: 1, got: 2 }));
+    assert_eq!(client.store.cut_ids(), cut_before, "rejected msgs must not touch the store");
+    // In-order recovery, then a stale retransmit from two rounds back.
+    client.apply(&msgs[1]).unwrap();
+    client.apply(&msgs[2]).unwrap();
+    assert_eq!(client.apply(&msgs[1]), Err(ProtocolError::OutOfOrder { seq: 1, expected: 3 }));
+    assert_eq!(client.expected_seq(), 3);
+}
+
+#[test]
+fn post_resync_client_matches_never_faulted_peer() {
+    // A client that lost rounds and resynced via keyframe must end up
+    // with exactly the cut a never-faulted client holds, and must track
+    // its cloud's view incrementally from then on.
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(20_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let (mut cloud_f, mut faulted) = endpoints(&tree, pl.reuse_threshold);
+    let (mut cloud_c, mut clean) = endpoints(&tree, pl.reuse_threshold);
+    let mut search = TemporalSearch::for_tree(&tree);
+    let poses = benchkit::walk_trace(&spec, 32);
+    let cuts: Vec<Vec<_>> = poses
+        .iter()
+        .step_by(pl.lod_interval as usize)
+        .map(|pose| search.search(&tree, &benchkit::query_at(pose, &pl)).nodes)
+        .collect();
+    assert!(cuts.len() >= 6);
+
+    // Clean path: every round delivered.
+    for cut in &cuts[..4] {
+        clean.apply(&cloud_c.publish_cut(cut)).unwrap();
+    }
+    // Faulted path: round 0 lands, rounds 1-2 are lost in flight, the
+    // cloud notices (retry budget exhausted) and resyncs round 3 as a
+    // keyframe instead of a delta.
+    faulted.apply(&cloud_f.publish_cut(&cuts[0])).unwrap();
+    let _lost1 = cloud_f.publish_cut(&cuts[1]);
+    let _lost2 = cloud_f.publish_cut(&cuts[2]);
+    let kf = cloud_f.publish_keyframe(&cuts[3]);
+    assert_eq!(kf.kind, MsgKind::Keyframe);
+    faulted.apply(&kf).unwrap();
+
+    // Post-resync: the faulted client's cut matches the never-faulted
+    // peer exactly, and both match the canonical search output.
+    assert_eq!(faulted.store.cut_ids(), clean.store.cut_ids());
+    assert_eq!(faulted.store.cut_ids(), cuts[3]);
+    // The render working set is identical id-for-id.
+    let ids = |c: &ClientEndpoint| c.store.render_queue().iter().map(|(id, _)| *id).collect::<Vec<_>>();
+    assert_eq!(ids(&faulted), ids(&clean));
+
+    // And the delta stream continues consistently from the keyframe base.
+    for cut in &cuts[4..6] {
+        faulted.apply(&cloud_f.publish_cut(cut)).unwrap();
+        clean.apply(&cloud_c.publish_cut(cut)).unwrap();
+        assert_eq!(cloud_f.table.resident_ids(), faulted.store.resident_ids());
+        assert_eq!(faulted.store.cut_ids(), clean.store.cut_ids());
+    }
+}
+
+#[test]
+fn seeded_loss_and_outage_recover_within_budget() {
+    // End-to-end: 5% loss + a 250 ms blackout. The scheduler must keep
+    // rendering (stale frames, never a stall-forever), resync at least
+    // once, and report finite latency/staleness percentiles.
+    let (tree, poses, params) = setup();
+    let clean = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    let r = run_simulation(&tree, &poses, &Variant::nebula(), &faulty_net(&params));
+
+    // The outage provably swallows in-flight rounds: attempts launched
+    // inside [0.1 s, 0.35 s) are all dropped.
+    assert!(r.faults.lost_msgs > 0, "outage produced no losses");
+    assert!(r.faults.stalls > 0, "retry budget never exhausted during the blackout");
+    assert!(r.faults.resyncs > 0, "no keyframe resync after abandoned rounds");
+    // Recovery: the client came back within the trace, with sane
+    // accounting — finite percentiles, a bounded worst recovery span,
+    // and the frame loop never stopped producing frames.
+    assert!(r.mtp_p99_ms.is_finite() && r.fps > 0.0);
+    assert!(r.faults.staleness_mean_frames.is_finite());
+    assert!(r.faults.staleness_p99_frames.is_finite());
+    assert!(r.faults.recovery_frames_max >= 1);
+    assert!(r.faults.recovery_frames_max <= poses.len() as u64);
+    assert_eq!(r.frames, clean.frames, "faults must not change the frame count");
+    // Staleness under faults dominates the clean run's.
+    assert!(r.faults.staleness_mean_frames >= clean.faults.staleness_mean_frames);
+    // Retransmits were actually attempted before giving up.
+    assert!(r.faults.retransmits > 0);
+}

@@ -120,7 +120,7 @@ fn multiclient_counters_thread_invariant() {
     params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
     params.pipeline.res_scale = 16;
     // Finite shared budgets so the contended paths are exercised too.
-    let server = ServerConfig { cloud_budget: 0.25, uplink_bps: 200e6 };
+    let server = ServerConfig { cloud_budget: 0.25, uplink_bps: 200e6, ..ServerConfig::default() };
 
     params.pipeline.threads = 1;
     let reference = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
