@@ -23,6 +23,7 @@ use nebula::coordinator::scheduler::{run_simulation, SimParams};
 use nebula::coordinator::{run_multiclient, MulticlientResult, ServerConfig, Variant};
 use nebula::scene::{dataset, CityGen};
 use nebula::util::bench::bench_header;
+use nebula::util::Stopwatch;
 
 struct Row {
     clients: usize,
@@ -91,9 +92,9 @@ fn main() {
         let mut reference: Option<MulticlientResult> = None;
         for &t in &threads_sweep {
             params.pipeline.threads = t;
-            let start = std::time::Instant::now();
+            let start = Stopwatch::start();
             let r = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
-            let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+            let wall_ms = start.elapsed_ms();
             if let Some(r0) = &reference {
                 assert_eq!(
                     r.per_client, r0.per_client,

@@ -34,6 +34,7 @@ use nebula::render::{preprocess_records, ProjectedSet, TileBins};
 use nebula::scene::{CityGen, CityParams};
 use nebula::trace::{PoseTrace, TraceParams};
 use nebula::util::bench::{bench_header, Bencher};
+use nebula::util::Stopwatch;
 
 struct Row {
     mode: &'static str,
@@ -154,9 +155,9 @@ fn main() {
     let best_of = |k: u32, f: &dyn Fn()| -> f64 {
         let mut best = f64::INFINITY;
         for _ in 0..k {
-            let t = std::time::Instant::now();
+            let t = Stopwatch::start();
             f();
-            best = best.min(t.elapsed().as_secs_f64() * 1e3);
+            best = best.min(t.elapsed_ms());
         }
         best
     };
@@ -325,7 +326,7 @@ fn main() {
         steals_right: u64,
     }
     let median = |xs: &mut Vec<f64>| -> f64 {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         xs[xs.len() / 2]
     };
     // A real LoD cut for the validate-stage timing.
@@ -349,12 +350,12 @@ fn main() {
         let (mut steals_left, mut steals_right) = (0u64, 0u64);
         for i in 0..n_samples + n_warmup {
             let out = render_stereo(&cam, &refs, 3, tile, &c, StereoMode::AlphaGated);
-            let t = std::time::Instant::now();
+            let t = Stopwatch::start();
             lod_cut.validate_par(&tree, &query, *par).expect("cut is valid");
             if i < n_warmup {
                 continue; // warmup
             }
-            val.push(t.elapsed().as_secs_f64() * 1e3);
+            val.push(t.elapsed_ms());
             pre.push(out.stages.preprocess * 1e3);
             srt.push(out.stages.sort * 1e3);
             bin.push(out.stages.binning * 1e3);

@@ -71,7 +71,7 @@ pub fn calibrate_tau(tree: &LodTree, extent_m: f32) -> f32 {
     if radii.is_empty() {
         return 6.0;
     }
-    radii.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    radii.sort_by(f32::total_cmp);
     let median = radii[radii.len() / 2];
     let fx = Intrinsics::vr_eye().fx;
     (fx * 2.0 * median / (0.25 * extent_m)).clamp(2.0, 512.0)
@@ -130,6 +130,21 @@ mod tests {
         let q = queue_for(&tree, &cut);
         assert_eq!(q.len(), cut.len());
         assert_eq!(queue_refs(&q).len(), cut.len());
+    }
+
+    #[test]
+    fn calibrate_tau_survives_nan_radius() {
+        // A corrupt leaf radius must not panic the calibration sort
+        // (`sort_by(partial_cmp().unwrap())` used to). NaN sorts last
+        // under `total_cmp`, so the median and the returned τ stay
+        // finite and in-range.
+        let spec = &SMALL_DATASETS[0];
+        let mut tree = build_scene(spec);
+        let leaf = tree.leaves()[0] as usize;
+        tree.radius[leaf] = f32::NAN;
+        let tau = calibrate_tau(&tree, spec.extent_m);
+        assert!(tau.is_finite());
+        assert!((2.0..=512.0).contains(&tau), "tau={tau}");
     }
 
     #[test]

@@ -1,0 +1,18 @@
+//! `nebula_lint` — the repo's determinism lint as a CI-gateable binary.
+//!
+//! ```text
+//! cargo run --release --bin nebula_lint -- --deny          # CI gate
+//! cargo run --release --bin nebula_lint -- --json          # machine output
+//! cargo run --release --bin nebula_lint -- path/to/file.rs # spot-check
+//! ```
+//!
+//! All logic lives in [`nebula::lint`] (rules D01–D06, pragma syntax,
+//! allowlists — see the README's "Determinism lint" section); this is a
+//! thin exit-code shim so the engine is unit-testable without spawning
+//! processes.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut stdout = std::io::stdout();
+    std::process::exit(nebula::lint::run_cli(&args, &mut stdout));
+}

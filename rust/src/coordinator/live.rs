@@ -13,6 +13,7 @@ use crate::lod::{LodQuery, LodSearch, LodTree, TemporalSearch};
 use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg, SceneInit};
 use crate::math::Vec3;
 use crate::render::engine::Parallelism;
+use crate::util::Stopwatch;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -102,7 +103,7 @@ pub fn spawn_cloud(
             match req {
                 CloudRequest::Shutdown => break,
                 CloudRequest::Pose(eye) => {
-                    let t = std::time::Instant::now();
+                    let t = Stopwatch::start();
                     let q = LodQuery::new(eye, fx, pipeline.tau_px, near);
                     let cut = search.search(tree_ref, &q);
                     let msg = cloud.publish_cut(&cut.nodes);

@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod gaussian;
 pub mod hw;
+pub mod lint;
 pub mod lod;
 pub mod manage;
 pub mod math;

@@ -1,0 +1,361 @@
+//! Minimal hand-rolled Rust lexer for the determinism lint.
+//!
+//! The build is fully offline, so no `syn`/`proc-macro2`: this lexer
+//! does exactly the subset the rules need — split source into
+//! line-numbered ident and punctuation tokens while *discarding* the
+//! regions a token-pattern rule must never fire inside (line comments,
+//! nested block comments, string/raw-string/byte-string/char literals)
+//! and *harvesting* `nebula-lint: allow(...)` pragmas out of comments
+//! before they are discarded.
+//!
+//! It is deliberately not a full Rust lexer (no float-vs-range
+//! disambiguation, no shebang handling); it only has to be exact about
+//! the boundaries of comments and literals, because those decide
+//! whether `partial_cmp` in a doc comment counts as code.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    /// 1-based source line the token starts on.
+    pub line: u32,
+    pub kind: TokenKind,
+    /// Token text: the identifier, or the single punctuation character.
+    pub text: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`unsafe`, `partial_cmp`, `HashMap`, …).
+    Ident,
+    /// Single punctuation/operator character (`.`, `(`, `:`, …).
+    Punct,
+    /// Numeric literal (kept only so rules can skip over them).
+    Number,
+}
+
+/// A `// nebula-lint: allow(D01[, D02…]) reason` pragma found in a
+/// comment. Suppresses matching findings on its own line and on the
+/// immediately following source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pragma {
+    /// 1-based line the pragma comment starts on.
+    pub line: u32,
+    /// Rule ids named in `allow(...)`, e.g. `["D02"]`.
+    pub rules: Vec<String>,
+    /// Free-text justification after the closing paren (required by
+    /// convention; an empty reason is itself reported by the driver).
+    pub reason: String,
+}
+
+/// Lexer output: the code tokens plus every pragma seen in comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub pragmas: Vec<Pragma>,
+    /// Lines of comments that *mention* nebula-lint but did not parse as
+    /// a pragma (typo guard — surfaced as findings by the driver).
+    pub malformed_pragmas: Vec<u32>,
+}
+
+const PRAGMA_TAG: &str = "nebula-lint:";
+
+/// Parse the body of a comment; records a pragma (or a malformed-pragma
+/// line) if the tag appears.
+fn harvest_pragma(comment: &str, line: u32, out: &mut Lexed) {
+    let Some(at) = comment.find(PRAGMA_TAG) else { return };
+    let rest = comment[at + PRAGMA_TAG.len()..].trim_start();
+    let parsed = (|| -> Option<Pragma> {
+        let rest = rest.strip_prefix("allow")?.trim_start();
+        let rest = rest.strip_prefix('(')?;
+        let close = rest.find(')')?;
+        let rules: Vec<String> = rest[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        if rules.is_empty() {
+            return None;
+        }
+        let reason = rest[close + 1..].trim().trim_end_matches("*/").trim().to_string();
+        Some(Pragma { line, rules, reason })
+    })();
+    match parsed {
+        Some(p) => out.pragmas.push(p),
+        None => out.malformed_pragmas.push(line),
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src`, discarding comments and literals (see module docs).
+pub fn lex(src: &str) -> Lexed {
+    let mut out = Lexed::default();
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    macro_rules! bump_line {
+        ($c:expr) => {
+            if $c == '\n' {
+                line += 1;
+            }
+        };
+    }
+
+    while i < n {
+        let c = b[i];
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            harvest_pragma(&text, line, &mut out);
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let start = i;
+            i += 2;
+            let mut depth = 1;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    bump_line!(b[i]);
+                    i += 1;
+                }
+            }
+            let text: String = b[start..i.min(n)].iter().collect();
+            harvest_pragma(&text, start_line, &mut out);
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (and byte-raw br#"..."#): handled
+        // when we see the ident-ish prefix below; here catch the bare
+        // forms where `r`/`br` directly precede a quote or hash.
+        if (c == 'r' || c == 'b') && is_raw_string_start(&b, i) {
+            i = skip_raw_string(&b, i, &mut line);
+            continue;
+        }
+        // String literal (or byte string b"...").
+        if c == '"' {
+            i = skip_string(&b, i, &mut line);
+            continue;
+        }
+        if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            i = skip_string(&b, i + 1, &mut line);
+            continue;
+        }
+        // Char literal vs lifetime: a lifetime is `'` + ident with no
+        // closing quote right after one symbol.
+        if c == '\'' {
+            i = skip_char_or_lifetime(&b, i, &mut line);
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            out.tokens.push(Token { line, kind: TokenKind::Ident, text });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (is_ident_continue(b[i]) || b[i] == '.') {
+                // Stop a `0..n` range from swallowing the second dot.
+                if b[i] == '.' && i + 1 < n && b[i + 1] == '.' {
+                    break;
+                }
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            out.tokens.push(Token { line, kind: TokenKind::Number, text });
+            continue;
+        }
+        if !c.is_whitespace() {
+            out.tokens.push(Token { line, kind: TokenKind::Punct, text: c.to_string() });
+        }
+        bump_line!(c);
+        i += 1;
+    }
+    out
+}
+
+/// Does `r`/`br` at `i` open a raw string?
+fn is_raw_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+/// Skip a raw string starting at `i` (at the `r`/`br`); returns the
+/// index one past its closing delimiter.
+fn skip_raw_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    if b[i] == 'b' {
+        i += 1;
+    }
+    i += 1; // r
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < b.len() {
+        if b[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        if b[i] == '\n' {
+            *line += 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a normal string starting at the opening quote.
+fn skip_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            c => {
+                if c == '\n' {
+                    *line += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Skip a char literal (`'a'`, `'\n'`, `'\''`) or pass over a lifetime
+/// (`'a`, `'static`) without consuming following code.
+fn skip_char_or_lifetime(b: &[char], i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    // Escape: definitely a char literal.
+    if i + 1 < n && b[i + 1] == '\\' {
+        let mut j = i + 2;
+        while j < n && b[j] != '\'' {
+            j += 1;
+        }
+        return (j + 1).min(n);
+    }
+    // `'X'` with one symbol: char literal.
+    if i + 2 < n && b[i + 2] == '\'' {
+        if b[i + 1] == '\n' {
+            *line += 1;
+        }
+        return i + 3;
+    }
+    // Otherwise a lifetime: skip the quote, let the ident lex normally.
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_discarded() {
+        let src = r##"
+// partial_cmp in a line comment
+/* HashMap in /* a nested */ block comment */
+let s = "Instant::now inside a string";
+let r = r#"unsafe in a raw string"#;
+let c = 'u';
+fn real_code() {}
+"##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_code".to_string()));
+        for banned in ["partial_cmp", "HashMap", "Instant", "unsafe"] {
+            assert!(!ids.contains(&banned.to_string()), "{banned} leaked out of a literal");
+        }
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_code() {
+        let ids = idents("fn f<'a>(x: &'a str) -> &'a str { unsafe_marker(x) }");
+        assert!(ids.contains(&"unsafe_marker".to_string()));
+        assert!(ids.contains(&"a".to_string()), "lifetime ident still lexes");
+    }
+
+    #[test]
+    fn line_numbers_track_all_literal_kinds() {
+        let src = "let a = \"two\nlines\";\nlet b = 1;\n/* c\nc */ let d = 2;";
+        let lexed = lex(src);
+        let b = lexed.tokens.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
+        let d = lexed.tokens.iter().find(|t| t.text == "d").unwrap();
+        assert_eq!(d.line, 5);
+    }
+
+    #[test]
+    fn pragma_parses_rules_and_reason() {
+        let src = "// nebula-lint: allow(D02, D05) iteration feeds a commutative sum\nlet x = 1;";
+        let lexed = lex(src);
+        assert_eq!(lexed.pragmas.len(), 1);
+        let p = &lexed.pragmas[0];
+        assert_eq!(p.line, 1);
+        assert_eq!(p.rules, vec!["D02", "D05"]);
+        assert_eq!(p.reason, "iteration feeds a commutative sum");
+        assert!(lexed.malformed_pragmas.is_empty());
+    }
+
+    #[test]
+    fn pragma_without_rule_list_is_malformed() {
+        let lexed = lex("// nebula-lint: allow() no rules named\n// nebula-lint: disallow(D01)\n");
+        assert!(lexed.pragmas.is_empty());
+        assert_eq!(lexed.malformed_pragmas, vec![1, 2]);
+    }
+
+    #[test]
+    fn block_comment_pragma_strips_terminator() {
+        let lexed = lex("/* nebula-lint: allow(D06) ffi shim */ unsafe {}");
+        assert_eq!(lexed.pragmas.len(), 1);
+        assert_eq!(lexed.pragmas[0].reason, "ffi shim");
+        // The unsafe token is still visible to rules (same line as pragma).
+        assert!(lexed.tokens.iter().any(|t| t.text == "unsafe"));
+    }
+}

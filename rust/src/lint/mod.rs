@@ -1,0 +1,424 @@
+//! `nebula-lint` — the repo-native determinism lint.
+//!
+//! Every correctness claim in this codebase is a *bitwise determinism*
+//! claim: serial ≡ threads parity, thread-invariant fault counters,
+//! N=1 cloud/client parity, byte-identical cloud↔client replay. The
+//! parity suites enforce that dynamically; this module enforces the
+//! *static* half by banning the nondeterminism classes the repo keeps
+//! re-fixing, as named machine-readable rules:
+//!
+//! | rule | bans | fix |
+//! |------|------|-----|
+//! | D01 | `partial_cmp(..).unwrap{,_or}(..)` | `f32::total_cmp` |
+//! | D02 | `HashMap` / `HashSet` | `BTreeMap`/`BTreeSet` or key-sort |
+//! | D03 | `Instant` / `SystemTime` outside `util/{timer,bench}.rs` | route through `util::timer` |
+//! | D04 | ambient randomness (`thread_rng`, `rand::`, `RandomState`…) | seed `util::prng::Prng` |
+//! | D05 | `Atomic*` / atomic `Ordering::` outside the engine cursor | pragma + happens-before argument |
+//! | D06 | `unsafe` | safe Rust (`std::hint::black_box`, scoped threads) |
+//!
+//! A site that is genuinely order-safe can carry an inline pragma **on
+//! its own line or the line above**:
+//!
+//! ```text
+//! // nebula-lint: allow(D05) claim counter only read after scope join
+//! ```
+//!
+//! The reason text is mandatory — a pragma without one is itself a
+//! finding (`P02`), as is a pragma that fails to parse (`P01`) or names
+//! an unknown rule (`P03`). The lint walks `rust/src`, `rust/benches`,
+//! `rust/tests` and `examples` (never `vendor/`); `nebula_lint --deny`
+//! is the CI gate and `tests/it_lint.rs` pins that the committed
+//! workspace stays clean.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::RuleId;
+
+use std::path::{Path, PathBuf};
+
+/// One reported lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// `"D01"`‥`"D06"`, or `"P01"`/`"P02"`/`"P03"` for pragma problems.
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    /// The matched token(s), e.g. `"HashMap"`.
+    pub excerpt: String,
+    pub message: String,
+}
+
+/// Per-rule file allowlists, as `/`-normalized path suffixes. These are
+/// the *only* files allowed to use the banned construct without a
+/// pragma — keep them shortest-possible.
+fn allowlisted(rule: RuleId, norm_path: &str) -> bool {
+    let suffixes: &[&str] = match rule {
+        // Wall-clock is centralized in the two timing utilities; every
+        // other module (incl. benches) must route through them.
+        RuleId::D03 => &["src/util/timer.rs", "src/util/bench.rs"],
+        // The engine's work-stealing cursor and the schedfuzz plan
+        // register — the one component whose happens-before argument
+        // lives in module docs instead of pragmas (and which the
+        // schedule-permutation harness exists to check).
+        RuleId::D05 => &["src/render/engine.rs"],
+        _ => &[],
+    };
+    suffixes.iter().any(|s| norm_path.ends_with(s))
+}
+
+/// Lint one file's source. `file` is used for reporting and for the
+/// rule allowlists (suffix-matched with `/` separators).
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let norm = file.replace('\\', "/");
+    let lexed = lexer::lex(src);
+    let mut findings = Vec::new();
+
+    for &line in &lexed.malformed_pragmas {
+        findings.push(Finding {
+            rule: "P01".into(),
+            file: file.into(),
+            line,
+            excerpt: "nebula-lint:".into(),
+            message: "mentions nebula-lint but does not parse as `nebula-lint: allow(Dxx) reason`"
+                .into(),
+        });
+    }
+    for p in &lexed.pragmas {
+        if p.reason.is_empty() {
+            findings.push(Finding {
+                rule: "P02".into(),
+                file: file.into(),
+                line: p.line,
+                excerpt: format!("allow({})", p.rules.join(", ")),
+                message: "pragma must state its reason (the repo convention: every allow \
+                          carries a written justification)"
+                    .into(),
+            });
+        }
+        for r in &p.rules {
+            if RuleId::parse(r).is_none() {
+                findings.push(Finding {
+                    rule: "P03".into(),
+                    file: file.into(),
+                    line: p.line,
+                    excerpt: r.clone(),
+                    message: "pragma names an unknown rule id".into(),
+                });
+            }
+        }
+    }
+
+    for (rule, line, excerpt) in rules::scan(&lexed.tokens) {
+        if allowlisted(rule, &norm) {
+            continue;
+        }
+        // A pragma suppresses findings on its own line and the line
+        // directly below it (so it can sit above the flagged statement).
+        let suppressed = lexed.pragmas.iter().any(|p| {
+            (p.line == line || p.line + 1 == line)
+                && !p.reason.is_empty()
+                && p.rules.iter().any(|r| r == rule.as_str())
+        });
+        if suppressed {
+            continue;
+        }
+        findings.push(Finding {
+            rule: rule.as_str().into(),
+            file: file.into(),
+            line,
+            excerpt,
+            message: rule.summary().into(),
+        });
+    }
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    findings
+}
+
+/// The workspace directories the lint walks, given the repo root.
+pub fn default_targets(root: &Path) -> Vec<PathBuf> {
+    ["rust/src", "rust/benches", "rust/tests", "examples"]
+        .iter()
+        .map(|d| root.join(d))
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+/// Recursively collect `.rs` files under `path` (a file or directory),
+/// skipping `vendor/` (offline dependency stubs — not ours to lint) and
+/// `target/`. Output is sorted for stable reports.
+pub fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return;
+    }
+    let Ok(entries) = std::fs::read_dir(path) else { return };
+    let mut children: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    children.sort();
+    for child in children {
+        let name = child.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if child.is_dir() && (name == "vendor" || name == "target" || name.starts_with('.')) {
+            continue;
+        }
+        collect_rs_files(&child, out);
+    }
+}
+
+/// Lint a set of paths (files or directories). Returns
+/// `(findings, files scanned)`. Unreadable files become findings rather
+/// than silent skips.
+pub fn lint_paths(paths: &[PathBuf]) -> (Vec<Finding>, usize) {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs_files(p, &mut files);
+    }
+    files.sort();
+    files.dedup();
+    let mut findings = Vec::new();
+    for f in &files {
+        let label = f.to_string_lossy().to_string();
+        match std::fs::read_to_string(f) {
+            Ok(src) => findings.extend(lint_source(&label, &src)),
+            Err(e) => findings.push(Finding {
+                rule: "P01".into(),
+                file: label,
+                line: 0,
+                excerpt: String::new(),
+                message: format!("unreadable: {e}"),
+            }),
+        }
+    }
+    (findings, files.len())
+}
+
+/// Repo root the lint defaults to: the parent of this crate's manifest
+/// directory (`rust/` → the workspace root).
+pub fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap_or(Path::new(".")).to_path_buf()
+}
+
+/// Human-readable findings table.
+pub fn render_table(findings: &[Finding], files_scanned: usize) -> String {
+    let mut s = String::new();
+    if findings.is_empty() {
+        s.push_str(&format!("nebula-lint: clean ({files_scanned} files scanned)\n"));
+        return s;
+    }
+    let wide = findings.iter().map(|f| format!("{}:{}", f.file, f.line).len()).max().unwrap_or(0);
+    for f in findings {
+        let loc = format!("{}:{}", f.file, f.line);
+        s.push_str(&format!("{}  {loc:<wide$}  {}  — {}\n", f.rule, f.excerpt, f.message));
+    }
+    s.push_str(&format!(
+        "nebula-lint: {} finding(s) in {} file(s) ({files_scanned} files scanned)\n",
+        findings.len(),
+        {
+            let mut fs: Vec<&str> = findings.iter().map(|f| f.file.as_str()).collect();
+            fs.sort();
+            fs.dedup();
+            fs.len()
+        },
+    ));
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable findings (JSON array, one object per finding).
+pub fn render_json(findings: &[Finding], files_scanned: usize) -> String {
+    let items: Vec<String> = findings
+        .iter()
+        .map(|f| {
+            format!(
+                "  {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"excerpt\": \"{}\", \
+                 \"message\": \"{}\"}}",
+                json_escape(&f.rule),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.excerpt),
+                json_escape(&f.message),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"files_scanned\": {files_scanned}, \"findings\": [\n{}\n]}}\n",
+        items.join(",\n")
+    )
+}
+
+/// CLI entry point shared by the `nebula_lint` binary and its tests:
+/// `nebula_lint [--deny] [--json] [--root DIR] [paths…]`. Returns the
+/// process exit code: non-zero iff findings exist **and** `--deny` was
+/// passed (report-only mode always exits 0 so it can run mid-refactor).
+pub fn run_cli(args: &[String], stdout: &mut dyn std::io::Write) -> i32 {
+    use std::io::Write as _;
+    let mut deny = false;
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--deny" => deny = true,
+            "--json" => json = true,
+            "--root" => match it.next() {
+                Some(r) => root = Some(PathBuf::from(r)),
+                None => {
+                    let _ = writeln!(stdout, "nebula-lint: --root needs a directory");
+                    return 2;
+                }
+            },
+            "--help" | "-h" => {
+                let _ = writeln!(
+                    stdout,
+                    "usage: nebula_lint [--deny] [--json] [--root DIR] [paths…]\n\
+                     Determinism lint (rules D01–D06; see README). With no paths, walks\n\
+                     rust/src, rust/benches, rust/tests and examples under the repo root."
+                );
+                return 0;
+            }
+            p if !p.starts_with('-') => paths.push(PathBuf::from(p)),
+            other => {
+                let _ = writeln!(stdout, "nebula-lint: unknown flag {other}");
+                return 2;
+            }
+        }
+    }
+    if paths.is_empty() {
+        paths = default_targets(&root.unwrap_or_else(default_root));
+    }
+    let (findings, files_scanned) = lint_paths(&paths);
+    let report = if json {
+        render_json(&findings, files_scanned)
+    } else {
+        render_table(&findings, files_scanned)
+    };
+    let _ = stdout.write_all(report.as_bytes());
+    if !findings.is_empty() && deny {
+        1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_suppresses_same_and_next_line() {
+        let src = "\
+use std::collections::BTreeMap;
+// nebula-lint: allow(D02) membership-only set, order never observed
+let s: HashSet<u32> = HashSet::new();
+let t: HashSet<u32> = HashSet::new();
+";
+        let f = lint_source("x.rs", src);
+        // Line 3 (both hits) suppressed by the pragma on line 2; line 4
+        // still fires.
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "D02");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn pragma_only_suppresses_named_rules() {
+        let src = "// nebula-lint: allow(D02) wrong rule for this line\nlet t = Instant::now();\n";
+        let f = lint_source("x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D03");
+    }
+
+    #[test]
+    fn reasonless_pragma_is_a_finding_and_does_not_suppress() {
+        let src = "// nebula-lint: allow(D06)\nunsafe {}\n";
+        let f = lint_source("x.rs", src);
+        let rules: Vec<&str> = f.iter().map(|f| f.rule.as_str()).collect();
+        assert!(rules.contains(&"P02"), "{rules:?}");
+        assert!(rules.contains(&"D06"), "reasonless pragma must not suppress: {rules:?}");
+    }
+
+    #[test]
+    fn unknown_rule_in_pragma_is_flagged() {
+        let f = lint_source("x.rs", "// nebula-lint: allow(D99) bogus\nlet x = 1;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "P03");
+        assert_eq!(f[0].excerpt, "D99");
+    }
+
+    #[test]
+    fn allowlists_are_file_precise() {
+        let src = "let t = Instant::now();\n";
+        assert!(lint_source("rust/src/util/timer.rs", src).is_empty());
+        assert!(lint_source("rust/src/util/bench.rs", src).is_empty());
+        assert_eq!(lint_source("rust/src/util/cli.rs", src).len(), 1);
+        assert_eq!(lint_source("rust/benches/bench_render.rs", src).len(), 1);
+
+        let atomics = "static C: AtomicU64 = AtomicU64::new(0);\n";
+        assert!(lint_source("rust/src/render/engine.rs", atomics).is_empty());
+        assert_eq!(lint_source("rust/src/render/raster.rs", atomics).len(), 2);
+    }
+
+    #[test]
+    fn multi_rule_pragma_suppresses_both() {
+        let src = "// nebula-lint: allow(D05, D02) test-only claim log keyed before join\n\
+                   let c: HashSet<u32> = HashSet::new(); let a = AtomicU64::new(0);\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cli_reports_and_gates() {
+        // Fixture tree in a temp dir: one dirty file, one clean.
+        let dir = std::env::temp_dir().join(format!("nebula_lint_cli_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("dirty.rs"), "unsafe { hash(HashMap::new()) }\n").unwrap();
+        std::fs::write(dir.join("clean.rs"), "pub fn ok() -> u32 { 7 }\n").unwrap();
+
+        let args = |extra: &[&str]| -> Vec<String> {
+            let mut v: Vec<String> = extra.iter().map(|s| s.to_string()).collect();
+            v.push(dir.to_string_lossy().to_string());
+            v
+        };
+        // Report-only: findings print, exit 0.
+        let mut out = Vec::new();
+        assert_eq!(run_cli(&args(&[]), &mut out), 0);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("D06") && text.contains("D02"), "{text}");
+        assert!(text.contains("2 files scanned"), "{text}");
+        // Deny: same findings, exit 1.
+        let mut out = Vec::new();
+        assert_eq!(run_cli(&args(&["--deny"]), &mut out), 1);
+        // JSON mode round-trips the rule ids.
+        let mut out = Vec::new();
+        assert_eq!(run_cli(&args(&["--json"]), &mut out), 0);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("\"rule\": \"D06\""), "{text}");
+        // A clean tree gates green.
+        std::fs::remove_file(dir.join("dirty.rs")).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(run_cli(&args(&["--deny"]), &mut out), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error() {
+        let mut out = Vec::new();
+        assert_eq!(run_cli(&["--frobnicate".into()], &mut out), 2);
+    }
+}

@@ -1,0 +1,276 @@
+//! The determinism rules (D01–D06) as token-pattern matchers.
+//!
+//! Each rule is a pure function from a lexed token stream to findings;
+//! allowlisting and pragma suppression are applied by the driver
+//! ([`super::lint_source`]), so the matchers themselves stay trivially
+//! testable. See the README's "Determinism lint" section for the rule
+//! catalogue and the rationale behind each ban.
+
+use super::lexer::{Token, TokenKind};
+
+/// Stable rule identifiers (these appear in pragmas, CI output and the
+/// README — never renumber).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    /// `partial_cmp(..).unwrap{,_or}(..)` — panics or silently reorders
+    /// on NaN inside comparators; use `f32::total_cmp`.
+    D01,
+    /// `HashMap`/`HashSet` — hash-ordered iteration can leak hasher
+    /// state into outputs; use `BTreeMap`/`BTreeSet` or key-sort and
+    /// justify with a pragma.
+    D02,
+    /// `Instant`/`SystemTime` — wall-clock outside the timing utilities
+    /// can leak into simulated results.
+    D03,
+    /// Ambient randomness (`thread_rng`, `rand::`, `RandomState`, …) —
+    /// everything stochastic must draw from the seeded `util::prng`.
+    D04,
+    /// `Atomic*` / atomic memory `Ordering` — lock-free state outside
+    /// the engine cursor needs a written happens-before argument.
+    D05,
+    /// `unsafe` — the workspace is (and must stay) 100% safe Rust.
+    D06,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 6] =
+        [RuleId::D01, RuleId::D02, RuleId::D03, RuleId::D04, RuleId::D05, RuleId::D06];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::D01 => "D01",
+            RuleId::D02 => "D02",
+            RuleId::D03 => "D03",
+            RuleId::D04 => "D04",
+            RuleId::D05 => "D05",
+            RuleId::D06 => "D06",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.as_str() == s)
+    }
+
+    /// One-line description shown in the report table.
+    pub fn summary(&self) -> &'static str {
+        match self {
+            RuleId::D01 => "partial_cmp().unwrap() in a comparator — use f32::total_cmp",
+            RuleId::D02 => "hash-ordered collection — use BTreeMap/BTreeSet or sort keys",
+            RuleId::D03 => "wall-clock outside util::timer/util::bench",
+            RuleId::D04 => "randomness outside util::prng's seeded PRNG",
+            RuleId::D05 => "atomic outside the engine cursor without a happens-before pragma",
+            RuleId::D06 => "unsafe code",
+        }
+    }
+}
+
+impl std::fmt::Display for RuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One raw rule hit: `(rule, line, matched excerpt)`. The driver
+/// attaches the file and applies suppression.
+pub type Hit = (RuleId, u32, String);
+
+/// Run every rule over one file's token stream.
+pub fn scan(tokens: &[Token]) -> Vec<Hit> {
+    let mut hits = Vec::new();
+    scan_d01(tokens, &mut hits);
+    scan_idents(tokens, &mut hits);
+    scan_d05_ordering(tokens, &mut hits);
+    hits.sort_by_key(|(r, line, _)| (*line, *r));
+    hits
+}
+
+/// Index just past the `)` matching the `(` at `open` (which must point
+/// at a `(` token); `tokens.len()` if unbalanced.
+fn skip_parens(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < tokens.len() {
+        if tokens[i].kind == TokenKind::Punct {
+            match tokens[i].text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+fn is_punct(t: &Token, s: &str) -> bool {
+    t.kind == TokenKind::Punct && t.text == s
+}
+
+fn is_ident(t: &Token, s: &str) -> bool {
+    t.kind == TokenKind::Ident && t.text == s
+}
+
+/// D01: `.partial_cmp(..).unwrap()` / `.unwrap_or(..)`. Bare
+/// `partial_cmp` (e.g. in a trait impl or followed by a NaN-aware
+/// match) is allowed — the hazard is specifically the panicking/
+/// order-breaking unwrap of the comparator's `Option`.
+fn scan_d01(tokens: &[Token], hits: &mut Vec<Hit>) {
+    for i in 0..tokens.len() {
+        if !is_ident(&tokens[i], "partial_cmp") {
+            continue;
+        }
+        let Some(open) = tokens.get(i + 1) else { continue };
+        if !is_punct(open, "(") {
+            continue;
+        }
+        let after = skip_parens(tokens, i + 1);
+        if after + 1 < tokens.len()
+            && is_punct(&tokens[after], ".")
+            && (is_ident(&tokens[after + 1], "unwrap") || is_ident(&tokens[after + 1], "unwrap_or"))
+        {
+            hits.push((
+                RuleId::D01,
+                tokens[i].line,
+                format!("partial_cmp(..).{}(..)", tokens[after + 1].text),
+            ));
+        }
+    }
+}
+
+/// Ident-keyed rules: D02 (hash collections), D03 (wall-clock), D04
+/// (ambient randomness), D05's `Atomic*` types, D06 (`unsafe`).
+fn scan_idents(tokens: &[Token], hits: &mut Vec<Hit>) {
+    for t in tokens {
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let rule = match t.text.as_str() {
+            "HashMap" | "HashSet" => Some(RuleId::D02),
+            "Instant" | "SystemTime" => Some(RuleId::D03),
+            // `RandomState` is std's per-process-seeded hasher state;
+            // the crate names are dead tokens here (no such deps) but
+            // guard against them creeping in via vendored code.
+            "thread_rng" | "rand" | "fastrand" | "getrandom" | "RandomState" | "OsRng"
+            | "ThreadRng" | "from_entropy" => Some(RuleId::D04),
+            "unsafe" => Some(RuleId::D06),
+            s if s.starts_with("Atomic") && s.len() > "Atomic".len() => Some(RuleId::D05),
+            _ => None,
+        };
+        if let Some(rule) = rule {
+            hits.push((rule, t.line, t.text.clone()));
+        }
+    }
+}
+
+/// D05 (second half): atomic memory orderings. Matches
+/// `Ordering::{Relaxed, Acquire, Release, AcqRel, SeqCst}` — and NOT
+/// `std::cmp::Ordering::{Less, Equal, Greater}`, which shares the type
+/// name but is pure-value code.
+fn scan_d05_ordering(tokens: &[Token], hits: &mut Vec<Hit>) {
+    const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+    for i in 0..tokens.len() {
+        if !is_ident(&tokens[i], "Ordering") {
+            continue;
+        }
+        if i + 3 < tokens.len()
+            && is_punct(&tokens[i + 1], ":")
+            && is_punct(&tokens[i + 2], ":")
+            && tokens[i + 3].kind == TokenKind::Ident
+            && ATOMIC_ORDERINGS.contains(&tokens[i + 3].text.as_str())
+        {
+            hits.push((
+                RuleId::D05,
+                tokens[i].line,
+                format!("Ordering::{}", tokens[i + 3].text),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn rules_hit(src: &str) -> Vec<RuleId> {
+        scan(&lex(src).tokens).into_iter().map(|(r, _, _)| r).collect()
+    }
+
+    #[test]
+    fn d01_fires_on_unwrap_and_unwrap_or() {
+        assert_eq!(
+            rules_hit("v.sort_by(|a, b| a.partial_cmp(b).unwrap());"),
+            vec![RuleId::D01]
+        );
+        assert_eq!(
+            rules_hit("v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));"),
+            vec![RuleId::D01]
+        );
+        // Nested parens in the comparator body still match.
+        assert_eq!(
+            rules_hit("xs.max_by(|a, b| (a.1).partial_cmp(&(b.1)).unwrap());"),
+            vec![RuleId::D01]
+        );
+    }
+
+    #[test]
+    fn d01_ignores_nan_aware_uses() {
+        assert!(rules_hit("match a.partial_cmp(b) { Some(o) => o, None => Equal }").is_empty());
+        assert!(rules_hit("v.sort_by(f32::total_cmp);").is_empty());
+    }
+
+    #[test]
+    fn d02_fires_on_hash_collections() {
+        assert_eq!(
+            rules_hit("use std::collections::{HashMap, HashSet};"),
+            vec![RuleId::D02, RuleId::D02]
+        );
+        assert!(rules_hit("use std::collections::{BTreeMap, BTreeSet};").is_empty());
+    }
+
+    #[test]
+    fn d03_fires_on_wall_clock() {
+        assert_eq!(rules_hit("let t = Instant::now();"), vec![RuleId::D03]);
+        assert_eq!(rules_hit("let t = SystemTime::UNIX_EPOCH;"), vec![RuleId::D03]);
+        assert!(rules_hit("let d = Duration::from_micros(50);").is_empty());
+    }
+
+    #[test]
+    fn d04_fires_on_ambient_randomness() {
+        assert_eq!(rules_hit("let mut r = rand::thread_rng();"), {
+            vec![RuleId::D04, RuleId::D04]
+        });
+        assert_eq!(rules_hit("let s = RandomState::new();"), vec![RuleId::D04]);
+        assert!(rules_hit("let mut rng = Prng::new(7);").is_empty());
+    }
+
+    #[test]
+    fn d05_fires_on_atomics_not_cmp_ordering() {
+        assert_eq!(
+            rules_hit("let c = AtomicUsize::new(0); c.fetch_add(1, Ordering::Relaxed);"),
+            vec![RuleId::D05, RuleId::D05]
+        );
+        assert_eq!(rules_hit("let f = Ordering::SeqCst;"), vec![RuleId::D05]);
+        assert!(rules_hit("if cmp == Ordering::Less || cmp == Ordering::Greater {}").is_empty());
+        assert!(rules_hit("match x.cmp(&y) { Ordering::Equal => {} _ => {} }").is_empty());
+    }
+
+    #[test]
+    fn d06_fires_on_unsafe() {
+        assert_eq!(rules_hit("unsafe { ptr.read_volatile() }"), vec![RuleId::D06]);
+        assert!(rules_hit("// unsafe only in a comment\nlet x = 1;").is_empty());
+    }
+
+    #[test]
+    fn hits_carry_line_numbers() {
+        let hits = scan(&lex("let a = 1;\nlet b = HashMap::new();\nunsafe {}\n").tokens);
+        assert_eq!(hits.len(), 2);
+        assert_eq!((hits[0].0, hits[0].1), (RuleId::D02, 2));
+        assert_eq!((hits[1].0, hits[1].1), (RuleId::D06, 3));
+    }
+}

@@ -123,8 +123,8 @@ impl Cut {
         query: &LodQuery,
         par: Parallelism,
     ) -> anyhow::Result<()> {
-        use std::collections::HashSet;
-        let set: HashSet<u32> = self.nodes.iter().copied().collect();
+        use std::collections::BTreeSet;
+        let set: BTreeSet<u32> = self.nodes.iter().copied().collect();
         anyhow::ensure!(set.len() == self.nodes.len(), "duplicate cut nodes");
         let cut_checks = parallel_map_chunks(self.nodes.len(), NODE_BAND, par, |range| {
             for &n in &self.nodes[range] {

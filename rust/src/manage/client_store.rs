@@ -7,14 +7,19 @@
 //! ever received.
 
 use crate::gaussian::{GaussianId, GaussianRecord};
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Client-resident Gaussian store.
+///
+/// Ordered collections (BTree), not hash maps: iteration order feeds the
+/// render queue, the eviction list, and the consistency-test id dumps,
+/// so it must be a function of the *contents* only — never of a hasher
+/// seed or insertion history (nebula-lint D02).
 #[derive(Debug, Default)]
 pub struct ClientStore {
-    store: HashMap<GaussianId, GaussianRecord>,
-    reuse: HashMap<GaussianId, u32>,
-    cut: HashSet<GaussianId>,
+    store: BTreeMap<GaussianId, GaussianRecord>,
+    reuse: BTreeMap<GaussianId, u32>,
+    cut: BTreeSet<GaussianId>,
     pub reuse_threshold: u32,
     /// Bytes received (decoded Gaussians), for instrumentation.
     pub gaussians_received: u64,

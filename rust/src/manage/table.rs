@@ -7,20 +7,24 @@
 //! collection").
 
 use crate::gaussian::GaussianId;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Cloud-side table of client-resident Gaussians.
+///
+/// A BTreeMap, not a HashMap: the eviction scan iterates this table and
+/// its order reaches the (instrumented) eviction list and the resident-id
+/// dumps, so it must depend on contents only (nebula-lint D02).
 #[derive(Debug, Clone)]
 pub struct ManagementTable {
     /// Gaussian id → rounds since last cut membership (0 = in latest cut).
-    reuse: HashMap<GaussianId, u32>,
+    reuse: BTreeMap<GaussianId, u32>,
     /// Shared eviction threshold w_r* (paper: 32).
     pub reuse_threshold: u32,
 }
 
 impl ManagementTable {
     pub fn new(reuse_threshold: u32) -> Self {
-        Self { reuse: HashMap::new(), reuse_threshold }
+        Self { reuse: BTreeMap::new(), reuse_threshold }
     }
 
     pub fn len(&self) -> usize {

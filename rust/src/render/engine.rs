@@ -40,6 +40,24 @@
 //! under a shared cursor) is a pure scheduling heuristic with the same
 //! property. Enforced by the scheduler-parity suites in
 //! `tests/it_parallel.rs`.
+//!
+//! **The argument is now *checked*, not just argued.** The
+//! [`schedfuzz`] harness (compiled under
+//! `#[cfg(any(test, feature = "schedfuzz"))]`) installs a seeded
+//! [`schedfuzz::SchedulePlan`] that forces adversarial ownership
+//! permutations and injected yields/stalls into every map variant, and
+//! `tests/it_schedfuzz.rs` asserts bitwise-identical images, splat
+//! vectors and counters plus exactly-once item claims across ≥16
+//! hostile schedules at 2/4/8 threads. A future change that sneaks
+//! thread placement into an output (a shared accumulator, an
+//! order-dependent merge) fails that suite deterministically instead of
+//! flaking in production. The static half of the same contract is
+//! enforced by `nebula-lint` (see `src/lint/`); this file is the D05
+//! allowlist's only member, so every atomic below carries its
+//! happens-before argument in these docs: the work-stealing cursor and
+//! the schedfuzz plan register are both written before `thread::scope`
+//! spawns workers and joined before results are read, and the cursor's
+//! `fetch_add` is the unique claim point per slot.
 
 use super::image::Image;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -196,14 +214,33 @@ where
     }
 
     // Round-robin ownership: thread t runs items t, t+n, t+2n, …
+    // Under an installed schedfuzz plan, ownership is a seeded
+    // permutation of that assignment instead, with yields injected
+    // before each item — outputs must not move by a bit, which is
+    // exactly what `tests/it_schedfuzz.rs` checks.
+    #[cfg(any(test, feature = "schedfuzz"))]
+    let fuzz = schedfuzz::begin_call(n, threads);
+    #[cfg(any(test, feature = "schedfuzz"))]
+    let fuzz_seed: Option<u64> = fuzz.as_ref().map(|f| f.seed);
+    #[cfg(any(test, feature = "schedfuzz"))]
+    let bucket_of = |i: usize| fuzz.as_ref().map_or(i % threads, |f| f.bucket_of[i]);
+    #[cfg(not(any(test, feature = "schedfuzz")))]
+    let bucket_of = |i: usize| i % threads;
     let mut buckets: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
     for (i, item) in items.into_iter().enumerate() {
-        buckets[i % threads].push((i, item));
+        buckets[bucket_of(i)].push((i, item));
     }
 
     let worker = &worker;
-    let run_bucket = |bucket: Vec<(usize, T)>| -> Vec<(usize, R)> {
-        bucket.into_iter().map(|(i, item)| (i, worker(i, item))).collect()
+    let run_bucket = move |bucket: Vec<(usize, T)>| -> Vec<(usize, R)> {
+        bucket
+            .into_iter()
+            .map(|(i, item)| {
+                #[cfg(any(test, feature = "schedfuzz"))]
+                schedfuzz::perturb(fuzz_seed, i);
+                (i, worker(i, item))
+            })
+            .collect()
     };
     let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let home = buckets.remove(0);
@@ -291,7 +328,14 @@ where
     let worker = &worker;
     let slots = &slots;
     let cursor = &cursor;
+    // Schedfuzz: stagger worker start-up and stall between claim and
+    // execution so hostile interleavings of the cursor race actually
+    // happen — claim order may scramble arbitrarily, outputs may not.
+    #[cfg(any(test, feature = "schedfuzz"))]
+    let fuzz_seed: Option<u64> = schedfuzz::call_seed();
     let run_worker = move |w: usize| -> (Vec<(usize, R)>, u64) {
+        #[cfg(any(test, feature = "schedfuzz"))]
+        schedfuzz::stagger(fuzz_seed, w);
         let mut out = Vec::new();
         let mut steals = 0u64;
         loop {
@@ -299,6 +343,8 @@ where
             if k >= n {
                 break;
             }
+            #[cfg(any(test, feature = "schedfuzz"))]
+            schedfuzz::perturb(fuzz_seed, k);
             let (i, item) =
                 slots[k].lock().expect("slot lock").take().expect("slot claimed once");
             if k % threads != w {
@@ -409,6 +455,149 @@ where
             parallel_map_stealing(items, costs, par, |ty, (rows, extra)| {
                 worker(ty as u32, rows, extra)
             })
+        }
+    }
+}
+
+/// Deterministic schedule-permutation harness — the loom-style
+/// adversary for the engine's "thread placement is not an input"
+/// contract.
+///
+/// While a [`SchedulePlan`] is installed (via [`install`], which
+/// returns a clearing guard), every subsequent engine call draws a
+/// per-call sub-seed from the plan and uses it to
+/// * **permute ownership** in [`super::parallel_map`]: items land in a
+///   seeded shuffle of the round-robin buckets (same load multiset,
+///   adversarial placement);
+/// * **inject yields and microsecond stalls** before each item in both
+///   map variants, and **stagger worker start-up** in
+///   [`super::parallel_map_stealing`] — so cursor races resolve in
+///   hostile orders (a late worker finds the queue drained, an early
+///   one claims a run of consecutive slots, …).
+///
+/// The per-call sub-seeds derive from a call counter that [`install`]
+/// resets, so a given plan seed replays the same perturbation sequence
+/// across runs of a sequential workload. Plans only ever change *which
+/// thread runs an item and when* — `tests/it_schedfuzz.rs` asserts
+/// the outputs are bitwise indistinguishable from the unfuzzed serial
+/// path and that every item is claimed exactly once.
+///
+/// Happens-before (this file is the lint's D05 allowlist): the plan
+/// register and call counter are plain `AtomicU64`s with `Relaxed`
+/// ordering — installation happens on the thread that later invokes
+/// the engine, engine workers are spawned by `thread::scope` *after*
+/// the call-seed load (spawn is a release/acquire edge), and nothing
+/// ever branches on cross-thread timing of these values: a torn or
+/// stale read could only change perturbation strength, never output.
+#[cfg(any(test, feature = "schedfuzz"))]
+pub mod schedfuzz {
+    use crate::util::prng::Prng;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Installed plan seed; 0 = no plan (the hot-path check is one
+    /// relaxed load).
+    static PLAN: AtomicU64 = AtomicU64::new(0);
+    /// Engine calls made under the current plan — each call perturbs
+    /// differently so multi-stage frames exercise distinct schedules.
+    static CALL: AtomicU64 = AtomicU64::new(0);
+
+    /// A seeded adversarial schedule. Construct via [`install`].
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct SchedulePlan {
+        pub seed: u64,
+    }
+
+    /// Clears the installed plan when dropped, so a panicking test
+    /// cannot leak its schedule into the next one.
+    pub struct PlanGuard(());
+
+    impl Drop for PlanGuard {
+        fn drop(&mut self) {
+            PLAN.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Install a plan for the lifetime of the returned guard. Callers
+    /// that share a process (e.g. the test harness) must serialize
+    /// installs themselves — the harness suites hold a lock.
+    pub fn install(plan: SchedulePlan) -> PlanGuard {
+        // `| 1` keeps seed 0 distinguishable from "no plan".
+        PLAN.store(plan.seed | 1, Ordering::Relaxed);
+        CALL.store(0, Ordering::Relaxed);
+        PlanGuard(())
+    }
+
+    /// SplitMix64 finalizer — the same mixer `util::prng` seeds with.
+    fn mix(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Per-call sub-seed, or `None` when no plan is installed. Each
+    /// invocation advances the call counter.
+    pub(super) fn call_seed() -> Option<u64> {
+        let plan = PLAN.load(Ordering::Relaxed);
+        if plan == 0 {
+            return None;
+        }
+        let call = CALL.fetch_add(1, Ordering::Relaxed);
+        Some(mix(plan ^ call.wrapping_mul(0xD1B54A32D192ED03)))
+    }
+
+    /// Per-call fuzz state for [`super::parallel_map`]: the sub-seed
+    /// plus an adversarial item→bucket assignment.
+    pub(super) struct CallFuzz {
+        pub seed: u64,
+        /// `bucket_of[i]` ∈ `[0, threads)` — a seeded shuffle of the
+        /// round-robin assignment, so bucket loads stay balanced but
+        /// placement is hostile.
+        pub bucket_of: Vec<usize>,
+    }
+
+    pub(super) fn begin_call(n: usize, threads: usize) -> Option<CallFuzz> {
+        Some(fuzz_for(call_seed()?, n, threads))
+    }
+
+    /// Pure constructor for a call's fuzz state — a function of the
+    /// sub-seed only, so the permutation logic is testable without the
+    /// process-global plan register.
+    pub(super) fn fuzz_for(seed: u64, n: usize, threads: usize) -> CallFuzz {
+        let mut bucket_of: Vec<usize> = (0..n).map(|i| i % threads).collect();
+        let mut rng = Prng::new(seed);
+        for i in (1..bucket_of.len()).rev() {
+            let j = rng.range_usize(0, i + 1);
+            bucket_of.swap(i, j);
+        }
+        CallFuzz { seed, bucket_of }
+    }
+
+    /// Hostile pause before executing slot/item `slot`: 0–3 yields,
+    /// with an occasional real stall so claim→execute windows overlap
+    /// across workers.
+    pub(super) fn perturb(seed: Option<u64>, slot: usize) {
+        let Some(s) = seed else { return };
+        let r = mix(s ^ (slot as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+        for _ in 0..(r % 4) {
+            std::thread::yield_now();
+        }
+        if r % 29 == 0 {
+            std::thread::sleep(std::time::Duration::from_micros(20 + (r >> 8) % 180));
+        }
+    }
+
+    /// Hostile worker start-up skew for the stealing path: some workers
+    /// hit the cursor immediately, others arrive to a drained queue.
+    pub(super) fn stagger(seed: Option<u64>, worker: usize) {
+        let Some(s) = seed else { return };
+        let r = mix(s ^ (worker as u64).wrapping_mul(0x94D049BB133111EB));
+        if r % 3 == 0 {
+            std::thread::sleep(std::time::Duration::from_micros(10 + (r >> 8) % 240));
+        } else {
+            for _ in 0..(r % 5) {
+                std::thread::yield_now();
+            }
         }
     }
 }
@@ -552,12 +741,18 @@ mod tests {
         // 3 items on a 64-thread strategy must use at most 3 distinct
         // threads (and one of them is the calling thread, which runs
         // the first bucket inline instead of idling at the join).
-        use std::collections::HashSet;
         use std::sync::Mutex;
         for stealing in [false, true] {
-            let ids = Mutex::new(HashSet::new());
+            // Dedup'd Vec rather than a hash set: ThreadId is not Ord,
+            // and the count/membership checks below are all this needs.
+            let ids: Mutex<Vec<std::thread::ThreadId>> = Mutex::new(Vec::new());
             let record = |_i: usize, _item: ()| {
-                ids.lock().unwrap().insert(std::thread::current().id());
+                let id = std::thread::current().id();
+                let mut seen = ids.lock().unwrap();
+                if !seen.contains(&id) {
+                    seen.push(id);
+                }
+                drop(seen);
                 std::thread::sleep(std::time::Duration::from_millis(2));
             };
             if stealing {
@@ -650,6 +845,65 @@ mod tests {
                 },
             );
             assert_eq!(marks, vec![1, 2, 3, 4], "{sched:?}");
+        }
+    }
+
+    /// Serializes the schedfuzz unit tests: the plan register is
+    /// process-global, and the harness's determinism checks assume no
+    /// concurrent installer. (Engine calls from *other* tests running
+    /// while a plan is installed are harmless — they only pick up extra
+    /// yields, which is the whole point.)
+    fn fuzz_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn schedfuzz_permutation_is_deterministic_and_balanced() {
+        // Pure-permutation properties — no global plan register involved.
+        let a = schedfuzz::fuzz_for(7, 40, 4);
+        let a2 = schedfuzz::fuzz_for(7, 40, 4);
+        let b = schedfuzz::fuzz_for(8, 40, 4);
+        assert_eq!(a.bucket_of, a2.bucket_of, "same sub-seed → same permutation");
+        assert_ne!(a.bucket_of, b.bucket_of, "different sub-seeds perturb differently");
+        for fuzz in [&a, &b] {
+            assert_eq!(fuzz.bucket_of.len(), 40);
+            let mut per_bucket = [0usize; 4];
+            for &bk in &fuzz.bucket_of {
+                assert!(bk < 4, "bucket out of range");
+                per_bucket[bk] += 1;
+            }
+            assert_eq!(per_bucket, [10, 10, 10, 10], "shuffle preserves the load multiset");
+        }
+    }
+
+    #[test]
+    fn schedfuzz_guard_installs_and_clears_the_plan() {
+        let _g = fuzz_lock();
+        {
+            let _plan = schedfuzz::install(schedfuzz::SchedulePlan { seed: 42 });
+            assert!(schedfuzz::begin_call(8, 3).is_some(), "plan installed → fuzz active");
+        }
+        assert!(schedfuzz::begin_call(8, 3).is_none(), "guard drop clears the plan");
+    }
+
+    #[test]
+    fn schedfuzz_parity_smoke_across_map_variants() {
+        let _g = fuzz_lock();
+        let items: Vec<u64> = (0..61).collect();
+        let want: Vec<u64> = items.iter().map(|&v| v * 31 + 5).collect();
+        let costs: Vec<u64> = (0..61).map(|i| i * 7 % 13).collect();
+        for seed in [1u64, 0xFEED, u64::MAX] {
+            let _plan = schedfuzz::install(schedfuzz::SchedulePlan { seed });
+            let got = parallel_map(items.clone(), Parallelism::Threads(4), |_, v| v * 31 + 5);
+            assert_eq!(got, want, "parallel_map under plan seed {seed}");
+            let (got, _steals) = parallel_map_stealing(
+                items.clone(),
+                &costs,
+                Parallelism::Threads(4),
+                |_, v| v * 31 + 5,
+            );
+            assert_eq!(got, want, "parallel_map_stealing under plan seed {seed}");
         }
     }
 }

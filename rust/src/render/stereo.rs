@@ -59,6 +59,7 @@ use super::sort::sort_splats_par;
 use super::tiles::TileBins;
 use crate::gaussian::{GaussianId, GaussianRecord};
 use crate::math::StereoCamera;
+use crate::util::timer::Stopwatch;
 
 /// Right-eye list construction policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -264,13 +265,13 @@ pub fn render_stereo(
     mode: StereoMode,
 ) -> StereoOutput {
     // --- Shared preprocessing & sorting (paper Fig 13 left) -----------
-    let t_pre = std::time::Instant::now();
+    let t_pre = Stopwatch::start();
     let left_cam = stereo.left();
     let shared = stereo.shared_camera();
     let mut set: ProjectedSet =
         preprocess_records(&left_cam, &shared, queue, sh_degree, cfg.parallelism);
     let preprocess_s = t_pre.elapsed().as_secs_f64();
-    let t_sort = std::time::Instant::now();
+    let t_sort = Stopwatch::start();
     sort_splats_par(&mut set.splats, cfg.parallelism);
     let sort_s = t_sort.elapsed().as_secs_f64();
     let mut out = render_stereo_from_splats(stereo, &set, tile, cfg, mode);
@@ -292,10 +293,10 @@ pub fn render_stereo_from_splats(
     let (w, h) = (stereo.intr.width, stereo.intr.height);
     let lists = DEFAULT_LISTS;
     let max_disp = ((lists - 1) * tile) as f32;
-    let t_bin = std::time::Instant::now();
+    let t_bin = Stopwatch::start();
     let bins = TileBins::build_par(w, h, tile, lists - 1, &set.splats, cfg.parallelism);
     let binning_s = t_bin.elapsed().as_secs_f64();
-    let t_left = std::time::Instant::now();
+    let t_left = Stopwatch::start();
     let splats = &set.splats;
     let soa = SplatSoa::from_splats(splats);
 
@@ -399,7 +400,7 @@ pub fn render_stereo_from_splats(
 
     // --- Phase 2: SRU insertion (engine, source-tile rows; step 2).
     // Per-(src tile, k) disparity lists — the stereo buffer (Fig 15).
-    let t_sru = std::time::Instant::now();
+    let t_sru = Stopwatch::start();
     let list_idx = |tx: u32, ty: u32, k: u32| ((ty * grid_x + tx) * lists + k) as usize;
     let (disp_lists, sru_insertions) = build_disp_lists(
         stereo,
@@ -415,7 +416,7 @@ pub fn render_stereo_from_splats(
     let sru_s = t_sru.elapsed().as_secs_f64();
 
     // --- Phase 3: right eye, L-way merge + blend (engine; steps 3–4).
-    let t_right = std::time::Instant::now();
+    let t_right = Stopwatch::start();
     // Right-eye splats: the left SoA shifted horizontally by disparity,
     // built once for all tiles (two memcpys, no AoS re-gather).
     let mut right_soa = soa.clone();

@@ -246,7 +246,7 @@ impl CityGen {
                     let e = p.extent();
                     (i, e.x * e.y * e.z)
                 })
-                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
             let p = parts.swap_remove(idx);
             let axis = p.longest_axis();
@@ -391,6 +391,23 @@ mod tests {
                 assert!(t.radius[c as usize] <= t.radius[i as usize] * 1.0001);
             }
         }
+    }
+
+    #[test]
+    fn partition_survives_nan_volume() {
+        // A degenerate box (∞ × 0 extent) has NaN volume. Before the
+        // `total_cmp` fix, `max_by(partial_cmp().unwrap())` panicked on
+        // the first NaN comparison; now the split order is total and
+        // the requested part count always comes back.
+        let cg = CityGen::new(small_params(100, 7));
+        let mut rng = Prng::new(11);
+        let bad = Box3 {
+            lo: Vec3::new(0.0, 0.0, 0.0),
+            hi: Vec3::new(f32::INFINITY, 0.0, 1.0),
+        };
+        assert!((bad.extent().x * bad.extent().y * bad.extent().z).is_nan());
+        let parts = cg.partition(bad, 6, &mut rng);
+        assert_eq!(parts.len(), 6);
     }
 
     #[test]

@@ -2,20 +2,19 @@
 //! offline).
 //!
 //! Measures wall time with warmup, reports mean/median/min over samples,
-//! and prevents dead-code elimination via a volatile-read black box.
+//! and prevents dead-code elimination via [`black_box`].
 
 use std::time::{Duration, Instant};
 
 /// Prevent the optimizer from discarding a computed value.
+///
+/// Thin re-export point for `std::hint::black_box` so bench callers keep
+/// one import path; also the last `unsafe` in the workspace was the old
+/// volatile-read emulation here, and routing through the hint keeps the
+/// crate `unsafe`-free (nebula-lint D06 denies with an empty allowlist).
 #[inline]
 pub fn black_box<T>(x: T) -> T {
-    // Stable equivalent of std::hint::black_box for older toolchains; the
-    // read_volatile of a stack copy defeats value propagation.
-    unsafe {
-        let ret = std::ptr::read_volatile(&x);
-        std::mem::forget(x);
-        ret
-    }
+    std::hint::black_box(x)
 }
 
 /// Result of a timed run.

@@ -107,3 +107,39 @@ fn decoded_gaussians_render_like_originals() {
     let psnr = a.left.psnr(&b.left);
     assert!(psnr > 30.0, "decoded render degraded: {psnr:.1} dB");
 }
+
+#[test]
+fn round_encoding_is_a_function_of_contents_only() {
+    // D02 regression pin: the management table and client store now use
+    // ordered collections, so every observable of a round — raw payload
+    // bytes, id lists, wire size, the derived eviction lists, and the
+    // resident-id dumps — must be identical across two independently
+    // constructed endpoint pairs replaying the same cut sequence. With
+    // hash maps, each pair owns a differently-seeded hasher; any spot
+    // where that iteration order reached an output diverges here.
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    let pl = PipelineConfig { reuse_threshold: 4, ..benchkit::calibrated_pipeline(&tree, &spec) };
+    let (mut cloud_a, mut client_a) = endpoints(&tree, pl.reuse_threshold);
+    let (mut cloud_b, mut client_b) = endpoints(&tree, pl.reuse_threshold);
+    let mut search_a = TemporalSearch::for_tree(&tree);
+    let mut search_b = TemporalSearch::for_tree(&tree);
+    let poses = benchkit::walk_trace(&spec, 160);
+
+    for (i, pose) in poses.iter().step_by(pl.lod_interval as usize).enumerate() {
+        let q = benchkit::query_at(pose, &pl);
+        let cut_a = search_a.search(&tree, &q);
+        let cut_b = search_b.search(&tree, &q);
+        assert_eq!(cut_a.nodes, cut_b.nodes, "round {i}: searches diverged");
+        let (msg_a, msg_b) = (cloud_a.publish_cut(&cut_a.nodes), cloud_b.publish_cut(&cut_b.nodes));
+        assert_eq!(msg_a.added, msg_b.added, "round {i}");
+        assert_eq!(msg_a.removed, msg_b.removed, "round {i}");
+        assert_eq!(msg_a.payload.bytes, msg_b.payload.bytes, "round {i}: payload bytes diverged");
+        assert_eq!(msg_a.wire_bytes(), msg_b.wire_bytes(), "round {i}");
+        let (ev_a, ev_b) = (client_a.apply(&msg_a).unwrap(), client_b.apply(&msg_b).unwrap());
+        assert_eq!(ev_a, ev_b, "round {i}: client evictions diverged");
+        assert_eq!(cloud_a.table.resident_ids(), cloud_b.table.resident_ids(), "round {i}");
+        assert_eq!(client_a.store.resident_ids(), client_b.store.resident_ids(), "round {i}");
+        assert_eq!(client_a.store.cut_ids(), client_b.store.cut_ids(), "round {i}");
+    }
+}

@@ -53,9 +53,9 @@ fn hlo_preprocess_matches_native() {
 
     // Same survivors (floating-point boundary flips tolerated at <1%),
     // same numbers on the intersection.
-    let native_ids: std::collections::HashMap<u32, &nebula::render::Splat> =
+    let native_ids: std::collections::BTreeMap<u32, &nebula::render::Splat> =
         native.splats.iter().map(|s| (s.id, s)).collect();
-    let hlo_ids: std::collections::HashSet<u32> = hlo.iter().map(|s| s.id).collect();
+    let hlo_ids: std::collections::BTreeSet<u32> = hlo.iter().map(|s| s.id).collect();
     let only_native = native.splats.iter().filter(|s| !hlo_ids.contains(&s.id)).count();
     let only_hlo = hlo.iter().filter(|s| !native_ids.contains_key(&s.id)).count();
     let max_flips = 1 + native.splats.len() / 100;
