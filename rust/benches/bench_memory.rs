@@ -1,0 +1,249 @@
+//! BENCH_memory: the client store under a hard byte budget, swept over
+//! capacity × eviction policy × trace kind. Writes `BENCH_memory.json`
+//! with a `"memory"` section: per cell the MTP, bandwidth demand, peak
+//! and mean resident bytes, hit/eviction/overflow counts, and the
+//! refetch / notice / staleness accounting, plus a `"hotspot"` section
+//! running the multi-client server with every client crowded into the
+//! same city quarter.
+//!
+//!     cargo bench --bench bench_memory [-- --smoke]
+//!
+//! `--smoke` is the CI canary: a minimal scene and a trimmed sweep, but
+//! every parity assertion still executes:
+//! * an unbounded budget (client_mem_mb = 0) reproduces the pre-budget
+//!   baseline field-for-field with an all-zero `MemCounters` block, for
+//!   EVERY policy — the unbounded-parity canary;
+//! * a budget tighter than the observed unbounded peak actually evicts
+//!   (capacity_evictions + cut_overflow_drops > 0) and its peak stays
+//!   at or under the budget — the pressure canary;
+//! * the heaviest swept cell is bitwise identical at 1 and 2 threads.
+//!
+//! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
+//! `NEBULA_BENCH_OUT` (output path, default `BENCH_memory.json`).
+
+use nebula::benchkit;
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{run_multiclient, MemCounters, ServerConfig, Variant};
+use nebula::gaussian::BYTES_PER_GAUSSIAN;
+use nebula::manage::EvictionPolicy;
+use nebula::scene::{dataset, CityGen};
+use nebula::trace::TraceKind;
+use nebula::util::bench::bench_header;
+
+struct Row {
+    mem_mb: f64,
+    policy: EvictionPolicy,
+    kind: TraceKind,
+    mtp_ms: f64,
+    bandwidth_bps: f64,
+    mem: MemCounters,
+}
+
+fn main() {
+    bench_header("BENCH_memory", "client store under capacity x policy x trace sweep");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("smoke mode: minimal scene, trimmed capacity sweep");
+    }
+    let spec = dataset("urban").unwrap();
+    let target = (spec.sim_gaussians / benchkit::bench_scale() / if smoke { 4 } else { 1 })
+        .max(10_000);
+    let tree = CityGen::new(spec.city_params(target)).build();
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    params.pipeline.threads = 1;
+    let frames = if smoke { 24 } else { 96 };
+    println!("scene: {} Gaussians, {frames}-frame traces", tree.len());
+
+    let kinds = [TraceKind::Walk, TraceKind::Teleport];
+    let traces: Vec<(TraceKind, Vec<nebula::math::Pose>)> = kinds
+        .iter()
+        .map(|&k| (k, benchkit::trace_of_kind(&spec, frames, k)))
+        .collect();
+
+    // --- Unbounded-parity canary --------------------------------------
+    // client_mem_mb = 0 must reproduce the pre-budget behavior
+    // field-for-field with MemCounters::default(), whatever the policy.
+    let mut peak_unbounded_bytes = 0u64;
+    for (kind, poses) in &traces {
+        let baseline = run_simulation(&tree, poses, &Variant::nebula(), &params);
+        assert_eq!(
+            baseline.mem,
+            MemCounters::default(),
+            "CANARY: unbounded {} run must report all-zero MemCounters",
+            kind.label()
+        );
+        for policy in EvictionPolicy::ALL {
+            let mut p = params;
+            p.pipeline.client_mem_mb = 0.0;
+            p.pipeline.eviction = policy;
+            let r = run_simulation(&tree, poses, &Variant::nebula(), &p);
+            assert_eq!(
+                r, baseline,
+                "PARITY VIOLATION: unbounded budget with policy {} diverged on the {} trace",
+                policy.label(),
+                kind.label()
+            );
+        }
+        peak_unbounded_bytes = peak_unbounded_bytes
+            .max(baseline.peak_client_gaussians as u64 * BYTES_PER_GAUSSIAN as u64);
+    }
+    println!(
+        "  parity: unbounded budget == pre-budget baseline for every policy \
+         (peak store {} bytes)",
+        peak_unbounded_bytes
+    );
+
+    // --- Capacity x policy x trace sweep ------------------------------
+    // Budgets relative to the observed unbounded peak: 120% (loose),
+    // 60% (binding), 30% (starved; full sweep only).
+    let fractions: Vec<f64> = if smoke { vec![1.2, 0.6] } else { vec![1.2, 0.6, 0.3] };
+    let mut rows: Vec<Row> = Vec::new();
+    for (kind, poses) in &traces {
+        for &frac in &fractions {
+            let mem_mb = peak_unbounded_bytes as f64 * frac / 1e6;
+            for policy in EvictionPolicy::ALL {
+                let mut p = params;
+                p.pipeline.client_mem_mb = mem_mb;
+                p.pipeline.eviction = policy;
+                let r = run_simulation(&tree, poses, &Variant::nebula(), &p);
+                let m = r.mem;
+                assert!(
+                    m.resident_bytes_peak <= m.capacity_bytes,
+                    "CANARY: over-budget frame ({} > {}) at {}x{} {}",
+                    m.resident_bytes_peak,
+                    m.capacity_bytes,
+                    frac,
+                    policy.label(),
+                    kind.label()
+                );
+                // Pressure canary: a budget below the unbounded peak
+                // must actually evict or shed.
+                if frac < 1.0 {
+                    assert!(
+                        m.capacity_evictions + m.cut_overflow_drops > 0,
+                        "CANARY: budget {frac}x never evicted ({} / {})",
+                        policy.label(),
+                        kind.label()
+                    );
+                }
+                println!(
+                    "  {:<8} {:>4.1}x {:<12}: mtp {:>6.2} ms, peak {:>9} B, hits {:>4}, \
+                     evict {:>4}, overflow {:>4}, refetch {:>4}, stale {:>4} fr",
+                    kind.label(),
+                    frac,
+                    policy.label(),
+                    r.mtp_ms,
+                    m.resident_bytes_peak,
+                    m.hits,
+                    m.capacity_evictions,
+                    m.cut_overflow_drops,
+                    m.refetch_gaussians,
+                    m.stale_member_frames
+                );
+                rows.push(Row {
+                    mem_mb,
+                    policy,
+                    kind: *kind,
+                    mtp_ms: r.mtp_ms,
+                    bandwidth_bps: r.bandwidth_bps,
+                    mem: m,
+                });
+            }
+        }
+    }
+
+    // --- Thread-invariance canary on the heaviest cell ----------------
+    // Tightest budget, teleport trace, score policy: the cell with the
+    // most eviction/refetch churn must be bitwise thread-invariant.
+    let mut heavy = params;
+    heavy.pipeline.client_mem_mb = peak_unbounded_bytes as f64 * fractions.last().unwrap() / 1e6;
+    heavy.pipeline.eviction = EvictionPolicy::ScoreBased;
+    let tele = &traces.last().unwrap().1;
+    let t1 = run_simulation(&tree, tele, &Variant::nebula(), &heavy);
+    heavy.pipeline.threads = 2;
+    let t2 = run_simulation(&tree, tele, &Variant::nebula(), &heavy);
+    assert_eq!(
+        t1, t2,
+        "PARITY VIOLATION: heaviest memory cell diverged between 1 and 2 threads"
+    );
+    println!("  parity: heaviest cell bitwise identical at 1 and 2 threads");
+
+    // --- Multi-client hotspot cell ------------------------------------
+    // Every client walks the same city quarter under a binding budget:
+    // overlapping cuts, shared uplink carrying refetch + notice traffic.
+    let clients = if smoke { 2 } else { 4 };
+    let hs_traces = benchkit::hotspot_traces(&spec, frames, clients);
+    let mut mp = params;
+    mp.pipeline.client_mem_mb = peak_unbounded_bytes as f64 * 0.6 / 1e6;
+    mp.pipeline.eviction = EvictionPolicy::Lru;
+    let server = ServerConfig::from_run(&mp.pipeline, &mp.net);
+    let hotspot = run_multiclient(&tree, &hs_traces, &Variant::nebula(), &mp, &server);
+    assert!(
+        hotspot.mem.resident_bytes_peak <= hotspot.mem.capacity_bytes,
+        "CANARY: hotspot cell exceeded the per-client budget"
+    );
+    println!(
+        "  hotspot {clients}-client cell: hits {}, evictions {}, refetched {} ({} B), \
+         notices {} B, stale {} fr",
+        hotspot.mem.hits,
+        hotspot.mem.capacity_evictions,
+        hotspot.mem.refetch_gaussians,
+        hotspot.mem.refetch_bytes,
+        hotspot.mem.evict_notice_bytes,
+        hotspot.mem.stale_member_frames
+    );
+
+    // --- JSON (hand-rolled; serde unavailable offline) -----------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"bench\": \"memory\",\n");
+    j.push_str(&format!(
+        "  \"scene\": {{\"dataset\": \"{}\", \"target_gaussians\": {target}, \"frames\": {frames}, \"peak_unbounded_bytes\": {peak_unbounded_bytes}}},\n",
+        spec.name
+    ));
+    j.push_str("  \"memory\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"trace\": \"{}\", \"mem_mb\": {:.4}, \"policy\": \"{}\", \"mtp_ms\": {:.4}, \"bandwidth_bps\": {:.0}, \"capacity_bytes\": {}, \"resident_bytes_peak\": {}, \"resident_bytes_mean\": {:.1}, \"hits\": {}, \"capacity_evictions\": {}, \"cut_overflow_drops\": {}, \"refetch_rounds\": {}, \"refetch_gaussians\": {}, \"refetch_bytes\": {}, \"evict_notice_bytes\": {}, \"stale_member_frames\": {}}}{}\n",
+            r.kind.label(),
+            r.mem_mb,
+            r.policy.label(),
+            r.mtp_ms,
+            r.bandwidth_bps,
+            r.mem.capacity_bytes,
+            r.mem.resident_bytes_peak,
+            r.mem.resident_bytes_mean,
+            r.mem.hits,
+            r.mem.capacity_evictions,
+            r.mem.cut_overflow_drops,
+            r.mem.refetch_rounds,
+            r.mem.refetch_gaussians,
+            r.mem.refetch_bytes,
+            r.mem.evict_notice_bytes,
+            r.mem.stale_member_frames,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"hotspot\": {{\"clients\": {clients}, \"capacity_bytes\": {}, \"resident_bytes_peak\": {}, \"hits\": {}, \"capacity_evictions\": {}, \"cut_overflow_drops\": {}, \"refetch_gaussians\": {}, \"refetch_bytes\": {}, \"evict_notice_bytes\": {}, \"stale_member_frames\": {}, \"uplink_utilization\": {:.6}}}\n",
+        hotspot.mem.capacity_bytes,
+        hotspot.mem.resident_bytes_peak,
+        hotspot.mem.hits,
+        hotspot.mem.capacity_evictions,
+        hotspot.mem.cut_overflow_drops,
+        hotspot.mem.refetch_gaussians,
+        hotspot.mem.refetch_bytes,
+        hotspot.mem.evict_notice_bytes,
+        hotspot.mem.stale_member_frames,
+        hotspot.uplink_utilization
+    ));
+    j.push_str("}\n");
+
+    let out_path =
+        std::env::var("NEBULA_BENCH_OUT").unwrap_or_else(|_| "BENCH_memory.json".to_string());
+    std::fs::write(&out_path, &j).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -23,21 +23,61 @@ pub fn build_scene(spec: &DatasetSpec) -> LodTree {
     CityGen::new(spec.city_params(target)).build()
 }
 
-/// A walking trace through a dataset's city.
-pub fn walk_trace(spec: &DatasetSpec, frames: usize) -> Vec<Pose> {
-    PoseTrace::new(TraceParams { seed: spec.seed ^ 0x5eed, ..Default::default() }, spec.extent_m)
-        .generate(frames)
+/// A trace of the given kind through a dataset's city (seeded like
+/// [`walk_trace`], so `kind = Walk` reproduces it exactly).
+pub fn trace_of_kind(spec: &DatasetSpec, frames: usize, kind: TraceKind) -> Vec<Pose> {
+    PoseTrace::new(
+        TraceParams { kind, seed: spec.seed ^ 0x5eed, ..Default::default() },
+        spec.extent_m,
+    )
+    .generate(frames)
 }
 
-/// Per-client walking traces for the multi-session server: client 0
-/// reproduces [`walk_trace`] exactly (the N=1 parity anchor); later
+/// A walking trace through a dataset's city.
+pub fn walk_trace(spec: &DatasetSpec, frames: usize) -> Vec<Pose> {
+    trace_of_kind(spec, frames, TraceKind::Walk)
+}
+
+/// Per-client traces of one kind for the multi-session server: client 0
+/// reproduces [`trace_of_kind`] exactly (the N=1 parity anchor); later
 /// clients decorrelate through a fixed seed stride.
-pub fn walk_traces(spec: &DatasetSpec, frames: usize, clients: usize) -> Vec<Vec<Pose>> {
+pub fn traces_of_kind(
+    spec: &DatasetSpec,
+    frames: usize,
+    clients: usize,
+    kind: TraceKind,
+) -> Vec<Vec<Pose>> {
     (0..clients)
         .map(|k| {
             let seed = (spec.seed ^ 0x5eed).wrapping_add(k as u64 * 0x9e37_79b9_7f4a_7c15);
-            PoseTrace::new(TraceParams { seed, ..Default::default() }, spec.extent_m)
+            PoseTrace::new(TraceParams { kind, seed, ..Default::default() }, spec.extent_m)
                 .generate(frames)
+        })
+        .collect()
+}
+
+/// Per-client walking traces (see [`traces_of_kind`]).
+pub fn walk_traces(spec: &DatasetSpec, frames: usize, clients: usize) -> Vec<Vec<Pose>> {
+    traces_of_kind(spec, frames, clients, TraceKind::Walk)
+}
+
+/// Hotspot multi-client traces: every client walks inside the SAME
+/// central quarter of the city (decorrelated seeds), so their cuts
+/// overlap heavily — the memory/uplink contention worst case, vs the
+/// dispersed default of [`walk_traces`].
+pub fn hotspot_traces(spec: &DatasetSpec, frames: usize, clients: usize) -> Vec<Vec<Pose>> {
+    let small = spec.extent_m * 0.25;
+    let shift = (spec.extent_m - small) * 0.5;
+    (0..clients)
+        .map(|k| {
+            let seed = (spec.seed ^ 0x407_5b07).wrapping_add(k as u64 * 0x9e37_79b9_7f4a_7c15);
+            let mut poses = PoseTrace::new(TraceParams { seed, ..Default::default() }, small)
+                .generate(frames);
+            for pose in &mut poses {
+                pose.position.x += shift;
+                pose.position.z += shift;
+            }
+            poses
         })
         .collect()
 }
@@ -145,6 +185,42 @@ mod tests {
         let tau = calibrate_tau(&tree, spec.extent_m);
         assert!(tau.is_finite());
         assert!((2.0..=512.0).contains(&tau), "tau={tau}");
+    }
+
+    #[test]
+    fn trace_kind_helpers_anchor_and_decorrelate() {
+        let spec = &SMALL_DATASETS[0];
+        // Kind = Walk reproduces the legacy helpers exactly (the parity
+        // anchor every unbounded suite leans on).
+        let a = walk_trace(spec, 12);
+        let b = trace_of_kind(spec, 12, TraceKind::Walk);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.position, y.position);
+            assert_eq!(x.orientation, y.orientation);
+        }
+        let ma = walk_traces(spec, 6, 3);
+        let mb = traces_of_kind(spec, 6, 3, TraceKind::Walk);
+        for (ta, tb) in ma.iter().zip(&mb) {
+            for (x, y) in ta.iter().zip(tb) {
+                assert_eq!(x.position, y.position);
+            }
+        }
+        // Teleport diverges from walk after the first jump.
+        let t = trace_of_kind(spec, 60, TraceKind::Teleport);
+        assert!(a.len() == 12 && t.len() == 60);
+        assert_ne!(t[59].position, trace_of_kind(spec, 60, TraceKind::Walk)[59].position);
+        // Hotspot traces stay inside the central quarter (+ margin) and
+        // differ per client.
+        let hs = hotspot_traces(spec, 20, 3);
+        let small = spec.extent_m * 0.25;
+        let shift = (spec.extent_m - small) * 0.5;
+        for trace in &hs {
+            for pose in trace {
+                assert!(pose.position.x >= shift && pose.position.x <= shift + small);
+                assert!(pose.position.z >= shift && pose.position.z <= shift + small);
+            }
+        }
+        assert_ne!(hs[0][19].position, hs[1][19].position);
     }
 
     #[test]

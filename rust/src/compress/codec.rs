@@ -112,6 +112,15 @@ impl DeltaCodec {
             m => anyhow::bail!("bad mode {m}"),
         };
         let count = r.varint()? as usize;
+        // Bound the claimed count by what the buffer could possibly
+        // hold (every encoded Gaussian costs at least one id byte): a
+        // bit-flipped count must yield a typed error, not a huge
+        // `with_capacity` allocation abort.
+        anyhow::ensure!(
+            count <= raw.len().saturating_sub(r.pos),
+            "count {count} exceeds payload ({} bytes left)",
+            raw.len().saturating_sub(r.pos)
+        );
         let mut ids = Vec::with_capacity(count);
         let mut prev = 0u64;
         for _ in 0..count {

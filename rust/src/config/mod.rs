@@ -6,6 +6,8 @@
 
 pub mod toml;
 
+use crate::manage::EvictionPolicy;
+use crate::trace::TraceKind;
 use crate::util::cli::Args;
 
 /// Which synthetic dataset scale point to use (see `scene::registry`).
@@ -58,6 +60,12 @@ pub struct PipelineConfig {
     /// scales the LoD-search visit rate and compression rate all rounds
     /// queue on. 1.0 = the single-client scheduler's dedicated cloud.
     pub cloud_budget: f64,
+    /// Hard client Gaussian-store budget in MB (1 MB = 1e6 bytes);
+    /// 0 (default) = unbounded, the paper's assumption.
+    pub client_mem_mb: f64,
+    /// Deterministic eviction policy applied when the byte budget binds
+    /// (reuse-window | lru | score). Inert while `client_mem_mb = 0`.
+    pub eviction: EvictionPolicy,
 }
 
 impl PipelineConfig {
@@ -84,6 +92,11 @@ impl PipelineConfig {
             "pipeline.cloud_budget must be finite and > 0 (got {})",
             self.cloud_budget
         );
+        anyhow::ensure!(
+            self.client_mem_mb.is_finite() && self.client_mem_mb >= 0.0,
+            "pipeline.client_mem_mb must be finite and >= 0 (got {})",
+            self.client_mem_mb
+        );
         Ok(())
     }
 }
@@ -102,6 +115,8 @@ impl Default for PipelineConfig {
             threads: 0,
             clients: 1,
             cloud_budget: 1.0,
+            client_mem_mb: 0.0,
+            eviction: EvictionPolicy::default(),
         }
     }
 }
@@ -231,6 +246,9 @@ pub struct RunConfig {
     pub pipeline: PipelineConfig,
     pub net: NetConfig,
     pub frames: u32,
+    /// Camera-path kind driving `simulate` (walk | flyover | lookaround
+    /// | teleport).
+    pub trace: TraceKind,
     pub artifacts_dir: String,
 }
 
@@ -259,6 +277,22 @@ impl RunConfig {
         cfg.pipeline.threads = args.get_parse_or("threads", cfg.pipeline.threads);
         cfg.pipeline.clients = args.get_parse_or("clients", cfg.pipeline.clients);
         cfg.pipeline.cloud_budget = args.get_parse_or("cloud-budget", cfg.pipeline.cloud_budget);
+        cfg.pipeline.client_mem_mb =
+            args.get_parse_or("client-mem-mb", cfg.pipeline.client_mem_mb);
+        if let Some(e) = args.get("eviction") {
+            cfg.pipeline.eviction = EvictionPolicy::parse(e).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "pipeline.eviction must be one of reuse-window|lru|score (got \"{e}\")"
+                )
+            })?;
+        }
+        if let Some(t) = args.get("trace") {
+            cfg.trace = TraceKind::parse(t).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "run.trace must be one of walk|flyover|lookaround|teleport (got \"{t}\")"
+                )
+            })?;
+        }
         cfg.frames = args.get_parse_or("frames", cfg.frames);
         cfg.net.bandwidth_bps = args.get_parse_or("bandwidth-mbps", cfg.net.bandwidth_bps / 1e6) * 1e6;
         cfg.net.latency_ms = args.get_parse_or("latency-ms", cfg.net.latency_ms);
@@ -330,6 +364,14 @@ impl RunConfig {
             );
             cfg.pipeline.clients = clients as u32;
             cfg.pipeline.cloud_budget = s.float_or("cloud_budget", cfg.pipeline.cloud_budget);
+            cfg.pipeline.client_mem_mb =
+                s.float_or("client_mem_mb", cfg.pipeline.client_mem_mb);
+            let eviction = s.str_or("eviction", cfg.pipeline.eviction.label());
+            cfg.pipeline.eviction = EvictionPolicy::parse(&eviction).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "pipeline.eviction must be one of reuse-window|lru|score (got \"{eviction}\")"
+                )
+            })?;
         }
         if let Some(s) = doc.section("net") {
             cfg.net.bandwidth_bps = s.float_or("bandwidth_bps", cfg.net.bandwidth_bps);
@@ -356,6 +398,12 @@ impl RunConfig {
         }
         if let Some(s) = doc.section("run") {
             cfg.frames = s.int_or("frames", cfg.frames as i64) as u32;
+            let trace = s.str_or("trace", cfg.trace.label());
+            cfg.trace = TraceKind::parse(&trace).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "run.trace must be one of walk|flyover|lookaround|teleport (got \"{trace}\")"
+                )
+            })?;
             cfg.artifacts_dir = s.str_or("artifacts_dir", &cfg.artifacts_dir);
         }
         Ok(cfg)
@@ -498,6 +546,59 @@ mod tests {
         assert_eq!(cfg.net.retry_limit, 2);
         // Defaults stay faultless: the plan built from them is inactive.
         assert!(!crate::net::FaultPlan::from_net(&NetConfig::default(), 0).is_active());
+    }
+
+    #[test]
+    fn memory_and_trace_knobs_parse_and_reject_with_key_names() {
+        // Defaults: unbounded budget, reuse-window policy, walk trace.
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.pipeline.client_mem_mb, 0.0);
+        assert_eq!(cfg.pipeline.eviction, EvictionPolicy::ReuseWindow);
+        assert_eq!(cfg.trace, TraceKind::Walk);
+
+        // Valid values through TOML.
+        let cfg = RunConfig::from_toml(
+            "[pipeline]\nclient_mem_mb = 24.5\neviction = \"lru\"\n[run]\ntrace = \"teleport\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pipeline.client_mem_mb, 24.5);
+        assert_eq!(cfg.pipeline.eviction, EvictionPolicy::Lru);
+        assert_eq!(cfg.trace, TraceKind::Teleport);
+
+        // Valid values through the CLI, overriding the file defaults.
+        let args = Args::parse(
+            ["--client-mem-mb", "8", "--eviction", "score", "--trace", "flyover"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.pipeline.client_mem_mb, 8.0);
+        assert_eq!(cfg.pipeline.eviction, EvictionPolicy::ScoreBased);
+        assert_eq!(cfg.trace, TraceKind::Flyover);
+
+        // Rejections name the offending key (and the value written).
+        for (text, key) in [
+            ("[pipeline]\nclient_mem_mb = -1\n", "pipeline.client_mem_mb"),
+            ("[pipeline]\nclient_mem_mb = nan\n", "pipeline.client_mem_mb"),
+            ("[pipeline]\neviction = \"fifo\"\n", "pipeline.eviction"),
+            ("[run]\ntrace = \"hover\"\n", "run.trace"),
+        ] {
+            let err = RunConfig::from_toml(text).unwrap_err();
+            assert!(err.to_string().contains(key), "{text:?}: {err}");
+        }
+        let err = RunConfig::from_toml("[pipeline]\neviction = \"fifo\"\n").unwrap_err();
+        assert!(err.to_string().contains("fifo"), "{err}");
+        let args = Args::parse(["--client-mem-mb", "-3"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("pipeline.client_mem_mb"), "{err}");
+        let args = Args::parse(["--eviction", "mru"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("pipeline.eviction"), "{err}");
+        assert!(err.to_string().contains("mru"), "{err}");
+        let args = Args::parse(["--trace", "orbit"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("run.trace"), "{err}");
+        assert!(err.to_string().contains("orbit"), "{err}");
     }
 
     #[test]

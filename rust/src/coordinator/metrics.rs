@@ -112,6 +112,58 @@ impl FaultCounters {
     }
 }
 
+/// Client memory-budget counters for one session (or, absorbed, a whole
+/// multi-client run). Exact simulation-clock quantities like
+/// [`FaultCounters`]: bitwise thread-invariant, and ALL-zero whenever
+/// the budget is unbounded (`pipeline.client_mem_mb = 0`) so the
+/// exact-equality parity suites keep holding field-for-field.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemCounters {
+    /// Configured client byte budget (0 only in the default block).
+    pub capacity_bytes: u64,
+    /// Peak resident client store bytes over the trace.
+    pub resident_bytes_peak: u64,
+    /// Mean resident client store bytes over sampled frames.
+    pub resident_bytes_mean: f64,
+    /// Cut-ids in `added` whose payload was already resident.
+    pub hits: u64,
+    /// Non-cut residents evicted to fit the byte budget.
+    pub capacity_evictions: u64,
+    /// Cut members whose payload was shed because the cut alone exceeds
+    /// the budget (they stay cut members and render stale).
+    pub cut_overflow_drops: u64,
+    /// Rounds whose payload re-shipped at least one capacity-evicted id.
+    pub refetch_rounds: u64,
+    /// Gaussians re-shipped after a capacity eviction.
+    pub refetch_gaussians: u64,
+    /// Payload bytes attributed to refetched Gaussians (prorated).
+    pub refetch_bytes: u64,
+    /// Uplink bytes spent on `EvictNotice` NACKs.
+    pub evict_notice_bytes: u64,
+    /// Frame-samples of cut members rendering without payload (evicted
+    /// or shed, refetch not yet landed) — memory-pressure staleness.
+    pub stale_member_frames: u64,
+}
+
+impl MemCounters {
+    /// Accumulate another session's counters: sums for the counts,
+    /// max for the peak/capacity, mean-of-means for the resident mean
+    /// (finalized by the caller dividing by the client count).
+    pub fn absorb(&mut self, other: &MemCounters) {
+        self.capacity_bytes = self.capacity_bytes.max(other.capacity_bytes);
+        self.resident_bytes_peak = self.resident_bytes_peak.max(other.resident_bytes_peak);
+        self.resident_bytes_mean += other.resident_bytes_mean;
+        self.hits += other.hits;
+        self.capacity_evictions += other.capacity_evictions;
+        self.cut_overflow_drops += other.cut_overflow_drops;
+        self.refetch_rounds += other.refetch_rounds;
+        self.refetch_gaussians += other.refetch_gaussians;
+        self.refetch_bytes += other.refetch_bytes;
+        self.evict_notice_bytes += other.evict_notice_bytes;
+        self.stale_member_frames += other.stale_member_frames;
+    }
+}
+
 /// Aggregated simulation output.
 ///
 /// Every field is derived from modeled (simulation-clock) quantities,
@@ -159,6 +211,8 @@ pub struct SimResult {
     pub right_psnr_db: f64,
     /// Link-fault and degradation accounting (all-zero on a clean link).
     pub faults: FaultCounters,
+    /// Client memory-budget accounting (all-zero when unbounded).
+    pub mem: MemCounters,
 }
 
 impl SimResult {

@@ -11,7 +11,7 @@
 //! LoD queries always use full-resolution optics (f_x, τ*), so cut sizes
 //! and bandwidth are full-scale quantities.
 
-use super::metrics::{FaultCounters, PlatformKind, SimResult, Variant};
+use super::metrics::{FaultCounters, MemCounters, PlatformKind, SimResult, Variant};
 use crate::config::{NetConfig, PipelineConfig};
 use crate::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, Platform};
 use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
@@ -114,6 +114,11 @@ pub fn run_simulation(
         pl.reuse_threshold,
     )
     .expect("scene init");
+    // Hard client byte budget (0 = unbounded). With a finite budget the
+    // store evicts by `pl.eviction` and reports every eviction through
+    // an uplink EvictNotice, reconciled against the cloud table below.
+    let capacity_bytes = (pl.client_mem_mb.max(0.0) * 1e6) as u64;
+    client.store.set_budget(capacity_bytes, pl.eviction);
     // Last-mile link with the (possibly inactive) fault plan layered on
     // top. Session id 0: the single-client scheduler IS session 0 of the
     // multi-client server, and their fault draws must agree for the N=1
@@ -134,6 +139,19 @@ pub fn run_simulation(
     let msg0 = cloud.publish_cut(&cut0.nodes);
     let initial_bytes = msg0.wire_bytes() as u64;
     client.apply(&msg0).expect("apply round 0");
+    // Round 0 can already overflow a tiny budget; its notice is counted
+    // but, like the prefetch itself, charged off the trace clock (no
+    // wireless energy).
+    let mut evict_notice_bytes = 0u64;
+    if let Some(notice) = client.take_evict_notice() {
+        evict_notice_bytes += notice.wire_bytes() as u64;
+        cloud.apply_evict_notice(&notice);
+    }
+    // --- Memory-budget accounting (inert when unbounded) ----------------
+    let mut resident_peak = client.store.byte_size();
+    let mut resident_sum = 0u64;
+    let mut mem_samples = 0u64;
+    let mut stale_member_frames = 0u64;
 
     // --- Frame loop -----------------------------------------------------
     let vsync = 1.0 / params.fps;
@@ -173,6 +191,7 @@ pub fn run_simulation(
         let t_frame = i as f64 * vsync;
         let mut decoded_this_frame = 0u64;
         let mut delivered_bytes = 0u64;
+        let mut notice_bytes = 0u64;
 
         // Deliver an in-flight round if it has arrived.
         if let Some((arrival, msg)) = pending.take() {
@@ -180,6 +199,14 @@ pub fn run_simulation(
                 decoded_this_frame = msg.payload.count as u64;
                 delivered_bytes = msg.wire_bytes() as u64;
                 client.apply(&msg).expect("apply round");
+                // Budget evictions triggered by this round go straight
+                // back up the link so the cloud table stays reconciled
+                // before the next publish (always None when unbounded).
+                if let Some(notice) = client.take_evict_notice() {
+                    notice_bytes = notice.wire_bytes() as u64;
+                    evict_notice_bytes += notice_bytes;
+                    cloud.apply_evict_notice(&notice);
+                }
                 last_apply = i;
                 if let Some(s0) = stall_start.take() {
                     recovery_max = recovery_max.max((i - s0) as u64);
@@ -225,6 +252,14 @@ pub fn run_simulation(
             }
         }
         peak_client = peak_client.max(client.store.len());
+        resident_peak = resident_peak.max(client.store.byte_size());
+        resident_sum += client.store.byte_size();
+        mem_samples += 1;
+        if capacity_bytes > 0 {
+            // Cut members rendering without payload: evicted/shed under
+            // budget, refetch not yet landed — memory-pressure staleness.
+            stale_member_frames += client.store.missing_cut_payloads() as u64;
+        }
 
         // --- Client render ---------------------------------------------
         let queue_owned = client.store.render_queue();
@@ -279,8 +314,11 @@ pub fn run_simulation(
         // frame (the old running average `streamed_bytes / rounds`
         // mis-attributed energy whenever round sizes varied), at the
         // configured per-byte cost.
+        // EvictNotice NACKs ride the uplink at the same per-byte cost
+        // (0 bytes → +0.0 J exactly, so unbounded parity is bitwise).
         let wireless =
-            crate::net::wireless_energy_j_at(delivered_bytes, params.net.energy_nj_per_byte);
+            crate::net::wireless_energy_j_at(delivered_bytes, params.net.energy_nj_per_byte)
+                + crate::net::wireless_energy_j_at(notice_bytes, params.net.energy_nj_per_byte);
         wireless_sum += wireless;
         energy_sum += cost.total_energy_j() + wireless;
     }
@@ -307,6 +345,25 @@ pub fn run_simulation(
         },
         recovery_frames_max: recovery_max,
     };
+    // All-zero when unbounded: the gate (not just the counters being
+    // naturally zero) is what keeps exact-equality parity suites valid.
+    let mem = if capacity_bytes > 0 {
+        MemCounters {
+            capacity_bytes,
+            resident_bytes_peak: resident_peak,
+            resident_bytes_mean: resident_sum as f64 / mem_samples.max(1) as f64,
+            hits: client.store.hits,
+            capacity_evictions: client.store.capacity_evictions,
+            cut_overflow_drops: client.store.cut_overflow_drops,
+            refetch_rounds: cloud.refetch_rounds,
+            refetch_gaussians: cloud.refetch_gaussians,
+            refetch_bytes: cloud.refetch_bytes,
+            evict_notice_bytes,
+            stale_member_frames,
+        }
+    } else {
+        MemCounters::default()
+    };
     let trace_seconds = frames as f64 * vsync;
     SimResult {
         variant: variant.name.clone(),
@@ -326,6 +383,7 @@ pub fn run_simulation(
         peak_client_gaussians: peak_client,
         right_psnr_db: right_psnr,
         faults,
+        mem,
     }
 }
 
@@ -377,6 +435,7 @@ pub fn run_remote_simulation(
         peak_client_gaussians: 0,
         right_psnr_db: quality.psnr_db(),
         faults: FaultCounters::default(),
+        mem: MemCounters::default(),
     }
 }
 

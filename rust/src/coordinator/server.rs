@@ -58,7 +58,7 @@
 //! unconstrained uplink forwards at the exact departure time. Both
 //! properties are pinned by `tests/it_scheduler.rs`.
 
-use super::metrics::{FaultCounters, SimResult, Variant};
+use super::metrics::{FaultCounters, MemCounters, SimResult, Variant};
 use super::scheduler::{
     make_platform, percentile, SimParams, CLOUD_COMPRESS_BPS, CLOUD_VISITS_PER_S, DECODE_RATE,
 };
@@ -170,6 +170,10 @@ pub struct MulticlientResult {
     /// fields are mean-of-means / max-of-p99s). All-zero when faults,
     /// admission control and disconnects are disabled.
     pub faults: FaultCounters,
+    /// Client memory-budget counters over all sessions (counts summed,
+    /// peak/capacity as max, resident mean as mean-of-means). All-zero
+    /// when the budget is unbounded.
+    pub mem: MemCounters,
 }
 
 /// A round published in phase A, awaiting shared-cloud timing (phase B).
@@ -238,6 +242,13 @@ pub struct Session<'t> {
     degraded: u64,
     disconnected: u64,
     recovery_max: u64,
+    // --- memory-budget accumulators (inert when unbounded) -------------
+    capacity_bytes: u64,
+    evict_notice_bytes: u64,
+    resident_peak: u64,
+    resident_sum: u64,
+    mem_samples: u64,
+    stale_member_frames: u64,
 }
 
 impl<'t> Session<'t> {
@@ -267,6 +278,9 @@ impl<'t> Session<'t> {
             pl.reuse_threshold,
         )
         .expect("scene init");
+        // Hard client byte budget + policy, exactly as in run_simulation.
+        let capacity_bytes = (pl.client_mem_mb.max(0.0) * 1e6) as u64;
+        client.store.set_budget(capacity_bytes, pl.eviction);
 
         let q0 = LodQuery::new(poses[0].position, full_intr.fx, pl.tau_px, full_intr.near);
         let cut0 = if variant.temporal {
@@ -277,8 +291,16 @@ impl<'t> Session<'t> {
         let msg0 = cloud.publish_cut(&cut0.nodes);
         let initial_bytes = msg0.wire_bytes() as u64;
         client.apply(&msg0).expect("apply round 0");
+        // Round-0 overflow notice: counted, but off the trace clock (no
+        // wireless energy) — mirrors the single-client scheduler.
+        let mut evict_notice_bytes = 0u64;
+        if let Some(notice) = client.take_evict_notice() {
+            evict_notice_bytes += notice.wire_bytes() as u64;
+            cloud.apply_evict_notice(&notice);
+        }
 
         let peak_client = client.store.len();
+        let resident_peak = client.store.byte_size();
         Self {
             id,
             variant: variant.clone(),
@@ -318,6 +340,12 @@ impl<'t> Session<'t> {
             degraded: 0,
             disconnected: 0,
             recovery_max: 0,
+            capacity_bytes,
+            evict_notice_bytes,
+            resident_peak,
+            resident_sum: 0,
+            mem_samples: 0,
+            stale_member_frames: 0,
             poses,
         }
     }
@@ -361,6 +389,7 @@ impl<'t> Session<'t> {
         let t_frame = i as f64 * ctx.vsync;
         let mut decoded_this_frame = 0u64;
         let mut delivered_bytes = 0u64;
+        let mut notice_bytes = 0u64;
 
         if let Some((arrival, msg)) = self.pending.take() {
             if arrival <= t_frame {
@@ -370,6 +399,14 @@ impl<'t> Session<'t> {
                 // sequence gaps only arise from losses, which force the
                 // next publish to be a gap-tolerant keyframe.
                 self.client.apply(&msg).expect("apply round");
+                // Reconcile budget evictions before the next publish —
+                // pure per-session state, so phase-A safe (None when
+                // unbounded, keeping the faultless path untouched).
+                if let Some(notice) = self.client.take_evict_notice() {
+                    notice_bytes = notice.wire_bytes() as u64;
+                    self.evict_notice_bytes += notice_bytes;
+                    self.cloud.apply_evict_notice(&notice);
+                }
                 self.last_apply = i;
                 if let Some(s0) = self.stall_start.take() {
                     self.recovery_max = self.recovery_max.max((i - s0) as u64);
@@ -409,6 +446,12 @@ impl<'t> Session<'t> {
             self.request = Some(RoundRequest { visits: cut.nodes_visited, bytes, msg });
         }
         self.peak_client = self.peak_client.max(self.client.store.len());
+        self.resident_peak = self.resident_peak.max(self.client.store.byte_size());
+        self.resident_sum += self.client.store.byte_size();
+        self.mem_samples += 1;
+        if self.capacity_bytes > 0 {
+            self.stale_member_frames += self.client.store.missing_cut_payloads() as u64;
+        }
 
         // --- Client render (identical to the single-client scheduler) --
         let queue_owned = self.client.store.render_queue();
@@ -467,8 +510,10 @@ impl<'t> Session<'t> {
         let display = (done / ctx.vsync).ceil() * ctx.vsync;
         self.mtp.push((display - t_frame) * 1e3);
 
-        let wireless =
-            crate::net::wireless_energy_j_at(delivered_bytes, ctx.energy_nj_per_byte);
+        // EvictNotice NACKs ride the uplink at the same per-byte cost
+        // (0 bytes → +0.0 J exactly, preserving unbounded parity).
+        let wireless = crate::net::wireless_energy_j_at(delivered_bytes, ctx.energy_nj_per_byte)
+            + crate::net::wireless_energy_j_at(notice_bytes, ctx.energy_nj_per_byte);
         self.wireless_sum += wireless;
         self.energy_sum += cost.total_energy_j() + wireless;
     }
@@ -503,6 +548,23 @@ impl<'t> Session<'t> {
             },
             recovery_frames_max: self.recovery_max,
         };
+        let mem = if self.capacity_bytes > 0 {
+            MemCounters {
+                capacity_bytes: self.capacity_bytes,
+                resident_bytes_peak: self.resident_peak,
+                resident_bytes_mean: self.resident_sum as f64 / self.mem_samples.max(1) as f64,
+                hits: self.client.store.hits,
+                capacity_evictions: self.client.store.capacity_evictions,
+                cut_overflow_drops: self.client.store.cut_overflow_drops,
+                refetch_rounds: self.cloud.refetch_rounds,
+                refetch_gaussians: self.cloud.refetch_gaussians,
+                refetch_bytes: self.cloud.refetch_bytes,
+                evict_notice_bytes: self.evict_notice_bytes,
+                stale_member_frames: self.stale_member_frames,
+            }
+        } else {
+            MemCounters::default()
+        };
         SimResult {
             variant: self.variant.name.clone(),
             frames: frames as u32,
@@ -521,6 +583,7 @@ impl<'t> Session<'t> {
             peak_client_gaussians: self.peak_client,
             right_psnr_db: self.right_psnr,
             faults,
+            mem,
         }
     }
 }
@@ -712,10 +775,13 @@ impl<'t> CloudServer<'t> {
         let mean = mean_mtp.iter().sum::<f64>() / mean_mtp.len().max(1) as f64;
         let max = mean_mtp.iter().copied().fold(f64::NEG_INFINITY, f64::max);
         let mut faults = FaultCounters::default();
+        let mut mem = MemCounters::default();
         for c in &per_client {
             faults.absorb(&c.faults);
+            mem.absorb(&c.mem);
         }
         faults.staleness_mean_frames /= per_client.len().max(1) as f64;
+        mem.resident_bytes_mean /= per_client.len().max(1) as f64;
         MulticlientResult {
             clients: per_client.len(),
             aggregate_visits_per_s: if trace_seconds > 0.0 {
@@ -735,6 +801,7 @@ impl<'t> CloudServer<'t> {
             },
             fairness: if mean > 0.0 { max / mean } else { 1.0 },
             faults,
+            mem,
             per_client,
         }
     }

@@ -13,6 +13,10 @@
 //! --tile <px> --lod-interval <w> --res-scale <s> --seed <n>
 //! --threads <n: 0=auto, 1=serial> --config <file.toml>
 //! --clients <n> --cloud-budget <A100-equivalents> --uplink-mbps <mbps>
+//! --trace <walk|flyover|lookaround|teleport>
+//!
+//! Client memory-budget flags: --client-mem-mb <MB: 0=unbounded>
+//! --eviction <reuse-window|lru|score>
 //!
 //! Link-fault flags (deterministic; see `net::faults`): --loss-prob <p>
 //! --jitter-ms <ms> --outage-start <s> --outage-period <s>
@@ -166,12 +170,14 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     if cfg.pipeline.clients > 1 {
         return simulate_multiclient(&cfg, &spec, &tree, &params);
     }
-    let poses = benchkit::walk_trace(&spec, cfg.frames.max(8) as usize);
+    let poses = benchkit::trace_of_kind(&spec, cfg.frames.max(8) as usize, cfg.trace);
     let mut table = Table::new(vec![
         "variant", "MTP ms", "FPS", "bandwidth", "energy/frame", "Δ gauss", "right PSNR",
     ]);
     let faulty = nebula::net::FaultPlan::from_net(&cfg.net, 0).is_active();
+    let bounded = cfg.pipeline.client_mem_mb > 0.0;
     let mut fault_rows = Vec::new();
+    let mut mem_rows = Vec::new();
     for v in benchkit::fig18_variants() {
         let r = run_simulation(&tree, &poses, &v, &params);
         table.row(vec![
@@ -184,8 +190,34 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
             fnum(r.right_psnr_db, 1),
         ]);
         fault_rows.push((r.variant.clone(), r.faults));
+        mem_rows.push((r.variant.clone(), r.mem));
     }
+    println!("trace: {}", cfg.trace.label());
     table.print();
+    if bounded {
+        let mut mt = Table::new(vec![
+            "variant", "peak", "hits", "evict", "overflow", "refetch", "notice", "stale",
+        ]);
+        for (name, m) in mem_rows {
+            mt.row(vec![
+                name,
+                human_bytes(m.resident_bytes_peak),
+                m.hits.to_string(),
+                m.capacity_evictions.to_string(),
+                m.cut_overflow_drops.to_string(),
+                format!("{} ({})", m.refetch_gaussians, human_bytes(m.refetch_bytes)),
+                human_bytes(m.evict_notice_bytes),
+                format!("{} fr", m.stale_member_frames),
+            ]);
+        }
+        println!(
+            "\nclient memory budget {} MB ({}, policy {}):",
+            cfg.pipeline.client_mem_mb,
+            human_bytes((cfg.pipeline.client_mem_mb * 1e6) as u64),
+            cfg.pipeline.eviction.label()
+        );
+        mt.print();
+    }
     if faulty {
         let mut ft = Table::new(vec![
             "variant", "lost", "rexmit", "resync", "stalls", "stale mean", "stale p99", "recovery",
@@ -219,7 +251,7 @@ fn simulate_multiclient(
 ) -> anyhow::Result<()> {
     let clients = cfg.pipeline.clients as usize;
     let frames = cfg.frames.max(8) as usize;
-    let traces = benchkit::walk_traces(spec, frames, clients);
+    let traces = benchkit::traces_of_kind(spec, frames, clients, cfg.trace);
     let server = nebula::coordinator::ServerConfig::from_run(&cfg.pipeline, &cfg.net);
     let r = nebula::coordinator::run_multiclient(
         tree,
@@ -266,6 +298,24 @@ fn simulate_multiclient(
             f.staleness_mean_frames,
             f.staleness_p99_frames,
             f.recovery_frames_max
+        );
+    }
+    if cfg.pipeline.client_mem_mb > 0.0 {
+        let m = &r.mem;
+        println!(
+            "memory ({} MB/client, policy {}): peak {} / client-mean {}; hits {}, \
+             evictions {}, overflow {}, refetched {} ({}), notices {}, stale {} fr",
+            cfg.pipeline.client_mem_mb,
+            cfg.pipeline.eviction.label(),
+            human_bytes(m.resident_bytes_peak),
+            human_bytes(m.resident_bytes_mean as u64),
+            m.hits,
+            m.capacity_evictions,
+            m.cut_overflow_drops,
+            m.refetch_gaussians,
+            human_bytes(m.refetch_bytes),
+            human_bytes(m.evict_notice_bytes),
+            m.stale_member_frames
         );
     }
     Ok(())

@@ -2,12 +2,72 @@
 //!
 //! Holds the Gaussians streamed from the cloud, mirrors the cloud's
 //! reuse-window bookkeeping, and maintains the *current cut* — the set
-//! the renderer draws each frame. Eviction is derived locally from the
-//! same rule the cloud applies (w_r > w_r*), so no eviction messages are
-//! ever received.
+//! the renderer draws each frame. Reuse-window eviction is derived
+//! locally from the same rule the cloud applies (w_r > w_r*), so that
+//! path sends no eviction messages.
+//!
+//! # Byte capacity
+//!
+//! The paper's client store is unbounded; a VR headset is not. A hard
+//! byte budget ([`ClientStore::set_budget`], `pipeline.client_mem_mb`)
+//! caps the store and enforces it with a deterministic
+//! [`EvictionPolicy`]. Capacity eviction is where the §4.3 "no eviction
+//! traffic" invariant breaks: the cloud still believes the evicted ids
+//! resident, so every capacity-evicted id is queued in
+//! `pending_evictions` for an uplink `EvictNotice`
+//! (`protocol::ClientEndpoint::take_evict_notice`) that reconciles the
+//! management table. If even the current cut exceeds the budget, the
+//! store degrades gracefully: the lowest-contribution cut members lose
+//! their payload (counted in [`cut_overflow_drops`]
+//! (ClientStore::cut_overflow_drops)) but keep their cut membership, so
+//! they render stale until refetched — never a panic, never an
+//! over-budget frame.
 
 use crate::gaussian::{GaussianId, GaussianRecord};
 use std::collections::{BTreeMap, BTreeSet};
+
+/// Deterministic victim ordering used when a byte budget forces
+/// evictions beyond the shared reuse-window rule.
+///
+/// All three orders are total (id tiebreak, `f32::total_cmp` for
+/// scores), so the victim list is a pure function of store contents —
+/// bitwise thread-invariant like every other modeled quantity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    /// Widest reuse window w_r first — the same staleness signal the
+    /// §4.3 garbage-collection rule uses, and the parity anchor: with an
+    /// unbounded budget it degenerates to exactly today's behavior.
+    #[default]
+    ReuseWindow,
+    /// Least-recently-touched round first (a Gaussian is touched when
+    /// its payload arrives or it appears in the cut).
+    Lru,
+    /// Lowest contribution score (opacity · radius²) first; ids outside
+    /// the current cut always go before cut members.
+    ScoreBased,
+}
+
+impl EvictionPolicy {
+    pub const ALL: [EvictionPolicy; 3] =
+        [EvictionPolicy::ReuseWindow, EvictionPolicy::Lru, EvictionPolicy::ScoreBased];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reuse-window" => Some(EvictionPolicy::ReuseWindow),
+            "lru" => Some(EvictionPolicy::Lru),
+            "score" => Some(EvictionPolicy::ScoreBased),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionPolicy::ReuseWindow => "reuse-window",
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::ScoreBased => "score",
+        }
+    }
+}
 
 /// Client-resident Gaussian store.
 ///
@@ -21,13 +81,51 @@ pub struct ClientStore {
     reuse: BTreeMap<GaussianId, u32>,
     cut: BTreeSet<GaussianId>,
     pub reuse_threshold: u32,
-    /// Bytes received (decoded Gaussians), for instrumentation.
+    /// Decoded Gaussians received (a count, not bytes — wire-byte
+    /// accounting lives on `protocol::ClientEndpoint::bytes_received`).
     pub gaussians_received: u64,
+    /// Hard byte budget; 0 = unbounded (the paper's §4.3 assumption).
+    capacity_bytes: u64,
+    policy: EvictionPolicy,
+    /// Round clock for LRU bookkeeping — ticks once per applied round.
+    round: u64,
+    /// id → last round the id was inserted or seen in the cut. Only
+    /// maintained under a finite budget (inert otherwise).
+    last_touch: BTreeMap<GaussianId, u64>,
+    /// id → contribution score (opacity · radius²), fixed at insert.
+    score: BTreeMap<GaussianId, f32>,
+    /// Capacity-evicted ids awaiting an uplink `EvictNotice`.
+    pending_evictions: Vec<GaussianId>,
+    /// `added` cut-ids whose payload was already resident at apply time.
+    pub hits: u64,
+    /// Non-cut residents evicted to fit the byte budget.
+    pub capacity_evictions: u64,
+    /// Cut members whose payload was dropped because the cut alone
+    /// exceeds the budget; they keep their cut membership and render
+    /// stale until refetched.
+    pub cut_overflow_drops: u64,
 }
 
 impl ClientStore {
     pub fn new(reuse_threshold: u32) -> Self {
         Self { reuse_threshold, ..Default::default() }
+    }
+
+    /// Set the hard byte budget (0 = unbounded) and the policy that
+    /// picks victims when it binds. With `capacity_bytes == 0` the
+    /// store behaves exactly as before this knob existed, whatever the
+    /// policy — the unbounded-parity anchor.
+    pub fn set_budget(&mut self, capacity_bytes: u64, policy: EvictionPolicy) {
+        self.capacity_bytes = capacity_bytes;
+        self.policy = policy;
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
     }
 
     pub fn len(&self) -> usize {
@@ -51,13 +149,21 @@ impl ClientStore {
     /// * `new_items`: decoded Δcut payload (ids ⊆ added that the client
     ///   did not have).
     ///
-    /// Returns the ids evicted this round (must match the cloud's list).
+    /// Returns the ids evicted by the shared reuse-window rule this
+    /// round (must match the cloud's list). Capacity evictions are NOT
+    /// in the return value — the cloud cannot derive them, so they go
+    /// through `take_pending_evictions` → `EvictNotice` instead.
     pub fn apply_round(
         &mut self,
         added: &[GaussianId],
         removed: &[GaussianId],
         new_items: Vec<(GaussianId, GaussianRecord)>,
     ) -> Vec<GaussianId> {
+        let bounded = self.capacity_bytes > 0;
+        self.round += 1;
+        if bounded {
+            self.hits += added.iter().filter(|id| self.store.contains_key(id)).count() as u64;
+        }
         // Age everything, mirroring the cloud table's update order.
         for w in self.reuse.values_mut() {
             *w += 1;
@@ -65,6 +171,11 @@ impl ClientStore {
         // Insert the new payload.
         self.gaussians_received += new_items.len() as u64;
         for (id, g) in new_items {
+            if bounded {
+                let r = g.radius();
+                self.score.insert(id, g.opacity * r * r);
+                self.last_touch.insert(id, self.round);
+            }
             self.store.insert(id, g);
         }
         // Update the current-cut set.
@@ -78,6 +189,12 @@ impl ClientStore {
         for &id in &self.cut {
             self.reuse.insert(id, 0);
         }
+        if bounded {
+            let round = self.round;
+            for &id in &self.cut {
+                self.last_touch.insert(id, round);
+            }
+        }
         // Same eviction rule as the cloud.
         let thr = self.reuse_threshold;
         let mut evicted: Vec<GaussianId> =
@@ -86,43 +203,132 @@ impl ClientStore {
             self.reuse.remove(id);
             self.store.remove(id);
             self.cut.remove(id);
+            self.last_touch.remove(id);
+            self.score.remove(id);
         }
         evicted.sort_unstable();
+        if bounded {
+            self.enforce_capacity();
+        }
         evicted
+    }
+
+    /// Evict down to the byte budget. Phase 1 takes non-cut residents in
+    /// policy order; if the cut alone still exceeds the budget, phase 2
+    /// degrades by dropping the lowest-contribution cut members'
+    /// payloads (membership kept — they render stale until refetched).
+    fn enforce_capacity(&mut self) {
+        let bpg = crate::gaussian::BYTES_PER_GAUSSIAN as u64;
+        let over = self.byte_size().saturating_sub(self.capacity_bytes);
+        if over == 0 {
+            return;
+        }
+        let mut need = over.div_ceil(bpg) as usize;
+        let mut victims: Vec<GaussianId> =
+            self.store.keys().copied().filter(|id| !self.cut.contains(id)).collect();
+        match self.policy {
+            EvictionPolicy::ReuseWindow => victims.sort_by(|a, b| {
+                let wa = self.reuse.get(a).copied().unwrap_or(0);
+                let wb = self.reuse.get(b).copied().unwrap_or(0);
+                wb.cmp(&wa).then(a.cmp(b))
+            }),
+            EvictionPolicy::Lru => victims.sort_by(|a, b| {
+                let ta = self.last_touch.get(a).copied().unwrap_or(0);
+                let tb = self.last_touch.get(b).copied().unwrap_or(0);
+                ta.cmp(&tb).then(a.cmp(b))
+            }),
+            EvictionPolicy::ScoreBased => victims.sort_by(|a, b| {
+                let sa = self.score.get(a).copied().unwrap_or(0.0);
+                let sb = self.score.get(b).copied().unwrap_or(0.0);
+                sa.total_cmp(&sb).then(a.cmp(b))
+            }),
+        }
+        let take = need.min(victims.len());
+        for &id in &victims[..take] {
+            self.drop_resident(id);
+            self.pending_evictions.push(id);
+        }
+        self.capacity_evictions += take as u64;
+        need -= take;
+        if need > 0 {
+            // Overflow: every remaining resident is a cut member. Shed
+            // the lowest scores regardless of policy — dropping the
+            // least visible contribution is the least-bad degradation.
+            let mut members: Vec<GaussianId> =
+                self.cut.iter().copied().filter(|id| self.store.contains_key(id)).collect();
+            members.sort_by(|a, b| {
+                let sa = self.score.get(a).copied().unwrap_or(0.0);
+                let sb = self.score.get(b).copied().unwrap_or(0.0);
+                sa.total_cmp(&sb).then(a.cmp(b))
+            });
+            let take = need.min(members.len());
+            for &id in &members[..take] {
+                self.drop_resident(id); // cut membership survives
+                self.pending_evictions.push(id);
+            }
+            self.cut_overflow_drops += take as u64;
+        }
+        debug_assert!(
+            self.byte_size() <= self.capacity_bytes,
+            "store over budget after capacity eviction"
+        );
+    }
+
+    /// Remove a Gaussian's payload + bookkeeping. Leaves `cut` alone —
+    /// phase-1 victims are never in it; phase-2 overflow drops must
+    /// keep membership so the id is refetched and counted stale.
+    fn drop_resident(&mut self, id: GaussianId) {
+        self.store.remove(&id);
+        self.reuse.remove(&id);
+        self.last_touch.remove(&id);
+        self.score.remove(&id);
+    }
+
+    /// Drain the capacity-evicted ids accumulated since the last drain
+    /// (sorted) — the payload of the next uplink `EvictNotice`.
+    pub fn take_pending_evictions(&mut self) -> Vec<GaussianId> {
+        let mut ids = std::mem::take(&mut self.pending_evictions);
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Cut members with no resident payload — under a finite budget
+    /// these are evicted-but-needed ids rendering stale until refetch.
+    pub fn missing_cut_payloads(&self) -> usize {
+        self.cut.iter().filter(|id| !self.store.contains_key(id)).count()
     }
 
     /// Drop every resident Gaussian, reuse window, and cut member —
     /// the client half of a keyframe resync (`protocol::MsgKind::
     /// Keyframe`): the store rebuilds from the keyframe's full cut so
-    /// both ends restart from an identical state. Instrumentation
-    /// counters (`gaussians_received`) keep accumulating.
+    /// both ends restart from an identical state. Pending evict notices
+    /// are dropped too (the keyframe re-bases residency wholesale).
+    /// Instrumentation counters keep accumulating.
     pub fn reset(&mut self) {
         self.store.clear();
         self.reuse.clear();
         self.cut.clear();
+        self.last_touch.clear();
+        self.score.clear();
+        self.pending_evictions.clear();
     }
 
-    /// The rendering queue: current-cut Gaussians, sorted by id. Missing
-    /// records (payload still in flight) are skipped — the paper's
-    /// "continue rendering without waiting for cloud data".
+    /// The rendering queue: current-cut Gaussians, ascending by id
+    /// (BTreeSet iteration order — no re-sort needed). Missing records
+    /// (payload in flight, or shed under memory pressure) are skipped —
+    /// the paper's "continue rendering without waiting for cloud data".
     pub fn render_queue(&self) -> Vec<(GaussianId, &GaussianRecord)> {
-        let mut ids: Vec<GaussianId> = self.cut.iter().copied().collect();
-        ids.sort_unstable();
-        ids.into_iter().filter_map(|id| self.store.get(&id).map(|g| (id, g))).collect()
+        self.cut.iter().filter_map(|&id| self.store.get(&id).map(|g| (id, g))).collect()
     }
 
-    /// Ids currently stored (sorted) — compared against the cloud table
-    /// in the consistency tests.
+    /// Ids currently stored (ascending BTreeMap order) — compared
+    /// against the cloud table in the consistency tests.
     pub fn resident_ids(&self) -> Vec<GaussianId> {
-        let mut ids: Vec<GaussianId> = self.store.keys().copied().collect();
-        ids.sort_unstable();
-        ids
+        self.store.keys().copied().collect()
     }
 
     pub fn cut_ids(&self) -> Vec<GaussianId> {
-        let mut ids: Vec<GaussianId> = self.cut.iter().copied().collect();
-        ids.sort_unstable();
-        ids
+        self.cut.iter().copied().collect()
     }
 
     /// Client memory footprint.
@@ -134,6 +340,7 @@ impl ClientStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gaussian::BYTES_PER_GAUSSIAN;
     use crate::math::{Quat, Vec3};
 
     fn rec(seed: f32) -> GaussianRecord {
@@ -144,6 +351,15 @@ mod tests {
             opacity: 0.5,
             sh: [0.0; crate::math::sh::SH_FLOATS],
         }
+    }
+
+    /// Like `rec` but with a controllable contribution score.
+    fn scored(opacity: f32) -> GaussianRecord {
+        GaussianRecord { opacity, ..rec(1.0) }
+    }
+
+    fn budget(gaussians: u64) -> u64 {
+        gaussians * BYTES_PER_GAUSSIAN as u64
     }
 
     #[test]
@@ -189,12 +405,140 @@ mod tests {
         let q = c.render_queue();
         assert_eq!(q.len(), 1);
         assert_eq!(q[0].0, 1);
+        assert_eq!(c.missing_cut_payloads(), 1);
     }
 
     #[test]
     fn byte_size_counts_store() {
         let mut c = ClientStore::new(32);
         c.apply_round(&[1], &[], vec![(1, rec(1.0))]);
-        assert_eq!(c.byte_size(), crate::gaussian::BYTES_PER_GAUSSIAN as u64);
+        assert_eq!(c.byte_size(), BYTES_PER_GAUSSIAN as u64);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in EvictionPolicy::ALL {
+            assert_eq!(EvictionPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(EvictionPolicy::parse("mru"), None);
+    }
+
+    #[test]
+    fn reuse_window_policy_evicts_stalest_first() {
+        let mut c = ClientStore::new(32);
+        c.apply_round(&[1, 2, 3], &[], vec![(1, rec(1.0)), (2, rec(2.0)), (3, rec(3.0))]);
+        c.apply_round(&[], &[1], vec![]); // w: 1→1, 2,3→0
+        c.apply_round(&[], &[2], vec![]); // w: 1→2, 2→1, 3→0
+        c.set_budget(budget(2), EvictionPolicy::ReuseWindow);
+        c.apply_round(&[3], &[], vec![]); // w: 1→3, 2→2, 3→0; budget binds
+        // Widest reuse window (stalest) goes first: id 1.
+        assert_eq!(c.resident_ids(), vec![2, 3]);
+        assert_eq!(c.capacity_evictions, 1);
+        assert_eq!(c.cut_overflow_drops, 0);
+        assert_eq!(c.take_pending_evictions(), vec![1]);
+        assert!(c.byte_size() <= budget(2));
+    }
+
+    #[test]
+    fn lru_policy_evicts_least_recently_touched() {
+        let mut c = ClientStore::new(32);
+        c.set_budget(budget(2), EvictionPolicy::Lru);
+        c.apply_round(&[1], &[], vec![(1, rec(1.0))]); // touch 1 @ round 1
+        c.apply_round(&[2], &[1], vec![(2, rec(2.0))]); // touch 2 @ round 2
+        // Round 3: id 3 arrives; 1 (touch 1) is older than 2 (touch 2).
+        c.apply_round(&[3], &[2], vec![(3, rec(3.0))]);
+        assert_eq!(c.resident_ids(), vec![2, 3]);
+        assert_eq!(c.take_pending_evictions(), vec![1]);
+    }
+
+    #[test]
+    fn score_policy_evicts_lowest_contribution() {
+        let mut c = ClientStore::new(32);
+        c.apply_round(&[1, 2, 3], &[], vec![(1, scored(0.9)), (2, scored(0.1)), (3, scored(0.5))]);
+        c.apply_round(&[], &[1, 2, 3], vec![]); // all resident, none in cut
+        c.set_budget(budget(1), EvictionPolicy::ScoreBased);
+        c.apply_round(&[], &[], vec![]);
+        // Ascending contribution: 2 (0.1) then 3 (0.5) go; 1 (0.9) stays.
+        assert_eq!(c.resident_ids(), vec![1]);
+        assert_eq!(c.capacity_evictions, 2);
+        assert_eq!(c.take_pending_evictions(), vec![2, 3]);
+    }
+
+    #[test]
+    fn cut_overflow_keeps_membership_and_counts() {
+        let mut c = ClientStore::new(32);
+        c.set_budget(budget(1), EvictionPolicy::ReuseWindow);
+        c.apply_round(&[1, 2], &[], vec![(1, scored(0.9)), (2, scored(0.1))]);
+        // Cut {1,2} needs 2 slots, budget is 1: the dim one is shed but
+        // stays a cut member (renders stale), never a panic.
+        assert_eq!(c.cut_ids(), vec![1, 2]);
+        assert_eq!(c.resident_ids(), vec![1]);
+        assert_eq!(c.cut_overflow_drops, 1);
+        assert_eq!(c.missing_cut_payloads(), 1);
+        assert_eq!(c.render_queue().len(), 1);
+        assert_eq!(c.take_pending_evictions(), vec![2]);
+        assert_eq!(c.take_pending_evictions(), Vec::<GaussianId>::new());
+    }
+
+    #[test]
+    fn unbounded_budget_is_inert_for_every_policy() {
+        for policy in EvictionPolicy::ALL {
+            let mut plain = ClientStore::new(4);
+            let mut knobbed = ClientStore::new(4);
+            knobbed.set_budget(0, policy);
+            for r in 0..6u32 {
+                let ids: Vec<GaussianId> = (r..r + 3).collect();
+                let items: Vec<_> = ids.iter().map(|&id| (id, rec(id as f32))).collect();
+                let e1 = plain.apply_round(&ids, &[], items.clone());
+                let e2 = knobbed.apply_round(&ids, &[], items);
+                assert_eq!(e1, e2);
+            }
+            assert_eq!(plain.resident_ids(), knobbed.resident_ids());
+            assert_eq!(knobbed.hits, 0);
+            assert_eq!(knobbed.capacity_evictions, 0);
+            assert_eq!(knobbed.cut_overflow_drops, 0);
+            assert!(knobbed.take_pending_evictions().is_empty());
+        }
+    }
+
+    #[test]
+    fn hits_count_already_resident_added_ids() {
+        let mut c = ClientStore::new(32);
+        c.set_budget(budget(64), EvictionPolicy::ReuseWindow);
+        c.apply_round(&[1, 2], &[], vec![(1, rec(1.0)), (2, rec(2.0))]);
+        assert_eq!(c.hits, 0);
+        // 1 and 2 leave and re-enter the cut while still resident.
+        c.apply_round(&[], &[1, 2], vec![]);
+        c.apply_round(&[1, 2, 3], &[], vec![(3, rec(3.0))]);
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn reset_clears_capacity_bookkeeping() {
+        let mut c = ClientStore::new(32);
+        c.set_budget(budget(1), EvictionPolicy::ScoreBased);
+        c.apply_round(&[1, 2], &[], vec![(1, scored(0.9)), (2, scored(0.1))]);
+        assert!(c.capacity_evictions + c.cut_overflow_drops > 0);
+        c.reset();
+        assert!(c.is_empty());
+        assert!(c.take_pending_evictions().is_empty());
+        assert_eq!(c.missing_cut_payloads(), 0);
+        // Budget + counters survive the resync.
+        assert_eq!(c.capacity_bytes(), budget(1));
+        assert!(c.cut_overflow_drops > 0);
+    }
+
+    #[test]
+    fn queue_and_id_dumps_are_ascending_without_resort() {
+        // Regression for the dropped `sort_unstable` calls: BTree
+        // iteration must already yield ascending ids.
+        let mut c = ClientStore::new(32);
+        for &id in &[9, 3, 7, 1, 5] {
+            c.apply_round(&[id], &[], vec![(id, rec(id as f32))]);
+        }
+        assert_eq!(c.cut_ids(), vec![1, 3, 5, 7, 9]);
+        assert_eq!(c.resident_ids(), vec![1, 3, 5, 7, 9]);
+        let q: Vec<GaussianId> = c.render_queue().iter().map(|(id, _)| *id).collect();
+        assert_eq!(q, vec![1, 3, 5, 7, 9]);
     }
 }

@@ -7,13 +7,19 @@
 //! client store ([`client_store::ClientStore`]) stays in lock-step with
 //! the cloud's table without ever transmitting eviction lists — the
 //! consistency property tested in [`protocol`].
+//!
+//! Under a finite client byte budget (`pipeline.client_mem_mb`) the
+//! client additionally evicts by a deterministic
+//! [`EvictionPolicy`](client_store::EvictionPolicy); those evictions
+//! are reconciled through an explicit uplink
+//! [`EvictNotice`](protocol::EvictNotice) / refetch round-trip.
 
 pub mod client_store;
 pub mod delta;
 pub mod protocol;
 pub mod table;
 
-pub use client_store::ClientStore;
+pub use client_store::{ClientStore, EvictionPolicy};
 pub use delta::DeltaCut;
-pub use protocol::{MsgKind, ProtocolError};
+pub use protocol::{EvictNotice, MsgKind, ProtocolError};
 pub use table::ManagementTable;

@@ -6,9 +6,29 @@
 //! * [`RoundMsg`] — per LoD-search round: cut membership changes (added /
 //!   removed id lists, delta-varint coded) + the compressed Δcut payload.
 //!
-//! Eviction is never transmitted: both ends apply the identical
-//! reuse-window rule, which keeps their views consistent — the property
+//! Reuse-window eviction is never transmitted: both ends apply the
+//! identical rule, which keeps their views consistent — the property
 //! checked by `consistency_holds_over_random_rounds`.
+//!
+//! # Memory pressure
+//!
+//! A finite client byte budget breaks that zero-traffic invariant: the
+//! client can now evict Gaussians the cloud still believes resident, and
+//! the cloud cannot derive which (the budget binds on client state).
+//! The reconciliation is an explicit uplink NACK, [`EvictNotice`]:
+//! * after each applied round, [`ClientEndpoint::take_evict_notice`]
+//!   drains the capacity-evicted ids (if any) into one notice;
+//! * [`CloudEndpoint::apply_evict_notice`] drops them from the
+//!   management table, so the next `publish_cut` whose cut still needs
+//!   one re-gathers and re-ships it — the *refetch* path, counted in
+//!   [`CloudEndpoint::refetch_rounds`] / `refetch_gaussians` /
+//!   `refetch_bytes`;
+//! * until the refetch lands, the id is a cut member without payload on
+//!   the client — it renders stale (skipped by the render queue), which
+//!   the coordinator counts like PR 6's staleness.
+//!
+//! A keyframe clears the pending-refetch set: the full-cut re-publish
+//! re-bases residency wholesale, so earlier notices are moot.
 //!
 //! # Loss hardening
 //!
@@ -33,6 +53,7 @@ use super::table::ManagementTable;
 use crate::compress::{DeltaCodec, EncodedDelta};
 use crate::gaussian::GaussianId;
 use crate::lod::LodTree;
+use std::collections::BTreeSet;
 
 /// One-time scene metadata.
 #[derive(Debug, Clone)]
@@ -118,6 +139,23 @@ impl RoundMsg {
     }
 }
 
+/// Client→cloud uplink NACK listing ids the client evicted under its
+/// byte budget — the explicit residency reconciliation that a finite
+/// capacity requires (see the module docs). Ids are sorted, so the same
+/// delta-varint wire model as the round-message id lists applies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvictNotice {
+    pub ids: Vec<GaussianId>,
+}
+
+impl EvictNotice {
+    /// Uplink wire size: delta-varint id list + an 8-byte header
+    /// (session/seq bytes the uplink frame always carries).
+    pub fn wire_bytes(&self) -> usize {
+        varint_list_bytes(&self.ids) + 8
+    }
+}
+
 /// Size of a sorted id list under delta-varint coding.
 fn varint_list_bytes(ids: &[GaussianId]) -> usize {
     let mut bytes = 4; // count
@@ -139,6 +177,17 @@ pub struct CloudEndpoint<'t> {
     prev_cut: Vec<GaussianId>,
     round: u64,
     seq: u64,
+    /// Ids the client reported evicting under its byte budget, awaiting
+    /// re-ship. Drained as their payloads go back out; a keyframe clears
+    /// the set (the full-cut re-publish re-bases residency wholesale).
+    capacity_evicted: BTreeSet<GaussianId>,
+    /// Rounds whose payload re-shipped at least one capacity-evicted id.
+    pub refetch_rounds: u64,
+    /// Gaussians re-shipped because the client evicted them under budget.
+    pub refetch_gaussians: u64,
+    /// Payload bytes attributed to refetched Gaussians (each refetch
+    /// round's payload prorated by refetched/total count, integer math).
+    pub refetch_bytes: u64,
 }
 
 impl<'t> CloudEndpoint<'t> {
@@ -151,7 +200,19 @@ impl<'t> CloudEndpoint<'t> {
             prev_cut: Vec::new(),
             round: 0,
             seq: 0,
+            capacity_evicted: BTreeSet::new(),
+            refetch_rounds: 0,
+            refetch_gaussians: 0,
+            refetch_bytes: 0,
         }
+    }
+
+    /// Reconcile a client's capacity-eviction NACK: the table forgets
+    /// the ids (so a cut that still needs one re-ships it as Δcut) and
+    /// they are flagged so that re-ship is counted as a refetch.
+    pub fn apply_evict_notice(&mut self, notice: &EvictNotice) {
+        self.table.remove_ids(&notice.ids);
+        self.capacity_evicted.extend(notice.ids.iter().copied());
     }
 
     pub fn scene_init(&self) -> SceneInit {
@@ -167,7 +228,27 @@ impl<'t> CloudEndpoint<'t> {
         let (delta_ids, _evicted) = self.table.update(cut);
         let (added, removed) = diff_sorted(&self.prev_cut, cut);
         self.prev_cut = cut.to_vec();
-        self.emit(MsgKind::Delta, added, removed, &delta_ids)
+        let msg = self.emit(MsgKind::Delta, added, removed, &delta_ids);
+        self.account_refetch(&delta_ids, &msg);
+        msg
+    }
+
+    /// Count the slice of this round's payload that exists only because
+    /// the client evicted under budget (ids flagged by an EvictNotice).
+    fn account_refetch(&mut self, delta_ids: &[GaussianId], msg: &RoundMsg) {
+        if self.capacity_evicted.is_empty() || delta_ids.is_empty() {
+            return;
+        }
+        let refetched = delta_ids.iter().filter(|id| self.capacity_evicted.remove(id)).count();
+        if refetched == 0 {
+            return;
+        }
+        self.refetch_rounds += 1;
+        self.refetch_gaussians += refetched as u64;
+        // Prorated share of the round's payload: exact integer math,
+        // rounded down (conservative — header bytes are not refetch).
+        self.refetch_bytes +=
+            msg.payload.wire_bytes() as u64 * refetched as u64 / delta_ids.len() as u64;
     }
 
     /// Keyframe resync: reset the management table and re-publish the
@@ -177,6 +258,9 @@ impl<'t> CloudEndpoint<'t> {
     /// the consistency invariant regardless of what was lost.
     pub fn publish_keyframe(&mut self, cut: &[GaussianId]) -> RoundMsg {
         debug_assert!(cut.windows(2).all(|w| w[0] < w[1]), "cut must be sorted");
+        // A keyframe re-bases residency wholesale: pending refetches are
+        // satisfied (or mooted) by the full-cut payload, not counted.
+        self.capacity_evicted.clear();
         self.table = ManagementTable::new(self.reuse_threshold);
         let (delta_ids, _evicted) = self.table.update(cut);
         debug_assert_eq!(delta_ids, cut, "a fresh table treats the whole cut as new");
@@ -225,6 +309,19 @@ impl ClientEndpoint {
     /// Sequence number of the next applicable delta.
     pub fn expected_seq(&self) -> u64 {
         self.next_seq
+    }
+
+    /// Drain the ids capacity-evicted since the last drain into one
+    /// uplink [`EvictNotice`] (`None` when nothing was evicted — in
+    /// particular always `None` with an unbounded store, keeping the
+    /// zero-traffic invariant and its parity suites intact).
+    pub fn take_evict_notice(&mut self) -> Option<EvictNotice> {
+        let ids = self.store.take_pending_evictions();
+        if ids.is_empty() {
+            None
+        } else {
+            Some(EvictNotice { ids })
+        }
     }
 
     /// Apply one round; returns evicted ids (for test cross-checking).
@@ -477,6 +574,78 @@ mod tests {
         }
         let err = legacy(Err(ProtocolError::Gap { expected: 3, got: 7 })).unwrap_err();
         assert!(err.to_string().contains("expected seq 3"), "{err}");
+    }
+
+    #[test]
+    fn evict_notice_reconciles_residency_and_counts_refetch() {
+        use crate::gaussian::BYTES_PER_GAUSSIAN;
+        use crate::manage::EvictionPolicy;
+        let tree = CityGen::new(CityParams::for_target(1000, 60.0, 11)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        // Budget for 30 Gaussians; cuts of 25 with churn force capacity
+        // evictions of the ids that left the cut.
+        client.store.set_budget(30 * BYTES_PER_GAUSSIAN as u64, EvictionPolicy::Lru);
+        let mut saw_notice = false;
+        for r in 0..6u32 {
+            let cut: Vec<u32> = (r * 10..r * 10 + 25).collect();
+            let msg = cloud.publish_cut(&cut);
+            client.apply(&msg).unwrap();
+            if let Some(notice) = client.take_evict_notice() {
+                saw_notice = true;
+                assert!(notice.wire_bytes() > 8);
+                cloud.apply_evict_notice(&notice);
+            }
+            // Reconciliation restores the §4.3 consistency invariant
+            // even though the client now evicts beyond the shared rule.
+            assert_eq!(cloud.table.resident_ids(), client.store.resident_ids());
+            assert!(client.store.byte_size() <= client.store.capacity_bytes());
+        }
+        assert!(saw_notice, "budget never bound — test scene too small");
+        // Walk back over evicted ground: the cloud must re-ship ids it
+        // already shipped once, and count them as refetch.
+        for r in (0..4u32).rev() {
+            let cut: Vec<u32> = (r * 10..r * 10 + 25).collect();
+            let msg = cloud.publish_cut(&cut);
+            client.apply(&msg).unwrap();
+            if let Some(notice) = client.take_evict_notice() {
+                cloud.apply_evict_notice(&notice);
+            }
+        }
+        assert!(cloud.refetch_rounds > 0);
+        assert!(cloud.refetch_gaussians > 0);
+        assert!(cloud.refetch_bytes > 0);
+    }
+
+    #[test]
+    fn unbounded_store_never_emits_notices() {
+        let tree = CityGen::new(CityParams::for_target(800, 60.0, 13)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        for r in 0..5u32 {
+            let cut: Vec<u32> = (r * 20..r * 20 + 60).collect();
+            client.apply(&cloud.publish_cut(&cut)).unwrap();
+            assert!(client.take_evict_notice().is_none());
+        }
+        assert_eq!((cloud.refetch_rounds, cloud.refetch_gaussians, cloud.refetch_bytes), (0, 0, 0));
+    }
+
+    #[test]
+    fn keyframe_clears_pending_refetch_flags() {
+        use crate::gaussian::BYTES_PER_GAUSSIAN;
+        use crate::manage::EvictionPolicy;
+        let tree = CityGen::new(CityParams::for_target(1000, 60.0, 17)).build();
+        let (mut cloud, mut client) = setup(&tree);
+        client.store.set_budget(20 * BYTES_PER_GAUSSIAN as u64, EvictionPolicy::ScoreBased);
+        client.apply(&cloud.publish_cut(&(0..40).collect::<Vec<u32>>())).unwrap();
+        let notice = client.take_evict_notice().expect("cut of 40 must overflow budget of 20");
+        cloud.apply_evict_notice(&notice);
+        // Keyframe re-bases: earlier notices are moot, not refetch.
+        let kf = cloud.publish_keyframe(&(0..40).collect::<Vec<u32>>());
+        client.apply(&kf).unwrap();
+        if let Some(n) = client.take_evict_notice() {
+            cloud.apply_evict_notice(&n);
+        }
+        assert_eq!(cloud.refetch_rounds, 0, "keyframe payload is not refetch");
+        assert_eq!(cloud.table.resident_ids(), client.store.resident_ids());
     }
 
     #[test]

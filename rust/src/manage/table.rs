@@ -70,6 +70,16 @@ impl ManagementTable {
         (delta, evicted)
     }
 
+    /// Forget ids — the cloud half of an `EvictNotice` reconciliation.
+    /// The client evicted these under its byte budget, so the table must
+    /// stop believing they are resident; a later cut that needs one again
+    /// will treat it as Δcut and re-ship it (the refetch path).
+    pub fn remove_ids(&mut self, ids: &[GaussianId]) {
+        for id in ids {
+            self.reuse.remove(id);
+        }
+    }
+
     /// Ids currently tracked (sorted) — the cloud's view of client memory.
     pub fn resident_ids(&self) -> Vec<GaussianId> {
         let mut ids: Vec<GaussianId> = self.reuse.keys().copied().collect();
@@ -158,6 +168,17 @@ mod tests {
         assert_eq!(e, vec![9]);
         let (delta, _) = t.update(&[9]);
         assert_eq!(delta, vec![9], "evicted Gaussian must be resent");
+    }
+
+    #[test]
+    fn removed_ids_are_treated_as_delta_again() {
+        let mut t = ManagementTable::new(32);
+        t.update(&[1, 2, 3]);
+        t.remove_ids(&[2, 9]); // 9 unknown: a no-op, not an error
+        assert!(!t.contains(2));
+        assert_eq!(t.len(), 2);
+        let (delta, _) = t.update(&[1, 2, 3]);
+        assert_eq!(delta, vec![2], "reconciled id must be re-shipped");
     }
 
     #[test]

@@ -11,14 +11,45 @@ use crate::math::{Pose, Vec3};
 use crate::util::Prng;
 
 /// Kind of camera path through the scene.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TraceKind {
     /// Street-level walkthrough (local views; the paper's main scenario).
+    #[default]
     Walk,
     /// Bird's-eye flyover (global views exercising coarse LoD).
     Flyover,
     /// Stand in place, look around (pure rotation; zero Δcut expected).
     LookAround,
+    /// Walk that jumps to a random city location every
+    /// [`TraceParams::teleport_period_frames`] frames — the VR teleport
+    /// locomotion idiom. Breaks the temporal similarity the reuse window
+    /// relies on, so it is the memory-pressure worst case.
+    Teleport,
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 4] =
+        [TraceKind::Walk, TraceKind::Flyover, TraceKind::LookAround, TraceKind::Teleport];
+
+    /// CLI / TOML spelling → kind (`None` for an unknown spelling).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "walk" => Some(TraceKind::Walk),
+            "flyover" => Some(TraceKind::Flyover),
+            "lookaround" => Some(TraceKind::LookAround),
+            "teleport" => Some(TraceKind::Teleport),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::Walk => "walk",
+            TraceKind::Flyover => "flyover",
+            TraceKind::LookAround => "lookaround",
+            TraceKind::Teleport => "teleport",
+        }
+    }
 }
 
 /// Trace generator parameters.
@@ -32,6 +63,9 @@ pub struct TraceParams {
     pub yaw_rate_rms: f32,
     /// Probability per second of a rapid head turn (saccade burst).
     pub saccade_rate_hz: f32,
+    /// Frames between jumps for [`TraceKind::Teleport`] (default 45 —
+    /// a jump every half-second at 90 FPS).
+    pub teleport_period_frames: u32,
     pub seed: u64,
 }
 
@@ -43,6 +77,7 @@ impl Default for TraceParams {
             speed_mps: 1.4,
             yaw_rate_rms: 0.35, // ≈ 20°/s
             saccade_rate_hz: 0.25,
+            teleport_period_frames: 45,
             seed: 42,
         }
     }
@@ -81,7 +116,7 @@ impl PoseTrace {
         let mut saccade_frames = 0u32;
         let mut saccade_rate = 0.0f32;
 
-        for _ in 0..n {
+        for f in 0..n {
             // Ornstein–Uhlenbeck angular velocity (smooth wander).
             let theta = 2.0; // mean reversion (1/s)
             yaw_rate += (-theta * yaw_rate) * dt
@@ -103,7 +138,18 @@ impl PoseTrace {
 
             // Translation.
             match p.kind {
-                TraceKind::Walk | TraceKind::Flyover => {
+                TraceKind::Walk | TraceKind::Flyover | TraceKind::Teleport => {
+                    // Teleport locomotion: periodically jump to a fresh
+                    // random spot and heading, then walk normally in
+                    // between. `f > 0` keeps the initial pose at the
+                    // shared mid-city start all kinds use.
+                    let period = p.teleport_period_frames.max(1) as usize;
+                    if p.kind == TraceKind::Teleport && f > 0 && f % period == 0 {
+                        let margin = self.extent * 0.05;
+                        pos.x = rng.range_f32(margin, self.extent - margin);
+                        pos.z = rng.range_f32(margin, self.extent - margin);
+                        yaw = rng.range_f32(0.0, std::f32::consts::TAU);
+                    }
                     let speed = if p.kind == TraceKind::Flyover {
                         p.speed_mps * 8.0
                     } else {
@@ -196,6 +242,47 @@ mod tests {
         let a = poses[0].forward();
         let b = poses[199].forward();
         assert!(a.dot(b) < 0.9999);
+    }
+
+    #[test]
+    fn trace_kind_parse_roundtrip() {
+        for kind in TraceKind::ALL {
+            assert_eq!(TraceKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(TraceKind::parse("hover"), None);
+        assert_eq!(TraceKind::default(), TraceKind::Walk);
+    }
+
+    #[test]
+    fn teleport_jumps_on_period_and_walks_between() {
+        let extent = 400.0;
+        let period = 30u32;
+        let t = PoseTrace::new(
+            TraceParams {
+                kind: TraceKind::Teleport,
+                teleport_period_frames: period,
+                seed: 11,
+                ..Default::default()
+            },
+            extent,
+        );
+        let poses = t.generate(200);
+        let mut jumps = 0;
+        for (i, w) in poses.windows(2).enumerate() {
+            let d = (w[1].position - w[0].position).norm();
+            if (i + 1) % period as usize == 0 {
+                // Jump frames are allowed (and in a 400 m city all but
+                // astronomically unlikely not) to move far.
+                jumps += usize::from(d > 1.0);
+            } else {
+                assert!(d < 0.05, "non-jump frame {i} moved {d} m");
+            }
+            assert!(w[1].position.x >= 0.0 && w[1].position.x <= extent);
+            assert!(w[1].position.z >= 0.0 && w[1].position.z <= extent);
+        }
+        assert!(jumps >= 4, "only {jumps} teleports in 200 frames at period {period}");
+        // Deterministic like every other kind.
+        assert_eq!(poses[13].position, t.generate(200)[13].position);
     }
 
     #[test]

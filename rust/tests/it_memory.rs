@@ -1,0 +1,258 @@
+//! Integration: the memory-bounded client store — unbounded-budget
+//! parity with the pre-budget pipeline, bitwise thread-invariant
+//! `MemCounters`, the byte budget as a hard invariant over random
+//! rounds, graceful completion under starvation, and malformed-payload
+//! hardening of the decode path.
+
+use nebula::benchkit;
+use nebula::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{run_multiclient, MemCounters, ServerConfig, Variant};
+use nebula::gaussian::BYTES_PER_GAUSSIAN;
+use nebula::manage::protocol::{ClientEndpoint, CloudEndpoint};
+use nebula::manage::{EvictionPolicy, ProtocolError};
+use nebula::scene::{dataset, CityGen, CityParams};
+use nebula::trace::TraceKind;
+use nebula::util::prop::{check, Config};
+
+fn setup() -> (nebula::lod::LodTree, Vec<nebula::math::Pose>, SimParams) {
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    let poses = benchkit::walk_trace(&spec, 64);
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    params.pipeline.threads = 1;
+    (tree, poses, params)
+}
+
+/// Thread counts for the mem-counter invariance sweep (mirrors
+/// `it_faults.rs`; CI re-runs with `NEBULA_PARITY_THREADS=1,2,8`).
+fn parity_threads() -> Vec<usize> {
+    std::env::var("NEBULA_PARITY_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4, 8])
+}
+
+/// A budget in MB that converts to exactly `gaussians` worth of bytes
+/// (or just under — any binding value serves the tests).
+fn budget_mb(gaussians: usize) -> f64 {
+    (gaussians * BYTES_PER_GAUSSIAN) as f64 / 1e6
+}
+
+fn endpoint_pair(tree: &nebula::lod::LodTree) -> (CloudEndpoint<'_>, ClientEndpoint) {
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        CompressionMode::Quantized,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 2000, ..Default::default() }.train(&tree.gaussians.sh),
+    );
+    let cloud = CloudEndpoint::new(tree, codec, 8);
+    let client =
+        ClientEndpoint::from_init(&cloud.scene_init(), CompressionMode::Quantized, 8).unwrap();
+    (cloud, client)
+}
+
+#[test]
+fn unbounded_budget_reproduces_baseline_exactly() {
+    // The acceptance gate: client_mem_mb = 0 (the default) must
+    // reproduce the pre-budget pipeline FIELD-FOR-FIELD, whatever the
+    // configured policy, with an all-zero mem block. Exact equality,
+    // not tolerance: every metric is a simulation-clock quantity.
+    let (tree, poses, params) = setup();
+    let baseline = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    assert_eq!(
+        baseline.mem,
+        MemCounters::default(),
+        "an unbounded store must report all-zero mem counters"
+    );
+    for policy in EvictionPolicy::ALL {
+        let mut p = params;
+        p.pipeline.client_mem_mb = 0.0;
+        p.pipeline.eviction = policy;
+        let got = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+        assert_eq!(
+            got,
+            baseline,
+            "unbounded budget with policy {} diverged from the pre-budget run",
+            policy.label()
+        );
+    }
+
+    // Same guarantee for the multi-client server.
+    let spec = dataset("urban").unwrap();
+    let traces = benchkit::walk_traces(&spec, 36, 2);
+    let clean =
+        run_multiclient(&tree, &traces, &Variant::nebula(), &params, &ServerConfig::default());
+    assert_eq!(clean.mem, MemCounters::default());
+    let mut p = params;
+    p.pipeline.eviction = EvictionPolicy::Lru; // policy alone is inert
+    let seeded = run_multiclient(&tree, &traces, &Variant::nebula(), &p, &ServerConfig::default());
+    assert_eq!(seeded, clean, "unbounded multi-client run diverged");
+}
+
+#[test]
+fn mem_counters_bitwise_thread_invariant() {
+    // Finite capacity, every policy, the teleport trace (worst-case
+    // churn): the ENTIRE result — mem counters included — must be
+    // bitwise identical across thread counts.
+    let (tree, _, params) = setup();
+    let spec = dataset("urban").unwrap();
+    let poses = benchkit::trace_of_kind(&spec, 48, TraceKind::Teleport);
+    for policy in EvictionPolicy::ALL {
+        let mut p = params;
+        p.pipeline.client_mem_mb = budget_mb(900);
+        p.pipeline.eviction = policy;
+        p.pipeline.threads = 1;
+        let reference = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+        assert!(
+            reference.mem.capacity_bytes > 0,
+            "finite budget must be recorded in the mem block"
+        );
+        for threads in parity_threads() {
+            p.pipeline.threads = threads;
+            let got = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+            assert_eq!(
+                got,
+                reference,
+                "policy {} diverged at {threads} threads",
+                policy.label()
+            );
+        }
+    }
+
+    // Hotspot multi-client cell: shared uplink carrying notice traffic
+    // must stay thread-invariant too.
+    let traces = benchkit::hotspot_traces(&spec, 36, 2);
+    let mut p = params;
+    p.pipeline.client_mem_mb = budget_mb(900);
+    p.pipeline.eviction = EvictionPolicy::ScoreBased;
+    p.pipeline.threads = 1;
+    let server = ServerConfig::from_run(&p.pipeline, &p.net);
+    let reference = run_multiclient(&tree, &traces, &Variant::nebula(), &p, &server);
+    for threads in parity_threads() {
+        p.pipeline.threads = threads;
+        let got = run_multiclient(&tree, &traces, &Variant::nebula(), &p, &server);
+        assert_eq!(got, reference, "hotspot multi-client cell diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn byte_budget_is_a_hard_invariant_over_random_rounds() {
+    // Property: whatever the cut sequence, budget, or policy, the store
+    // never exceeds its byte budget after an apply, and draining the
+    // notice restores the cloud/client residency agreement.
+    check("byte budget holds", Config { cases: 16, ..Config::default() }, |rng| {
+        let target = rng.range_usize(600, 2000);
+        let tree = CityGen::new(CityParams::for_target(target, 80.0, rng.next_u64())).build();
+        let (mut cloud, mut client) = endpoint_pair(&tree);
+        let n = tree.len() as u32;
+        let policy = EvictionPolicy::ALL[rng.below(3)];
+        let budget_gaussians = rng.range_usize(10, 80);
+        client
+            .store
+            .set_budget(budget_gaussians as u64 * BYTES_PER_GAUSSIAN as u64, policy);
+
+        let mut cut: Vec<u32> = (0..n).filter(|_| rng.chance(0.04)).collect();
+        for _ in 0..10 {
+            cut.retain(|_| rng.chance(0.85));
+            for _ in 0..rng.range_usize(0, 30) {
+                cut.push(rng.below(n as usize) as u32);
+            }
+            cut.sort_unstable();
+            cut.dedup();
+            let msg = cloud.publish_cut(&cut);
+            client.apply(&msg).unwrap();
+            assert!(
+                client.store.byte_size() <= client.store.capacity_bytes(),
+                "over budget: {} > {} (policy {})",
+                client.store.byte_size(),
+                client.store.capacity_bytes(),
+                policy.label()
+            );
+            if let Some(notice) = client.take_evict_notice() {
+                cloud.apply_evict_notice(&notice);
+            }
+            assert_eq!(
+                cloud.table.resident_ids(),
+                client.store.resident_ids(),
+                "residency diverged after notice reconciliation"
+            );
+            assert_eq!(client.store.cut_ids(), cut, "cut membership diverged");
+        }
+    });
+}
+
+#[test]
+fn capacity_starved_run_completes_with_counters() {
+    // A budget far below any cut: the run must complete with overflow
+    // counters and finite metrics — degraded, never panicking.
+    let (tree, poses, params) = setup();
+    let mut p = params;
+    p.pipeline.client_mem_mb = budget_mb(40);
+    p.pipeline.eviction = EvictionPolicy::ScoreBased;
+    let r = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+    assert!(r.mtp_ms.is_finite() && r.fps.is_finite());
+    assert!(
+        r.mem.cut_overflow_drops > 0,
+        "a 40-Gaussian budget must shed cut members ({:?})",
+        r.mem
+    );
+    assert!(r.mem.resident_bytes_peak <= r.mem.capacity_bytes);
+    assert!(r.mem.stale_member_frames > 0, "shed members must be counted stale");
+}
+
+#[test]
+fn malformed_payloads_yield_typed_errors_and_leave_store_untouched() {
+    // Property: truncations and bit flips of the wire payload must
+    // surface as `ProtocolError::Decode` (never a panic or abort), and a
+    // rejected message must leave the endpoint exactly as it was.
+    let tree = CityGen::new(CityParams::for_target(1200, 80.0, 31)).build();
+    check("malformed payloads", Config { cases: 48, ..Config::default() }, |rng| {
+        let (mut cloud, mut client) = endpoint_pair(&tree);
+        let cut: Vec<u32> = (0..120).collect();
+        client.apply(&cloud.publish_cut(&cut)).unwrap();
+        let cut2: Vec<u32> = (40..180).collect();
+        let mut msg = cloud.publish_cut(&cut2);
+
+        // Corrupt the payload: truncate to a random prefix, or flip a
+        // random bit (which may hit the frame header, the claimed count,
+        // or the body).
+        let truncate = rng.chance(0.5);
+        if truncate && !msg.payload.bytes.is_empty() {
+            let keep = rng.below(msg.payload.bytes.len());
+            msg.payload.bytes.truncate(keep);
+        } else if !msg.payload.bytes.is_empty() {
+            let i = rng.below(msg.payload.bytes.len());
+            msg.payload.bytes[i] ^= 1u8 << rng.below(8);
+        }
+
+        let resident_before = client.store.resident_ids();
+        let cut_before = client.store.cut_ids();
+        let bytes_before = client.bytes_received;
+        let seq_before = client.expected_seq();
+        match client.apply(&msg) {
+            Err(ProtocolError::Decode { seq, .. }) => {
+                // The typed rejection path: nothing may have changed.
+                assert_eq!(seq, msg.seq);
+                assert_eq!(client.store.resident_ids(), resident_before);
+                assert_eq!(client.store.cut_ids(), cut_before);
+                assert_eq!(client.bytes_received, bytes_before);
+                assert_eq!(client.expected_seq(), seq_before);
+            }
+            Err(e) => panic!("corruption surfaced as a non-Decode error: {e}"),
+            Ok(_) => {
+                // A lucky flip can still decode (no checksum is modeled)
+                // — acceptable as long as it applied cleanly; membership
+                // bookkeeping is id-list driven and must have advanced.
+                // Truncation, however, always shrinks the frame body and
+                // must never decode.
+                assert!(!truncate, "truncated frame decoded successfully");
+                assert_eq!(client.expected_seq(), seq_before + 1);
+                assert_eq!(client.store.cut_ids(), cut2);
+            }
+        }
+    });
+}
