@@ -1,0 +1,318 @@
+//! BENCH_chaos: the composed chaos soak — the streaming path swept over
+//! corruption rate × loss rate, a poison-link quarantine cell, and a
+//! multi-client soak with every fault axis live at once (loss ×
+//! corruption × outage × bandwidth dips × memory pressure × disconnect
+//! × τ-degradation). Writes `BENCH_chaos.json` with a `"chaos"` section
+//! (per cell: MTP percentiles, bandwidth, fault + integrity counters)
+//! and a `"soak"` section for the composed multi-client cell.
+//!
+//!     cargo bench --bench bench_chaos [-- --smoke]
+//!
+//! `--smoke` is the CI canary: a minimal scene and a 2×2 sweep, but
+//! every integrity assertion still executes:
+//! * zero-chaos runs (nonzero seed, changed quarantine budget, all
+//!   probabilities zero) reproduce the faultless baseline
+//!   field-for-field with all-zero integrity counters — the CRC
+//!   trailers are wire-free by construction;
+//! * `corrupt_passed == 0` in EVERY cell — no damaged frame ever
+//!   applies silently while checksums are on;
+//! * the poison cell (corrupt_prob = 1.0) quarantines every round
+//!   within exactly `quarantine_after` damaged copies — bounded
+//!   recovery, never a livelock;
+//! * the composed soak is bitwise identical at 1 and 2 threads.
+//!
+//! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
+//! `NEBULA_BENCH_OUT` (output path, default `BENCH_chaos.json`).
+
+use nebula::benchkit;
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{
+    run_multiclient, Disconnect, IntegrityCounters, ServerConfig, Variant,
+};
+use nebula::scene::{dataset, CityGen};
+use nebula::util::bench::bench_header;
+
+struct Row {
+    corrupt_prob: f64,
+    loss_prob: f64,
+    mtp_ms: f64,
+    mtp_p99_ms: f64,
+    bandwidth_bps: f64,
+    lost_msgs: u64,
+    stalls: u64,
+    resyncs: u64,
+    staleness_p99_frames: f64,
+    integrity: IntegrityCounters,
+}
+
+fn main() {
+    bench_header("BENCH_chaos", "composed chaos soak: corruption x loss + all-axes cell");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("smoke mode: minimal scene, 2x2 corruption x loss sweep");
+    }
+    let spec = dataset("urban").unwrap();
+    let target = (spec.sim_gaussians / benchkit::bench_scale() / if smoke { 4 } else { 1 })
+        .max(10_000);
+    let tree = CityGen::new(spec.city_params(target)).build();
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    params.pipeline.threads = 1;
+    let frames = if smoke { 24 } else { 96 };
+    let poses = benchkit::walk_trace(&spec, frames);
+    println!("scene: {} Gaussians, {frames}-frame trace", tree.len());
+
+    // --- Parity canary: zero-chaos plan == faultless baseline ----------
+    // A nonzero seed and a changed quarantine budget with every fault
+    // probability zero must not perturb a single field — the checksum
+    // trailers ride inside the already-charged header bytes.
+    let baseline = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    let mut zeroed = params;
+    zeroed.net.fault_seed = 0xDEAD_BEEF;
+    zeroed.net.quarantine_after = 7;
+    zeroed.net.dip_factor = 1.0; // a factor of 1.0 is a no-op dip
+    let zero_chaos = run_simulation(&tree, &poses, &Variant::nebula(), &zeroed);
+    assert_eq!(
+        zero_chaos, baseline,
+        "PARITY VIOLATION: idle integrity machinery diverged from the faultless baseline"
+    );
+    assert_eq!(
+        baseline.integrity,
+        IntegrityCounters::default(),
+        "CANARY: faultless run must report all-zero integrity counters"
+    );
+    println!("  parity: zero-chaos plan == faultless baseline (field-for-field)");
+
+    // --- Corruption x loss sweep ---------------------------------------
+    // The heaviest cell is 0.9, not ~0.3: the smoke trace publishes only
+    // a handful of rounds, and the heaviest-cell canary below needs the
+    // corruption axis to have provably fired.
+    let corrupt_sweep: Vec<f64> =
+        if smoke { vec![0.0, 0.9] } else { vec![0.0, 0.05, 0.3, 0.9] };
+    let loss_sweep: Vec<f64> = if smoke { vec![0.0, 0.05] } else { vec![0.0, 0.02, 0.05] };
+    let mut rows: Vec<Row> = Vec::new();
+    for &corrupt in &corrupt_sweep {
+        for &loss in &loss_sweep {
+            let mut p = params;
+            p.net.fault_seed = 17;
+            p.net.corrupt_prob = corrupt;
+            p.net.loss_prob = loss;
+            p.net.jitter_ms = 2.0;
+            p.net.quarantine_after = 3;
+            let r = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+            // Integrity canaries, every cell: silent corruption is
+            // impossible with checksums on, NACK accounting is exact,
+            // and the client recovers within the trace.
+            assert_eq!(
+                r.integrity.corrupt_passed, 0,
+                "CANARY: silent corruption at corrupt={corrupt} loss={loss}"
+            );
+            assert_eq!(
+                r.integrity.nack_bytes,
+                r.integrity.corrupt_detected * 16,
+                "CANARY: NACK byte accounting broke at corrupt={corrupt} loss={loss}"
+            );
+            assert!(
+                r.mtp_p99_ms.is_finite() && r.faults.staleness_p99_frames.is_finite(),
+                "CANARY: non-finite accounting at corrupt={corrupt} loss={loss}"
+            );
+            assert!(
+                r.faults.recovery_frames_max <= frames as u64,
+                "CANARY: recovery span exceeds the trace at corrupt={corrupt} loss={loss}"
+            );
+            println!(
+                "  corrupt {corrupt:>4.2} loss {loss:>4.2}: mtp p99 {:>7.2} ms, \
+                 detected {:>3}, quarantined {:>2}, nack {:>5} B, stalls {:>2}, \
+                 stale p99 {:>5.1} f",
+                r.mtp_p99_ms,
+                r.integrity.corrupt_detected,
+                r.integrity.quarantined_rounds,
+                r.integrity.nack_bytes,
+                r.faults.stalls,
+                r.faults.staleness_p99_frames
+            );
+            rows.push(Row {
+                corrupt_prob: corrupt,
+                loss_prob: loss,
+                mtp_ms: r.mtp_ms,
+                mtp_p99_ms: r.mtp_p99_ms,
+                bandwidth_bps: r.bandwidth_bps,
+                lost_msgs: r.faults.lost_msgs,
+                stalls: r.faults.stalls,
+                resyncs: r.faults.resyncs,
+                staleness_p99_frames: r.faults.staleness_p99_frames,
+                integrity: r.integrity,
+            });
+        }
+    }
+    // The heaviest corruption cell must actually have exercised the
+    // detection path.
+    let heavy = rows.last().unwrap();
+    assert!(
+        heavy.integrity.corrupt_detected > 0,
+        "CANARY: heaviest cell (corrupt={} loss={}) detected no corruption",
+        heavy.corrupt_prob,
+        heavy.loss_prob
+    );
+
+    // --- Poison cell: every delivery damaged ---------------------------
+    // corrupt_prob = 1.0 is the livelock stress: each round must be
+    // quarantined after exactly `quarantine_after` damaged copies (at
+    // most one round still mid-NACK when the trace ends) and the frame
+    // loop must run to completion on the round-0 prefetch.
+    let mut pp = params;
+    pp.net.fault_seed = 5;
+    pp.net.corrupt_prob = 1.0;
+    pp.net.quarantine_after = 2;
+    let q = pp.net.quarantine_after as u64;
+    let poison = run_simulation(&tree, &poses, &Variant::nebula(), &pp);
+    assert_eq!(
+        poison.frames as usize,
+        poses.len(),
+        "CANARY: poison link stalled the frame loop"
+    );
+    assert_eq!(poison.integrity.corrupt_passed, 0);
+    assert!(poison.integrity.quarantined_rounds > 0, "CANARY: poison link never quarantined");
+    assert!(
+        poison.integrity.corrupt_detected >= poison.integrity.quarantined_rounds * q
+            && poison.integrity.corrupt_detected <= (poison.integrity.quarantined_rounds + 1) * q,
+        "CANARY: quarantine bound violated ({} detections for {} quarantined rounds, q={q})",
+        poison.integrity.corrupt_detected,
+        poison.integrity.quarantined_rounds
+    );
+    println!(
+        "  poison cell: {} rounds quarantined after exactly {q} damaged copies each \
+         ({} detections), frame loop completed",
+        poison.integrity.quarantined_rounds, poison.integrity.corrupt_detected
+    );
+
+    // --- Composed multi-client soak ------------------------------------
+    // Every axis live at once: loss + jitter + outage + bandwidth dips +
+    // corruption + a hard client memory budget + a mid-run disconnect +
+    // admission control and τ-degradation.
+    let clients = if smoke { 2 } else { 4 };
+    let traces = benchkit::walk_traces(&spec, frames, clients);
+    let mut sp = params;
+    sp.net.fault_seed = 23;
+    sp.net.loss_prob = 0.05;
+    sp.net.jitter_ms = 2.0;
+    sp.net.outage_start_s = 0.1;
+    sp.net.outage_period_s = 2.0;
+    sp.net.outage_len_s = 0.15;
+    sp.net.dip_period_s = 0.4;
+    sp.net.dip_len_s = 0.1;
+    sp.net.dip_factor = 0.35;
+    sp.net.corrupt_prob = 0.3;
+    sp.net.quarantine_after = 2;
+    sp.pipeline.client_mem_mb = 0.08;
+    let gap = (frames / 4, frames / 2);
+    let server = ServerConfig {
+        cloud_budget: 0.25,
+        uplink_bps: 200e6,
+        max_cloud_lag_s: 0.05,
+        degrade_lag_s: 0.02,
+        disconnects: vec![Disconnect { session: 1, from_frame: gap.0, to_frame: gap.1 }],
+    };
+    let soak = run_multiclient(&tree, &traces, &Variant::nebula(), &sp, &server);
+    assert_eq!(
+        soak.integrity.corrupt_passed, 0,
+        "CANARY: silent corruption in the composed soak"
+    );
+    assert_eq!(
+        soak.faults.disconnected_frames,
+        (gap.1 - gap.0) as u64,
+        "CANARY: disconnect window not fully accounted in the soak"
+    );
+    assert!(
+        soak.faults.staleness_p99_frames.is_finite(),
+        "CANARY: non-finite staleness in the composed soak"
+    );
+    for (i, c) in soak.per_client.iter().enumerate() {
+        assert_eq!(
+            c.frames as u64, frames as u64,
+            "CANARY: soak client {i} did not finish its trace"
+        );
+        assert!(c.mtp_p99_ms.is_finite(), "CANARY: soak client {i} accounting broke");
+    }
+    println!(
+        "  soak {clients}-client cell: detected {}, quarantined {}, lost {}, \
+         shed {}, degraded {}, evicted {}, disconnected {} frames",
+        soak.integrity.corrupt_detected,
+        soak.integrity.quarantined_rounds,
+        soak.faults.lost_msgs,
+        soak.faults.shed_rounds,
+        soak.faults.degraded_rounds,
+        soak.mem.capacity_evictions,
+        soak.faults.disconnected_frames
+    );
+
+    // --- Thread-invariance canary on the composed soak -----------------
+    let mut sp2 = sp;
+    sp2.pipeline.threads = 2;
+    let soak2 = run_multiclient(&tree, &traces, &Variant::nebula(), &sp2, &server);
+    assert_eq!(
+        soak2, soak,
+        "PARITY VIOLATION: composed soak diverged between 1 and 2 threads"
+    );
+    println!("  parity: composed soak bitwise identical at 1 and 2 threads");
+
+    // --- JSON (hand-rolled; serde unavailable offline) -----------------
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"bench\": \"chaos\",\n");
+    j.push_str(&format!(
+        "  \"scene\": {{\"dataset\": \"{}\", \"target_gaussians\": {target}, \"frames\": {frames}}},\n",
+        spec.name
+    ));
+    j.push_str("  \"chaos\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"corrupt_prob\": {:.3}, \"loss_prob\": {:.3}, \"mtp_ms\": {:.4}, \"mtp_p99_ms\": {:.4}, \"bandwidth_bps\": {:.0}, \"lost_msgs\": {}, \"stalls\": {}, \"resyncs\": {}, \"staleness_p99_frames\": {:.4}, \"corrupt_detected\": {}, \"corrupt_passed\": {}, \"quarantined_rounds\": {}, \"nack_bytes\": {}}}{}\n",
+            r.corrupt_prob,
+            r.loss_prob,
+            r.mtp_ms,
+            r.mtp_p99_ms,
+            r.bandwidth_bps,
+            r.lost_msgs,
+            r.stalls,
+            r.resyncs,
+            r.staleness_p99_frames,
+            r.integrity.corrupt_detected,
+            r.integrity.corrupt_passed,
+            r.integrity.quarantined_rounds,
+            r.integrity.nack_bytes,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"poison\": {{\"quarantine_after\": {q}, \"quarantined_rounds\": {}, \"corrupt_detected\": {}, \"nack_bytes\": {}, \"stalls\": {}, \"resyncs\": {}}},\n",
+        poison.integrity.quarantined_rounds,
+        poison.integrity.corrupt_detected,
+        poison.integrity.nack_bytes,
+        poison.faults.stalls,
+        poison.faults.resyncs
+    ));
+    j.push_str(&format!(
+        "  \"soak\": {{\"clients\": {clients}, \"corrupt_detected\": {}, \"corrupt_passed\": {}, \"quarantined_rounds\": {}, \"nack_bytes\": {}, \"lost_msgs\": {}, \"shed_rounds\": {}, \"degraded_rounds\": {}, \"capacity_evictions\": {}, \"disconnected_frames\": {}, \"staleness_p99_frames\": {:.4}, \"cloud_utilization\": {:.6}, \"uplink_utilization\": {:.6}}}\n",
+        soak.integrity.corrupt_detected,
+        soak.integrity.corrupt_passed,
+        soak.integrity.quarantined_rounds,
+        soak.integrity.nack_bytes,
+        soak.faults.lost_msgs,
+        soak.faults.shed_rounds,
+        soak.faults.degraded_rounds,
+        soak.mem.capacity_evictions,
+        soak.faults.disconnected_frames,
+        soak.faults.staleness_p99_frames,
+        soak.cloud_utilization,
+        soak.uplink_utilization
+    ));
+    j.push_str("}\n");
+
+    let out_path =
+        std::env::var("NEBULA_BENCH_OUT").unwrap_or_else(|_| "BENCH_chaos.json".to_string());
+    std::fs::write(&out_path, &j).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -148,6 +148,20 @@ pub struct NetConfig {
     pub retry_limit: u32,
     /// Sender timeout before retry `a` is `retry_backoff_ms · 2^a`.
     pub retry_backoff_ms: f64,
+    /// Bandwidth-dip repetition period (s); 0 (default) disables dips.
+    pub dip_period_s: f64,
+    /// Bandwidth-dip duration per period (s).
+    pub dip_len_s: f64,
+    /// Bandwidth multiplier inside a dip, in (0, 1].
+    pub dip_factor: f64,
+    /// Per-delivery silent-corruption probability, in [0, 1]: a damaged
+    /// copy ARRIVES (bit-flip or truncation) and only the checksum layer
+    /// stands between it and the client store. 0 (default) = clean link.
+    pub corrupt_prob: f64,
+    /// Poison-round bound: after this many damaged deliveries of the
+    /// same seq the round is abandoned (quarantined) and the session
+    /// resyncs via keyframe instead of NACKing forever. Must be >= 1.
+    pub quarantine_after: u32,
     /// Base seed for the deterministic fault plan (mixed with the
     /// session id; see `net::faults`).
     pub fault_seed: u64,
@@ -167,6 +181,11 @@ impl Default for NetConfig {
             outage_len_s: 0.0,
             retry_limit: 3,
             retry_backoff_ms: 25.0,
+            dip_period_s: 0.0,
+            dip_len_s: 0.0,
+            dip_factor: 1.0,
+            corrupt_prob: 0.0,
+            quarantine_after: 3,
             fault_seed: 0,
         }
     }
@@ -234,6 +253,37 @@ impl NetConfig {
             self.retry_backoff_ms.is_finite() && self.retry_backoff_ms >= 0.0,
             "net.retry_backoff_ms must be finite and >= 0 (got {})",
             self.retry_backoff_ms
+        );
+        anyhow::ensure!(
+            self.dip_period_s.is_finite() && self.dip_period_s >= 0.0,
+            "net.dip_period_s must be finite and >= 0 (got {})",
+            self.dip_period_s
+        );
+        anyhow::ensure!(
+            self.dip_len_s.is_finite() && self.dip_len_s >= 0.0,
+            "net.dip_len_s must be finite and >= 0 (got {})",
+            self.dip_len_s
+        );
+        anyhow::ensure!(
+            self.dip_period_s == 0.0 || self.dip_len_s <= self.dip_period_s,
+            "net.dip_len_s ({}) must not exceed net.dip_period_s ({})",
+            self.dip_len_s,
+            self.dip_period_s
+        );
+        anyhow::ensure!(
+            self.dip_factor.is_finite() && self.dip_factor > 0.0 && self.dip_factor <= 1.0,
+            "net.dip_factor must be in (0, 1] (got {})",
+            self.dip_factor
+        );
+        anyhow::ensure!(
+            self.corrupt_prob.is_finite() && (0.0..=1.0).contains(&self.corrupt_prob),
+            "net.corrupt_prob must be in [0, 1] (got {})",
+            self.corrupt_prob
+        );
+        anyhow::ensure!(
+            self.quarantine_after >= 1,
+            "net.quarantine_after must be >= 1 (got {})",
+            self.quarantine_after
         );
         Ok(())
     }
@@ -307,6 +357,12 @@ impl RunConfig {
         cfg.net.retry_limit = args.get_parse_or("retry-limit", cfg.net.retry_limit);
         cfg.net.retry_backoff_ms =
             args.get_parse_or("retry-backoff-ms", cfg.net.retry_backoff_ms);
+        cfg.net.dip_period_s = args.get_parse_or("dip-period", cfg.net.dip_period_s);
+        cfg.net.dip_len_s = args.get_parse_or("dip-len", cfg.net.dip_len_s);
+        cfg.net.dip_factor = args.get_parse_or("dip-factor", cfg.net.dip_factor);
+        cfg.net.corrupt_prob = args.get_parse_or("corrupt-prob", cfg.net.corrupt_prob);
+        cfg.net.quarantine_after =
+            args.get_parse_or("quarantine-after", cfg.net.quarantine_after);
         cfg.net.fault_seed = args.get_parse_or("fault-seed", cfg.net.fault_seed);
         if let Some(a) = args.get("artifacts") {
             cfg.artifacts_dir = a.to_string();
@@ -392,6 +448,17 @@ impl RunConfig {
             );
             cfg.net.retry_limit = retries as u32;
             cfg.net.retry_backoff_ms = s.float_or("retry_backoff_ms", cfg.net.retry_backoff_ms);
+            cfg.net.dip_period_s = s.float_or("dip_period_s", cfg.net.dip_period_s);
+            cfg.net.dip_len_s = s.float_or("dip_len_s", cfg.net.dip_len_s);
+            cfg.net.dip_factor = s.float_or("dip_factor", cfg.net.dip_factor);
+            cfg.net.corrupt_prob = s.float_or("corrupt_prob", cfg.net.corrupt_prob);
+            // Type-range check at parse time, like retry_limit.
+            let quarantine = s.int_or("quarantine_after", cfg.net.quarantine_after as i64);
+            anyhow::ensure!(
+                (0..=u32::MAX as i64).contains(&quarantine),
+                "net.quarantine_after does not fit in u32 (got {quarantine})"
+            );
+            cfg.net.quarantine_after = quarantine as u32;
             // Seeds are raw 64-bit material: negative TOML integers wrap
             // to the corresponding u64 bit pattern.
             cfg.net.fault_seed = s.int_or("fault_seed", cfg.net.fault_seed as i64) as u64;
@@ -546,6 +613,59 @@ mod tests {
         assert_eq!(cfg.net.retry_limit, 2);
         // Defaults stay faultless: the plan built from them is inactive.
         assert!(!crate::net::FaultPlan::from_net(&NetConfig::default(), 0).is_active());
+    }
+
+    #[test]
+    fn degenerate_integrity_knobs_rejected_with_key_names() {
+        // The corruption / dip axes fail with their own key names from
+        // both TOML and CLI inputs, like every other fault knob.
+        for (text, key) in [
+            ("[net]\ncorrupt_prob = 1.5\n", "net.corrupt_prob"),
+            ("[net]\ncorrupt_prob = -0.1\n", "net.corrupt_prob"),
+            ("[net]\ncorrupt_prob = nan\n", "net.corrupt_prob"),
+            ("[net]\nquarantine_after = 0\n", "net.quarantine_after"),
+            ("[net]\nquarantine_after = -1\n", "net.quarantine_after"),
+            ("[net]\nquarantine_after = 99999999999\n", "net.quarantine_after"),
+            ("[net]\ndip_period_s = -1\n", "net.dip_period_s"),
+            ("[net]\ndip_len_s = -0.5\n", "net.dip_len_s"),
+            ("[net]\ndip_period_s = 1.0\ndip_len_s = 2.0\n", "net.dip_len_s"),
+            ("[net]\ndip_factor = 0.0\n", "net.dip_factor"),
+            ("[net]\ndip_factor = 1.5\n", "net.dip_factor"),
+            ("[net]\ndip_factor = -0.2\n", "net.dip_factor"),
+        ] {
+            let err = RunConfig::from_toml(text).unwrap_err();
+            assert!(err.to_string().contains(key), "{text:?}: {err}");
+        }
+        let args = Args::parse(["--corrupt-prob", "2.0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.corrupt_prob"), "{err}");
+        let args = Args::parse(["--quarantine-after", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.quarantine_after"), "{err}");
+        let args = Args::parse(["--dip-factor", "0"].iter().map(|s| s.to_string()));
+        let err = RunConfig::from_args(&args).unwrap_err();
+        assert!(err.to_string().contains("net.dip_factor"), "{err}");
+
+        // Valid values pass through both inputs and reach the fault plan.
+        let cfg = RunConfig::from_toml(
+            "[net]\ncorrupt_prob = 0.25\nquarantine_after = 5\ndip_period_s = 4.0\n\
+             dip_len_s = 1.0\ndip_factor = 0.2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.net.corrupt_prob, 0.25);
+        assert_eq!(cfg.net.quarantine_after, 5);
+        assert_eq!(cfg.net.dip_factor, 0.2);
+        let plan = crate::net::FaultPlan::from_net(&cfg.net, 0);
+        assert!(plan.is_active(), "corruption + dips make the plan active");
+        assert_eq!(plan.corrupt_prob, 0.25);
+        assert_eq!(plan.quarantine_after, 5);
+        assert_eq!(plan.dip_period_s, 4.0);
+        let args = Args::parse(
+            ["--corrupt-prob", "0.1", "--quarantine-after", "2"].iter().map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.net.corrupt_prob, 0.1);
+        assert_eq!(cfg.net.quarantine_after, 2);
     }
 
     #[test]

@@ -23,6 +23,10 @@ use std::thread::JoinHandle;
 pub enum CloudRequest {
     /// Head moved: run a LoD round for this position.
     Pose(Vec3),
+    /// Delta base lost (a corrupt or out-of-order message on a real
+    /// transport): run a LoD round for this position and publish a
+    /// gap-tolerant keyframe built on a reset management table.
+    Resync(Vec3),
     Shutdown,
 }
 
@@ -47,6 +51,34 @@ pub struct CloudHandle {
 impl CloudHandle {
     pub fn request_round(&self, eye: Vec3) {
         self.req_tx.send(CloudRequest::Pose(eye)).expect("cloud thread alive");
+    }
+
+    /// Request a keyframe resync round for this position (the recovery
+    /// path after a round was rejected with a typed protocol error).
+    pub fn request_resync(&self, eye: Vec3) {
+        self.req_tx.send(CloudRequest::Resync(eye)).expect("cloud thread alive");
+    }
+
+    /// Apply a received round to `client`, routing typed protocol
+    /// errors (corrupt, duplicate, gapped — all possible on a real
+    /// transport) into the keyframe-resync path instead of panicking:
+    /// the damaged round is dropped with the store untouched, a
+    /// [`CloudRequest::Resync`] is queued for `eye`, and `false` is
+    /// returned so the caller keeps rendering its last good cut until
+    /// the keyframe lands. Returns `true` when the round applied.
+    pub fn apply_or_resync(
+        &self,
+        client: &mut ClientEndpoint,
+        round: &CloudRound,
+        eye: Vec3,
+    ) -> bool {
+        match client.apply(&round.msg) {
+            Ok(_) => true,
+            Err(_) => {
+                self.request_resync(eye);
+                false
+            }
+        }
     }
 
     /// Blocking receive of the next round.
@@ -85,11 +117,9 @@ pub fn spawn_cloud(
     near: f32,
 ) -> CloudHandle {
     let codec = super::codec_for_tree(&tree, mode);
-    // Build the init message before moving the codec into the thread.
-    let init = SceneInit {
-        quantizer: codec.quantizer.to_bytes(),
-        codebook: codec.codebook.to_bytes(),
-    };
+    // Build the (sealed, checksummed) init message before moving the
+    // codec into the thread.
+    let init = SceneInit::new(codec.quantizer.to_bytes(), codec.codebook.to_bytes());
     let (req_tx, req_rx) = mpsc::channel::<CloudRequest>();
     let (round_tx, round_rx) = mpsc::channel::<CloudRound>();
     let join = std::thread::spawn(move || {
@@ -100,22 +130,26 @@ pub fn spawn_cloud(
         let mut search = TemporalSearch::for_tree(tree_ref)
             .with_parallelism(Parallelism::from_threads(pipeline.threads));
         while let Ok(req) = req_rx.recv() {
-            match req {
+            let (eye, keyframe) = match req {
                 CloudRequest::Shutdown => break,
-                CloudRequest::Pose(eye) => {
-                    let t = Stopwatch::start();
-                    let q = LodQuery::new(eye, fx, pipeline.tau_px, near);
-                    let cut = search.search(tree_ref, &q);
-                    let msg = cloud.publish_cut(&cut.nodes);
-                    let round = CloudRound {
-                        msg,
-                        visits: cut.nodes_visited,
-                        cloud_s: t.elapsed().as_secs_f64(),
-                    };
-                    if round_tx.send(round).is_err() {
-                        break;
-                    }
-                }
+                CloudRequest::Pose(eye) => (eye, false),
+                CloudRequest::Resync(eye) => (eye, true),
+            };
+            let t = Stopwatch::start();
+            let q = LodQuery::new(eye, fx, pipeline.tau_px, near);
+            let cut = search.search(tree_ref, &q);
+            let msg = if keyframe {
+                cloud.publish_keyframe(&cut.nodes)
+            } else {
+                cloud.publish_cut(&cut.nodes)
+            };
+            let round = CloudRound {
+                msg,
+                visits: cut.nodes_visited,
+                cloud_s: t.elapsed().as_secs_f64(),
+            };
+            if round_tx.send(round).is_err() {
+                break;
             }
         }
     });
@@ -139,18 +173,62 @@ mod tests {
         let handle = spawn_cloud(tree.clone(), pl, CompressionMode::Quantized, 900.0, 0.2);
         let mut client = client_for(&handle, CompressionMode::Quantized, pl.reuse_threshold);
 
-        handle.request_round(Vec3::new(40.0, 1.7, 40.0));
+        let eye = Vec3::new(40.0, 1.7, 40.0);
+        handle.request_round(eye);
         let round = handle.next_round();
         assert!(round.visits > 0);
-        client.apply(&round.msg).unwrap();
+        assert!(handle.apply_or_resync(&mut client, &round, eye), "clean round must apply");
         let n1 = client.store.len();
         assert!(n1 > 0, "client must receive Gaussians");
 
         // A tiny move: the next round should be near-empty.
-        handle.request_round(Vec3::new(40.02, 1.7, 40.0));
+        let eye2 = Vec3::new(40.02, 1.7, 40.0);
+        handle.request_round(eye2);
         let round2 = handle.next_round();
         assert!(round2.msg.payload.count < n1 / 10, "Δcut should be small");
-        client.apply(&round2.msg).unwrap();
+        assert!(handle.apply_or_resync(&mut client, &round2, eye2), "clean round must apply");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn corrupt_round_drops_and_resyncs_via_keyframe() {
+        // A round damaged on the wire must be rejected by the checksum
+        // (store untouched), trigger a Resync request, and the resulting
+        // keyframe must repair the stream — no panic anywhere.
+        let tree = Arc::new(CityGen::new(CityParams::for_target(3000, 80.0, 3)).build());
+        let pl = PipelineConfig::default();
+        let handle = spawn_cloud(tree, pl, CompressionMode::Quantized, 900.0, 0.2);
+        let mut client = client_for(&handle, CompressionMode::Quantized, pl.reuse_threshold);
+
+        let eye = Vec3::new(40.0, 1.7, 40.0);
+        handle.request_round(eye);
+        let round = handle.next_round();
+        assert!(handle.apply_or_resync(&mut client, &round, eye));
+        let good = client.store.len();
+        let seq_after_good = client.expected_seq();
+
+        // Flip one payload bit (or negate the CRC if the Δcut is empty)
+        // — the simulated damage a real last-mile link inflicts.
+        let eye2 = Vec3::new(44.0, 1.7, 40.0);
+        handle.request_round(eye2);
+        let mut round2 = handle.next_round();
+        if round2.msg.payload.bytes.is_empty() {
+            round2.msg.checksum = !round2.msg.checksum;
+        } else {
+            round2.msg.payload.bytes[0] ^= 0x10;
+        }
+        assert!(
+            !handle.apply_or_resync(&mut client, &round2, eye2),
+            "damaged round must be dropped"
+        );
+        assert_eq!(client.store.len(), good, "store untouched by the damaged round");
+        assert_eq!(client.expected_seq(), seq_after_good, "sequence state untouched too");
+
+        // The resync queued by apply_or_resync arrives as a keyframe and
+        // applies despite the sequence gap the dropped round left.
+        let resync = handle.next_round();
+        assert!(handle.apply_or_resync(&mut client, &resync, eye2), "keyframe must repair");
+        assert!(client.store.len() > 0);
         handle.shutdown();
     }
 

@@ -164,6 +164,38 @@ impl MemCounters {
     }
 }
 
+/// Wire-integrity counters for one session (or, absorbed, a whole
+/// multi-client run): the corruption → detection → NACK → quarantine
+/// pipeline's exact accounting. Same discipline as [`FaultCounters`]:
+/// simulation-clock integers, bitwise thread-invariant, and ALL-zero on
+/// a clean (corruption-free) link so the exact-equality parity suites
+/// keep holding field-for-field.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IntegrityCounters {
+    /// Damaged deliveries the checksum caught (`ProtocolError::Corrupt`).
+    pub corrupt_detected: u64,
+    /// Damaged deliveries that applied cleanly anyway — silent
+    /// poisonings. MUST be 0 whenever checksum verification is on; > 0
+    /// only in negative-control runs that disable verification.
+    pub corrupt_passed: u64,
+    /// Rounds abandoned after `quarantine_after` damaged copies of the
+    /// same seq (poison-message bound; each also counts a stall and
+    /// forces a keyframe resync).
+    pub quarantined_rounds: u64,
+    /// Uplink bytes spent on corruption NACKs.
+    pub nack_bytes: u64,
+}
+
+impl IntegrityCounters {
+    /// Accumulate another session's counters (plain sums).
+    pub fn absorb(&mut self, other: &IntegrityCounters) {
+        self.corrupt_detected += other.corrupt_detected;
+        self.corrupt_passed += other.corrupt_passed;
+        self.quarantined_rounds += other.quarantined_rounds;
+        self.nack_bytes += other.nack_bytes;
+    }
+}
+
 /// Aggregated simulation output.
 ///
 /// Every field is derived from modeled (simulation-clock) quantities,
@@ -213,6 +245,8 @@ pub struct SimResult {
     pub faults: FaultCounters,
     /// Client memory-budget accounting (all-zero when unbounded).
     pub mem: MemCounters,
+    /// Wire-integrity accounting (all-zero on a corruption-free link).
+    pub integrity: IntegrityCounters,
 }
 
 impl SimResult {

@@ -22,7 +22,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use metrics::{FaultCounters, MemCounters, SimResult, Variant};
+pub use metrics::{FaultCounters, IntegrityCounters, MemCounters, SimResult, Variant};
 pub use scheduler::{run_simulation, SimParams};
 pub use server::{run_multiclient, CloudServer, Disconnect, MulticlientResult, ServerConfig, Session};
 

@@ -11,11 +11,11 @@
 //! LoD queries always use full-resolution optics (f_x, τ*), so cut sizes
 //! and bandwidth are full-scale quantities.
 
-use super::metrics::{FaultCounters, MemCounters, PlatformKind, SimResult, Variant};
+use super::metrics::{FaultCounters, IntegrityCounters, MemCounters, PlatformKind, SimResult, Variant};
 use crate::config::{NetConfig, PipelineConfig};
 use crate::hw::{AccelConfig, AccelKind, Accelerator, FrameWorkload, MobileGpu, Platform};
 use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
-use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
+use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, ProtocolError, RoundMsg};
 use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
 use crate::net::faults::{FaultPlan, FaultyLink, Transmit};
@@ -46,6 +46,63 @@ pub(crate) const CLOUD_VISITS_PER_S: f64 = 2.0e9;
 pub(crate) const CLOUD_COMPRESS_BPS: f64 = 4.0e9;
 /// Client decode throughput on the Nebula decoder (Gaussians/s).
 pub(crate) const DECODE_RATE: f64 = 1.0e9;
+/// Modeled uplink size of a corruption NACK (a seq + checksum frame,
+/// mirroring the 16-byte round-message header).
+pub(crate) const CORRUPT_NACK_BYTES: u64 = 16;
+
+/// One round message in flight cloud→client, with the corruption state
+/// the NACK/quarantine machinery needs: the (possibly damaged) bytes
+/// that will arrive, the pristine copy to retransmit from (present only
+/// when damaged — the zero-fault path never clones), the attempt keys
+/// already consumed for this seq, and how many damaged copies of it the
+/// client has been handed so far.
+pub(crate) struct InFlightRound {
+    pub arrival: f64,
+    pub msg: RoundMsg,
+    pub pristine: Option<RoundMsg>,
+    pub attempts: u32,
+    pub corrupt_deliveries: u32,
+}
+
+impl InFlightRound {
+    /// Wrap a [`Transmit`] outcome (`None` for `Abandoned`). A
+    /// `Corrupted` outcome applies the link's seeded
+    /// [`Damage`](crate::net::Damage) to a clone of the message and
+    /// keeps the pristine copy for the retransmit; the `prior_*`
+    /// arguments carry the attempt/corruption history when this send is
+    /// itself a NACK retransmit.
+    pub fn from_transmit(outcome: Transmit, msg: RoundMsg, prior_attempts: u32, prior_corrupt: u32) -> Option<Self> {
+        match outcome {
+            Transmit::Delivered { arrival, attempts } => Some(Self {
+                arrival,
+                msg,
+                pristine: None,
+                attempts: prior_attempts + attempts,
+                corrupt_deliveries: prior_corrupt,
+            }),
+            Transmit::Corrupted { arrival, attempts, damage } => {
+                let mut damaged = msg.clone();
+                if damaged.payload.bytes.is_empty() {
+                    // Nothing in the body to damage (an empty Δcut):
+                    // the hit lands in the header instead — model it as
+                    // a corrupted CRC trailer, which verification
+                    // catches just the same.
+                    damaged.checksum = !damaged.checksum;
+                } else {
+                    damage.apply(&mut damaged.payload.bytes);
+                }
+                Some(Self {
+                    arrival,
+                    msg: damaged,
+                    pristine: Some(msg),
+                    attempts: prior_attempts + attempts,
+                    corrupt_deliveries: prior_corrupt + 1,
+                })
+            }
+            Transmit::Abandoned { .. } => None,
+        }
+    }
+}
 
 /// Nearest-rank percentile of an ascending-sorted sample: index
 /// `(len·q) - 1`, clamped into `[0, len-1]` so short runs (e.g.
@@ -145,7 +202,7 @@ pub fn run_simulation(
     let mut evict_notice_bytes = 0u64;
     if let Some(notice) = client.take_evict_notice() {
         evict_notice_bytes += notice.wire_bytes() as u64;
-        cloud.apply_evict_notice(&notice);
+        cloud.apply_evict_notice(&notice).expect("clean uplink notice");
     }
     // --- Memory-budget accounting (inert when unbounded) ----------------
     let mut resident_peak = client.store.byte_size();
@@ -155,7 +212,7 @@ pub fn run_simulation(
 
     // --- Frame loop -----------------------------------------------------
     let vsync = 1.0 / params.fps;
-    let mut pending: Option<(f64, RoundMsg)> = None;
+    let mut pending: Option<InFlightRound> = None;
     let mut mtp = Vec::with_capacity(poses.len());
     let mut render_s_sum = 0.0f64;
     let mut energy_sum = 0.0f64;
@@ -185,6 +242,7 @@ pub fn run_simulation(
     let mut resyncs = 0u64;
     let mut stalls = 0u64;
     let mut recovery_max = 0u64;
+    let mut integrity = IntegrityCounters::default();
 
     let frames = poses.len();
     for (i, pose) in poses.iter().enumerate() {
@@ -192,27 +250,79 @@ pub fn run_simulation(
         let mut decoded_this_frame = 0u64;
         let mut delivered_bytes = 0u64;
         let mut notice_bytes = 0u64;
+        let mut nack_bytes_frame = 0u64;
 
         // Deliver an in-flight round if it has arrived.
-        if let Some((arrival, msg)) = pending.take() {
-            if arrival <= t_frame {
-                decoded_this_frame = msg.payload.count as u64;
-                delivered_bytes = msg.wire_bytes() as u64;
-                client.apply(&msg).expect("apply round");
-                // Budget evictions triggered by this round go straight
-                // back up the link so the cloud table stays reconciled
-                // before the next publish (always None when unbounded).
-                if let Some(notice) = client.take_evict_notice() {
-                    notice_bytes = notice.wire_bytes() as u64;
-                    evict_notice_bytes += notice_bytes;
-                    cloud.apply_evict_notice(&notice);
-                }
-                last_apply = i;
-                if let Some(s0) = stall_start.take() {
-                    recovery_max = recovery_max.max((i - s0) as u64);
+        if let Some(inflight) = pending.take() {
+            if inflight.arrival <= t_frame {
+                // The radio received the (possibly damaged) frame either
+                // way: charge the bytes that actually arrived.
+                delivered_bytes = inflight.msg.wire_bytes() as u64;
+                match client.apply(&inflight.msg) {
+                    Ok(_) => {
+                        if inflight.pristine.is_some() {
+                            // A damaged frame applied cleanly: silent
+                            // poisoning (impossible with checksums on —
+                            // `it_chaos.rs` pins this at zero).
+                            integrity.corrupt_passed += 1;
+                        }
+                        decoded_this_frame = inflight.msg.payload.count as u64;
+                        // Budget evictions triggered by this round go
+                        // straight back up the link so the cloud table
+                        // stays reconciled before the next publish
+                        // (always None when unbounded).
+                        if let Some(notice) = client.take_evict_notice() {
+                            notice_bytes = notice.wire_bytes() as u64;
+                            evict_notice_bytes += notice_bytes;
+                            cloud.apply_evict_notice(&notice).expect("clean uplink notice");
+                        }
+                        last_apply = i;
+                        if let Some(s0) = stall_start.take() {
+                            recovery_max = recovery_max.max((i - s0) as u64);
+                        }
+                    }
+                    Err(ProtocolError::Corrupt { .. }) => {
+                        // Checksum caught the damage: NACK and either
+                        // retransmit (attempt keys resume where this
+                        // seq left off) or quarantine the round after
+                        // `quarantine_after` damaged copies — a poison
+                        // message must never livelock the session.
+                        integrity.corrupt_detected += 1;
+                        integrity.nack_bytes += CORRUPT_NACK_BYTES;
+                        nack_bytes_frame = CORRUPT_NACK_BYTES;
+                        let pristine =
+                            inflight.pristine.expect("Corrupt implies a damaged delivery");
+                        if inflight.corrupt_deliveries >= link.plan.quarantine_after {
+                            integrity.quarantined_rounds += 1;
+                            stalls += 1;
+                            needs_keyframe = true;
+                            stall_start.get_or_insert(i);
+                        } else {
+                            let bytes = pristine.wire_bytes() as u64;
+                            let seq = pristine.seq;
+                            // NACK rides the uplink: the retransmit
+                            // departs one propagation delay after the
+                            // client detected the damage.
+                            let depart = t_frame + link.inner.latency_s;
+                            let outcome = link.transmit_from(depart, bytes, seq, inflight.attempts);
+                            pending = InFlightRound::from_transmit(
+                                outcome,
+                                pristine,
+                                inflight.attempts,
+                                inflight.corrupt_deliveries,
+                            );
+                            if pending.is_none() {
+                                // Retransmit budget exhausted mid-NACK.
+                                stalls += 1;
+                                needs_keyframe = true;
+                                stall_start.get_or_insert(i);
+                            }
+                        }
+                    }
+                    Err(e) => panic!("apply round: {e}"),
                 }
             } else {
-                pending = Some((arrival, msg));
+                pending = Some(inflight);
             }
         }
         delivered_bytes_sum += delivered_bytes;
@@ -236,19 +346,21 @@ pub fn run_simulation(
             let cloud_done = t_frame
                 + cut.nodes_visited as f64 / CLOUD_VISITS_PER_S
                 + bytes as f64 / CLOUD_COMPRESS_BPS;
-            match link.transmit(cloud_done, bytes, msg.seq) {
-                Transmit::Delivered { arrival, .. } => {
-                    needs_keyframe = false;
-                    pending = Some((arrival, msg));
-                }
-                Transmit::Abandoned { .. } => {
-                    // Retry budget exhausted: the round is gone; re-base
-                    // the stream at the next opportunity and keep
-                    // rendering the last good cut meanwhile.
-                    stalls += 1;
-                    needs_keyframe = true;
-                    stall_start.get_or_insert(i);
-                }
+            let outcome = link.transmit(cloud_done, bytes, msg.seq);
+            if matches!(outcome, Transmit::Delivered { .. } | Transmit::Corrupted { .. }) {
+                // The round is on its way (damaged deliveries recover
+                // through the NACK path above, so the delta base is not
+                // lost yet).
+                needs_keyframe = false;
+            }
+            pending = InFlightRound::from_transmit(outcome, msg, 0, 0);
+            if pending.is_none() {
+                // Retry budget exhausted: the round is gone; re-base
+                // the stream at the next opportunity and keep
+                // rendering the last good cut meanwhile.
+                stalls += 1;
+                needs_keyframe = true;
+                stall_start.get_or_insert(i);
             }
         }
         peak_client = peak_client.max(client.store.len());
@@ -314,11 +426,13 @@ pub fn run_simulation(
         // frame (the old running average `streamed_bytes / rounds`
         // mis-attributed energy whenever round sizes varied), at the
         // configured per-byte cost.
-        // EvictNotice NACKs ride the uplink at the same per-byte cost
-        // (0 bytes → +0.0 J exactly, so unbounded parity is bitwise).
+        // EvictNotice and corruption NACKs ride the uplink at the same
+        // per-byte cost (0 bytes → +0.0 J exactly, so unbounded /
+        // zero-fault parity stays bitwise).
         let wireless =
             crate::net::wireless_energy_j_at(delivered_bytes, params.net.energy_nj_per_byte)
-                + crate::net::wireless_energy_j_at(notice_bytes, params.net.energy_nj_per_byte);
+                + crate::net::wireless_energy_j_at(notice_bytes, params.net.energy_nj_per_byte)
+                + crate::net::wireless_energy_j_at(nack_bytes_frame, params.net.energy_nj_per_byte);
         wireless_sum += wireless;
         energy_sum += cost.total_energy_j() + wireless;
     }
@@ -384,6 +498,7 @@ pub fn run_simulation(
         right_psnr_db: right_psnr,
         faults,
         mem,
+        integrity,
     }
 }
 
@@ -436,6 +551,7 @@ pub fn run_remote_simulation(
         right_psnr_db: quality.psnr_db(),
         faults: FaultCounters::default(),
         mem: MemCounters::default(),
+        integrity: IntegrityCounters::default(),
     }
 }
 

@@ -58,15 +58,16 @@
 //! unconstrained uplink forwards at the exact departure time. Both
 //! properties are pinned by `tests/it_scheduler.rs`.
 
-use super::metrics::{FaultCounters, MemCounters, SimResult, Variant};
+use super::metrics::{FaultCounters, IntegrityCounters, MemCounters, SimResult, Variant};
 use super::scheduler::{
-    make_platform, percentile, SimParams, CLOUD_COMPRESS_BPS, CLOUD_VISITS_PER_S, DECODE_RATE,
+    make_platform, percentile, InFlightRound, SimParams, CLOUD_COMPRESS_BPS, CLOUD_VISITS_PER_S,
+    CORRUPT_NACK_BYTES, DECODE_RATE,
 };
 use crate::compress::DeltaCodec;
 use crate::config::PipelineConfig;
 use crate::hw::{FrameWorkload, Platform};
 use crate::lod::{LodQuery, LodSearch, LodTree, StreamingSearch, TemporalSearch};
-use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, RoundMsg};
+use crate::manage::protocol::{ClientEndpoint, CloudEndpoint, ProtocolError, RoundMsg};
 use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
 use crate::net::faults::{FaultPlan, FaultyLink, Transmit};
@@ -174,6 +175,9 @@ pub struct MulticlientResult {
     /// peak/capacity as max, resident mean as mean-of-means). All-zero
     /// when the budget is unbounded.
     pub mem: MemCounters,
+    /// Wire-integrity counters summed over all sessions (plain sums).
+    /// All-zero on corruption-free links.
+    pub integrity: IntegrityCounters,
 }
 
 /// A round published in phase A, awaiting shared-cloud timing (phase B).
@@ -209,7 +213,7 @@ pub struct Session<'t> {
     client: ClientEndpoint,
     link: FaultyLink,
     platform: Box<dyn Platform + Send + Sync>,
-    pending: Option<(f64, RoundMsg)>,
+    pending: Option<InFlightRound>,
     request: Option<RoundRequest>,
     /// Disconnect windows owned by this session, as half-open frame
     /// ranges (from [`ServerConfig::disconnects`]).
@@ -242,6 +246,7 @@ pub struct Session<'t> {
     degraded: u64,
     disconnected: u64,
     recovery_max: u64,
+    integrity: IntegrityCounters,
     // --- memory-budget accumulators (inert when unbounded) -------------
     capacity_bytes: u64,
     evict_notice_bytes: u64,
@@ -296,7 +301,7 @@ impl<'t> Session<'t> {
         let mut evict_notice_bytes = 0u64;
         if let Some(notice) = client.take_evict_notice() {
             evict_notice_bytes += notice.wire_bytes() as u64;
-            cloud.apply_evict_notice(&notice);
+            cloud.apply_evict_notice(&notice).expect("clean uplink notice");
         }
 
         let peak_client = client.store.len();
@@ -340,6 +345,7 @@ impl<'t> Session<'t> {
             degraded: 0,
             disconnected: 0,
             recovery_max: 0,
+            integrity: IntegrityCounters::default(),
             capacity_bytes,
             evict_notice_bytes,
             resident_peak,
@@ -390,29 +396,77 @@ impl<'t> Session<'t> {
         let mut decoded_this_frame = 0u64;
         let mut delivered_bytes = 0u64;
         let mut notice_bytes = 0u64;
+        let mut nack_bytes_frame = 0u64;
 
-        if let Some((arrival, msg)) = self.pending.take() {
-            if arrival <= t_frame {
-                decoded_this_frame = msg.payload.count as u64;
-                delivered_bytes = msg.wire_bytes() as u64;
-                // Never fails under the single-round-in-flight invariant:
-                // sequence gaps only arise from losses, which force the
-                // next publish to be a gap-tolerant keyframe.
-                self.client.apply(&msg).expect("apply round");
-                // Reconcile budget evictions before the next publish —
-                // pure per-session state, so phase-A safe (None when
-                // unbounded, keeping the faultless path untouched).
-                if let Some(notice) = self.client.take_evict_notice() {
-                    notice_bytes = notice.wire_bytes() as u64;
-                    self.evict_notice_bytes += notice_bytes;
-                    self.cloud.apply_evict_notice(&notice);
-                }
-                self.last_apply = i;
-                if let Some(s0) = self.stall_start.take() {
-                    self.recovery_max = self.recovery_max.max((i - s0) as u64);
+        if let Some(inflight) = self.pending.take() {
+            if inflight.arrival <= t_frame {
+                // The radio received the (possibly damaged) frame either
+                // way: charge the bytes that actually arrived.
+                delivered_bytes = inflight.msg.wire_bytes() as u64;
+                match self.client.apply(&inflight.msg) {
+                    Ok(_) => {
+                        if inflight.pristine.is_some() {
+                            // Silent poisoning — impossible with
+                            // checksums on; `it_chaos.rs` pins this at 0.
+                            self.integrity.corrupt_passed += 1;
+                        }
+                        decoded_this_frame = inflight.msg.payload.count as u64;
+                        // Reconcile budget evictions before the next
+                        // publish — pure per-session state, so phase-A
+                        // safe (None when unbounded, keeping the
+                        // faultless path untouched).
+                        if let Some(notice) = self.client.take_evict_notice() {
+                            notice_bytes = notice.wire_bytes() as u64;
+                            self.evict_notice_bytes += notice_bytes;
+                            self.cloud.apply_evict_notice(&notice).expect("clean uplink notice");
+                        }
+                        self.last_apply = i;
+                        if let Some(s0) = self.stall_start.take() {
+                            self.recovery_max = self.recovery_max.max((i - s0) as u64);
+                        }
+                    }
+                    Err(ProtocolError::Corrupt { .. }) => {
+                        // Checksum caught the damage: NACK → retransmit
+                        // (attempt keys resume where this seq left off)
+                        // or quarantine after `quarantine_after` damaged
+                        // copies. The retransmit rides only this
+                        // session's own link — per-session state, so
+                        // phase-A safe, and identical to the
+                        // single-client scheduler for N = 1 parity.
+                        self.integrity.corrupt_detected += 1;
+                        self.integrity.nack_bytes += CORRUPT_NACK_BYTES;
+                        nack_bytes_frame = CORRUPT_NACK_BYTES;
+                        let pristine =
+                            inflight.pristine.expect("Corrupt implies a damaged delivery");
+                        if inflight.corrupt_deliveries >= self.link.plan.quarantine_after {
+                            self.integrity.quarantined_rounds += 1;
+                            self.stalls += 1;
+                            self.needs_keyframe = true;
+                            self.stall_start.get_or_insert(i);
+                        } else {
+                            let bytes = pristine.wire_bytes() as u64;
+                            let seq = pristine.seq;
+                            let depart = t_frame + self.link.inner.latency_s;
+                            let outcome =
+                                self.link.transmit_from(depart, bytes, seq, inflight.attempts);
+                            self.pending = InFlightRound::from_transmit(
+                                outcome,
+                                pristine,
+                                inflight.attempts,
+                                inflight.corrupt_deliveries,
+                            );
+                            if self.pending.is_none() {
+                                // Retransmit budget exhausted mid-NACK.
+                                self.stalls += 1;
+                                self.needs_keyframe = true;
+                                self.stall_start.get_or_insert(i);
+                            }
+                        }
+                    }
+                    Err(e) => panic!("apply round: {e}"),
                 }
             } else {
-                self.pending = Some((arrival, msg));
+                self.pending = Some(inflight);
             }
         }
         self.delivered_bytes_sum += delivered_bytes;
@@ -510,10 +564,12 @@ impl<'t> Session<'t> {
         let display = (done / ctx.vsync).ceil() * ctx.vsync;
         self.mtp.push((display - t_frame) * 1e3);
 
-        // EvictNotice NACKs ride the uplink at the same per-byte cost
-        // (0 bytes → +0.0 J exactly, preserving unbounded parity).
+        // EvictNotice and corruption NACKs ride the uplink at the same
+        // per-byte cost (0 bytes → +0.0 J exactly, preserving unbounded
+        // and zero-fault parity).
         let wireless = crate::net::wireless_energy_j_at(delivered_bytes, ctx.energy_nj_per_byte)
-            + crate::net::wireless_energy_j_at(notice_bytes, ctx.energy_nj_per_byte);
+            + crate::net::wireless_energy_j_at(notice_bytes, ctx.energy_nj_per_byte)
+            + crate::net::wireless_energy_j_at(nack_bytes_frame, ctx.energy_nj_per_byte);
         self.wireless_sum += wireless;
         self.energy_sum += cost.total_energy_j() + wireless;
     }
@@ -584,6 +640,7 @@ impl<'t> Session<'t> {
             right_psnr_db: self.right_psnr,
             faults,
             mem,
+            integrity: self.integrity,
         }
     }
 }
@@ -750,16 +807,21 @@ impl<'t> CloudServer<'t> {
                     } else if s.tau_scale > 1.0 {
                         s.tau_scale = (s.tau_scale * 0.5).max(1.0);
                     }
-                    match s.link.transmit(released, req.bytes, req.msg.seq) {
-                        Transmit::Delivered { arrival, .. } => {
-                            s.needs_keyframe = false;
-                            s.pending = Some((arrival, req.msg));
-                        }
-                        Transmit::Abandoned { .. } => {
-                            s.stalls += 1;
-                            s.needs_keyframe = true;
-                            s.stall_start.get_or_insert(i);
-                        }
+                    let outcome = s.link.transmit(released, req.bytes, req.msg.seq);
+                    if matches!(
+                        outcome,
+                        Transmit::Delivered { .. } | Transmit::Corrupted { .. }
+                    ) {
+                        // On its way — a damaged delivery recovers
+                        // through the NACK path in the next phase A, so
+                        // the delta base is not lost yet.
+                        s.needs_keyframe = false;
+                    }
+                    s.pending = InFlightRound::from_transmit(outcome, req.msg, 0, 0);
+                    if s.pending.is_none() {
+                        s.stalls += 1;
+                        s.needs_keyframe = true;
+                        s.stall_start.get_or_insert(i);
                     }
                 }
             }
@@ -776,9 +838,11 @@ impl<'t> CloudServer<'t> {
         let max = mean_mtp.iter().copied().fold(f64::NEG_INFINITY, f64::max);
         let mut faults = FaultCounters::default();
         let mut mem = MemCounters::default();
+        let mut integrity = IntegrityCounters::default();
         for c in &per_client {
             faults.absorb(&c.faults);
             mem.absorb(&c.mem);
+            integrity.absorb(&c.integrity);
         }
         faults.staleness_mean_frames /= per_client.len().max(1) as f64;
         mem.resident_bytes_mean /= per_client.len().max(1) as f64;
@@ -802,6 +866,7 @@ impl<'t> CloudServer<'t> {
             fairness: if mean > 0.0 { max / mean } else { 1.0 },
             faults,
             mem,
+            integrity,
             per_client,
         }
     }

@@ -22,6 +22,11 @@
 //! --jitter-ms <ms> --outage-start <s> --outage-period <s>
 //! --outage-len <s> --retry-limit <n> --retry-backoff-ms <ms>
 //! --fault-seed <n>
+//!
+//! Wire-integrity flags (silent corruption + quarantine; see
+//! `net::faults` and README "Silent corruption"): --corrupt-prob <p>
+//! --quarantine-after <n> --dip-period <s> --dip-len <s>
+//! --dip-factor <f in (0,1]>
 
 use nebula::benchkit;
 use nebula::config::RunConfig;
@@ -178,6 +183,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let bounded = cfg.pipeline.client_mem_mb > 0.0;
     let mut fault_rows = Vec::new();
     let mut mem_rows = Vec::new();
+    let mut integrity_rows = Vec::new();
     for v in benchkit::fig18_variants() {
         let r = run_simulation(&tree, &poses, &v, &params);
         table.row(vec![
@@ -191,6 +197,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         ]);
         fault_rows.push((r.variant.clone(), r.faults));
         mem_rows.push((r.variant.clone(), r.mem));
+        integrity_rows.push((r.variant.clone(), r.integrity));
     }
     println!("trace: {}", cfg.trace.label());
     table.print();
@@ -236,6 +243,23 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         }
         println!("\nlink faults (seed {}):", cfg.net.fault_seed);
         ft.print();
+    }
+    if cfg.net.corrupt_prob > 0.0 {
+        let mut it = Table::new(vec!["variant", "detected", "passed", "quarantined", "NACK bytes"]);
+        for (name, g) in integrity_rows {
+            it.row(vec![
+                name,
+                g.corrupt_detected.to_string(),
+                g.corrupt_passed.to_string(),
+                g.quarantined_rounds.to_string(),
+                human_bytes(g.nack_bytes),
+            ]);
+        }
+        println!(
+            "\nwire integrity (corrupt-prob {}, quarantine after {}):",
+            cfg.net.corrupt_prob, cfg.net.quarantine_after
+        );
+        it.print();
     }
     Ok(())
 }
@@ -298,6 +322,19 @@ fn simulate_multiclient(
             f.staleness_mean_frames,
             f.staleness_p99_frames,
             f.recovery_frames_max
+        );
+    }
+    if cfg.net.corrupt_prob > 0.0 {
+        let g = &r.integrity;
+        println!(
+            "wire integrity (corrupt-prob {}, quarantine after {}): detected {}, \
+             passed {}, quarantined {}, NACK {}",
+            cfg.net.corrupt_prob,
+            cfg.net.quarantine_after,
+            g.corrupt_detected,
+            g.corrupt_passed,
+            g.quarantined_rounds,
+            human_bytes(g.nack_bytes)
         );
     }
     if cfg.pipeline.client_mem_mb > 0.0 {

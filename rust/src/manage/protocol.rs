@@ -46,6 +46,28 @@
 //!   built on a RESET management table. Applying it resets the client
 //!   store too, so both ends restart from an identical state and the
 //!   consistency invariant holds again from that round onward.
+//!
+//! # Wire integrity
+//!
+//! Loss hardening assumes damaged frames never *arrive* — real wireless
+//! delivers flipped bits and truncated frames too, and a corrupt Δcut
+//! applied anyway poisons the delta base forever. Every message
+//! therefore carries a CRC32 trailer ([`crate::util::crc`]) computed
+//! over the fields a serializer would emit, sealed at construction:
+//! * [`ClientEndpoint::apply`] verifies the checksum *before* the
+//!   sequence check and the decode — a damaged frame surfaces as
+//!   [`ProtocolError::Corrupt`] with the store (and `next_seq` /
+//!   `bytes_received`) completely untouched, so the coordinator can
+//!   NACK it into the retransmit machinery;
+//! * [`CloudEndpoint::apply_evict_notice`] verifies the uplink notice
+//!   the same way (a corrupt notice dropped without reconciling is
+//!   recoverable — the next notice re-reports unacknowledged ids);
+//! * [`ClientEndpoint::from_init`] rejects a damaged scene install.
+//!
+//! The CRC occupies 4 of the header bytes each `wire_bytes` model
+//! already charges (16 per round message, 8 per init/notice frame), so
+//! checksum framing is wire-free: byte accounting — and with it every
+//! zero-fault exact-equality parity suite — is unchanged.
 
 use super::client_store::ClientStore;
 use super::delta::DeltaCut;
@@ -53,6 +75,7 @@ use super::table::ManagementTable;
 use crate::compress::{DeltaCodec, EncodedDelta};
 use crate::gaussian::GaussianId;
 use crate::lod::LodTree;
+use crate::util::crc::Crc32;
 use std::collections::BTreeSet;
 
 /// One-time scene metadata.
@@ -60,9 +83,35 @@ use std::collections::BTreeSet;
 pub struct SceneInit {
     pub quantizer: Vec<u8>,
     pub codebook: Vec<u8>,
+    /// CRC32 over quantizer ‖ codebook, sealed by [`SceneInit::new`].
+    pub checksum: u32,
 }
 
 impl SceneInit {
+    /// Build and seal an install message (the only constructor — every
+    /// scene init on the wire carries a valid checksum).
+    pub fn new(quantizer: Vec<u8>, codebook: Vec<u8>) -> Self {
+        let mut init = Self { quantizer, codebook, checksum: 0 };
+        init.checksum = init.compute_checksum();
+        init
+    }
+
+    fn compute_checksum(&self) -> u32 {
+        let mut h = Crc32::new();
+        h.u32(self.quantizer.len() as u32);
+        h.update(&self.quantizer);
+        h.u32(self.codebook.len() as u32);
+        h.update(&self.codebook);
+        h.finish()
+    }
+
+    /// Whether the stored trailer matches the contents.
+    pub fn verify_checksum(&self) -> bool {
+        self.checksum == self.compute_checksum()
+    }
+
+    /// Install wire size; the 8-byte frame header carries the message
+    /// type/length word and the 4-byte CRC trailer.
     pub fn wire_bytes(&self) -> usize {
         self.quantizer.len() + self.codebook.len() + 8
     }
@@ -92,6 +141,9 @@ pub enum ProtocolError {
     Gap { expected: u64, got: u64 },
     /// The payload failed to decode.
     Decode { seq: u64, reason: String },
+    /// The CRC32 trailer did not match the message contents — damaged
+    /// in flight. Checked before decode; the store stays untouched.
+    Corrupt { seq: u64 },
 }
 
 impl std::fmt::Display for ProtocolError {
@@ -106,6 +158,9 @@ impl std::fmt::Display for ProtocolError {
             }
             ProtocolError::Decode { seq, reason } => {
                 write!(f, "round msg seq {seq} failed to decode: {reason}")
+            }
+            ProtocolError::Corrupt { seq } => {
+                write!(f, "msg seq {seq} failed checksum verification (corrupt on the wire)")
             }
         }
     }
@@ -127,15 +182,50 @@ pub struct RoundMsg {
     pub removed: Vec<GaussianId>,
     /// Compressed payload for added ids the client lacks.
     pub payload: EncodedDelta,
+    /// CRC32 over every field above, sealed by [`RoundMsg::seal`].
+    pub checksum: u32,
 }
 
 impl RoundMsg {
     /// Total wire size: id lists (delta-varint + zstd would shrink them
     /// further; we charge the conservative varint size) + payload + a
-    /// 16-byte header (round, seq, kind/flags — `seq`/`kind` live in
-    /// bytes the header always carried, so hardening is wire-free).
+    /// 16-byte header (round, seq, kind/flags and the 4-byte CRC32
+    /// trailer — all live in bytes the header always carried, so
+    /// hardening is wire-free).
     pub fn wire_bytes(&self) -> usize {
         varint_list_bytes(&self.added) + varint_list_bytes(&self.removed) + self.payload.wire_bytes() + 16
+    }
+
+    fn compute_checksum(&self) -> u32 {
+        let mut h = Crc32::new();
+        h.u64(self.round);
+        h.u64(self.seq);
+        h.u8(match self.kind {
+            MsgKind::Delta => 0,
+            MsgKind::Keyframe => 1,
+        });
+        h.u32(self.added.len() as u32);
+        for &id in &self.added {
+            h.u32(id);
+        }
+        h.u32(self.removed.len() as u32);
+        for &id in &self.removed {
+            h.u32(id);
+        }
+        h.u32(self.payload.count as u32);
+        h.update(&self.payload.bytes);
+        h.finish()
+    }
+
+    /// Recompute and store the CRC trailer (call after any mutation;
+    /// `CloudEndpoint::emit` seals every published message).
+    pub fn seal(&mut self) {
+        self.checksum = self.compute_checksum();
+    }
+
+    /// Whether the stored trailer matches the contents.
+    pub fn verify_checksum(&self) -> bool {
+        self.checksum == self.compute_checksum()
     }
 }
 
@@ -145,12 +235,41 @@ impl RoundMsg {
 /// delta-varint wire model as the round-message id lists applies.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EvictNotice {
+    /// Downlink sequence position the notice was drained at (the
+    /// client's `next_seq`), echoed so the cloud can attribute a
+    /// corrupt notice to a round in diagnostics.
+    pub seq: u64,
     pub ids: Vec<GaussianId>,
+    /// CRC32 over seq ‖ ids, sealed by [`EvictNotice::new`].
+    pub checksum: u32,
 }
 
 impl EvictNotice {
+    /// Build and seal an uplink notice.
+    pub fn new(seq: u64, ids: Vec<GaussianId>) -> Self {
+        let mut n = Self { seq, ids, checksum: 0 };
+        n.checksum = n.compute_checksum();
+        n
+    }
+
+    fn compute_checksum(&self) -> u32 {
+        let mut h = Crc32::new();
+        h.u64(self.seq);
+        h.u32(self.ids.len() as u32);
+        for &id in &self.ids {
+            h.u32(id);
+        }
+        h.finish()
+    }
+
+    /// Whether the stored trailer matches the contents.
+    pub fn verify_checksum(&self) -> bool {
+        self.checksum == self.compute_checksum()
+    }
+
     /// Uplink wire size: delta-varint id list + an 8-byte header
-    /// (session/seq bytes the uplink frame always carries).
+    /// (session/seq bytes the uplink frame always carries, 4 of them
+    /// now the CRC32 trailer).
     pub fn wire_bytes(&self) -> usize {
         varint_list_bytes(&self.ids) + 8
     }
@@ -209,17 +328,22 @@ impl<'t> CloudEndpoint<'t> {
 
     /// Reconcile a client's capacity-eviction NACK: the table forgets
     /// the ids (so a cut that still needs one re-ships it as Δcut) and
-    /// they are flagged so that re-ship is counted as a refetch.
-    pub fn apply_evict_notice(&mut self, notice: &EvictNotice) {
+    /// they are flagged so that re-ship is counted as a refetch. A
+    /// notice damaged in flight is rejected as
+    /// [`ProtocolError::Corrupt`] with the table untouched — safe to
+    /// drop, since the client re-reports still-unacknowledged ids in
+    /// its next notice.
+    pub fn apply_evict_notice(&mut self, notice: &EvictNotice) -> Result<(), ProtocolError> {
+        if !notice.verify_checksum() {
+            return Err(ProtocolError::Corrupt { seq: notice.seq });
+        }
         self.table.remove_ids(&notice.ids);
         self.capacity_evicted.extend(notice.ids.iter().copied());
+        Ok(())
     }
 
     pub fn scene_init(&self) -> SceneInit {
-        SceneInit {
-            quantizer: self.codec.quantizer.to_bytes(),
-            codebook: self.codec.codebook.to_bytes(),
-        }
+        SceneInit::new(self.codec.quantizer.to_bytes(), self.codec.codebook.to_bytes())
     }
 
     /// Process a new (canonical, sorted) cut and emit the round message.
@@ -276,7 +400,9 @@ impl<'t> CloudEndpoint<'t> {
         delta_ids: &[GaussianId],
     ) -> RoundMsg {
         let payload = DeltaCut::gather(self.round, self.tree, delta_ids).encode(&self.codec);
-        let msg = RoundMsg { round: self.round, seq: self.seq, kind, added, removed, payload };
+        let mut msg =
+            RoundMsg { round: self.round, seq: self.seq, kind, added, removed, payload, checksum: 0 };
+        msg.seal();
         self.round += 1;
         self.seq += 1;
         msg
@@ -291,11 +417,21 @@ pub struct ClientEndpoint {
     pub bytes_received: u64,
     /// Next delta sequence number this endpoint can apply.
     next_seq: u64,
+    /// Verify CRC trailers before decode (default true). Disabled only
+    /// by tests demonstrating what silent corruption does without the
+    /// integrity layer.
+    verify_checksums: bool,
 }
 
 impl ClientEndpoint {
     /// Construct from the scene-init message (decodes codebook/quantizer).
+    /// A damaged install is rejected outright — there is no partial
+    /// state to recover; the install must simply be refetched.
     pub fn from_init(init: &SceneInit, mode: crate::compress::CompressionMode, reuse_threshold: u32) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            init.verify_checksum(),
+            "scene init failed checksum verification (corrupt on the wire)"
+        );
         let quantizer = crate::compress::FixedQuantizer::from_bytes(&init.quantizer)?;
         let codebook = crate::compress::Codebook::from_bytes(&init.codebook)?;
         Ok(Self {
@@ -303,7 +439,13 @@ impl ClientEndpoint {
             codec: DeltaCodec::new(mode, quantizer, codebook),
             bytes_received: 0,
             next_seq: 0,
+            verify_checksums: true,
         })
+    }
+
+    /// Toggle CRC verification (test hook; see the field docs).
+    pub fn set_verify_checksums(&mut self, on: bool) {
+        self.verify_checksums = on;
     }
 
     /// Sequence number of the next applicable delta.
@@ -320,7 +462,7 @@ impl ClientEndpoint {
         if ids.is_empty() {
             None
         } else {
-            Some(EvictNotice { ids })
+            Some(EvictNotice::new(self.next_seq, ids))
         }
     }
 
@@ -333,7 +475,15 @@ impl ClientEndpoint {
     /// is accepted (the gap is what the keyframe repairs), the store is
     /// reset, and the sequence resumes from the keyframe. The error
     /// converts into `anyhow::Error` at legacy `?` call sites.
+    ///
+    /// The CRC trailer is verified before everything else: a damaged
+    /// frame's seq/kind fields cannot be trusted, so corruption is
+    /// reported as [`ProtocolError::Corrupt`] rather than whatever
+    /// sequence violation the damaged header happens to spell.
     pub fn apply(&mut self, msg: &RoundMsg) -> Result<Vec<GaussianId>, ProtocolError> {
+        if self.verify_checksums && !msg.verify_checksum() {
+            return Err(ProtocolError::Corrupt { seq: msg.seq });
+        }
         match msg.kind {
             MsgKind::Delta => {
                 if msg.seq != self.next_seq {
@@ -593,7 +743,7 @@ mod tests {
             if let Some(notice) = client.take_evict_notice() {
                 saw_notice = true;
                 assert!(notice.wire_bytes() > 8);
-                cloud.apply_evict_notice(&notice);
+                cloud.apply_evict_notice(&notice).unwrap();
             }
             // Reconciliation restores the §4.3 consistency invariant
             // even though the client now evicts beyond the shared rule.
@@ -608,7 +758,7 @@ mod tests {
             let msg = cloud.publish_cut(&cut);
             client.apply(&msg).unwrap();
             if let Some(notice) = client.take_evict_notice() {
-                cloud.apply_evict_notice(&notice);
+                cloud.apply_evict_notice(&notice).unwrap();
             }
         }
         assert!(cloud.refetch_rounds > 0);
@@ -637,12 +787,12 @@ mod tests {
         client.store.set_budget(20 * BYTES_PER_GAUSSIAN as u64, EvictionPolicy::ScoreBased);
         client.apply(&cloud.publish_cut(&(0..40).collect::<Vec<u32>>())).unwrap();
         let notice = client.take_evict_notice().expect("cut of 40 must overflow budget of 20");
-        cloud.apply_evict_notice(&notice);
+        cloud.apply_evict_notice(&notice).unwrap();
         // Keyframe re-bases: earlier notices are moot, not refetch.
         let kf = cloud.publish_keyframe(&(0..40).collect::<Vec<u32>>());
         client.apply(&kf).unwrap();
         if let Some(n) = client.take_evict_notice() {
-            cloud.apply_evict_notice(&n);
+            cloud.apply_evict_notice(&n).unwrap();
         }
         assert_eq!(cloud.refetch_rounds, 0, "keyframe payload is not refetch");
         assert_eq!(cloud.table.resident_ids(), client.store.resident_ids());

@@ -4,7 +4,7 @@
 //! a fixed 5 ms one-way latency. Real last-mile wireless is not clean,
 //! and a reproduction that claims "VR streaming" must stay smooth when
 //! the link misbehaves. This module perturbs [`SimLink`]'s timing model
-//! with four fault families, each mapped to a §6 link assumption it
+//! with five fault families, each mapped to a §6 link assumption it
 //! relaxes:
 //!
 //! * **packet loss** ([`FaultPlan::loss_prob`]) — §6 assumes every round
@@ -22,7 +22,16 @@
 //! * **bandwidth dips** ([`FaultPlan::dip_factor`] during periodic dip
 //!   windows) — §6's 100 Mbps is the *peak* rate; inside a dip the
 //!   effective serialization rate drops to `dip_factor ×` nominal,
-//!   stretching delivery without dropping it.
+//!   stretching delivery without dropping it;
+//! * **silent corruption** ([`FaultPlan::corrupt_prob`]) — §6 assumes
+//!   every delivered frame is intact; real last-mile wireless flips
+//!   bits and truncates frames past the MAC-layer FCS. A corrupt
+//!   attempt is *delivered* ([`Transmit::Corrupted`]) carrying a seeded
+//!   [`Damage`] description the coordinator applies to the message
+//!   bytes — detection is the protocol layer's job (CRC framing in
+//!   `manage::protocol`), and recovery (NACK → retransmit →
+//!   quarantine after [`FaultPlan::quarantine_after`] damaged copies
+//!   of one seq) is the coordinator's.
 //!
 //! # Determinism discipline
 //!
@@ -47,6 +56,10 @@ use crate::util::prng::Prng;
 const MIX_SESSION: u64 = 0x9E37_79B9_7F4A_7C15;
 const MIX_SEQ: u64 = 0xD1B5_4A32_D192_ED03;
 const MIX_ATTEMPT: u64 = 0x2545_F491_4F6C_DD1D;
+/// Extra key salt for the corruption draws: they run off a *separate*
+/// generator so enabling corruption never re-orders (and thus never
+/// changes) the loss/jitter draws of the other families.
+const MIX_CORRUPT: u64 = 0xBF58_476D_1CE4_E5B9;
 
 /// A deterministic schedule of link misbehavior for one session.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -72,6 +85,13 @@ pub struct FaultPlan {
     pub dip_len_s: f64,
     /// Surviving bandwidth fraction inside a dip window, in (0, 1].
     pub dip_factor: f64,
+    /// Per-attempt probability a *surviving* attempt arrives damaged
+    /// (bit-flipped or truncated), in [0, 1].
+    pub corrupt_prob: f64,
+    /// Damaged copies of one seq tolerated before the coordinator
+    /// abandons the round and resyncs via keyframe (poison-message
+    /// bound; must be ≥ 1).
+    pub quarantine_after: u32,
     /// Retransmit attempts after the first loss (total sends ≤ 1 + limit).
     pub retry_limit: u32,
     /// Sender timeout before retry `a` is `backoff · 2^a` (s).
@@ -92,14 +112,16 @@ impl FaultPlan {
             dip_period_s: 0.0,
             dip_len_s: 0.0,
             dip_factor: 1.0,
+            corrupt_prob: 0.0,
+            quarantine_after: 3,
             retry_limit: 3,
             retry_backoff_s: 0.025,
         }
     }
 
-    /// Build a session's plan from the config knobs. The dip family has
-    /// no config keys (programmatic sweeps only, e.g. `bench_faults`),
-    /// so it starts disabled.
+    /// Build a session's plan from the config knobs (every family,
+    /// dips included, is config-drivable so the chaos harness can
+    /// compose all axes from one `NetConfig`).
     pub fn from_net(net: &crate::config::NetConfig, session_id: u64) -> Self {
         Self {
             seed: net.fault_seed,
@@ -109,9 +131,13 @@ impl FaultPlan {
             outage_start_s: net.outage_start_s,
             outage_period_s: net.outage_period_s,
             outage_len_s: net.outage_len_s,
+            dip_period_s: net.dip_period_s,
+            dip_len_s: net.dip_len_s,
+            dip_factor: net.dip_factor,
+            corrupt_prob: net.corrupt_prob,
+            quarantine_after: net.quarantine_after,
             retry_limit: net.retry_limit,
             retry_backoff_s: net.retry_backoff_ms * 1e-3,
-            ..Self::disabled()
         }
     }
 
@@ -122,6 +148,7 @@ impl FaultPlan {
             || self.jitter_s > 0.0
             || self.outage_len_s > 0.0
             || (self.dip_len_s > 0.0 && self.dip_factor < 1.0)
+            || self.corrupt_prob > 0.0
     }
 
     /// Whether simulation time `t` falls inside an outage window.
@@ -155,26 +182,86 @@ impl FaultPlan {
             ^ (attempt as u64 + 1).wrapping_mul(MIX_ATTEMPT);
         Prng::new(key)
     }
+
+    /// Separate generator for the corruption family (same key, salted
+    /// with [`MIX_CORRUPT`]): the corrupt gate + damage parameters never
+    /// consume draws from the loss/jitter stream, so turning corruption
+    /// on leaves every other family's outcomes bitwise unchanged.
+    fn corrupt_rng(&self, seq: u64, attempt: u32) -> Prng {
+        let key = self.seed
+            ^ self.session_id.wrapping_mul(MIX_SESSION)
+            ^ seq.wrapping_mul(MIX_SEQ)
+            ^ (attempt as u64 + 1).wrapping_mul(MIX_ATTEMPT)
+            ^ MIX_CORRUPT;
+        Prng::new(key)
+    }
+}
+
+/// Seeded description of how a delivered frame was damaged in flight.
+///
+/// The link does not know the victim message's length (it transmits a
+/// byte *count*), so positions are fractions of the eventual byte
+/// buffer; [`Damage::apply`] maps them onto concrete indices. Either
+/// variant always changes a non-empty buffer — a bit flip XORs one bit,
+/// a truncation strictly shrinks — so a CRC32 trailer always detects
+/// the damage (`corrupt_passed == 0` with checksums on).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Damage {
+    /// XOR bit `bit` of the byte at fraction `pos` ∈ [0, 1) of the buffer.
+    BitFlip { pos: f64, bit: u8 },
+    /// Truncate the buffer to fraction `keep` ∈ [0, 1) of its length
+    /// (always at least one byte shorter).
+    Truncate { keep: f64 },
+}
+
+impl Damage {
+    /// Apply the damage to a byte buffer. Empty buffers are returned
+    /// untouched — callers model header corruption separately (see
+    /// `coordinator`'s corrupt-delivery path).
+    pub fn apply(&self, bytes: &mut Vec<u8>) {
+        if bytes.is_empty() {
+            return;
+        }
+        match *self {
+            Damage::BitFlip { pos, bit } => {
+                let idx = ((bytes.len() as f64 * pos) as usize).min(bytes.len() - 1);
+                bytes[idx] ^= 1u8 << (bit & 7);
+            }
+            Damage::Truncate { keep } => {
+                let len = ((bytes.len() as f64 * keep) as usize).min(bytes.len() - 1);
+                bytes.truncate(len);
+            }
+        }
+    }
 }
 
 /// Exact per-link fault accounting (simulation-clock integers).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultStats {
-    /// Messages that reached the client (counting each message once).
+    /// Deliveries that reached the client (a corruption-NACKed seq is
+    /// delivered again on retransmit, so one message can count several
+    /// deliveries — each one arrived and burned airtime).
     pub delivered: u64,
     /// Individual attempts killed by loss or an outage window.
     pub lost: u64,
-    /// Attempts beyond the first, per message.
+    /// Attempts beyond the first, per transmit call.
     pub retransmits: u64,
     /// Messages abandoned after exhausting the retry budget.
     pub abandoned: u64,
+    /// Deliveries that arrived damaged ([`Transmit::Corrupted`]).
+    pub corrupted: u64,
 }
 
 /// Outcome of transmitting one message through a [`FaultyLink`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Transmit {
-    /// The message (eventually) arrived; `attempts` sends were charged.
+    /// The message (eventually) arrived intact; `attempts` sends were
+    /// charged.
     Delivered { arrival: f64, attempts: u32 },
+    /// The message arrived but was damaged in flight: the coordinator
+    /// applies `damage` to the delivered bytes, lets the protocol layer
+    /// detect it, and NACKs into the retransmit machinery.
+    Corrupted { arrival: f64, attempts: u32, damage: Damage },
     /// Every attempt in the retry budget was lost.
     Abandoned { attempts: u32 },
 }
@@ -196,9 +283,9 @@ impl FaultyLink {
         Self { inner, plan, stats: FaultStats::default() }
     }
 
-    /// One send attempt departing at `t`: returns the arrival time or
-    /// `None` if this attempt was lost.
-    fn attempt(&mut self, t: f64, bytes: u64, seq: u64, attempt: u32) -> Option<f64> {
+    /// One send attempt departing at `t`: returns the arrival time (and
+    /// any in-flight damage) or `None` if this attempt was lost.
+    fn attempt(&mut self, t: f64, bytes: u64, seq: u64, attempt: u32) -> Option<(f64, Option<Damage>)> {
         let mut rng = self.plan.draw_rng(seq, attempt);
         // Airtime is spent whether or not the packet survives.
         let mut arrival = self.inner.send(t, bytes);
@@ -216,7 +303,24 @@ impl FaultyLink {
         if self.plan.jitter_s > 0.0 {
             arrival += rng.f64() * self.plan.jitter_s;
         }
-        Some(arrival)
+        // Corruption draws come last and off a salted generator:
+        // corrupt_prob == 0 performs zero extra draws and perturbs
+        // nothing, keeping the pre-corruption fault schedules bitwise.
+        let damage = if self.plan.corrupt_prob > 0.0 {
+            let mut crng = self.plan.corrupt_rng(seq, attempt);
+            if crng.f64() < self.plan.corrupt_prob {
+                Some(if crng.f64() < 0.5 {
+                    Damage::BitFlip { pos: crng.f64(), bit: crng.below(8) as u8 }
+                } else {
+                    Damage::Truncate { keep: crng.f64() }
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        Some((arrival, damage))
     }
 
     /// Transmit message `seq` departing at `depart`, retransmitting lost
@@ -224,23 +328,39 @@ impl FaultyLink {
     /// budget runs out. With an inactive plan this is *exactly*
     /// `SimLink::send` — zero RNG draws, zero timing perturbation.
     pub fn transmit(&mut self, depart: f64, bytes: u64, seq: u64) -> Transmit {
+        self.transmit_from(depart, bytes, seq, 0)
+    }
+
+    /// [`transmit`](Self::transmit) resuming the per-message attempt
+    /// keys at `first_attempt` — the corruption-NACK path: a damaged
+    /// delivery of `seq` is retransmitted with a *fresh* loss-retry
+    /// budget but strictly advancing attempt keys, so the retransmit's
+    /// draws never replay the attempt that produced the damage (which
+    /// would livelock on the identical corruption).
+    pub fn transmit_from(&mut self, depart: f64, bytes: u64, seq: u64, first_attempt: u32) -> Transmit {
         if !self.plan.is_active() {
             self.stats.delivered += 1;
             return Transmit::Delivered { arrival: self.inner.send(depart, bytes), attempts: 1 };
         }
         let mut t = depart;
-        for attempt in 0..=self.plan.retry_limit {
-            if attempt > 0 {
+        for offset in 0..=self.plan.retry_limit {
+            if offset > 0 {
                 self.stats.retransmits += 1;
             }
-            if let Some(arrival) = self.attempt(t, bytes, seq, attempt) {
+            if let Some((arrival, damage)) = self.attempt(t, bytes, seq, first_attempt + offset) {
                 self.stats.delivered += 1;
-                return Transmit::Delivered { arrival, attempts: attempt + 1 };
+                return match damage {
+                    Some(damage) => {
+                        self.stats.corrupted += 1;
+                        Transmit::Corrupted { arrival, attempts: offset + 1, damage }
+                    }
+                    None => Transmit::Delivered { arrival, attempts: offset + 1 },
+                };
             }
             self.stats.lost += 1;
             // Sender timeout before the next attempt (shift capped so a
             // huge configured retry_limit cannot overflow).
-            t += self.plan.retry_backoff_s * (1u64 << attempt.min(16)) as f64;
+            t += self.plan.retry_backoff_s * (1u64 << offset.min(16)) as f64;
         }
         self.stats.abandoned += 1;
         Transmit::Abandoned { attempts: self.plan.retry_limit + 1 }
@@ -425,6 +545,129 @@ mod tests {
         let rate = l.stats.lost as f64 / n as f64;
         assert!((rate - 0.2).abs() < 0.02, "empirical loss {rate}");
         assert_eq!(l.stats.delivered + l.stats.abandoned, n);
+    }
+
+    #[test]
+    fn corruption_rate_roughly_matches_probability_and_is_deterministic() {
+        let plan =
+            FaultPlan { corrupt_prob: 0.3, seed: 17, retry_limit: 0, ..FaultPlan::disabled() };
+        assert!(plan.is_active(), "corruption alone must activate the plan");
+        let mut a = FaultyLink::new(link(), plan);
+        let mut b = FaultyLink::new(link(), plan);
+        let n = 5_000u64;
+        let mut corrupted = 0u64;
+        for seq in 0..n {
+            let ta = a.transmit(0.0, 1_000, seq);
+            let tb = b.transmit(0.0, 1_000, seq);
+            assert_eq!(ta, tb, "corruption outcome must be reproducible (seq {seq})");
+            if let Transmit::Corrupted { damage, .. } = ta {
+                corrupted += 1;
+                // Damage parameters stay in their documented domains.
+                match damage {
+                    Damage::BitFlip { pos, bit } => {
+                        assert!((0.0..1.0).contains(&pos));
+                        assert!(bit < 8);
+                    }
+                    Damage::Truncate { keep } => assert!((0.0..1.0).contains(&keep)),
+                }
+            }
+        }
+        let rate = corrupted as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "empirical corruption rate {rate}");
+        assert_eq!(a.stats.corrupted, corrupted);
+        assert_eq!(a.stats.delivered, n, "corrupted frames still count as deliveries");
+    }
+
+    #[test]
+    fn corruption_draws_never_perturb_other_families() {
+        // Same seed, loss + jitter on; enabling corruption must leave
+        // every arrival time and loss outcome bitwise identical — the
+        // corrupt gate runs off a salted, separate generator.
+        let base = FaultPlan {
+            loss_prob: 0.2,
+            jitter_s: 0.003,
+            seed: 29,
+            retry_limit: 2,
+            ..FaultPlan::disabled()
+        };
+        let with_corrupt = FaultPlan { corrupt_prob: 0.4, ..base };
+        let mut a = FaultyLink::new(link(), base);
+        let mut b = FaultyLink::new(link(), with_corrupt);
+        for seq in 0..128u64 {
+            let (ta, tb) = (a.transmit(0.0, 1_000, seq), b.transmit(0.0, 1_000, seq));
+            match (ta, tb) {
+                (
+                    Transmit::Delivered { arrival: wa, attempts: na },
+                    Transmit::Delivered { arrival: wb, attempts: nb }
+                    | Transmit::Corrupted { arrival: wb, attempts: nb, .. },
+                ) => {
+                    assert_eq!(wa, wb, "seq {seq}: corruption shifted an arrival");
+                    assert_eq!(na, nb, "seq {seq}: corruption changed the attempt count");
+                }
+                (Transmit::Abandoned { attempts: na }, Transmit::Abandoned { attempts: nb }) => {
+                    assert_eq!(na, nb);
+                }
+                (x, y) => panic!("seq {seq}: loss schedule diverged ({x:?} vs {y:?})"),
+            }
+            a.inner = link();
+            b.inner = link();
+        }
+        assert_eq!(a.stats.lost, b.stats.lost);
+        assert_eq!(a.stats.retransmits, b.stats.retransmits);
+        assert_eq!(a.stats.abandoned, b.stats.abandoned);
+    }
+
+    #[test]
+    fn damage_always_changes_a_nonempty_buffer() {
+        let mut rng = Prng::new(99);
+        for _ in 0..500 {
+            let len = 1 + rng.below(64);
+            let original: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let damage = if rng.f64() < 0.5 {
+                Damage::BitFlip { pos: rng.f64(), bit: rng.below(8) as u8 }
+            } else {
+                Damage::Truncate { keep: rng.f64() }
+            };
+            let mut damaged = original.clone();
+            damage.apply(&mut damaged);
+            assert_ne!(damaged, original, "{damage:?} left a {len}-byte buffer unchanged");
+            if let Damage::Truncate { .. } = damage {
+                assert!(damaged.len() < original.len());
+            }
+        }
+        // Empty buffers pass through untouched (caller handles those).
+        let mut empty: Vec<u8> = Vec::new();
+        Damage::BitFlip { pos: 0.5, bit: 3 }.apply(&mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn transmit_from_advances_attempt_keys() {
+        // The NACK-retransmit path: resuming at a later first_attempt
+        // must key fresh draws (never replay the damaging attempt) while
+        // an inactive plan keeps the zero-draw fast path.
+        let plan = FaultPlan { corrupt_prob: 1.0, seed: 5, ..FaultPlan::disabled() };
+        let mut l = FaultyLink::new(link(), plan);
+        let mut damages = Vec::new();
+        for first in 0..4u32 {
+            match l.transmit_from(0.0, 1_000, 7, first) {
+                Transmit::Corrupted { damage, attempts, .. } => {
+                    assert_eq!(attempts, 1);
+                    damages.push(damage);
+                }
+                other => panic!("corrupt_prob 1.0 must corrupt every delivery: {other:?}"),
+            }
+            l.inner = link();
+        }
+        assert!(
+            damages.windows(2).any(|w| w[0] != w[1]),
+            "attempt keys did not advance: identical damage every retransmit"
+        );
+        let mut inactive = FaultyLink::new(link(), FaultPlan::disabled());
+        assert!(matches!(
+            inactive.transmit_from(0.0, 1_000, 7, 3),
+            Transmit::Delivered { attempts: 1, .. }
+        ));
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod faults;
 pub mod video;
 
 pub use channel::SimLink;
-pub use faults::{FaultPlan, FaultStats, FaultyLink, Transmit};
+pub use faults::{Damage, FaultPlan, FaultStats, FaultyLink, Transmit};
 pub use video::{VideoCodec, VideoQuality};
 
 /// Wireless communication energy (paper §6: 100 nJ/B [63]).

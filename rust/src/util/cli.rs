@@ -21,8 +21,7 @@ impl Args {
             if let Some(body) = arg.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     out.options.insert(body.to_string(), v);
                 } else {
                     out.flags.push(body.to_string());
@@ -87,6 +86,17 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = args(&["--fast"]);
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_option_parses_both() {
+        // The value-consuming branch uses `next_if` (single atomic
+        // peek-and-take): a flag followed by another `--` token stays a
+        // flag, and the token sequence can never panic mid-parse.
+        let a = args(&["--fast", "--scene", "urban", "--quiet"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("scene"), Some("urban"));
+        assert!(a.flag("quiet"));
     }
 
     #[test]

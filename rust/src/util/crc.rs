@@ -1,0 +1,151 @@
+//! Zero-dependency CRC32 (IEEE 802.3, reflected polynomial
+//! `0xEDB88320`) for wire-message integrity framing.
+//!
+//! The protocol layer (`manage::protocol`) seals every message —
+//! [`SceneInit`](crate::manage::protocol::SceneInit),
+//! [`RoundMsg`](crate::manage::protocol::RoundMsg),
+//! [`EvictNotice`](crate::manage::EvictNotice) — with a CRC32 trailer
+//! computed over the fields a real encoder would serialize, and the
+//! receiving endpoint verifies it *before* decoding. A damaged frame
+//! then surfaces as a typed `ProtocolError::Corrupt` instead of
+//! silently poisoning the client's delta base (the gap `it_memory.rs`
+//! used to document as "a lucky flip can still decode").
+//!
+//! Table-driven, const-generated, pure integer arithmetic: no
+//! allocation, no floating point, nothing the determinism lint flags.
+//! The checksum of a message is a pure function of its contents, so it
+//! is bitwise identical across threads and runs by construction.
+
+/// Reflected IEEE 802.3 generator polynomial.
+const POLY: u32 = 0xEDB8_8320;
+
+/// 256-entry lookup table, generated at compile time.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Streaming CRC32 hasher. Feed fields in a fixed canonical order (the
+/// order a real serializer would emit them) and call [`finish`].
+///
+/// [`finish`]: Crc32::finish
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    /// Absorb a byte slice.
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state = TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+        self
+    }
+
+    /// Absorb one byte.
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.update(&[v])
+    }
+
+    /// Absorb a `u32` in little-endian byte order.
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.update(&v.to_le_bytes())
+    }
+
+    /// Absorb a `u64` in little-endian byte order.
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.update(&v.to_le_bytes())
+    }
+
+    /// Final checksum value (the hasher may keep absorbing afterwards;
+    /// `finish` is a pure read).
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_check_value() {
+        // The canonical CRC32 check value: CRC32("123456789").
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"nebula wire integrity";
+        let mut h = Crc32::new();
+        h.update(&data[..7]);
+        h.update(&data[7..]);
+        assert_eq!(h.finish(), crc32(data));
+    }
+
+    #[test]
+    fn field_helpers_match_serialized_bytes() {
+        let mut a = Crc32::new();
+        a.u8(0xAB).u32(0xDEAD_BEEF).u64(0x0123_4567_89AB_CDEF);
+        let mut bytes = vec![0xABu8];
+        bytes.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        bytes.extend_from_slice(&0x0123_4567_89AB_CDEFu64.to_le_bytes());
+        assert_eq!(a.finish(), crc32(&bytes));
+    }
+
+    #[test]
+    fn single_bit_flips_always_detected() {
+        // CRC32 detects every single-bit error — the guarantee the
+        // corruption fault family leans on for `corrupt_passed == 0`.
+        let data: Vec<u8> = (0u16..256).map(|i| (i * 7 + 3) as u8).collect();
+        let base = crc32(&data);
+        for i in 0..data.len() {
+            for bit in 0..8 {
+                let mut d = data.clone();
+                d[i] ^= 1u8 << bit;
+                assert_ne!(crc32(&d), base, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn truncations_detected() {
+        let data: Vec<u8> = (0u16..512).map(|i| (i ^ (i >> 3)) as u8).collect();
+        let base = crc32(&data);
+        for keep in 0..data.len() {
+            assert_ne!(crc32(&data[..keep]), base, "truncation to {keep} undetected");
+        }
+    }
+}

@@ -7,10 +7,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc;
 pub mod prng;
 pub mod prop;
 pub mod table;
 pub mod timer;
 
+pub use crc::Crc32;
 pub use prng::Prng;
 pub use timer::{StageTimer, Stopwatch};

@@ -1,0 +1,305 @@
+//! Integration: the composed chaos soak — every fault axis live at once
+//! (loss × corruption × outage × bandwidth dips × memory pressure ×
+//! disconnects × τ-degradation) over long multi-client runs. Pins the
+//! four wire-integrity guarantees:
+//!
+//! 1. zero-chaos runs reproduce the faultless baseline FIELD-FOR-FIELD
+//!    (checksums and quarantine knobs are wire-free when idle);
+//! 2. `corrupt_passed == 0` with checksums on — no damaged frame ever
+//!    applies silently;
+//! 3. every corrupted round recovers within the quarantine bound — a
+//!    poison link (corrupt_prob = 1.0) can never livelock a session;
+//! 4. chaos counters are bitwise identical across thread counts
+//!    (CI re-runs with `NEBULA_PARITY_THREADS=1,2,8`).
+
+use nebula::benchkit;
+use nebula::compress::{CompressionMode, DeltaCodec, FixedQuantizer, VqTrainer};
+use nebula::coordinator::scheduler::{run_simulation, SimParams};
+use nebula::coordinator::{
+    run_multiclient, Disconnect, FaultCounters, IntegrityCounters, ServerConfig, Variant,
+};
+use nebula::lod::TemporalSearch;
+use nebula::manage::protocol::{ClientEndpoint, CloudEndpoint, ProtocolError};
+use nebula::scene::{dataset, CityGen};
+
+fn setup() -> (nebula::lod::LodTree, Vec<nebula::math::Pose>, SimParams) {
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(25_000)).build();
+    let poses = benchkit::walk_trace(&spec, 96);
+    let mut params = SimParams::default();
+    params.pipeline = benchkit::calibrated_pipeline(&tree, &spec);
+    params.pipeline.res_scale = 16;
+    params.pipeline.threads = 1;
+    (tree, poses, params)
+}
+
+/// Thread counts for the chaos-counter invariance sweep (mirrors
+/// `it_faults.rs`; CI re-runs with `NEBULA_PARITY_THREADS=1,2,8`).
+fn parity_threads() -> Vec<usize> {
+    std::env::var("NEBULA_PARITY_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4, 8])
+}
+
+/// The full chaos mix: every fault axis active at once, windows chosen
+/// to provably intersect a 90 fps trace.
+fn chaos_net(params: &SimParams) -> SimParams {
+    let mut p = *params;
+    p.net.fault_seed = 23;
+    p.net.loss_prob = 0.05;
+    p.net.jitter_ms = 2.0;
+    p.net.outage_start_s = 0.1;
+    p.net.outage_period_s = 2.0;
+    p.net.outage_len_s = 0.15;
+    p.net.dip_period_s = 0.4;
+    p.net.dip_len_s = 0.1;
+    p.net.dip_factor = 0.35;
+    p.net.corrupt_prob = 0.3;
+    p.net.quarantine_after = 2;
+    p
+}
+
+#[test]
+fn zero_chaos_reproduces_baseline_field_for_field() {
+    // The acceptance gate: with corruption probability zero and dips
+    // inactive, neither the CRC trailers (wire-free by construction:
+    // they ride inside the already-charged header bytes), nor a nonzero
+    // seed, nor a changed quarantine budget may perturb a single field
+    // of the result. Exact equality, not tolerance.
+    let (tree, poses, params) = setup();
+    let baseline = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    assert_eq!(
+        baseline.integrity,
+        IntegrityCounters::default(),
+        "a clean link must report all-zero integrity counters"
+    );
+
+    let mut zeroed = params;
+    zeroed.net.fault_seed = 0xDEAD_BEEF;
+    zeroed.net.quarantine_after = 7;
+    zeroed.net.dip_factor = 1.0; // a factor of 1.0 is a no-op dip
+    zeroed.net.retry_limit = 9;
+    let got = run_simulation(&tree, &poses, &Variant::nebula(), &zeroed);
+    assert_eq!(got, baseline, "idle integrity machinery diverged from the faultless run");
+
+    // Same guarantee for the multi-client server.
+    let spec = dataset("urban").unwrap();
+    let traces = benchkit::walk_traces(&spec, 36, 2);
+    let clean =
+        run_multiclient(&tree, &traces, &Variant::nebula(), &params, &ServerConfig::default());
+    let seeded =
+        run_multiclient(&tree, &traces, &Variant::nebula(), &zeroed, &ServerConfig::default());
+    assert_eq!(seeded, clean, "zero-chaos multi-client run diverged");
+    assert_eq!(clean.integrity, IntegrityCounters::default());
+}
+
+#[test]
+fn corruption_only_link_detects_nacks_and_recovers() {
+    // Corruption alone (no loss, no outage): every damaged delivery is
+    // caught by the checksum, NACKed at the modeled 16-byte cost, and
+    // recovered by a pristine retransmit — the frame loop never stops
+    // and nothing applies silently.
+    let (tree, poses, params) = setup();
+    let clean = run_simulation(&tree, &poses, &Variant::nebula(), &params);
+    let mut p = params;
+    p.net.fault_seed = 17;
+    p.net.corrupt_prob = 0.5;
+    p.net.quarantine_after = 3;
+    let r = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+
+    assert!(r.integrity.corrupt_detected > 0, "seeded corruption produced no damage");
+    assert_eq!(r.integrity.corrupt_passed, 0, "a damaged frame slipped past the checksum");
+    assert_eq!(
+        r.integrity.nack_bytes,
+        r.integrity.corrupt_detected * 16,
+        "every detection NACKs exactly one 16-byte frame"
+    );
+    // Detection loses nothing: the client keeps producing frames and the
+    // staleness/recovery accounting stays finite and bounded.
+    assert_eq!(r.frames, clean.frames, "corruption must not change the frame count");
+    assert!(r.fps > 0.0 && r.mtp_p99_ms.is_finite());
+    assert!(r.faults.staleness_mean_frames.is_finite());
+    assert!(r.faults.recovery_frames_max <= poses.len() as u64);
+    // Corruption staleness dominates the clean run's (retransmits delay
+    // round application, never accelerate it).
+    assert!(r.faults.staleness_mean_frames >= clean.faults.staleness_mean_frames);
+}
+
+#[test]
+fn poison_link_quarantines_within_bound_and_never_livelocks() {
+    // The worst case: EVERY delivery is damaged (corrupt_prob = 1.0).
+    // Each poisoned round must be quarantined after exactly
+    // `quarantine_after` damaged copies — the NACK loop is provably
+    // bounded — and the session keeps rendering its last good cut
+    // (round 0 prefetches off the link) to the end of the trace.
+    let (tree, poses, params) = setup();
+    let mut p = params;
+    p.net.fault_seed = 5;
+    p.net.corrupt_prob = 1.0;
+    p.net.quarantine_after = 2;
+    let q = p.net.quarantine_after as u64;
+    let r = run_simulation(&tree, &poses, &Variant::nebula(), &p);
+
+    // The run completed — no livelock, no panic — and nothing applied.
+    assert_eq!(r.frames as usize, poses.len());
+    assert!(r.fps > 0.0 && r.mtp_p99_ms.is_finite());
+    assert_eq!(r.integrity.corrupt_passed, 0);
+    assert!(r.integrity.quarantined_rounds > 0, "a poison link must quarantine rounds");
+
+    // The quarantine bound, pinned exactly: every quarantined round took
+    // exactly `q` damaged copies, and at most one round can still be
+    // mid-NACK when the trace ends.
+    assert!(r.integrity.corrupt_detected >= r.integrity.quarantined_rounds * q);
+    assert!(r.integrity.corrupt_detected <= (r.integrity.quarantined_rounds + 1) * q);
+    assert_eq!(r.integrity.nack_bytes, r.integrity.corrupt_detected * 16);
+
+    // Every quarantine is a stall (the delta base is gone) and re-bases
+    // the stream through the keyframe-resync path.
+    assert!(r.faults.stalls >= r.integrity.quarantined_rounds);
+    assert!(r.faults.resyncs > 0, "quarantined rounds must trigger keyframe resyncs");
+    assert!(r.faults.staleness_mean_frames.is_finite());
+}
+
+#[test]
+fn chaos_soak_all_axes_composed_and_thread_invariant() {
+    // The composed soak: loss + jitter + outages + bandwidth dips +
+    // corruption + a hard client memory budget + a mid-run disconnect +
+    // server-side admission control and τ-degradation, all live at once
+    // across 3 clients. The run must complete with finite accounting,
+    // zero silent corruption, and per-client results AND aggregated
+    // chaos counters bitwise identical at every thread count.
+    let (tree, _, mut params) = setup();
+    let spec = dataset("urban").unwrap();
+    let traces = benchkit::walk_traces(&spec, 48, 3);
+    params = chaos_net(&params);
+    params.pipeline.client_mem_mb = 0.08; // hard budget: forces evictions
+    let server = ServerConfig {
+        cloud_budget: 0.25,
+        uplink_bps: 200e6,
+        max_cloud_lag_s: 0.05,
+        degrade_lag_s: 0.02,
+        disconnects: vec![Disconnect { session: 1, from_frame: 12, to_frame: 24 }],
+    };
+
+    params.pipeline.threads = 1;
+    let reference = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+
+    // No panic (we got here), every client ran the full trace, and the
+    // counters are finite and consistent.
+    for (i, c) in reference.per_client.iter().enumerate() {
+        assert_eq!(c.frames, 48, "client {i} did not finish its trace");
+        assert!(c.fps > 0.0 && c.mtp_p99_ms.is_finite(), "client {i} accounting broke");
+        assert!(c.faults.staleness_mean_frames.is_finite());
+        assert!(c.faults.recovery_frames_max <= 48, "client {i} recovery span unbounded");
+    }
+    assert_ne!(reference.faults, FaultCounters::default(), "chaos produced no faults at all");
+    assert!(reference.faults.lost_msgs > 0, "outage produced no losses");
+    assert!(reference.integrity.corrupt_detected > 0, "corruption axis never fired");
+    assert_eq!(reference.integrity.corrupt_passed, 0, "silent corruption in the soak");
+    assert_eq!(reference.faults.disconnected_frames, 12);
+    assert_eq!(
+        reference.integrity.nack_bytes,
+        reference.integrity.corrupt_detected * 16
+    );
+
+    // Bitwise thread invariance of the whole composed run.
+    for t in parity_threads() {
+        params.pipeline.threads = t;
+        let got = run_multiclient(&tree, &traces, &Variant::nebula(), &params, &server);
+        assert_eq!(
+            got.per_client, reference.per_client,
+            "per-client chaos results diverged at {t} threads"
+        );
+        assert_eq!(got.faults, reference.faults, "fault counters diverged at {t} threads");
+        assert_eq!(got.mem, reference.mem, "mem counters diverged at {t} threads");
+        assert_eq!(
+            got.integrity, reference.integrity,
+            "integrity counters diverged at {t} threads"
+        );
+        assert_eq!(got.cloud_utilization, reference.cloud_utilization);
+        assert_eq!(got.uplink_utilization, reference.uplink_utilization);
+    }
+}
+
+fn endpoints(tree: &nebula::lod::LodTree, reuse: u32) -> (CloudEndpoint<'_>, ClientEndpoint) {
+    let (lo, hi) = tree.gaussians.bounds();
+    let codec = DeltaCodec::new(
+        CompressionMode::Quantized,
+        FixedQuantizer::for_bounds(lo, hi),
+        VqTrainer { max_samples: 3000, ..Default::default() }.train(&tree.gaussians.sh),
+    );
+    let cloud = CloudEndpoint::new(tree, codec, reuse);
+    let client =
+        ClientEndpoint::from_init(&cloud.scene_init(), CompressionMode::Quantized, reuse).unwrap();
+    (cloud, client)
+}
+
+#[test]
+fn post_chaos_cut_matches_never_faulted_peer() {
+    // Endpoint-level composition of every protocol-visible fault shape:
+    // a client whose stream suffered repeated corruption (through the
+    // full quarantine budget), a duplicate, and a stale retransmit, then
+    // recovered via keyframe, must end up with EXACTLY the cut and
+    // render working set of a peer that never saw a fault.
+    let spec = dataset("urban").unwrap();
+    let tree = CityGen::new(spec.city_params(20_000)).build();
+    let pl = benchkit::calibrated_pipeline(&tree, &spec);
+    let (mut cloud_f, mut faulted) = endpoints(&tree, pl.reuse_threshold);
+    let (mut cloud_c, mut clean) = endpoints(&tree, pl.reuse_threshold);
+    let mut search = TemporalSearch::for_tree(&tree);
+    let poses = benchkit::walk_trace(&spec, 32);
+    let cuts: Vec<Vec<_>> = poses
+        .iter()
+        .step_by(pl.lod_interval as usize)
+        .map(|pose| search.search(&tree, &benchkit::query_at(pose, &pl)).nodes)
+        .collect();
+    assert!(cuts.len() >= 6);
+
+    // Clean path: every round delivered pristine.
+    for cut in &cuts[..4] {
+        clean.apply(&cloud_c.publish_cut(cut)).unwrap();
+    }
+
+    // Chaotic path: round 0 lands; round 1 is delivered damaged three
+    // times (a poison round — every NACK retransmit re-damaged), so the
+    // coordinator quarantines it; round 2 is published but lost; the
+    // cloud re-bases with a keyframe at round 3.
+    faulted.apply(&cloud_f.publish_cut(&cuts[0])).unwrap();
+    let cut_before = faulted.store.cut_ids();
+    let poison = cloud_f.publish_cut(&cuts[1]);
+    for flip in [0x01u8, 0x10, 0x80] {
+        let mut damaged = poison.clone();
+        if damaged.payload.bytes.is_empty() {
+            damaged.checksum = !damaged.checksum;
+        } else {
+            damaged.payload.bytes[0] ^= flip;
+        }
+        assert!(
+            matches!(faulted.apply(&damaged), Err(ProtocolError::Corrupt { .. })),
+            "every damaged copy must be caught"
+        );
+    }
+    // Round 2 is published but lost in flight; its late successor shows
+    // up as a sequence gap — rejected, store still untouched.
+    assert!(matches!(faulted.apply(&cloud_f.publish_cut(&cuts[2])), Err(ProtocolError::Gap { .. })));
+    assert_eq!(faulted.store.cut_ids(), cut_before, "rejected rounds must not touch the store");
+
+    let kf = cloud_f.publish_keyframe(&cuts[3]);
+    faulted.apply(&kf).unwrap();
+
+    // Post-recovery: identical cut and render working set.
+    assert_eq!(faulted.store.cut_ids(), clean.store.cut_ids());
+    assert_eq!(faulted.store.cut_ids(), cuts[3]);
+    let ids =
+        |c: &ClientEndpoint| c.store.render_queue().iter().map(|(id, _)| *id).collect::<Vec<_>>();
+    assert_eq!(ids(&faulted), ids(&clean));
+
+    // And the delta stream continues consistently from the keyframe base.
+    for cut in &cuts[4..6] {
+        faulted.apply(&cloud_f.publish_cut(cut)).unwrap();
+        clean.apply(&cloud_c.publish_cut(cut)).unwrap();
+        assert_eq!(faulted.store.cut_ids(), clean.store.cut_ids());
+    }
+}

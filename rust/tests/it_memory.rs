@@ -173,7 +173,7 @@ fn byte_budget_is_a_hard_invariant_over_random_rounds() {
                 policy.label()
             );
             if let Some(notice) = client.take_evict_notice() {
-                cloud.apply_evict_notice(&notice);
+                cloud.apply_evict_notice(&notice).unwrap();
             }
             assert_eq!(
                 cloud.table.resident_ids(),
@@ -206,9 +206,14 @@ fn capacity_starved_run_completes_with_counters() {
 
 #[test]
 fn malformed_payloads_yield_typed_errors_and_leave_store_untouched() {
-    // Property: truncations and bit flips of the wire payload must
-    // surface as `ProtocolError::Decode` (never a panic or abort), and a
-    // rejected message must leave the endpoint exactly as it was.
+    // Property: ANY wire damage to a sealed round message — payload
+    // truncation, payload bit flips, id-list bit flips, header (seq)
+    // damage, or an inflated payload length field — surfaces as
+    // `ProtocolError::Corrupt` (the CRC trailer is verified before the
+    // decode ever runs), never a panic or a huge allocation, and the
+    // rejected message leaves the endpoint exactly as it was. The old
+    // "a lucky flip can still decode" caveat is retired: detection is
+    // unconditional with checksums on.
     let tree = CityGen::new(CityParams::for_target(1200, 80.0, 31)).build();
     check("malformed payloads", Config { cases: 48, ..Config::default() }, |rng| {
         let (mut cloud, mut client) = endpoint_pair(&tree);
@@ -216,17 +221,32 @@ fn malformed_payloads_yield_typed_errors_and_leave_store_untouched() {
         client.apply(&cloud.publish_cut(&cut)).unwrap();
         let cut2: Vec<u32> = (40..180).collect();
         let mut msg = cloud.publish_cut(&cut2);
+        let pristine = msg.clone();
 
-        // Corrupt the payload: truncate to a random prefix, or flip a
-        // random bit (which may hit the frame header, the claimed count,
-        // or the body).
-        let truncate = rng.chance(0.5);
-        if truncate && !msg.payload.bytes.is_empty() {
-            let keep = rng.below(msg.payload.bytes.len());
-            msg.payload.bytes.truncate(keep);
-        } else if !msg.payload.bytes.is_empty() {
-            let i = rng.below(msg.payload.bytes.len());
-            msg.payload.bytes[i] ^= 1u8 << rng.below(8);
+        match rng.below(5) {
+            0 => {
+                // Truncate the payload to a random prefix.
+                let keep = rng.below(msg.payload.bytes.len());
+                msg.payload.bytes.truncate(keep);
+            }
+            1 => {
+                // Flip a random payload bit.
+                let i = rng.below(msg.payload.bytes.len());
+                msg.payload.bytes[i] ^= 1u8 << rng.below(8);
+            }
+            2 => {
+                // Flip a random bit in the added-id list.
+                let i = rng.below(msg.added.len());
+                msg.added[i] ^= 1u32 << rng.below(32);
+            }
+            3 => {
+                // Header damage: the sequence number itself.
+                msg.seq ^= 1u64 << rng.below(64);
+            }
+            _ => {
+                // Length-field inflate: claim a giant Gaussian count.
+                msg.payload.count += 1 << 30;
+            }
         }
 
         let resident_before = client.store.resident_ids();
@@ -234,25 +254,118 @@ fn malformed_payloads_yield_typed_errors_and_leave_store_untouched() {
         let bytes_before = client.bytes_received;
         let seq_before = client.expected_seq();
         match client.apply(&msg) {
-            Err(ProtocolError::Decode { seq, .. }) => {
+            Err(ProtocolError::Corrupt { seq }) => {
                 // The typed rejection path: nothing may have changed.
-                assert_eq!(seq, msg.seq);
+                assert_eq!(seq, msg.seq, "Corrupt reports the damaged frame's seq field");
                 assert_eq!(client.store.resident_ids(), resident_before);
                 assert_eq!(client.store.cut_ids(), cut_before);
                 assert_eq!(client.bytes_received, bytes_before);
                 assert_eq!(client.expected_seq(), seq_before);
             }
-            Err(e) => panic!("corruption surfaced as a non-Decode error: {e}"),
-            Ok(_) => {
-                // A lucky flip can still decode (no checksum is modeled)
-                // — acceptable as long as it applied cleanly; membership
-                // bookkeeping is id-list driven and must have advanced.
-                // Truncation, however, always shrinks the frame body and
-                // must never decode.
-                assert!(!truncate, "truncated frame decoded successfully");
-                assert_eq!(client.expected_seq(), seq_before + 1);
-                assert_eq!(client.store.cut_ids(), cut2);
-            }
+            Err(e) => panic!("wire damage surfaced as a non-Corrupt error: {e}"),
+            Ok(_) => panic!("wire damage slipped past the checksum"),
         }
+
+        // The pristine retransmit (the coordinator's NACK path) still
+        // applies — detection loses nothing.
+        client.apply(&pristine).unwrap();
+        assert_eq!(client.store.cut_ids(), cut2);
+        assert_eq!(client.expected_seq(), seq_before + 1);
+    });
+}
+
+#[test]
+fn disabling_verification_reenables_silent_poisoning() {
+    // Negative control for the integrity layer (and the reason it
+    // exists). With CRC verification off:
+    // * an inflated length field falls through to the codec's
+    //   bounded-alloc guard — a typed Decode error naming the claim,
+    //   never an OOM-sized allocation;
+    // * truncation still fails the decode;
+    // * but a flipped id-list bit applies CLEANLY, silently poisoning
+    //   the client cut — exactly the `corrupt_passed` event the
+    //   checksum makes impossible.
+    let tree = CityGen::new(CityParams::for_target(1200, 80.0, 37)).build();
+    let (mut cloud, mut client) = endpoint_pair(&tree);
+    client.set_verify_checksums(false);
+    let cut: Vec<u32> = (0..120).collect();
+    client.apply(&cloud.publish_cut(&cut)).unwrap();
+    let msg = cloud.publish_cut(&(40..180).collect::<Vec<u32>>());
+
+    let mut inflated = msg.clone();
+    inflated.payload.count += 1 << 30;
+    match client.apply(&inflated) {
+        Err(ProtocolError::Decode { reason, .. }) => {
+            assert!(reason.contains("exceeds payload"), "unexpected reason: {reason}");
+        }
+        other => panic!("inflated count must fail decode, got {other:?}"),
+    }
+
+    let mut truncated = msg.clone();
+    let keep = truncated.payload.bytes.len() / 2;
+    truncated.payload.bytes.truncate(keep);
+    assert!(
+        matches!(client.apply(&truncated), Err(ProtocolError::Decode { .. })),
+        "a truncated body must never decode"
+    );
+
+    // Failed applies leave next_seq untouched, so the same seq is still
+    // applicable: flip one high bit of an added id and watch it land.
+    let mut poisoned = msg.clone();
+    let phantom = poisoned.added[0] ^ (1 << 20);
+    poisoned.added[0] = phantom;
+    client.apply(&poisoned).expect("unverified damage applies cleanly");
+    assert!(
+        client.store.cut_ids().contains(&phantom),
+        "the phantom id must have poisoned the client cut"
+    );
+
+    // The same damage with verification on (the default) is caught.
+    let (mut cloud2, mut client2) = endpoint_pair(&tree);
+    client2.apply(&cloud2.publish_cut(&cut)).unwrap();
+    let mut msg2 = cloud2.publish_cut(&(40..180).collect::<Vec<u32>>());
+    msg2.added[0] ^= 1 << 20;
+    assert!(matches!(client2.apply(&msg2), Err(ProtocolError::Corrupt { .. })));
+}
+
+#[test]
+fn scene_init_and_evict_notice_reject_wire_damage() {
+    // The other two wire message types get the same structure-aware
+    // fuzz: a damaged SceneInit must fail `from_init` (no client is
+    // built on corrupt codec state), and a damaged EvictNotice must be
+    // rejected with the cloud table untouched.
+    let tree = CityGen::new(CityParams::for_target(1200, 80.0, 41)).build();
+    check("init/notice damage", Config { cases: 32, ..Config::default() }, |rng| {
+        let (mut cloud, mut client) = endpoint_pair(&tree);
+
+        // --- SceneInit: bit-flip or truncate quantizer/codebook bytes.
+        let mut init = cloud.scene_init();
+        let field: &mut Vec<u8> =
+            if rng.chance(0.5) { &mut init.quantizer } else { &mut init.codebook };
+        if rng.chance(0.5) && field.len() > 1 {
+            let keep = rng.below(field.len());
+            field.truncate(keep);
+        } else {
+            let i = rng.below(field.len());
+            field[i] ^= 1u8 << rng.below(8);
+        }
+        assert!(
+            ClientEndpoint::from_init(&init, CompressionMode::Quantized, 8).is_err(),
+            "a damaged scene install must be rejected"
+        );
+
+        // --- EvictNotice: flip an id after sealing.
+        let cut: Vec<u32> = (0..100).collect();
+        client.apply(&cloud.publish_cut(&cut)).unwrap();
+        let ids: Vec<u32> = (0..8).map(|_| rng.below(100) as u32).collect();
+        let mut notice = nebula::manage::protocol::EvictNotice::new(client.expected_seq(), ids);
+        let i = rng.below(notice.ids.len());
+        notice.ids[i] ^= 1u32 << rng.below(32);
+        let table_before = cloud.table.resident_ids();
+        assert!(
+            matches!(cloud.apply_evict_notice(&notice), Err(ProtocolError::Corrupt { .. })),
+            "a damaged notice must be rejected"
+        );
+        assert_eq!(cloud.table.resident_ids(), table_before, "table untouched on rejection");
     });
 }
