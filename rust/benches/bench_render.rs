@@ -8,9 +8,15 @@
 //! across PRs. Also reports: the quad-lane core vs the scalar reference
 //! core (`"raster"`, single-worker core-vs-core), per-frame
 //! load-imbalance metrics (`"imbalance"`: max/mean tile-list lengths;
-//! per-row steal counts ride the sweep rows), and a skewed-list scene
+//! per-row steal counts ride the sweep rows), a skewed-list scene
 //! comparing round-robin against work-stealing dispatch (`"skewed"`:
-//! ms, stealing speedup, per-scheduler Amdahl serial fraction).
+//! ms, stealing speedup, per-scheduler Amdahl serial fraction), the
+//! pooled-dispatch observability block (`"pool"`: spawn-vs-pool
+//! microbenchmark plus queue wait / worker occupancy / submissions from
+//! `render::pool`, echoed per stage inside `"stages"`), and the
+//! cross-stage pipelining block (`"pipeline"`: whole-trace wall ms at
+//! `pipeline.depth` 1 vs 2, overlap ratio, recomputed Amdahl serial
+//! fraction for the two-stage overlap).
 //!
 //!     cargo bench --bench bench_render [-- --smoke]
 //!
@@ -18,16 +24,22 @@
 //! configuration — fast enough for every push, still executing every
 //! stage and parity assertion so breakage can't hide behind a skipped
 //! bench — and it asserts the quad-lane core is not slower than the
-//! scalar reference on the smoke scene.
+//! scalar reference, and pooled dispatch not slower than the retained
+//! scoped-spawn reference, on the smoke scene.
 //!
 //! Env knobs: `NEBULA_BENCH_SCALE` (scene divisor, default 8),
 //! `NEBULA_BENCH_SAMPLES` / `NEBULA_BENCH_WARMUP` (timing loop),
 //! `NEBULA_BENCH_OUT` (output path, default `BENCH_render.json`).
 
 use nebula::benchkit;
+use nebula::coordinator::{run_simulation, SimParams, Variant};
 use nebula::lod::LodSearch;
 use nebula::math::{Intrinsics, StereoCamera};
-use nebula::render::engine::{Parallelism, RowSchedule};
+use nebula::render::engine::{
+    parallel_map, parallel_map_spawn_reference, parallel_map_stealing,
+    parallel_map_stealing_spawn_reference, Parallelism, RowSchedule,
+};
+use nebula::render::pool;
 use nebula::render::raster::{render_bins, render_bins_reference, RasterConfig};
 use nebula::render::stereo::{render_stereo, render_stereo_from_splats, StereoMode};
 use nebula::render::{preprocess_records, ProjectedSet, TileBins};
@@ -324,6 +336,11 @@ fn main() {
         raster_ms: f64,
         steals_left: u64,
         steals_right: u64,
+        /// Pool dispatch telemetry per engine phase (queue wait,
+        /// occupancy, submissions) — all-zero on the serial rows.
+        pool_left: pool::DispatchStats,
+        pool_sru: pool::DispatchStats,
+        pool_right: pool::DispatchStats,
     }
     let median = |xs: &mut Vec<f64>| -> f64 {
         xs.sort_by(f64::total_cmp);
@@ -348,6 +365,11 @@ fn main() {
             Vec::new(),
         );
         let (mut steals_left, mut steals_right) = (0u64, 0u64);
+        let (mut pool_left, mut pool_sru, mut pool_right) = (
+            pool::DispatchStats::default(),
+            pool::DispatchStats::default(),
+            pool::DispatchStats::default(),
+        );
         for i in 0..n_samples + n_warmup {
             let out = render_stereo(&cam, &refs, 3, tile, &c, StereoMode::AlphaGated);
             let t = Stopwatch::start();
@@ -364,6 +386,9 @@ fn main() {
             rgt.push(out.stages.right * 1e3);
             steals_left = out.stages.steals_left;
             steals_right = out.stages.steals_right;
+            pool_left = out.stages.pool_left;
+            pool_sru = out.stages.pool_sru;
+            pool_right = out.stages.pool_right;
         }
         let (pre_ms, sort_ms, bin_ms, left_ms, sru_ms, right_ms, validate_ms) = (
             median(&mut pre),
@@ -409,8 +434,102 @@ fn main() {
             raster_ms: left_ms + right_ms,
             steals_left,
             steals_right,
+            pool_left,
+            pool_sru,
+            pool_right,
         });
     }
+
+    // --- Pooled dispatch vs scoped-spawn reference ----------------------
+    // Same items, same worker, same thread count: the delta is pure
+    // dispatch overhead (ticket open/close + worker span reporting vs
+    // the retained pre-pool scoped-spawn bodies). Parity is asserted
+    // first, so the timing claim can never drift from the correctness
+    // claim.
+    let disp_items: Vec<u64> = (0..4096u64).collect();
+    let disp_costs: Vec<u64> = disp_items.iter().map(|&i| 1 + i % 31).collect();
+    let disp_work = |_: usize, v: u64| {
+        let mut acc = v;
+        for round in 0..64u64 {
+            acc = acc.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(13) ^ round;
+        }
+        acc
+    };
+    let disp_par = Parallelism::Threads(4);
+    assert_eq!(
+        parallel_map(disp_items.clone(), disp_par, disp_work),
+        parallel_map_spawn_reference(disp_items.clone(), disp_par, disp_work),
+        "PARITY VIOLATION: pooled map differs from spawn reference"
+    );
+    assert_eq!(
+        parallel_map_stealing(disp_items.clone(), &disp_costs, disp_par, disp_work).0,
+        parallel_map_stealing_spawn_reference(disp_items.clone(), &disp_costs, disp_par, disp_work)
+            .0,
+        "PARITY VIOLATION: pooled stealing differs from spawn reference"
+    );
+    let pool_map_ms = best_of(reps, &|| {
+        parallel_map(disp_items.clone(), disp_par, disp_work);
+    });
+    // Harvest the telemetry of the last pooled dispatch this thread ran.
+    let disp_stats = pool::last_dispatch();
+    let spawn_map_ms = best_of(reps, &|| {
+        parallel_map_spawn_reference(disp_items.clone(), disp_par, disp_work);
+    });
+    let pool_steal_ms = best_of(reps, &|| {
+        parallel_map_stealing(disp_items.clone(), &disp_costs, disp_par, disp_work);
+    });
+    let spawn_steal_ms = best_of(reps, &|| {
+        parallel_map_stealing_spawn_reference(disp_items.clone(), &disp_costs, disp_par, disp_work);
+    });
+    println!(
+        "  dispatch t4: pooled map {pool_map_ms:.3} ms vs spawn {spawn_map_ms:.3} ms; \
+         stealing {pool_steal_ms:.3} ms vs spawn {spawn_steal_ms:.3} ms \
+         (occupancy {:.2}, queue wait {:.3} ms, {} submissions)",
+        disp_stats.occupancy,
+        disp_stats.queue_wait_s * 1e3,
+        disp_stats.submissions
+    );
+    if smoke {
+        // Same 25% best-of-7 margin as the quad canary: pooled dispatch
+        // must not cost measurably more than the spawn bodies it
+        // replaced.
+        assert!(
+            pool_map_ms <= spawn_map_ms * 1.25,
+            "CANARY: pooled dispatch slower than scoped spawn \
+             ({pool_map_ms:.3} ms vs {spawn_map_ms:.3} ms)"
+        );
+    }
+
+    // --- Cross-stage frame pipelining (depth 1 vs 2) --------------------
+    // Whole-trace wall clock through the real scheduler: depth 2
+    // overlaps each LoD round with its own frame's render on a second
+    // thread. Outputs are pinned field-for-field by `tests/
+    // it_pipeline.rs`; the cheap whole-struct check here keeps the
+    // timing claim honest, so the delta is pure overlap.
+    let pipe_frames = if smoke { 6 } else { 12 };
+    let pipe_poses = PoseTrace::new(TraceParams::default(), extent).generate(pipe_frames);
+    let pipe_params = |depth: u32| {
+        let mut p = SimParams::default();
+        p.pipeline.res_scale = 16;
+        p.pipeline.threads = 2;
+        p.pipeline.depth = depth;
+        p
+    };
+    let seq_out = run_simulation(&tree, &pipe_poses, &Variant::nebula(), &pipe_params(1));
+    let pipe_out = run_simulation(&tree, &pipe_poses, &Variant::nebula(), &pipe_params(2));
+    assert_eq!(seq_out, pipe_out, "PARITY VIOLATION: pipelined run differs from sequential");
+    let depth1_ms = best_of(reps, &|| {
+        run_simulation(&tree, &pipe_poses, &Variant::nebula(), &pipe_params(1));
+    });
+    let depth2_ms = best_of(reps, &|| {
+        run_simulation(&tree, &pipe_poses, &Variant::nebula(), &pipe_params(2));
+    });
+    let overlap_ratio = if depth2_ms > 0.0 { depth1_ms / depth2_ms } else { 1.0 };
+    let pipe_serial_fraction = amdahl(depth1_ms, depth2_ms, 2);
+    println!(
+        "  pipeline ({pipe_frames} frames, 2 threads): depth1 {depth1_ms:.2} ms, \
+         depth2 {depth2_ms:.2} ms ({overlap_ratio:.2}x, serial frac {pipe_serial_fraction:.2})"
+    );
 
     let speedup_of = |mode: &str, threads: usize| {
         rows.iter()
@@ -460,6 +579,16 @@ fn main() {
         ));
     }
     j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"pool\": {{\"threads\": 4, \"items\": {}, \"map_pool_ms\": {pool_map_ms:.4}, \"map_spawn_ms\": {spawn_map_ms:.4}, \"stealing_pool_ms\": {pool_steal_ms:.4}, \"stealing_spawn_ms\": {spawn_steal_ms:.4}, \"queue_wait_ms\": {:.4}, \"occupancy\": {:.4}, \"submissions\": {}}},\n",
+        disp_items.len(),
+        disp_stats.queue_wait_s * 1e3,
+        disp_stats.occupancy,
+        disp_stats.submissions
+    ));
+    j.push_str(&format!(
+        "  \"pipeline\": {{\"threads\": 2, \"frames\": {pipe_frames}, \"depth1_wall_ms\": {depth1_ms:.3}, \"depth2_wall_ms\": {depth2_ms:.3}, \"overlap_ratio\": {overlap_ratio:.3}, \"serial_fraction\": {pipe_serial_fraction:.4}}},\n"
+    ));
     j.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         j.push_str(&format!(
@@ -475,9 +604,17 @@ fn main() {
     }
     j.push_str("  ],\n");
     j.push_str("  \"stages\": [\n");
+    let pool_json = |s: &pool::DispatchStats| {
+        format!(
+            "{{\"queue_wait_ms\": {:.4}, \"occupancy\": {:.4}, \"submissions\": {}}}",
+            s.queue_wait_s * 1e3,
+            s.occupancy,
+            s.submissions
+        )
+    };
     for (i, r) in stage_rows.iter().enumerate() {
         j.push_str(&format!(
-            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"sort_ms\": {:.3}, \"binning_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"raster_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}, \"steals_left\": {}, \"steals_right\": {}}}{}\n",
+            "    {{\"threads\": {}, \"preprocess_ms\": {:.3}, \"sort_ms\": {:.3}, \"binning_ms\": {:.3}, \"left_ms\": {:.3}, \"sru_ms\": {:.3}, \"right_ms\": {:.3}, \"raster_ms\": {:.3}, \"validate_ms\": {:.4}, \"frame_ms\": {:.3}, \"amdahl_serial_fraction\": {:.4}, \"steals_left\": {}, \"steals_right\": {}, \"pool_left\": {}, \"pool_sru\": {}, \"pool_right\": {}}}{}\n",
             r.threads,
             r.pre_ms,
             r.sort_ms,
@@ -491,6 +628,9 @@ fn main() {
             r.amdahl_serial_fraction,
             r.steals_left,
             r.steals_right,
+            pool_json(&r.pool_left),
+            pool_json(&r.pool_sru),
+            pool_json(&r.pool_right),
             if i + 1 == stage_rows.len() { "" } else { "," }
         ));
     }

@@ -45,6 +45,11 @@ pub struct PipelineConfig {
     pub reuse_threshold: u32,
     /// Downscale factor applied to the VR eye resolution (1 = full).
     pub res_scale: u32,
+    /// Frames in flight: 1 = strictly sequential stages (the legacy
+    /// order), 2 = frame N+1's LoD search overlaps frame N's render
+    /// via `render::pool::join2`. Bitwise-invariant: depth changes
+    /// wall-clock only, never outputs or counters.
+    pub depth: u32,
     /// Worker threads for EVERY data-parallel frame stage — left/right
     /// rasterization, EWA preprocessing, the SRU disparity-list
     /// insertion, and the temporal-LoD validation pass: 0 = auto-detect,
@@ -83,6 +88,11 @@ impl PipelineConfig {
             self.lod_interval
         );
         anyhow::ensure!(
+            (1..=2).contains(&self.depth),
+            "pipeline.depth must be 1 or 2 (got {})",
+            self.depth
+        );
+        anyhow::ensure!(
             self.clients >= 1,
             "pipeline.clients must be >= 1 (got {})",
             self.clients
@@ -112,6 +122,7 @@ impl Default for PipelineConfig {
             lod_interval: 4,
             reuse_threshold: 32,
             res_scale: 8,
+            depth: 1,
             threads: 0,
             clients: 1,
             cloud_budget: 1.0,
@@ -324,6 +335,7 @@ impl RunConfig {
         cfg.pipeline.tile = args.get_parse_or("tile", cfg.pipeline.tile);
         cfg.pipeline.lod_interval = args.get_parse_or("lod-interval", cfg.pipeline.lod_interval);
         cfg.pipeline.res_scale = args.get_parse_or("res-scale", cfg.pipeline.res_scale);
+        cfg.pipeline.depth = args.get_parse_or("pipeline-depth", cfg.pipeline.depth);
         cfg.pipeline.threads = args.get_parse_or("threads", cfg.pipeline.threads);
         cfg.pipeline.clients = args.get_parse_or("clients", cfg.pipeline.clients);
         cfg.pipeline.cloud_budget = args.get_parse_or("cloud-budget", cfg.pipeline.cloud_budget);
@@ -405,6 +417,7 @@ impl RunConfig {
             cfg.pipeline.reuse_threshold =
                 s.int_or("reuse_threshold", cfg.pipeline.reuse_threshold as i64) as u32;
             cfg.pipeline.res_scale = s.int_or("res_scale", cfg.pipeline.res_scale as i64) as u32;
+            cfg.pipeline.depth = s.int_or("depth", cfg.pipeline.depth as i64) as u32;
             // Clamp negatives to 0 (= auto) instead of wrapping to a
             // huge usize thread count.
             cfg.pipeline.threads =
@@ -789,6 +802,33 @@ frames = 16
         assert_eq!(cfg.pipeline.tile, 4);
         let args = Args::parse(["--frames", "1"].iter().map(|s| s.to_string()));
         assert_eq!(RunConfig::from_args(&args).unwrap().frames, 1, "short runs are legal");
+    }
+
+    #[test]
+    fn pipeline_depth_knob_parses_and_rejects_with_key_names() {
+        // Default is 1: strictly sequential frame stages, the behavior
+        // every pre-pipelining run had.
+        assert_eq!(PipelineConfig::default().depth, 1);
+        assert_eq!(RunConfig::from_toml("").unwrap().pipeline.depth, 1);
+
+        // Valid values through both inputs, CLI overriding TOML.
+        let cfg = RunConfig::from_toml("[pipeline]\ndepth = 2\n").unwrap();
+        assert_eq!(cfg.pipeline.depth, 2);
+        let args = Args::parse(["--pipeline-depth", "2"].iter().map(|s| s.to_string()));
+        assert_eq!(RunConfig::from_args(&args).unwrap().pipeline.depth, 2);
+
+        // Out-of-window depths fail with the key name from both inputs:
+        // 0 frames in flight renders nothing, ≥ 3 would need a job
+        // window the two-slot join2 primitive does not provide.
+        for text in ["[pipeline]\ndepth = 0\n", "[pipeline]\ndepth = 3\n"] {
+            let err = RunConfig::from_toml(text).unwrap_err();
+            assert!(err.to_string().contains("pipeline.depth"), "{text:?}: {err}");
+        }
+        for bad in ["0", "3"] {
+            let args = Args::parse(["--pipeline-depth", bad].iter().map(|s| s.to_string()));
+            let err = RunConfig::from_args(&args).unwrap_err();
+            assert!(err.to_string().contains("pipeline.depth"), "--pipeline-depth {bad}: {err}");
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
 use crate::net::faults::{FaultPlan, FaultyLink, Transmit};
 use crate::render::engine::Parallelism;
+use crate::render::pool;
 use crate::render::raster::RasterConfig;
 use crate::render::stereo::{render_stereo, render_right_naive, StereoMode};
 use crate::render::{preprocess_records, render_mono};
@@ -329,9 +330,81 @@ pub fn run_simulation(
         staleness.push((i - last_apply) as f64);
 
         // Cloud round every w frames (if the previous one was delivered).
-        if i % lod_interval == 0 && i > 0 && pending.is_none() {
-            let q = LodQuery::new(pose.position, full_intr.fx, pl.tau_px, full_intr.near);
-            let cut = search(&mut temporal, &mut streaming, &q);
+        let round_due = i % lod_interval == 0 && i > 0 && pending.is_none();
+        let q = round_due
+            .then(|| LodQuery::new(pose.position, full_intr.fx, pl.tau_px, full_intr.near));
+
+        // Memory sampling reads only the client store, which neither
+        // pipelined stage below mutates — hoisted above the join so the
+        // stage split stays a clean cloud/client partition. (The round
+        // block never touched the client store, so sampling before it is
+        // the same sequence of values.)
+        peak_client = peak_client.max(client.store.len());
+        resident_peak = resident_peak.max(client.store.byte_size());
+        resident_sum += client.store.byte_size();
+        mem_samples += 1;
+        if capacity_bytes > 0 {
+            // Cut members rendering without payload: evicted/shed under
+            // budget, refetch not yet landed — memory-pressure staleness.
+            stale_member_frames += client.store.missing_cut_payloads() as u64;
+        }
+
+        // --- Pipelined frame stages (render::pool::join2) ---------------
+        // Stage A (cloud): the next round's LoD search — mutates only the
+        // search state (`temporal`/`streaming`) and reads the immutable
+        // tree. Stage B (client): render from the current store — reads
+        // only `client.store`. Disjoint state, so overlapping them at
+        // depth 2 changes wall-clock and nothing else; depth 1 runs A
+        // then B, exactly the legacy stage order. All round bookkeeping
+        // (publish, transmit, counters) happens after the join, on the
+        // calling thread, keyed to `t_frame` — never to wall-clock — so
+        // the delivery schedule is depth-invariant.
+        let (cut, (mut wl, frame_psnr)) = pool::join2(
+            pl.depth >= 2 && round_due,
+            || q.as_ref().map(|q| search(&mut temporal, &mut streaming, q)),
+            || {
+                let queue_owned = client.store.render_queue();
+                let queue: Vec<(u32, &crate::gaussian::GaussianRecord)> =
+                    queue_owned.iter().map(|(id, g)| (*id, *g)).collect();
+                let stereo_cam = StereoCamera::new(*pose, intr);
+                if variant.stereo {
+                    let out = render_stereo(
+                        &stereo_cam,
+                        &queue,
+                        pl.sh_degree,
+                        tile,
+                        &raster_cfg,
+                        StereoMode::AlphaGated,
+                    );
+                    // Track right-eye quality on the final frame.
+                    let psnr = (i + 1 == frames).then(|| {
+                        let left_cam = stereo_cam.left();
+                        let shared = stereo_cam.shared_camera();
+                        let mut set =
+                            preprocess_records(&left_cam, &shared, &queue, pl.sh_degree, par);
+                        crate::render::sort::sort_splats_par(&mut set.splats, par);
+                        let (reference, _) =
+                            render_right_naive(&stereo_cam, &set, tile, &raster_cfg);
+                        out.right.psnr(&reference)
+                    });
+                    (FrameWorkload::from_stereo(&out, full_pixels), psnr)
+                } else {
+                    let lcam = stereo_cam.left();
+                    let rcam = stereo_cam.right();
+                    let lset = preprocess_records(&lcam, &lcam, &queue, pl.sh_degree, par);
+                    let rset = preprocess_records(&rcam, &rcam, &queue, pl.sh_degree, par);
+                    let n = lset.splats.len() + rset.splats.len();
+                    let (_, lstats, _) =
+                        render_mono(lset, intr.width, intr.height, tile, &raster_cfg);
+                    let (_, rstats, _) =
+                        render_mono(rset, intr.width, intr.height, tile, &raster_cfg);
+                    (FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, full_pixels), None)
+                }
+            },
+        );
+
+        // --- Cloud round bookkeeping (publish + transmit) ---------------
+        if let Some(cut) = cut {
             visits_sum += cut.nodes_visited;
             rounds += 1;
             let msg = if needs_keyframe {
@@ -363,44 +436,9 @@ pub fn run_simulation(
                 stall_start.get_or_insert(i);
             }
         }
-        peak_client = peak_client.max(client.store.len());
-        resident_peak = resident_peak.max(client.store.byte_size());
-        resident_sum += client.store.byte_size();
-        mem_samples += 1;
-        if capacity_bytes > 0 {
-            // Cut members rendering without payload: evicted/shed under
-            // budget, refetch not yet landed — memory-pressure staleness.
-            stale_member_frames += client.store.missing_cut_payloads() as u64;
+        if let Some(p) = frame_psnr {
+            right_psnr = p;
         }
-
-        // --- Client render ---------------------------------------------
-        let queue_owned = client.store.render_queue();
-        let queue: Vec<(u32, &crate::gaussian::GaussianRecord)> =
-            queue_owned.iter().map(|(id, g)| (*id, *g)).collect();
-        let stereo_cam = StereoCamera::new(*pose, intr);
-
-        let mut wl = if variant.stereo {
-            let out = render_stereo(&stereo_cam, &queue, pl.sh_degree, tile, &raster_cfg, StereoMode::AlphaGated);
-            if i + 1 == frames {
-                // Track right-eye quality on the final frame.
-                let left_cam = stereo_cam.left();
-                let shared = stereo_cam.shared_camera();
-                let mut set = preprocess_records(&left_cam, &shared, &queue, pl.sh_degree, par);
-                crate::render::sort::sort_splats_par(&mut set.splats, par);
-                let (reference, _) = render_right_naive(&stereo_cam, &set, tile, &raster_cfg);
-                right_psnr = out.right.psnr(&reference);
-            }
-            FrameWorkload::from_stereo(&out, full_pixels)
-        } else {
-            let lcam = stereo_cam.left();
-            let rcam = stereo_cam.right();
-            let lset = preprocess_records(&lcam, &lcam, &queue, pl.sh_degree, par);
-            let rset = preprocess_records(&rcam, &rcam, &queue, pl.sh_degree, par);
-            let n = lset.splats.len() + rset.splats.len();
-            let (_, lstats, _) = render_mono(lset, intr.width, intr.height, tile, &raster_cfg);
-            let (_, rstats, _) = render_mono(rset, intr.width, intr.height, tile, &raster_cfg);
-            FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, full_pixels)
-        };
         // Scale pixel-proportional counters to full resolution.
         wl.alpha_checks = (wl.alpha_checks as f64 * s2) as u64;
         wl.blends = (wl.blends as f64 * s2) as u64;

@@ -72,6 +72,7 @@ use crate::math::{Intrinsics, Pose, StereoCamera};
 use crate::net::channel::SimLink;
 use crate::net::faults::{FaultPlan, FaultyLink, Transmit};
 use crate::render::engine::{parallel_map, Parallelism};
+use crate::render::pool;
 use crate::render::raster::RasterConfig;
 use crate::render::stereo::{render_right_naive, render_stereo, StereoMode};
 use crate::render::{preprocess_records, render_mono};
@@ -472,17 +473,104 @@ impl<'t> Session<'t> {
         self.delivered_bytes_sum += delivered_bytes;
         self.staleness.push((i - self.last_apply) as f64);
 
-        if i % ctx.lod_interval == 0 && i > 0 && self.pending.is_none() {
-            // Degraded quality coarsens τ (tau_scale > 1 ⇒ shallower cut,
-            // fewer bytes); ×1.0 is exact so the faultless path is
-            // untouched.
+        let round_due = i % ctx.lod_interval == 0 && i > 0 && self.pending.is_none();
+        // Degraded quality coarsens τ (tau_scale > 1 ⇒ shallower cut,
+        // fewer bytes); ×1.0 is exact so the faultless path is untouched.
+        let q = round_due.then(|| {
             let tau = (ctx.pl.tau_px as f64 * self.tau_scale) as f32;
-            let q = LodQuery::new(pose.position, ctx.full_intr.fx, tau, ctx.full_intr.near);
-            let cut = if self.variant.temporal {
-                self.temporal.search(self.cloud.tree, &q)
-            } else {
-                self.streaming.search(self.cloud.tree, &q)
-            };
+            LodQuery::new(pose.position, ctx.full_intr.fx, tau, ctx.full_intr.near)
+        });
+
+        // Memory sampling reads only the client store, which neither
+        // pipelined stage below mutates — hoisted above the join (the
+        // round block never touched the store, so the sampled sequence
+        // is unchanged).
+        self.peak_client = self.peak_client.max(self.client.store.len());
+        self.resident_peak = self.resident_peak.max(self.client.store.byte_size());
+        self.resident_sum += self.client.store.byte_size();
+        self.mem_samples += 1;
+        if self.capacity_bytes > 0 {
+            self.stale_member_frames += self.client.store.missing_cut_payloads() as u64;
+        }
+
+        // --- Pipelined frame stages (render::pool::join2) ---------------
+        // Same split as the single-client scheduler: stage A (cloud-side
+        // LoD search) mutates only the search state and reads the
+        // immutable tree; stage B (client render) reads only the client
+        // store. Disjoint borrows are extracted up front so each closure
+        // captures exactly its own half of the session. Publish + request
+        // bookkeeping runs after the join, so phase B still sees requests
+        // in session-id order regardless of depth.
+        let tree = self.cloud.tree;
+        let temporal = &mut self.temporal;
+        let streaming = &mut self.streaming;
+        let client = &self.client;
+        let variant = &self.variant;
+        let frames = self.poses.len();
+        let par = ctx.raster_cfg.parallelism;
+        let (cut, (mut wl, frame_psnr)) = pool::join2(
+            ctx.pl.depth >= 2 && round_due,
+            || {
+                q.as_ref().map(|q| {
+                    if variant.temporal {
+                        temporal.search(tree, q)
+                    } else {
+                        streaming.search(tree, q)
+                    }
+                })
+            },
+            || {
+                let queue_owned = client.store.render_queue();
+                let queue: Vec<(u32, &crate::gaussian::GaussianRecord)> =
+                    queue_owned.iter().map(|(id, g)| (*id, *g)).collect();
+                let stereo_cam = StereoCamera::new(pose, ctx.intr);
+                if variant.stereo {
+                    let out = render_stereo(
+                        &stereo_cam,
+                        &queue,
+                        ctx.pl.sh_degree,
+                        ctx.tile,
+                        &ctx.raster_cfg,
+                        StereoMode::AlphaGated,
+                    );
+                    let psnr = (i + 1 == frames).then(|| {
+                        let left_cam = stereo_cam.left();
+                        let shared = stereo_cam.shared_camera();
+                        let mut set =
+                            preprocess_records(&left_cam, &shared, &queue, ctx.pl.sh_degree, par);
+                        crate::render::sort::sort_splats_par(&mut set.splats, par);
+                        let (reference, _) =
+                            render_right_naive(&stereo_cam, &set, ctx.tile, &ctx.raster_cfg);
+                        out.right.psnr(&reference)
+                    });
+                    (FrameWorkload::from_stereo(&out, ctx.full_pixels), psnr)
+                } else {
+                    let lcam = stereo_cam.left();
+                    let rcam = stereo_cam.right();
+                    let lset = preprocess_records(&lcam, &lcam, &queue, ctx.pl.sh_degree, par);
+                    let rset = preprocess_records(&rcam, &rcam, &queue, ctx.pl.sh_degree, par);
+                    let n = lset.splats.len() + rset.splats.len();
+                    let (_, lstats, _) = render_mono(
+                        lset,
+                        ctx.intr.width,
+                        ctx.intr.height,
+                        ctx.tile,
+                        &ctx.raster_cfg,
+                    );
+                    let (_, rstats, _) = render_mono(
+                        rset,
+                        ctx.intr.width,
+                        ctx.intr.height,
+                        ctx.tile,
+                        &ctx.raster_cfg,
+                    );
+                    (FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, ctx.full_pixels), None)
+                }
+            },
+        );
+
+        // --- Cloud round bookkeeping (publish into the phase-B queue) ---
+        if let Some(cut) = cut {
             self.visits_sum += cut.nodes_visited;
             self.rounds += 1;
             if self.tau_scale > 1.0 {
@@ -499,54 +587,9 @@ impl<'t> Session<'t> {
             self.streamed_bytes += bytes;
             self.request = Some(RoundRequest { visits: cut.nodes_visited, bytes, msg });
         }
-        self.peak_client = self.peak_client.max(self.client.store.len());
-        self.resident_peak = self.resident_peak.max(self.client.store.byte_size());
-        self.resident_sum += self.client.store.byte_size();
-        self.mem_samples += 1;
-        if self.capacity_bytes > 0 {
-            self.stale_member_frames += self.client.store.missing_cut_payloads() as u64;
+        if let Some(p) = frame_psnr {
+            self.right_psnr = p;
         }
-
-        // --- Client render (identical to the single-client scheduler) --
-        let queue_owned = self.client.store.render_queue();
-        let queue: Vec<(u32, &crate::gaussian::GaussianRecord)> =
-            queue_owned.iter().map(|(id, g)| (*id, *g)).collect();
-        let stereo_cam = StereoCamera::new(pose, ctx.intr);
-        let frames = self.poses.len();
-        let par = ctx.raster_cfg.parallelism;
-
-        let mut wl = if self.variant.stereo {
-            let out = render_stereo(
-                &stereo_cam,
-                &queue,
-                ctx.pl.sh_degree,
-                ctx.tile,
-                &ctx.raster_cfg,
-                StereoMode::AlphaGated,
-            );
-            if i + 1 == frames {
-                let left_cam = stereo_cam.left();
-                let shared = stereo_cam.shared_camera();
-                let mut set =
-                    preprocess_records(&left_cam, &shared, &queue, ctx.pl.sh_degree, par);
-                crate::render::sort::sort_splats_par(&mut set.splats, par);
-                let (reference, _) =
-                    render_right_naive(&stereo_cam, &set, ctx.tile, &ctx.raster_cfg);
-                self.right_psnr = out.right.psnr(&reference);
-            }
-            FrameWorkload::from_stereo(&out, ctx.full_pixels)
-        } else {
-            let lcam = stereo_cam.left();
-            let rcam = stereo_cam.right();
-            let lset = preprocess_records(&lcam, &lcam, &queue, ctx.pl.sh_degree, par);
-            let rset = preprocess_records(&rcam, &rcam, &queue, ctx.pl.sh_degree, par);
-            let n = lset.splats.len() + rset.splats.len();
-            let (_, lstats, _) =
-                render_mono(lset, ctx.intr.width, ctx.intr.height, ctx.tile, &ctx.raster_cfg);
-            let (_, rstats, _) =
-                render_mono(rset, ctx.intr.width, ctx.intr.height, ctx.tile, &ctx.raster_cfg);
-            FrameWorkload::from_mono_pair(n / 2, &lstats, &rstats, ctx.full_pixels)
-        };
         wl.alpha_checks = (wl.alpha_checks as f64 * ctx.s2) as u64;
         wl.blends = (wl.blends as f64 * ctx.s2) as u64;
         wl.pairs = (wl.pairs as f64 * ctx.s2) as u64;

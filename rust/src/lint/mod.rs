@@ -13,7 +13,7 @@
 //! | D02 | `HashMap` / `HashSet` | `BTreeMap`/`BTreeSet` or key-sort |
 //! | D03 | `Instant` / `SystemTime` outside `util/{timer,bench}.rs` | route through `util::timer` |
 //! | D04 | ambient randomness (`thread_rng`, `rand::`, `RandomState`…) | seed `util::prng::Prng` |
-//! | D05 | `Atomic*` / atomic `Ordering::` outside the engine cursor | pragma + happens-before argument |
+//! | D05 | `Atomic*` / atomic `Ordering::` outside the engine/pool dispatch layer | pragma + happens-before argument |
 //! | D06 | `unsafe` | safe Rust (`std::hint::black_box`, scoped threads) |
 //!
 //! A site that is genuinely order-safe can carry an inline pragma **on
@@ -57,11 +57,12 @@ fn allowlisted(rule: RuleId, norm_path: &str) -> bool {
         // Wall-clock is centralized in the two timing utilities; every
         // other module (incl. benches) must route through them.
         RuleId::D03 => &["src/util/timer.rs", "src/util/bench.rs"],
-        // The engine's work-stealing cursor and the schedfuzz plan
-        // register — the one component whose happens-before argument
-        // lives in module docs instead of pragmas (and which the
-        // schedule-permutation harness exists to check).
-        RuleId::D05 => &["src/render/engine.rs"],
+        // The engine's dispatch layer: the schedfuzz plan register in
+        // `engine.rs` and the pool's generation counter / claim cursor
+        // in `pool.rs` — the one component pair whose happens-before
+        // arguments live in module docs and per-site pragmas (and which
+        // the schedule-permutation harness exists to check).
+        RuleId::D05 => &["src/render/engine.rs", "src/render/pool.rs"],
         _ => &[],
     };
     suffixes.iter().any(|s| norm_path.ends_with(s))
@@ -371,6 +372,7 @@ let t: HashSet<u32> = HashSet::new();
 
         let atomics = "static C: AtomicU64 = AtomicU64::new(0);\n";
         assert!(lint_source("rust/src/render/engine.rs", atomics).is_empty());
+        assert!(lint_source("rust/src/render/pool.rs", atomics).is_empty());
         assert_eq!(lint_source("rust/src/render/raster.rs", atomics).len(), 2);
     }
 

@@ -12,6 +12,8 @@
 //! Common flags: --scene <name> --gaussians <n> --frames <n> --tau <px>
 //! --tile <px> --lod-interval <w> --res-scale <s> --seed <n>
 //! --threads <n: 0=auto, 1=serial> --config <file.toml>
+//! --pipeline-depth <1|2: frames in flight; 2 overlaps next frame's
+//! LoD search with the current render, outputs unchanged>
 //! --clients <n> --cloud-budget <A100-equivalents> --uplink-mbps <mbps>
 //! --trace <walk|flyover|lookaround|teleport>
 //!

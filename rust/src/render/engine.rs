@@ -52,14 +52,30 @@
 //! thread placement into an output (a shared accumulator, an
 //! order-dependent merge) fails that suite deterministically instead of
 //! flaking in production. The static half of the same contract is
-//! enforced by `nebula-lint` (see `src/lint/`); this file is the D05
-//! allowlist's only member, so every atomic below carries its
-//! happens-before argument in these docs: the work-stealing cursor and
-//! the schedfuzz plan register are both written before `thread::scope`
-//! spawns workers and joined before results are read, and the cursor's
-//! `fetch_add` is the unique claim point per slot.
+//! enforced by `nebula-lint` (see `src/lint/`); the D05 allowlist names
+//! this file together with [`super::pool`], and every atomic across the
+//! pair carries its happens-before argument in docs or pragmas: the
+//! work-stealing claim cursor now lives in the pool's generation-stamped
+//! [`super::pool::Ticket`] (its `fetch_add` is the unique claim point
+//! per slot), the spawn-reference cursor below and the schedfuzz plan
+//! register are both written before `thread::scope` spawns workers, and
+//! everything is joined before results are read.
+//!
+//! **Pooled dispatch.** Since the persistent-pool refactor, both map
+//! variants route through [`super::pool`]: each call opens a
+//! generation-stamped [`super::pool::Ticket`], the calling thread still
+//! runs bucket 0 inline (submissions ≤ items − 1), workers self-report
+//! start/busy spans, and closing the ticket publishes
+//! [`super::pool::DispatchStats`] (queue wait, occupancy, submissions)
+//! for the stage-timing layer to harvest via
+//! [`super::pool::last_dispatch`]. The pre-pool scoped-spawn bodies are
+//! retained verbatim as [`parallel_map_spawn_reference`] /
+//! [`parallel_map_stealing_spawn_reference`] — the parity baseline the
+//! pooled paths are pinned against, and the microbenchmark baseline for
+//! `BENCH_render.json`'s spawn-vs-pool section.
 
 use super::image::Image;
+use super::pool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -210,6 +226,9 @@ where
     let threads = par.threads().min(n.max(1));
 
     if threads <= 1 {
+        // Serial short-circuit: publish all-zero stats so a later
+        // harvest never reads a stale previous dispatch.
+        pool::record(pool::DispatchStats::default());
         return items.into_iter().enumerate().map(|(i, item)| worker(i, item)).collect();
     }
 
@@ -231,23 +250,82 @@ where
         buckets[bucket_of(i)].push((i, item));
     }
 
+    // Pooled dispatch: one generation-stamped ticket per call; workers
+    // report their start/busy spans on the ticket's shared clock.
+    let ticket = pool::Ticket::open();
+    let ticket = &ticket;
     let worker = &worker;
-    let run_bucket = move |bucket: Vec<(usize, T)>| -> Vec<(usize, R)> {
-        bucket
+    let run_bucket = move |bucket: Vec<(usize, T)>| -> (Vec<(usize, R)>, pool::WorkerReport) {
+        let started_s = ticket.elapsed_s();
+        let out = bucket
             .into_iter()
             .map(|(i, item)| {
                 #[cfg(any(test, feature = "schedfuzz"))]
                 schedfuzz::perturb(fuzz_seed, i);
                 (i, worker(i, item))
             })
-            .collect()
+            .collect();
+        (out, pool::WorkerReport { started_s, busy_s: ticket.elapsed_s() - started_s })
+    };
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut reports: Vec<pool::WorkerReport> = Vec::with_capacity(threads);
+    let home = buckets.remove(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            buckets.into_iter().map(|bucket| s.spawn(move || run_bucket(bucket))).collect();
+        // The calling thread is a worker too, not a join barrier.
+        let (home_out, home_report) = run_bucket(home);
+        reports.push(home_report);
+        for (i, r) in home_out {
+            results[i] = Some(r);
+        }
+        for h in handles {
+            let (part, report) = h.join().expect("engine worker panicked");
+            reports.push(report);
+            for (i, r) in part {
+                results[i] = Some(r);
+            }
+        }
+    });
+    // Submissions = spawned buckets; the home bucket ran inline, so the
+    // old "spawn count ≤ items − 1" bound carries over verbatim.
+    ticket.close(&reports, (threads - 1) as u64);
+    results.into_iter().map(|r| r.expect("every item mapped")).collect()
+}
+
+/// The pre-pool scoped-spawn implementation of [`parallel_map`], kept
+/// verbatim as the bitwise-parity baseline and the spawn-vs-pool
+/// microbenchmark reference. Carries no schedfuzz hooks and no ticket
+/// telemetry: its output is schedule-invariant by the module-doc
+/// argument, so pooled-vs-reference parity assertions stay valid even
+/// under an installed plan.
+pub fn parallel_map_spawn_reference<T, R, W>(items: Vec<T>, par: Parallelism, worker: W) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    W: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = par.threads().min(n.max(1));
+
+    if threads <= 1 {
+        return items.into_iter().enumerate().map(|(i, item)| worker(i, item)).collect();
+    }
+
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % threads].push((i, item));
+    }
+
+    let worker = &worker;
+    let run_bucket = move |bucket: Vec<(usize, T)>| -> Vec<(usize, R)> {
+        bucket.into_iter().map(|(i, item)| (i, worker(i, item))).collect()
     };
     let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let home = buckets.remove(0);
     std::thread::scope(|s| {
         let handles: Vec<_> =
             buckets.into_iter().map(|bucket| s.spawn(move || run_bucket(bucket))).collect();
-        // The calling thread is a worker too, not a join barrier.
         for (i, r) in run_bucket(home) {
             results[i] = Some(r);
         }
@@ -306,6 +384,7 @@ where
     if threads <= 1 {
         // One worker claims every slot in dispatch order — the same
         // execution order the threaded path's cursor hands out.
+        pool::record(pool::DispatchStats::default());
         let mut by_index: Vec<Option<T>> = items.into_iter().map(Some).collect();
         let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
         for &i in &order {
@@ -324,18 +403,111 @@ where
         .map(|&i| Mutex::new(Some((i, by_index[i].take().expect("order is a permutation")))))
         .collect();
 
-    let cursor = AtomicUsize::new(0);
+    // The ticket's cursor is the shared claim point (the atomic that
+    // used to live in this function), plus the queue clock workers
+    // report their spans on.
+    let ticket = pool::Ticket::open();
+    let ticket = &ticket;
     let worker = &worker;
     let slots = &slots;
-    let cursor = &cursor;
     // Schedfuzz: stagger worker start-up and stall between claim and
     // execution so hostile interleavings of the cursor race actually
     // happen — claim order may scramble arbitrarily, outputs may not.
     #[cfg(any(test, feature = "schedfuzz"))]
     let fuzz_seed: Option<u64> = schedfuzz::call_seed();
-    let run_worker = move |w: usize| -> (Vec<(usize, R)>, u64) {
+    let run_worker = move |w: usize| -> (Vec<(usize, R)>, u64, pool::WorkerReport) {
         #[cfg(any(test, feature = "schedfuzz"))]
         schedfuzz::stagger(fuzz_seed, w);
+        let started_s = ticket.elapsed_s();
+        let mut out = Vec::new();
+        let mut steals = 0u64;
+        loop {
+            let k = ticket.claim();
+            if k >= n {
+                break;
+            }
+            #[cfg(any(test, feature = "schedfuzz"))]
+            schedfuzz::perturb(fuzz_seed, k);
+            let (i, item) =
+                slots[k].lock().expect("slot lock").take().expect("slot claimed once");
+            // Steals stay placement-relative under the pool: a claim
+            // deviating from its round-robin home is a steal.
+            if pool::off_placement(k, w, threads) {
+                steals += 1;
+            }
+            out.push((i, worker(i, item)));
+        }
+        (out, steals, pool::WorkerReport { started_s, busy_s: ticket.elapsed_s() - started_s })
+    };
+
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut steals = 0u64;
+    let mut reports: Vec<pool::WorkerReport> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (1..threads).map(|w| s.spawn(move || run_worker(w))).collect();
+        let (home, home_steals, home_report) = run_worker(0);
+        steals += home_steals;
+        reports.push(home_report);
+        for (i, r) in home {
+            results[i] = Some(r);
+        }
+        for h in handles {
+            let (part, part_steals, report) = h.join().expect("engine worker panicked");
+            steals += part_steals;
+            reports.push(report);
+            for (i, r) in part {
+                results[i] = Some(r);
+            }
+        }
+    });
+    ticket.close(&reports, (threads - 1) as u64);
+    (results.into_iter().map(|r| r.expect("every item mapped")).collect(), steals)
+}
+
+/// The pre-pool scoped-spawn implementation of
+/// [`parallel_map_stealing`], kept verbatim (local claim cursor instead
+/// of a pool ticket) as the bitwise-parity baseline and microbenchmark
+/// reference. No schedfuzz hooks, no telemetry — see
+/// [`parallel_map_spawn_reference`].
+pub fn parallel_map_stealing_spawn_reference<T, R, W>(
+    items: Vec<T>,
+    costs: &[u64],
+    par: Parallelism,
+    worker: W,
+) -> (Vec<R>, u64)
+where
+    T: Send,
+    R: Send,
+    W: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    assert_eq!(costs.len(), n, "one cost per item");
+    let threads = par.threads().min(n.max(1));
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(costs[i]), i));
+
+    if threads <= 1 {
+        let mut by_index: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for &i in &order {
+            let item = by_index[i].take().expect("order is a permutation");
+            results[i] = Some(worker(i, item));
+        }
+        return (results.into_iter().map(|r| r.expect("every item mapped")).collect(), 0);
+    }
+
+    let mut by_index: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let slots: Vec<Mutex<Option<(usize, T)>>> = order
+        .iter()
+        .map(|&i| Mutex::new(Some((i, by_index[i].take().expect("order is a permutation")))))
+        .collect();
+
+    let cursor = AtomicUsize::new(0);
+    let worker = &worker;
+    let slots = &slots;
+    let cursor = &cursor;
+    let run_worker = move |w: usize| -> (Vec<(usize, R)>, u64) {
         let mut out = Vec::new();
         let mut steals = 0u64;
         loop {
@@ -343,8 +515,6 @@ where
             if k >= n {
                 break;
             }
-            #[cfg(any(test, feature = "schedfuzz"))]
-            schedfuzz::perturb(fuzz_seed, k);
             let (i, item) =
                 slots[k].lock().expect("slot lock").take().expect("slot claimed once");
             if k % threads != w {
@@ -771,6 +941,62 @@ mod tests {
                     "calling thread must work, not idle"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pool_submissions_bounded_by_items_minus_one() {
+        // The old "spawn count ≤ items − 1" bound, restated for the
+        // pool: 3 items on a 64-thread strategy clamp to 3 workers, of
+        // which the home bucket runs inline — 2 submissions.
+        parallel_map(vec![(); 3], Parallelism::Threads(64), |_, _| ());
+        let stats = pool::last_dispatch();
+        assert_eq!(stats.submissions, 2, "{stats:?}");
+        assert!((0.0..=1.0).contains(&stats.occupancy), "{stats:?}");
+
+        let (_, _steals) =
+            parallel_map_stealing(vec![(); 3], &[1, 1, 1], Parallelism::Threads(64), |_, _| ());
+        let stats = pool::last_dispatch();
+        assert_eq!(stats.submissions, 2, "{stats:?}");
+
+        // Serial short-circuits publish all-zero stats (no stale reads).
+        parallel_map(vec![1u32, 2, 3], Parallelism::Serial, |_, v| v);
+        assert_eq!(pool::last_dispatch(), pool::DispatchStats::default());
+    }
+
+    #[test]
+    fn single_worker_stealing_reports_zero_steals_and_default_stats() {
+        // Threads(1) takes the serial path: claims in dispatch order,
+        // never off-placement, and no dispatch stats.
+        let items: Vec<u64> = (0..9).collect();
+        let (got, steals) =
+            parallel_map_stealing(items, &[1; 9], Parallelism::Threads(1), |_, v| v + 1);
+        assert_eq!(got, (1..=9).collect::<Vec<u64>>());
+        assert_eq!(steals, 0, "one worker cannot steal from itself");
+        assert_eq!(pool::last_dispatch(), pool::DispatchStats::default());
+    }
+
+    #[test]
+    fn pooled_dispatch_matches_spawn_reference() {
+        // Unit-level pool ≡ scoped-spawn parity smoke; the full sweep
+        // (images, splats, NEBULA_PARITY_THREADS) lives in
+        // `tests/it_parallel.rs`.
+        let items: Vec<u64> = (0..71).collect();
+        let costs: Vec<u64> = (0..71).map(|i| i * 5 % 17).collect();
+        let f = |_: usize, v: u64| v.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(9) ^ 31;
+        for t in [2usize, 4, 8] {
+            let want = parallel_map_spawn_reference(items.clone(), Parallelism::Threads(t), f);
+            let got = parallel_map(items.clone(), Parallelism::Threads(t), f);
+            assert_eq!(want, got, "round-robin t={t}");
+            let (want_s, _) = parallel_map_stealing_spawn_reference(
+                items.clone(),
+                &costs,
+                Parallelism::Threads(t),
+                f,
+            );
+            let (got_s, _) =
+                parallel_map_stealing(items.clone(), &costs, Parallelism::Threads(t), f);
+            assert_eq!(want_s, got_s, "stealing t={t}");
         }
     }
 

@@ -12,6 +12,10 @@
 //!   bands of the tile grid run concurrently on scoped threads with
 //!   disjoint output slabs, bitwise identical to serial execution
 //!   (see [`engine::Parallelism`]);
+//! * [`pool`] — persistent dispatch state behind the engine
+//!   (generation-stamped tickets, claim cursor, queue-wait/occupancy
+//!   telemetry) plus the cross-stage [`pool::join2`] overlap primitive
+//!   the frame pipeline builds on;
 //! * [`raster`] — quad-lane tile α-blending core (the VRC functional
 //!   model): per-tile geometry gather + 4 pixels per iteration,
 //!   monomorphized over pass-flag tracking and splat layout, executed
@@ -25,6 +29,7 @@
 
 pub mod engine;
 pub mod image;
+pub mod pool;
 pub mod preprocess;
 pub mod raster;
 pub mod sort;

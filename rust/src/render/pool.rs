@@ -1,0 +1,263 @@
+//! Persistent dispatch state shared by every engine `parallel_map`
+//! variant — the worker-pool half of the pipelined engine.
+//!
+//! Ambition vs. discipline: a classic persistent pool parks OS threads
+//! and hands them lifetime-erased jobs, which in Rust means either
+//! `unsafe` transmutes of borrowed closures or `'static` boxing — the
+//! first is banned outright (lint rule D06), the second would copy
+//! every tile-row slab and break the zero-copy borrows the raster path
+//! depends on. `std::thread::scope` is the one safe primitive that can
+//! run borrowed work, so the *persistent* part of this pool is its
+//! dispatch state rather than its OS threads: a process-wide generation
+//! counter stamps every dispatch, each dispatch opens a [`Ticket`]
+//! (generation + queue clock + the shared claim cursor), workers claim
+//! slots through the ticket and self-report their start/busy spans, and
+//! closing the ticket folds those reports into [`DispatchStats`]
+//! published through a thread-local register for the stage-timing layer
+//! to harvest ([`last_dispatch`]). The calling thread always runs
+//! bucket 0 itself, so a dispatch submits at most `items − 1` jobs
+//! (`submissions`), and steal accounting stays placement-relative via
+//! [`off_placement`]. [`join2`] is the cross-stage half: it overlaps
+//! two frame stages on disjoint state, or runs them in the legacy
+//! sequential order when pipelining is off — which is exactly why
+//! `pipeline.depth = 1` reproduces pre-pipelining output bit-for-bit.
+//!
+//! Happens-before audit (this file joined `render/engine.rs` on the
+//! D05 allowlist; every atomic below also carries its own pragma):
+//! * `GENERATION` is a monotone label generator — its value reaches
+//!   diagnostics only, never a simulated output, so a relaxed
+//!   `fetch_add` is a unique-stamp guarantee, not an ordering one.
+//! * `Ticket::cursor` is the work-stealing claim point moved out of
+//!   the engine: `fetch_add(1)` is the unique claim per slot, and
+//!   `thread::scope`'s join is the happens-before edge between the
+//!   workers' claims and the caller reading results — the same
+//!   argument the engine's module docs make, audited here for both.
+
+use crate::util::Stopwatch;
+use std::cell::Cell;
+// nebula-lint: allow(D05) pool claim cursor + generation stamp; both joined before any read (module docs)
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Process-wide dispatch stamp: each [`Ticket::open`] takes the next
+/// generation, so overlapping dispatches (pipelined frames) stay
+/// distinguishable in harvested stats.
+// nebula-lint: allow(D05) monotone label generator; diagnostic-only, never ordered against other memory
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+
+/// Telemetry folded out of one engine dispatch.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct DispatchStats {
+    /// Which dispatch this was (process-wide monotone stamp).
+    pub generation: u64,
+    /// Sum over spawned workers of the delay between dispatch open and
+    /// the worker's first activity — the pool's queue-wait measure.
+    pub queue_wait_s: f64,
+    /// Busy time over `workers × wall`, clamped to 1.0 — 1.0 means no
+    /// spawned worker idled for the dispatch's whole wall span.
+    pub occupancy: f64,
+    /// Jobs handed to spawned workers. Always ≤ items − 1: the caller
+    /// runs bucket 0 inline, it is never a submission.
+    pub submissions: u64,
+}
+
+/// One spawned worker's self-report, measured on the shared ticket
+/// clock (so reports from different workers are directly comparable).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct WorkerReport {
+    /// Seconds from dispatch open to this worker's first activity.
+    pub started_s: f64,
+    /// Seconds the worker spent executing items.
+    pub busy_s: f64,
+}
+
+/// A single dispatch through the pool: generation stamp, queue clock,
+/// and the shared claim cursor the stealing schedule draws from.
+pub struct Ticket {
+    /// This dispatch's process-wide stamp.
+    pub generation: u64,
+    watch: Stopwatch,
+    // nebula-lint: allow(D05) work-stealing claim point; fetch_add is the unique claim per slot, scope join orders all claims before the caller reads results
+    cursor: AtomicUsize,
+}
+
+impl Ticket {
+    /// Opens a dispatch: stamps the next generation and starts the
+    /// queue clock.
+    pub fn open() -> Self {
+        Ticket {
+            // nebula-lint: allow(D05) relaxed unique stamp — diagnostic label, never an ordering edge
+            generation: GENERATION.fetch_add(1, Ordering::Relaxed),
+            watch: Stopwatch::start(),
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// Claims the next work slot. Exactly-once: every call returns a
+    /// distinct index — the property `tests/it_schedfuzz.rs` pins
+    /// through hostile schedules.
+    pub fn claim(&self) -> usize {
+        // nebula-lint: allow(D05) unique claim per slot; results are read only after the scope join
+        self.cursor.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Seconds since the dispatch opened, on the shared queue clock.
+    pub fn elapsed_s(&self) -> f64 {
+        self.watch.elapsed().as_secs_f64()
+    }
+
+    /// Closes the dispatch: folds the workers' reports into
+    /// [`DispatchStats`], publishes them to this thread's register, and
+    /// returns them. Call after the scope join, so the wall span covers
+    /// every worker.
+    pub fn close(&self, reports: &[WorkerReport], submissions: u64) -> DispatchStats {
+        let wall = self.elapsed_s();
+        let queue_wait_s: f64 = reports.iter().map(|r| r.started_s).sum();
+        let busy: f64 = reports.iter().map(|r| r.busy_s).sum();
+        let occupancy = if wall <= 0.0 || reports.is_empty() {
+            0.0
+        } else {
+            (busy / (reports.len() as f64 * wall)).min(1.0)
+        };
+        let stats =
+            DispatchStats { generation: self.generation, queue_wait_s, occupancy, submissions };
+        record(stats);
+        stats
+    }
+}
+
+thread_local! {
+    /// The calling thread's most recent dispatch — the stage-timing
+    /// layer reads it right after an engine call returns.
+    static LAST: Cell<DispatchStats> = Cell::new(DispatchStats::default());
+}
+
+/// Publishes `stats` as this thread's most recent dispatch. Serial
+/// short-circuits publish [`DispatchStats::default`] so a harvest never
+/// sees a stale previous dispatch.
+pub fn record(stats: DispatchStats) {
+    LAST.with(|l| l.set(stats));
+}
+
+/// This thread's most recent dispatch stats (all-zero before any
+/// dispatch, and after a serial short-circuit).
+pub fn last_dispatch() -> DispatchStats {
+    LAST.with(|l| l.get())
+}
+
+/// Runs two frame stages; when `overlap` is true, `a` runs on a scoped
+/// worker while `b` runs on the calling thread. With `overlap` false
+/// the stages run sequentially, `a` first — exactly the pre-pipelining
+/// order, which is what makes `pipeline.depth = 1` reproduce it
+/// bit-for-bit. Overlap is only sound when the stages touch disjoint
+/// state; the coordinator call sites document their split.
+pub fn join2<A, B, RA, RB>(overlap: bool, a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    RA: Send,
+    B: FnOnce() -> RB,
+{
+    if overlap {
+        std::thread::scope(|s| {
+            let ha = s.spawn(a);
+            let rb = b();
+            (ha.join().expect("pipelined stage panicked"), rb)
+        })
+    } else {
+        let ra = a();
+        (ra, b())
+    }
+}
+
+/// True when claim `k` landed on a worker other than its round-robin
+/// home — the engine's steal definition, kept placement-relative under
+/// the pool so `BENCH_render.json`'s imbalance metrics keep their
+/// meaning.
+pub fn off_placement(claim: usize, worker: usize, workers: usize) -> bool {
+    claim % workers != worker
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generations_are_unique_and_monotone() {
+        let a = Ticket::open();
+        let b = Ticket::open();
+        assert!(b.generation > a.generation, "{} vs {}", a.generation, b.generation);
+    }
+
+    #[test]
+    fn claims_are_exactly_once_in_order() {
+        let t = Ticket::open();
+        let claims: Vec<usize> = (0..5).map(|_| t.claim()).collect();
+        assert_eq!(claims, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn off_placement_is_round_robin_relative() {
+        // workers = 3: claim 4's home is worker 1.
+        assert!(!off_placement(4, 1, 3));
+        assert!(off_placement(4, 0, 3));
+        assert!(off_placement(4, 2, 3));
+        // Full truth table at workers = 2: home claim is never a steal,
+        // the other worker's claim always is.
+        for k in 0..6 {
+            assert!(!off_placement(k, k % 2, 2), "claim {k} on its home");
+            assert!(off_placement(k, (k + 1) % 2, 2), "claim {k} off its home");
+        }
+    }
+
+    #[test]
+    fn close_folds_reports_and_publishes_thread_locally() {
+        let t = Ticket::open();
+        let reports = [
+            WorkerReport { started_s: 0.5, busy_s: 1.0 },
+            WorkerReport { started_s: 0.25, busy_s: 2.0 },
+        ];
+        let stats = t.close(&reports, 2);
+        assert_eq!(stats.generation, t.generation);
+        assert_eq!(stats.submissions, 2);
+        assert!((stats.queue_wait_s - 0.75).abs() < 1e-12, "{}", stats.queue_wait_s);
+        assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0, "{}", stats.occupancy);
+        assert_eq!(last_dispatch(), stats);
+        // A serial short-circuit resets the register.
+        record(DispatchStats::default());
+        assert_eq!(last_dispatch(), DispatchStats::default());
+    }
+
+    #[test]
+    fn close_with_no_workers_is_all_zero_but_stamped() {
+        let t = Ticket::open();
+        let stats = t.close(&[], 0);
+        assert_eq!(
+            (stats.queue_wait_s, stats.occupancy, stats.submissions),
+            (0.0, 0.0, 0),
+            "{stats:?}"
+        );
+        assert_eq!(stats.generation, t.generation);
+    }
+
+    #[test]
+    fn join2_runs_both_and_preserves_results_in_both_modes() {
+        for overlap in [false, true] {
+            let (a, b) = join2(overlap, || 21u32 * 2, || "right");
+            assert_eq!((a, b), (42, "right"), "overlap={overlap}");
+        }
+        // Borrowed state: the overlap path must accept non-'static work.
+        let xs = vec![1u64, 2, 3];
+        let (sum, len) = join2(true, || xs.iter().sum::<u64>(), || xs.len());
+        assert_eq!((sum, len), (6, 3));
+    }
+
+    #[test]
+    fn sequential_join2_runs_a_before_b() {
+        // Depth-1 must preserve the legacy stage order (search, then
+        // render) — observed through a side effect. (Mutex, not RefCell:
+        // `a` must satisfy the Send bound even on the sequential path.)
+        let log = std::sync::Mutex::new(Vec::new());
+        let ((), ()) =
+            join2(false, || log.lock().unwrap().push("a"), || log.lock().unwrap().push("b"));
+        assert_eq!(*log.lock().unwrap(), ["a", "b"]);
+    }
+}

@@ -53,6 +53,7 @@
 
 use super::engine::{self, Parallelism, Slab};
 use super::image::Image;
+use super::pool;
 use super::preprocess::{preprocess_records, ProjectedSet, Splat, SplatSoa};
 use super::raster::{raster_core, RasterConfig, RasterStats, TileScratch};
 use super::sort::sort_splats_par;
@@ -100,6 +101,14 @@ pub struct StageSeconds {
     pub steals_left: u64,
     /// Same for phase 3.
     pub steals_right: u64,
+    /// Pool dispatch telemetry for phase 1 (queue wait, occupancy,
+    /// submissions; see [`super::pool::DispatchStats`]). All-zero on the
+    /// serial path.
+    pub pool_left: pool::DispatchStats,
+    /// Same for phase 2 (SRU insertion).
+    pub pool_sru: pool::DispatchStats,
+    /// Same for phase 3.
+    pub pool_right: pool::DispatchStats,
 }
 
 /// Stereo frame output + workload counters.
@@ -397,6 +406,10 @@ pub fn render_stereo_from_splats(
         stats_left.merge(s);
     }
     let left_s = t_left.elapsed().as_secs_f64();
+    // Harvest the pool stats of the dispatch that just returned (the
+    // register is per-thread and per-call, so this must happen before
+    // the next engine call).
+    let pool_left = pool::last_dispatch();
 
     // --- Phase 2: SRU insertion (engine, source-tile rows; step 2).
     // Per-(src tile, k) disparity lists — the stereo buffer (Fig 15).
@@ -414,6 +427,7 @@ pub fn render_stereo_from_splats(
         cfg.parallelism,
     );
     let sru_s = t_sru.elapsed().as_secs_f64();
+    let pool_sru = pool::last_dispatch();
 
     // --- Phase 3: right eye, L-way merge + blend (engine; steps 3–4).
     let t_right = Stopwatch::start();
@@ -529,6 +543,7 @@ pub fn render_stereo_from_splats(
         merge_ops += m;
     }
     let right_s = t_right.elapsed().as_secs_f64();
+    let pool_right = pool::last_dispatch();
 
     StereoOutput {
         left,
@@ -550,6 +565,9 @@ pub fn render_stereo_from_splats(
             right: right_s,
             steals_left,
             steals_right,
+            pool_left,
+            pool_sru,
+            pool_right,
         },
     }
 }

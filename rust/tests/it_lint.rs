@@ -108,6 +108,34 @@ fn each_rule_fixture_fails_the_deny_gate() {
 }
 
 #[test]
+fn pool_claim_cursor_fixture_needs_its_pragma() {
+    // The pool's dispatch pattern (generation stamp + claim cursor) is
+    // only allowlisted inside `render/pool.rs`; the same code anywhere
+    // else must carry per-site pragmas with happens-before reasons —
+    // exactly the shape the real pool module commits to.
+    let dirty = "\
+struct Ticket { cursor: AtomicUsize }
+fn claim(t: &Ticket) -> usize { t.cursor.fetch_add(1, Ordering::Relaxed) }
+";
+    let (code, text) = lint_fixture("pool_dirty", dirty, true);
+    assert_eq!(code, 1, "unpragma'd claim cursor must fail --deny:\n{text}");
+    assert!(text.contains("D05"), "{text}");
+
+    let clean = "\
+struct Ticket {
+    // nebula-lint: allow(D05) claim cursor: fetch_add is the unique claim point per slot
+    cursor: AtomicUsize,
+}
+fn claim(t: &Ticket) -> usize {
+    // nebula-lint: allow(D05) Relaxed suffices: the scope join is the ordering edge
+    t.cursor.fetch_add(1, Ordering::Relaxed)
+}
+";
+    let (code, text) = lint_fixture("pool_clean", clean, true);
+    assert_eq!(code, 0, "pragma'd pool fixture must gate green:\n{text}");
+}
+
+#[test]
 fn pragma_without_reason_fails_the_gate() {
     // The repo convention is load-bearing: an `allow` with no written
     // justification is itself a finding AND does not suppress.

@@ -22,7 +22,10 @@
 use nebula::gaussian::GaussianRecord;
 use nebula::lod::{Cut, LodQuery, LodSearch, Partitioning, StreamingSearch, TemporalSearch};
 use nebula::math::{Intrinsics, StereoCamera, Vec2, Vec3};
-use nebula::render::engine::{Parallelism, RowSchedule};
+use nebula::render::engine::{
+    parallel_map, parallel_map_chunks, parallel_map_spawn_reference, parallel_map_stealing,
+    parallel_map_stealing_spawn_reference, Parallelism, RowSchedule,
+};
 use nebula::render::raster::{
     raster_tile, raster_tile_reference, render_mono, RasterConfig, RasterStats,
 };
@@ -519,6 +522,60 @@ fn stereo_work_stealing_is_bitwise_equal_to_round_robin() {
                 assert_eq!(reference.merge_ops, out.merge_ops, "{mode:?} {sched:?}");
             }
         }
+    }
+}
+
+#[test]
+fn pooled_maps_are_bitwise_equal_to_spawn_reference() {
+    // Pool ≡ scoped-spawn parity at the engine-primitive level: the
+    // ticket-dispatch bodies must reproduce the retained pre-pool spawn
+    // bodies exactly — same result vectors (contents AND order), same
+    // f32 bits — at every thread count and under any cost vector. This
+    // is the contract that let the engine move to pooled dispatch
+    // without re-auditing a single call site.
+    check("pooled maps ≡ spawn reference", Config { cases: 10, seed: 0x90_0A }, |rng| {
+        let n = rng.range_usize(0, 700);
+        let items: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let costs: Vec<u64> = (0..n).map(|_| rng.next_u64() % 97).collect();
+        let f = |i: usize, v: u64| {
+            let m = v.wrapping_mul(0x9E3779B97F4A7C15) ^ (i as u64).rotate_left(17);
+            (m, (m as f32).sin())
+        };
+        let key =
+            |v: &[(u64, f32)]| v.iter().map(|&(a, b)| (a, b.to_bits())).collect::<Vec<_>>();
+        for t in parity_threads() {
+            let par = Parallelism::Threads(t);
+            let want = parallel_map_spawn_reference(items.clone(), par, f);
+            let got = parallel_map(items.clone(), par, f);
+            assert_eq!(key(&want), key(&got), "parallel_map diverged at {t} threads (n={n})");
+            let (want_s, _) =
+                parallel_map_stealing_spawn_reference(items.clone(), &costs, par, f);
+            let (got_s, _) = parallel_map_stealing(items.clone(), &costs, par, f);
+            assert_eq!(
+                key(&want_s),
+                key(&got_s),
+                "parallel_map_stealing diverged at {t} threads (n={n})"
+            );
+        }
+    });
+}
+
+#[test]
+fn pooled_chunks_match_spawn_reference_ranges() {
+    // `parallel_map_chunks` rides the pooled `parallel_map`; its chunk
+    // results must equal the spawn-reference map over the identical
+    // range items, bitwise, at every thread count (incl. the ragged
+    // last chunk).
+    let work = |r: std::ops::Range<usize>| -> Vec<f32> {
+        r.map(|i| (i as f32).sqrt().ln_1p()).collect()
+    };
+    for t in parity_threads() {
+        let par = Parallelism::Threads(t);
+        let ranges: Vec<std::ops::Range<usize>> =
+            (0..257).step_by(16).map(|lo| lo..(lo + 16).min(257)).collect();
+        let want: Vec<Vec<f32>> = parallel_map_spawn_reference(ranges, par, |_, r| work(r));
+        let got: Vec<Vec<f32>> = parallel_map_chunks(257, 16, par, work);
+        assert_eq!(want, got, "chunked map diverged at {t} threads");
     }
 }
 

@@ -1,0 +1,89 @@
+//! Cross-stage frame pipelining parity: `pipeline.depth = 2` overlaps
+//! frame i's LoD round (temporal/streaming search) with that frame's
+//! own render via `render::pool::join2`, and the refactor's contract is
+//! that the overlap moves **wall-clock only** — every modeled output is
+//! bit-identical to the strictly sequential `depth = 1` run.
+//!
+//! Enforced here with whole-struct equality on [`SimResult`] (the
+//! single-client scheduler) and [`MulticlientResult`] (the phase A/B
+//! server; phase A is where per-session overlap happens, phase B
+//! arbitration stays serial in session-id order), across the
+//! `NEBULA_PARITY_THREADS` sweep and both search paths (temporal on the
+//! Nebula variant, streaming on the baseline). CI re-runs this suite in
+//! release mode at threads `1,2,8` so `debug_assert!`-gated invariants
+//! hold with the asserts compiled out too.
+
+use nebula::coordinator::metrics::PlatformKind;
+use nebula::coordinator::{
+    run_multiclient, run_simulation, ServerConfig, SimParams, Variant,
+};
+use nebula::scene::{CityGen, CityParams};
+use nebula::trace::{PoseTrace, TraceParams};
+
+/// Thread counts the sweep runs at (`NEBULA_PARITY_THREADS`, default
+/// `2,4,8`; `1` exercises the serial engine path under both depths).
+fn parity_threads() -> Vec<usize> {
+    std::env::var("NEBULA_PARITY_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4, 8])
+}
+
+fn params(threads: usize, depth: u32) -> SimParams {
+    let mut p = SimParams::default();
+    p.pipeline.res_scale = 16;
+    p.pipeline.threads = threads;
+    p.pipeline.depth = depth;
+    p
+}
+
+#[test]
+fn depth_one_is_the_default() {
+    assert_eq!(SimParams::default().pipeline.depth, 1, "pipelining must be opt-in");
+}
+
+#[test]
+fn pipelined_simresult_matches_sequential_field_for_field() {
+    let tree = CityGen::new(CityParams::for_target(8000, 100.0, 42)).build();
+    let poses = PoseTrace::new(TraceParams::default(), 100.0).generate(24);
+    // Both search paths: Nebula (temporal, stereo) and the GPU baseline
+    // (streaming search, mono render) — each takes a different render
+    // closure through `pool::join2`.
+    for variant in [Variant::nebula(), Variant::base_on(PlatformKind::Gpu)] {
+        for t in parity_threads() {
+            let sequential = run_simulation(&tree, &poses, &variant, &params(t, 1));
+            let pipelined = run_simulation(&tree, &poses, &variant, &params(t, 2));
+            assert_eq!(
+                sequential, pipelined,
+                "SimResult diverged between depth 1 and 2: variant={} threads={t}",
+                variant.name
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_multiclient_matches_sequential_field_for_field() {
+    let tree = CityGen::new(CityParams::for_target(8000, 100.0, 42)).build();
+    let traces: Vec<_> = (0..3)
+        .map(|k| {
+            PoseTrace::new(
+                TraceParams { seed: 7 + k as u64 * 0x9e37, ..Default::default() },
+                100.0,
+            )
+            .generate(12)
+        })
+        .collect();
+    let cfg = ServerConfig::default();
+    for t in parity_threads() {
+        let sequential =
+            run_multiclient(&tree, &traces, &Variant::nebula(), &params(t, 1), &cfg);
+        let pipelined =
+            run_multiclient(&tree, &traces, &Variant::nebula(), &params(t, 2), &cfg);
+        assert_eq!(
+            sequential, pipelined,
+            "MulticlientResult diverged between depth 1 and 2 at {t} threads"
+        );
+    }
+}

@@ -21,11 +21,12 @@
 //! [`lock`] — the suite still runs in minutes-class time because the
 //! engine workloads are small and yields are cheap.
 
+use nebula::coordinator::{run_simulation, SimParams, Variant};
 use nebula::gaussian::GaussianRecord;
 use nebula::math::{Intrinsics, StereoCamera};
 use nebula::render::engine::{
-    parallel_map, parallel_map_chunks, parallel_map_stealing, run_rows, schedfuzz, Parallelism,
-    RowSchedule, Slab,
+    parallel_map, parallel_map_chunks, parallel_map_spawn_reference, parallel_map_stealing,
+    parallel_map_stealing_spawn_reference, run_rows, schedfuzz, Parallelism, RowSchedule, Slab,
 };
 use nebula::render::raster::RasterConfig;
 use nebula::render::stereo::{render_stereo, StereoMode};
@@ -155,6 +156,72 @@ fn parallel_map_stealing_bitwise_invariant_under_hostile_schedules() {
             // nebula-lint: allow(D05) post-join read of the claim counter (see above)
             assert_eq!(counter.load(Ordering::Relaxed), n as u64, "t={t} seed={seed:#x}");
         }
+    }
+}
+
+#[test]
+fn pooled_dispatch_matches_spawn_reference_under_hostile_schedules() {
+    let _g = lock();
+    // The retained spawn-reference bodies carry no fuzz hooks and are
+    // schedule-invariant by construction, so they stay a valid oracle
+    // while a plan is installed: the pooled ticket paths must reproduce
+    // them bitwise on every hostile schedule, and every slot must be
+    // claimed exactly once through the pooled cursor.
+    let n = 89usize;
+    let items: Vec<u64> = (0..n as u64).collect();
+    let costs: Vec<u64> = (0..n as u64).map(|i| if i == 11 { 9_000 } else { i % 5 }).collect();
+    for &t in &THREADS {
+        let par = Parallelism::Threads(t);
+        let want = parallel_map_spawn_reference(items.clone(), par, |_, v| work(v));
+        let (want_s, _) =
+            parallel_map_stealing_spawn_reference(items.clone(), &costs, par, |_, v| work(v));
+        for seed in hostile_seeds() {
+            let _plan = schedfuzz::install(schedfuzz::SchedulePlan { seed });
+            let got = parallel_map(items.clone(), par, |_, v| work(v));
+            assert_eq!(got, want, "pooled map vs spawn reference: t={t} seed={seed:#x}");
+            let claims = Mutex::new(Vec::new());
+            let (got_s, _steals) =
+                parallel_map_stealing(items.clone(), &costs, par, |i, v| {
+                    claims.lock().unwrap().push(i);
+                    work(v)
+                });
+            assert_eq!(
+                got_s, want_s,
+                "pooled stealing vs spawn reference: t={t} seed={seed:#x}"
+            );
+            assert_exactly_once(
+                claims.into_inner().unwrap(),
+                n,
+                &format!("pooled stealing t={t} seed={seed:#x}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_frames_bitwise_invariant_under_hostile_schedules() {
+    let _g = lock();
+    // Cross-stage pipelining (`pipeline.depth = 2`) overlaps frame i's
+    // LoD round with its own render on a second thread; under a hostile
+    // plan every engine call inside both stages still draws its own
+    // sub-seed. The whole `SimResult` must stay field-for-field
+    // identical to the strictly sequential depth-1 run — the overlap is
+    // allowed to move wall-clock only, never modeled outputs.
+    let tree = CityGen::new(CityParams::for_target(6000, 80.0, 0x51)).build();
+    let poses =
+        PoseTrace::new(TraceParams { seed: 5, ..Default::default() }, 80.0).generate(16);
+    let mut p1 = SimParams::default();
+    p1.pipeline.res_scale = 16;
+    p1.pipeline.threads = 2;
+    let mut p2 = p1;
+    p2.pipeline.depth = 2;
+    let reference = run_simulation(&tree, &poses, &Variant::nebula(), &p1);
+    for seed in hostile_seeds().into_iter().take(4) {
+        let _plan = schedfuzz::install(schedfuzz::SchedulePlan { seed });
+        let sequential = run_simulation(&tree, &poses, &Variant::nebula(), &p1);
+        let pipelined = run_simulation(&tree, &poses, &Variant::nebula(), &p2);
+        assert_eq!(reference, sequential, "depth-1 diverged under plan: seed={seed:#x}");
+        assert_eq!(reference, pipelined, "depth-2 diverged under plan: seed={seed:#x}");
     }
 }
 
